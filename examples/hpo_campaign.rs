@@ -1,0 +1,56 @@
+//! §5.1 scenario: a single-user hyperparameter-optimization campaign.
+//!
+//! Many ShuffleNet trials (identical scalability) harvest a synthetic
+//! Summit week. Compares the MILP policy against the equal-share
+//! heuristic at several forward-looking times and prints the resource
+//! utilization efficiency U for each — the Fig 9 sweep in miniature.
+//!
+//! ```bash
+//! cargo run --release --example hpo_campaign
+//! ```
+
+use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::scaling::Dnn;
+use bftrainer::sim::{self, ReplayOpts};
+use bftrainer::trace::{self, machines};
+use bftrainer::util::table::{f, Table};
+use bftrainer::workload;
+
+fn main() {
+    // Six synthetic Summit hours (keep the example fast; the fig9 bench
+    // runs multi-day sweeps).
+    let mut params = machines::summit_1024();
+    params.duration_s = 6.0 * 3600.0;
+    let trace = trace::generate(&params, 42);
+
+    // 60 ShuffleNet trials × 3 epochs — enough that work never runs out.
+    let wl = workload::hpo_campaign(Dnn::ShuffleNet, 60, 3.0);
+
+    let mut tab = Table::new(vec!["policy", "T_fwd (s)", "U", "rescale cost (samples)"]);
+    for policy in ["heuristic", "milp"] {
+        for t_fwd in [10.0, 120.0, 600.0] {
+            let coord = Coordinator::new(
+                Policy::by_name(policy).unwrap(),
+                Objective::Throughput,
+                t_fwd,
+                10,
+            );
+            let res = sim::replay(coord, &trace, &wl, &ReplayOpts::default());
+            let a_s = sim::static_baseline_outcome(
+                Coordinator::new(Policy::by_name(policy).unwrap(), Objective::Throughput, t_fwd, 10),
+                res.metrics.eq_nodes.round() as u32,
+                res.metrics.duration_s,
+                &wl,
+            );
+            let u = res.metrics.samples_processed / a_s;
+            tab.row(vec![
+                policy.to_string(),
+                f(t_fwd, 0),
+                format!("{:.1}%", 100.0 * u),
+                format!("{:.2e}", res.metrics.rescale_cost_samples),
+            ]);
+        }
+    }
+    println!("{}", tab.render());
+    println!("hpo_campaign OK");
+}

@@ -1,0 +1,66 @@
+//! §5.2 scenario: one BFTrainer instance as a central resource manager
+//! for multiple users submitting DNNs with diverse scalability.
+//!
+//! Trainers arrive by a Poisson process, cycling through the Tab 2 zoo.
+//! Runs the same stream under both objective metrics and reports per-DNN
+//! average runtimes — the fairness contrast of Fig 12 / Tabs 3–4: raw
+//! throughput starves DenseNet; scaling efficiency evens runtimes out.
+//!
+//! ```bash
+//! cargo run --release --example multi_tenant
+//! ```
+
+use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::scaling::Dnn;
+use bftrainer::sim::{self, ReplayOpts};
+use bftrainer::trace::{self, machines};
+use bftrainer::util::table::Table;
+use bftrainer::workload;
+use std::collections::BTreeMap;
+
+fn main() {
+    let mut params = machines::summit_1024();
+    params.duration_s = 24.0 * 3600.0;
+    let trace = trace::generate(&params, 42);
+    // 70 trainers (10 per DNN), 0.5 epoch each, ~10 min mean gap.
+    let wl = workload::diverse_poisson(70, 0.5, 600.0, 7);
+
+    let mut results: BTreeMap<&str, BTreeMap<&str, (f64, usize)>> = BTreeMap::new();
+    for objective in [Objective::Throughput, Objective::ScalingEfficiency] {
+        let coord = Coordinator::new(
+            Policy::by_name("milp").unwrap(),
+            objective.clone(),
+            120.0,
+            10,
+        );
+        let opts = ReplayOpts { run_to_completion: true, ..Default::default() };
+        let res = sim::replay(coord, &trace, &wl, &opts);
+        for t in &res.coordinator.trainers {
+            if let (Some(done), Some(admit)) = (t.done_t, t.admit_t) {
+                let dnn = t.spec.name.split('-').next().unwrap_or("?");
+                let key = Dnn::from_name(dnn).map(|d| d.name()).unwrap_or("?");
+                let e = results
+                    .entry(objective.name())
+                    .or_default()
+                    .entry(key)
+                    .or_insert((0.0, 0));
+                e.0 += (done - admit) / 3600.0;
+                e.1 += 1;
+            }
+        }
+    }
+
+    let mut tab = Table::new(vec!["DNN", "runtime h (throughput obj)", "runtime h (efficiency obj)"]);
+    for d in Dnn::ALL {
+        let get = |o: &str| {
+            results
+                .get(o)
+                .and_then(|m| m.get(d.name()))
+                .map(|&(s, n)| if n > 0 { format!("{:.2}", s / n as f64) } else { "-".into() })
+                .unwrap_or_else(|| "-".into())
+        };
+        tab.row(vec![d.name().to_string(), get("throughput"), get("scaling-efficiency")]);
+    }
+    println!("{}", tab.render());
+    println!("multi_tenant OK");
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the BFTrainer public API in ~60 lines.
+//!
+//! Builds a tiny synthetic idle-node trace, submits three elastic
+//! Trainers with different scalability curves, lets the MILP coordinator
+//! reallocate on every pool change, and prints the §4.1 metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use bftrainer::coordinator::{Coordinator, Objective, Policy, TrainerSpec};
+use bftrainer::scaling::{zoo, Dnn, ScalingCurve};
+use bftrainer::sim::{self, ReplayOpts, Workload};
+use bftrainer::trace::{PoolEvent, Trace};
+
+fn main() {
+    // 1. An idle-node trace: nodes come and go without warning.
+    let mut trace = Trace::new(64);
+    trace.push(PoolEvent { t: 0.0, joins: (0..16).collect(), leaves: vec![] });
+    trace.push(PoolEvent { t: 600.0, joins: (16..40).collect(), leaves: vec![] });
+    trace.push(PoolEvent { t: 1800.0, joins: vec![], leaves: (0..8).collect() });
+    trace.push(PoolEvent { t: 3000.0, joins: (40..56).collect(), leaves: (8..12).collect() });
+    trace.push(PoolEvent { t: 7200.0, joins: vec![], leaves: vec![12] });
+
+    // 2. Trainers: malleable jobs with min/max scale, rescale costs and a
+    //    scalability curve (here: two Tab 2 models + a custom curve).
+    let mk = |name: &str, curve: ScalingCurve, samples: f64| TrainerSpec {
+        name: name.into(),
+        n_min: 1,
+        n_max: 32,
+        r_up: 30.0,
+        r_dw: 10.0,
+        curve,
+        total_samples: samples,
+    };
+    let workload = Workload::all_at_zero(vec![
+        mk("resnet18", zoo::curve(Dnn::ResNet18), 5.0e8),
+        mk("vgg16", zoo::curve(Dnn::Vgg16), 2.0e8),
+        mk("custom", ScalingCurve::new(vec![(1, 900.0), (8, 6200.0), (32, 17000.0)]), 3.0e8),
+    ]);
+
+    // 3. The coordinator: MILP policy, throughput objective, T_fwd = 120 s.
+    let coord = Coordinator::new(
+        Policy::by_name("milp").unwrap(),
+        Objective::Throughput,
+        120.0,
+        10,
+    );
+
+    // 4. Replay and report.
+    let res = sim::replay(coord, &trace, &workload, &ReplayOpts::default());
+    let m = &res.metrics;
+    println!("events handled:       {}", m.n_events);
+    println!("samples processed:    {:.3e}", m.samples_processed);
+    println!("resource integral:    {:.1} node-hours", m.resource_node_hours);
+    println!("eq-nodes:             {:.1}", m.eq_nodes);
+    println!("rescale cost:         {:.3e} samples", m.rescale_cost_samples);
+    println!("preemptions:          {}", m.preemptions);
+    println!("mean MILP solve time: {:.2} ms", 1e3 * m.mean_solve_s);
+    for t in &res.coordinator.trainers {
+        println!(
+            "  {:<10} progress {:>6.1}%  up/down/preempt {}/{}/{}",
+            t.spec.name,
+            100.0 * t.progress / t.spec.total_samples,
+            t.upscales,
+            t.downscales,
+            t.preemptions
+        );
+    }
+    assert!(m.samples_processed > 0.0);
+    println!("\nquickstart OK");
+}

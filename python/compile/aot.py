@@ -1,0 +1,132 @@
+"""AOT export: lower every (model variant, part) to HLO *text* + manifest.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``<variant>_grad.hlo.txt``  — (params..., tokens[B,S+1]) -> (loss, grads...)
+* ``<variant>_apply.hlo.txt`` — (params..., grads..., lr) -> (params...)
+* ``manifest.json``           — per-variant parameter layout + shapes, the
+  contract the rust runtime uses to build input Literals.
+
+Python runs ONLY here (build time). ``make artifacts`` re-runs this when
+compile/ sources change; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (return_tuple=True: the rust
+    side unwraps with to_tuple())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: model.ModelConfig):
+    """Lower grad + apply for one config; returns {part: hlo_text}."""
+    grad_fn = model.make_grad_fn(cfg)
+    apply_fn = model.make_apply_fn(cfg)
+    grad_args = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in model.example_grad_args(cfg)]
+    apply_args = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in model.example_apply_args(cfg)]
+    out = {}
+    out["grad"] = to_hlo_text(jax.jit(grad_fn).lower(*grad_args))
+    # Donate the params in apply: they are consumed by the update. This is
+    # the L2 optimization that makes the rust-side step loop allocation-free
+    # for the parameter buffers.
+    donate = tuple(range(len(cfg.param_specs())))
+    out["apply"] = to_hlo_text(jax.jit(apply_fn, donate_argnums=donate).lower(*apply_args))
+    return out
+
+
+def manifest_entry(cfg: model.ModelConfig) -> dict:
+    return {
+        "name": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "n_params": int(cfg.n_params()),
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_specs()
+        ],
+        "grad_hlo": f"{cfg.name}_grad.hlo.txt",
+        "apply_hlo": f"{cfg.name}_apply.hlo.txt",
+        "init_bin": f"{cfg.name}_init.bin",
+        "token_shape": [cfg.batch, cfg.seq + 1],
+    }
+
+
+def source_fingerprint() -> str:
+    """Hash of compile/ sources — lets `make artifacts` skip stale-free."""
+    h = hashlib.sha256()
+    root = os.path.dirname(__file__)
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="tiny,small")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fp = source_fingerprint()
+    stamp = os.path.join(args.out_dir, ".fingerprint")
+    if os.path.exists(stamp) and open(stamp).read().strip() == fp:
+        print(f"artifacts up to date (fingerprint {fp})")
+        return 0
+
+    manifest = {"fingerprint": fp, "variants": {}}
+    for name in args.variants.split(","):
+        cfg = model.CONFIGS[name.strip()]
+        print(f"lowering {cfg.name} ({cfg.n_params()} params) ...", flush=True)
+        parts = lower_variant(cfg)
+        for part, text in parts.items():
+            path = os.path.join(args.out_dir, f"{cfg.name}_{part}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {path} ({len(text)} chars)")
+        # initial parameters: concatenated little-endian f32 in spec order,
+        # so the rust runtime starts from the same init as python would.
+        import numpy as np
+        init = model.init_params(cfg)
+        blob = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in init)
+        bin_path = os.path.join(args.out_dir, f"{cfg.name}_init.bin")
+        with open(bin_path, "wb") as f:
+            f.write(blob)
+        print(f"  wrote {bin_path} ({len(blob)} bytes)")
+        manifest["variants"][cfg.name] = manifest_entry(cfg)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"manifest written; fingerprint {fp}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: fused linear layer  act(x @ w + b).
+
+The compute hot spot of the Trainer's transformer/MLP step. Written
+TPU-style: the grid tiles the output into (bm × bn) blocks sized for the
+128×128 MXU systolic array; each program instance streams its `x` row-panel
+and `w` column-panel into VMEM, runs the matmul on the MXU, adds the bias
+and applies the activation on the VPU, and writes one output block.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's Trainers
+ran CUDA kernels tiled for SM shared memory; the same insight — keep the
+reduction operand resident in fast memory while streaming the other —
+maps to `BlockSpec`-scheduled HBM→VMEM copies here. K is kept whole per
+block (fits VMEM for the model sizes we lower; see the VMEM budget note
+in EXPERIMENTS.md §Perf).
+
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact is
+executable on the rust side. Real-TPU efficiency is *estimated* from the
+block geometry instead (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-friendly default tile sizes.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (bm, bn) output block: full-K matmul + bias + activation."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = ref.apply_activation(acc, activation).astype(o_ref.dtype)
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (>= 1)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _pallas_linear(x, w, b, activation: str, bm: int, bn: int):
+    """Raw pallas call (no AD)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm_ = pick_block(m, bm)
+    bn_ = pick_block(n, bn)
+    grid = (m // bm_, n // bn_)
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_), lambda i, j: (0, j)),
+            pl.BlockSpec((bn_,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def _act_grad(z, activation: str):
+    """d act(z) / dz."""
+    if activation == "none":
+        return jnp.ones_like(z)
+    if activation == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if activation == "gelu":
+        # derivative of the tanh-approximate GELU
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        u = c * (z + 0.044715 * z * z * z)
+        t = jnp.tanh(u)
+        du = c * (1.0 + 3.0 * 0.044715 * z * z)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_linear(x, w, b, activation: str = "none", bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """act(x @ w + b) as a Pallas call, differentiable.
+
+    x: [M, K], w: [K, N], b: [N]. Block sizes are shrunk to divisors of
+    M/N so any shape is accepted (at reduced MXU utilization for ragged
+    sizes — the AOT model picks MXU-aligned dims).
+
+    The VJP recomputes the pre-activation (rematerialization — cheaper
+    than saving an [M, N] residual per call) and routes both backward
+    matmuls (`dz @ wᵀ`, `xᵀ @ dz`) through the same Pallas kernel, so the
+    backward hot path is L1 too.
+    """
+    return _pallas_linear(x, w, b, activation, bm, bn)
+
+
+def _fl_fwd(x, w, b, activation, bm, bn):
+    return _pallas_linear(x, w, b, activation, bm, bn), (x, w, b)
+
+
+def _fl_bwd(activation, bm, bn, res, dy):
+    x, w, b = res
+    n = w.shape[1]
+    zero_n = jnp.zeros((n,), x.dtype)
+    zero_k = jnp.zeros((w.shape[0],), x.dtype)
+    if activation == "none":
+        dz = dy
+    else:
+        z = _pallas_linear(x, w, b, "none", bm, bn)  # rematerialize
+        dz = dy * _act_grad(z, activation)
+    dx = _pallas_linear(dz, w.T, zero_k, "none", bm, bn)
+    dw = _pallas_linear(x.T, dz, zero_n, "none", bm, bn)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fl_fwd, _fl_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, k: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one program instance (x panel + w panel + bias +
+    out block) — used for the §Perf roofline estimate."""
+    return dtype_bytes * (bm * k + k * bn + bn + bm * bn)

@@ -1,0 +1,49 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest
+(``python/tests/test_kernels.py``) sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle. The oracles are also what the
+L2 model uses when ``BFT_USE_PALLAS=0`` (debug escape hatch).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, activation: str = "none"):
+    """act(x @ w + b).
+
+    x: [M, K] float, w: [K, N], b: [N].
+    activation: "none" | "relu" | "gelu" (tanh approximation, matching the
+    kernel's on-chip formula).
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return apply_activation(y, activation)
+
+
+def apply_activation(y, activation: str):
+    if activation == "none":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "gelu":
+        # tanh-approximate GELU — cheap on MXU/VPU, standard in transformer
+        # stacks; the Pallas kernel uses the identical formula.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y * y * y)))
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def softmax_xent_ref(logits, labels):
+    """Per-row softmax cross-entropy loss and dloss/dlogits.
+
+    logits: [B, V] float32; labels: [B] int32.
+    Returns (loss [B], dlogits [B, V]) where dlogits is the gradient of the
+    summed (not meaned) loss: softmax(logits) - onehot(labels).
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = lse - picked
+    probs = jnp.exp(logits - lse[:, None])
+    dlogits = probs - jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return loss, dlogits

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: fused log-softmax cross-entropy (loss + gradient).
+
+Computes, per logits row, the numerically-stable cross-entropy loss and
+the gradient `softmax(logits) - onehot(label)` in a single VMEM-resident
+pass — the second compute hot spot of the training step (vocab-sized
+matmuls feed it). Row-tiled: each program instance owns a (br, V) block.
+
+Like every kernel here it is lowered with `interpret=True` so the AOT
+artifact runs on the CPU PJRT client (see fused_linear.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 128
+
+
+def _kernel(logits_ref, labels_ref, loss_ref, dlogits_ref):
+    logits = logits_ref[...]
+    labels = labels_ref[...]
+    v = logits.shape[-1]
+    # stable log-softmax
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[:, 0]
+    onehot = (labels[:, None] == jax.lax.iota(jnp.int32, v)[None, :]).astype(logits.dtype)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    loss_ref[...] = lse - picked
+    probs = jnp.exp(shifted - (lse - m[:, 0])[:, None])
+    dlogits_ref[...] = probs - onehot
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def softmax_xent(logits, labels, br: int = DEFAULT_BR):
+    """Per-row loss [B] and dlogits [B, V] (gradient of the summed loss).
+
+    logits: [B, V] float32; labels: [B] int32. Raw kernel (no AD) — the
+    differentiable entry point is [`xent_loss`].
+    """
+    bsz, v = logits.shape
+    assert labels.shape == (bsz,)
+    br_ = pick_block(bsz, br)
+    grid = (bsz // br_,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br_, v), lambda i: (i, 0)),
+            pl.BlockSpec((br_,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br_,), lambda i: (i,)),
+            pl.BlockSpec((br_, v), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), logits.dtype),
+            jax.ShapeDtypeStruct((bsz, v), logits.dtype),
+        ],
+        interpret=True,
+    )(logits, labels)
+
+
+@jax.custom_vjp
+def xent_loss(logits, labels):
+    """Per-row cross-entropy loss [B], differentiable w.r.t. logits.
+
+    The kernel already produces the exact gradient (softmax − onehot), so
+    the VJP is a saved-residual multiply — the backward pass costs one
+    elementwise product, no extra kernel launch.
+    """
+    loss, _ = softmax_xent(logits, labels)
+    return loss
+
+
+def _xl_fwd(logits, labels):
+    loss, dlogits = softmax_xent(logits, labels)
+    return loss, dlogits
+
+
+def _xl_bwd(dlogits, g):
+    import numpy as np
+
+    dlog = g[:, None] * dlogits
+    # integer labels take a float0 cotangent
+    zeros = np.zeros(dlogits.shape[:1], dtype=jax.dtypes.float0)
+    return dlog, zeros
+
+
+xent_loss.defvjp(_xl_fwd, _xl_bwd)

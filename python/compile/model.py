@@ -1,0 +1,199 @@
+"""L2 JAX model: causal transformer LM (and an MLP variant) train step.
+
+This is the Trainer workload BFTrainer schedules. The forward/backward
+pass calls the L1 Pallas kernels (``kernels.fused_linear`` for the MLP
+block and LM head, ``kernels.softmax_xent`` for the loss) so they lower
+into the same HLO module that ``aot.py`` exports.
+
+Two artifacts per model variant, matching elastic data parallelism:
+
+* ``grad``  — (params..., tokens[B, S+1]) -> (loss, grads...)
+  One *per-node* microbatch gradient. The rust runtime executes this once
+  per simulated node and averages — semantically identical to the
+  synchronous all-reduce the paper's Horovod Trainers perform (§4.2).
+* ``apply`` — (params..., grads..., lr) -> params...
+  SGD update with the averaged gradient. Momentum is deliberately
+  omitted: the paper's malleability contract only requires that model
+  state be clonable on rescale, and stateless SGD keeps the artifact
+  count per variant at two.
+
+Set ``BFT_USE_PALLAS=0`` to swap the kernels for their jnp oracles (used
+by tests to localize failures).
+"""
+
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear as _fl
+from .kernels import ref as _ref
+from .kernels import softmax_xent as _sx
+
+USE_PALLAS = os.environ.get("BFT_USE_PALLAS", "1") != "0"
+
+
+def linear(x, w, b, activation="none"):
+    if USE_PALLAS:
+        return _fl.fused_linear(x, w, b, activation)
+    return _ref.linear_ref(x, w, b, activation)
+
+
+def xent_loss(logits, labels):
+    if USE_PALLAS:
+        return _sx.xent_loss(logits, labels)
+    loss, _ = _ref.softmax_xent_ref(logits, labels)
+    return loss
+
+
+class ModelConfig:
+    """Transformer-LM hyperparameters (byte-level vocab)."""
+
+    def __init__(self, name, vocab=256, d_model=64, n_layers=2, n_heads=2, seq=32, batch=8):
+        assert d_model % n_heads == 0
+        self.name = name
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.seq = seq
+        self.batch = batch  # per-node microbatch
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — the flattening contract shared
+        with the rust runtime via manifest.json."""
+        d, v, s = self.d_model, self.vocab, self.seq
+        specs = [("embed", (v, d)), ("pos", (s, d))]
+        for i in range(self.n_layers):
+            specs += [
+                (f"l{i}.ln1_g", (d,)),
+                (f"l{i}.ln1_b", (d,)),
+                (f"l{i}.qkv_w", (d, 3 * d)),
+                (f"l{i}.qkv_b", (3 * d,)),
+                (f"l{i}.proj_w", (d, d)),
+                (f"l{i}.proj_b", (d,)),
+                (f"l{i}.ln2_g", (d,)),
+                (f"l{i}.ln2_b", (d,)),
+                (f"l{i}.mlp_w1", (d, 4 * d)),
+                (f"l{i}.mlp_b1", (4 * d,)),
+                (f"l{i}.mlp_w2", (4 * d, d)),
+                (f"l{i}.mlp_b2", (d,)),
+            ]
+        specs += [("lnf_g", (d,)), ("lnf_b", (d,)), ("head_w", (d, v)), ("head_b", (v,))]
+        return specs
+
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_specs())
+
+
+# The lowered variants. "tiny" is the test/quickstart workload; "small"
+# is the end-to-end training example (867 k parameters).
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, n_heads=2, seq=32, batch=8),
+    "small": ModelConfig("small", d_model=128, n_layers=4, n_heads=4, seq=64, batch=8),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Flat parameter list in param_specs order (He-ish init)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", ".ln1_b", ".ln2_b")) or name == "lnf_b":
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif "ln" in name and name.endswith("_g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            out.append(jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5))
+    return out
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, qkv_w, qkv_b, proj_w, proj_b, n_heads):
+    """Causal multi-head self-attention. Stays in jnp: on TPU this would be
+    its own (flash-style) kernel; the Pallas budget here goes to the MLP
+    and LM-head matmuls which dominate FLOPs at these sizes."""
+    bsz, s, d = x.shape
+    hd = d // n_heads
+    qkv = linear(x.reshape(bsz * s, d), qkv_w, qkv_b).reshape(bsz, s, 3, n_heads, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [B,S,H,hd]
+    q = q.transpose(0, 2, 1, 3)  # [B,H,S,hd]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(bsz * s, d)
+    return linear(y, proj_w, proj_b).reshape(bsz, s, d)
+
+
+def forward_loss(cfg: ModelConfig, params: List[jnp.ndarray], tokens: jnp.ndarray):
+    """Mean next-token cross-entropy over a [B, S+1] token batch."""
+    p = dict(zip([n for n, _ in cfg.param_specs()], params))
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    bsz, s = inp.shape
+    d = cfg.d_model
+    x = p["embed"][inp] + p["pos"][None, :s]
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        x = x + _attention(
+            h, p[f"l{i}.qkv_w"], p[f"l{i}.qkv_b"], p[f"l{i}.proj_w"], p[f"l{i}.proj_b"], cfg.n_heads
+        )
+        h = _layer_norm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        h2 = linear(h.reshape(bsz * s, d), p[f"l{i}.mlp_w1"], p[f"l{i}.mlp_b1"], "gelu")
+        h2 = linear(h2, p[f"l{i}.mlp_w2"], p[f"l{i}.mlp_b2"])
+        x = x + h2.reshape(bsz, s, d)
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    logits = linear(x.reshape(bsz * s, d), p["head_w"], p["head_b"])
+    labels = tgt.reshape(bsz * s).astype(jnp.int32)
+    return xent_loss(logits, labels).mean()
+
+
+def make_grad_fn(cfg: ModelConfig):
+    """(params..., tokens) -> (loss, grads...) — per-node microbatch."""
+
+    def grad_step(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        loss, grads = jax.value_and_grad(lambda ps: forward_loss(cfg, ps, tokens))(params)
+        return (loss, *grads)
+
+    return grad_step
+
+
+def make_apply_fn(cfg: ModelConfig):
+    """(params..., grads..., lr) -> params... — SGD with averaged grads."""
+    k = len(cfg.param_specs())
+
+    def apply_step(*args):
+        params = args[:k]
+        grads = args[k : 2 * k]
+        lr = args[2 * k]
+        return tuple(p - lr * g for p, g in zip(params, grads))
+
+    return apply_step
+
+
+def example_grad_args(cfg: ModelConfig, seed: int = 0):
+    params = init_params(cfg, seed)
+    tokens = jnp.zeros((cfg.batch, cfg.seq + 1), jnp.int32)
+    return (*params, tokens)
+
+
+def example_apply_args(cfg: ModelConfig, seed: int = 0):
+    params = init_params(cfg, seed)
+    grads = [jnp.zeros_like(p) for p in params]
+    return (*params, *grads, jnp.float32(0.01))

@@ -1,0 +1,162 @@
+//! Typed experiment configuration, loadable from a TOML-subset file
+//! (`mini::toml`) with CLI overrides layered on top.
+//!
+//! ```toml
+//! [experiment]
+//! policy = "milp"            # milp | dp | heuristic | milp-pernode
+//! objective = "throughput"   # throughput | efficiency | priority
+//! t_fwd = 120.0
+//! pj_max = 10
+//! seed = 42
+//!
+//! [trace]
+//! machine = "summit"         # summit | summit-full | theta | mira
+//! duration_hours = 168.0
+//!
+//! [workload]
+//! kind = "hpo"               # hpo | diverse
+//! trainers = 1000
+//! dnn = "ShuffleNet"
+//! epochs = 100.0
+//! mean_gap_s = 600.0
+//! rescale_multiplier = 1.0
+//! ```
+
+use crate::mini::toml::Doc;
+use std::path::Path;
+
+/// Workload family.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadKind {
+    Hpo,
+    Diverse,
+}
+
+/// Full experiment configuration with defaults matching §5.1.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub policy: String,
+    pub objective: String,
+    pub t_fwd: f64,
+    pub pj_max: usize,
+    pub seed: u64,
+    pub machine: String,
+    pub duration_hours: f64,
+    pub workload: WorkloadKind,
+    pub trainers: usize,
+    pub dnn: String,
+    pub epochs: f64,
+    pub mean_gap_s: f64,
+    pub rescale_multiplier: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            policy: "milp".into(),
+            objective: "throughput".into(),
+            t_fwd: 120.0,
+            pj_max: 10,
+            seed: 42,
+            machine: "summit".into(),
+            duration_hours: 168.0,
+            workload: WorkloadKind::Hpo,
+            trainers: 1000,
+            dnn: "ShuffleNet".into(),
+            epochs: 100.0,
+            mean_gap_s: 600.0,
+            rescale_multiplier: 1.0,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn load(path: &Path) -> Result<ExperimentConfig, String> {
+        let doc = Doc::load(path)?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    pub fn from_doc(doc: &Doc) -> ExperimentConfig {
+        let d = ExperimentConfig::default();
+        ExperimentConfig {
+            policy: doc.str_or("experiment.policy", &d.policy),
+            objective: doc.str_or("experiment.objective", &d.objective),
+            t_fwd: doc.f64_or("experiment.t_fwd", d.t_fwd),
+            pj_max: doc.i64_or("experiment.pj_max", d.pj_max as i64) as usize,
+            seed: doc.i64_or("experiment.seed", d.seed as i64) as u64,
+            machine: doc.str_or("trace.machine", &d.machine),
+            duration_hours: doc.f64_or("trace.duration_hours", d.duration_hours),
+            workload: match doc.str_or("workload.kind", "hpo").as_str() {
+                "diverse" => WorkloadKind::Diverse,
+                _ => WorkloadKind::Hpo,
+            },
+            trainers: doc.i64_or("workload.trainers", d.trainers as i64) as usize,
+            dnn: doc.str_or("workload.dnn", &d.dnn),
+            epochs: doc.f64_or("workload.epochs", d.epochs),
+            mean_gap_s: doc.f64_or("workload.mean_gap_s", d.mean_gap_s),
+            rescale_multiplier: doc.f64_or("workload.rescale_multiplier", d.rescale_multiplier),
+        }
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if crate::coordinator::Policy::by_name(&self.policy).is_none() {
+            return Err(format!("unknown policy {:?}", self.policy));
+        }
+        if crate::coordinator::Objective::parse(&self.objective).is_none() {
+            return Err(format!("unknown objective {:?}", self.objective));
+        }
+        if crate::trace::machines::by_name(&self.machine).is_none() {
+            return Err(format!("unknown machine {:?}", self.machine));
+        }
+        if self.workload == WorkloadKind::Hpo
+            && crate::scaling::Dnn::from_name(&self.dnn).is_none()
+        {
+            return Err(format!("unknown dnn {:?}", self.dnn));
+        }
+        if self.t_fwd <= 0.0 || self.pj_max == 0 || self.trainers == 0 {
+            return Err("t_fwd, pj_max and trainers must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mini::toml::Doc;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn doc_overrides_defaults() {
+        let doc = Doc::parse(
+            "[experiment]\npolicy = \"dp\"\nt_fwd = 60\n[workload]\nkind = \"diverse\"\ntrainers = 5",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc);
+        assert_eq!(c.policy, "dp");
+        assert_eq!(c.t_fwd, 60.0);
+        assert_eq!(c.workload, WorkloadKind::Diverse);
+        assert_eq!(c.trainers, 5);
+        assert_eq!(c.pj_max, 10); // default kept
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.policy = "quantum".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.dnn = "GPT-7".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.pj_max = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Allocator interface shared by the MILP formulations, the exact DP and
+//! the equal-share heuristic.
+//!
+//! Every allocator answers the same question at every event (paper §3):
+//! given the admitted Trainers (with current scales `C_j`), the pool size
+//! `|N|` and the forward-looking horizon `T_fwd`, choose target scales
+//! `n_j ∈ {0} ∪ [N_min_j, N_max_j]` with `Σ n_j ≤ |N|` maximizing
+//! `Σ_j T_fwd·O_j(n_j) − Σ_j O_j(C_j)·R_j(n_j)`  (Eqn 16).
+
+use super::trainer::TrainerId;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// One trainer's view for the allocator.
+#[derive(Clone, Debug)]
+pub struct AllocJob {
+    pub id: TrainerId,
+    /// C_j — current node count.
+    pub current: u32,
+    pub n_min: u32,
+    pub n_max: u32,
+    pub r_up: f64,
+    pub r_dw: f64,
+    /// Discretized objective breakpoints: strictly increasing node counts
+    /// in [n_min, n_max] with the gain-per-second at each (already
+    /// metric-transformed; see [`super::objective::Objective`]).
+    pub points: Vec<(u32, f64)>,
+}
+
+impl AllocJob {
+    /// Gain-per-second at scale n by piecewise-linear interpolation over
+    /// `points` — identical to what the SOS2 encoding computes.
+    pub fn gain(&self, n: u32) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let pts = &self.points;
+        assert!(!pts.is_empty());
+        if n <= pts[0].0 {
+            return pts[0].1;
+        }
+        for w in pts.windows(2) {
+            if n <= w[1].0 {
+                let f = (n - w[0].0) as f64 / (w[1].0 - w[0].0) as f64;
+                return w[0].1 + f * (w[1].1 - w[0].1);
+            }
+        }
+        pts[pts.len() - 1].1
+    }
+
+    /// Rescale cost term of Eqn 16: `O_j(C_j) · R_j` for moving C_j -> n.
+    pub fn rescale_cost(&self, n: u32) -> f64 {
+        use std::cmp::Ordering;
+        let rate_now = if self.current == 0 { 0.0 } else { self.gain(self.current) };
+        match n.cmp(&self.current) {
+            Ordering::Greater => rate_now * self.r_up,
+            Ordering::Less => rate_now * self.r_dw,
+            Ordering::Equal => 0.0,
+        }
+    }
+
+    /// Net objective contribution of running at scale n for t_fwd seconds.
+    pub fn value(&self, n: u32, t_fwd: f64) -> f64 {
+        t_fwd * self.gain(n) - self.rescale_cost(n)
+    }
+
+    /// Is scale n admissible for this job?
+    pub fn admissible(&self, n: u32) -> bool {
+        n == 0 || (self.n_min..=self.n_max).contains(&n)
+    }
+}
+
+/// The allocation problem at one event.
+#[derive(Clone, Debug)]
+pub struct AllocRequest {
+    pub jobs: Vec<AllocJob>,
+    /// |N| — idle pool size.
+    pub pool_size: u32,
+    /// T_fwd — forward-looking horizon (seconds).
+    pub t_fwd: f64,
+}
+
+impl AllocRequest {
+    /// Total Eqn-16 objective of a target map.
+    pub fn objective_of(&self, targets: &BTreeMap<TrainerId, u32>) -> f64 {
+        self.jobs
+            .iter()
+            .map(|j| j.value(targets.get(&j.id).copied().unwrap_or(0), self.t_fwd))
+            .sum()
+    }
+
+    /// Validate a target map against job bounds and the pool capacity.
+    pub fn check(&self, targets: &BTreeMap<TrainerId, u32>) -> Result<(), String> {
+        let mut total = 0u32;
+        for job in &self.jobs {
+            let n = targets.get(&job.id).copied().unwrap_or(0);
+            if !job.admissible(n) {
+                return Err(format!(
+                    "job {} assigned {} outside {{0}} ∪ [{}, {}]",
+                    job.id, n, job.n_min, job.n_max
+                ));
+            }
+            total += n;
+        }
+        for id in targets.keys() {
+            if !self.jobs.iter().any(|j| j.id == *id) {
+                return Err(format!("target for unknown job {id}"));
+            }
+        }
+        if total > self.pool_size {
+            return Err(format!("total {total} exceeds pool {}", self.pool_size));
+        }
+        Ok(())
+    }
+
+    /// The "keep everything as-is" map, clamped to the pool (used as the
+    /// paper's §3.6 timeout fallback). Current scales are assumed feasible.
+    pub fn current_map(&self) -> BTreeMap<TrainerId, u32> {
+        self.jobs.iter().map(|j| (j.id, j.current)).collect()
+    }
+}
+
+/// Statistics from the solver behind an allocation.
+#[derive(Clone, Debug, Default)]
+pub struct SolverStats {
+    pub solve_time: Duration,
+    pub nodes_explored: usize,
+    /// True when the §3.6 fallback (keep current map) was used.
+    pub fell_back: bool,
+    /// True when the solver proved optimality.
+    pub optimal: bool,
+}
+
+/// Result of one allocation decision.
+#[derive(Clone, Debug)]
+pub struct AllocOutcome {
+    pub targets: BTreeMap<TrainerId, u32>,
+    pub objective: f64,
+    pub stats: SolverStats,
+}
+
+/// Allocation policy interface.
+pub trait Allocator {
+    fn name(&self) -> &'static str;
+    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// A simple concave gain table for tests: gain(n) interpolates
+    /// n-proportional with diminishing returns.
+    pub fn job(id: TrainerId, current: u32, n_min: u32, n_max: u32) -> AllocJob {
+        let points: Vec<(u32, f64)> = {
+            let mut pts = vec![];
+            let mut n = n_min;
+            while n <= n_max {
+                pts.push((n, (n as f64).powf(0.8) * 10.0));
+                n = (n * 2).min(n_max.max(n + 1));
+                if pts.last().unwrap().0 == n_max {
+                    break;
+                }
+            }
+            if pts.last().unwrap().0 != n_max {
+                pts.push((n_max, (n_max as f64).powf(0.8) * 10.0));
+            }
+            pts
+        };
+        AllocJob { id, current, n_min, n_max, r_up: 20.0, r_dw: 5.0, points }
+    }
+
+    /// Random request generator for property tests.
+    pub fn random_request(rng: &mut crate::util::rng::Rng, max_jobs: usize, max_pool: u32) -> AllocRequest {
+        let n_jobs = rng.range_usize(1, max_jobs);
+        let jobs: Vec<AllocJob> = (0..n_jobs)
+            .map(|i| {
+                let n_min = rng.range_u64(1, 4) as u32;
+                let n_max = n_min + rng.range_u64(0, 12) as u32;
+                let current = if rng.chance(0.5) {
+                    0
+                } else {
+                    rng.range_u64(n_min as u64, n_max as u64) as u32
+                };
+                let mut j = job(i, current, n_min, n_max);
+                // randomize costs and gains a bit
+                j.r_up = rng.range_f64(0.0, 60.0);
+                j.r_dw = rng.range_f64(0.0, 20.0);
+                let f = rng.range_f64(0.2, 3.0);
+                for p in j.points.iter_mut() {
+                    p.1 *= f;
+                }
+                j
+            })
+            .collect();
+        // Ensure current scales fit the pool: pool at least sum of currents.
+        let cur_sum: u32 = jobs.iter().map(|j| j.current).sum();
+        let pool_size = cur_sum + rng.range_u64(0, max_pool as u64) as u32;
+        AllocRequest { jobs, pool_size, t_fwd: rng.range_f64(5.0, 300.0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::job;
+    use super::*;
+
+    #[test]
+    fn gain_interpolates_and_clamps() {
+        let j = job(0, 0, 1, 8);
+        assert_eq!(j.gain(0), 0.0);
+        assert!(j.gain(3) > j.gain(2) && j.gain(3) < j.gain(4));
+        assert!((j.gain(8) - 8f64.powf(0.8) * 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rescale_cost_signs() {
+        let j = job(0, 4, 1, 8);
+        assert_eq!(j.rescale_cost(4), 0.0);
+        assert!((j.rescale_cost(6) - j.gain(4) * 20.0).abs() < 1e-9);
+        assert!((j.rescale_cost(2) - j.gain(4) * 5.0).abs() < 1e-9);
+        // from zero: no output lost while waiting
+        let w = job(1, 0, 1, 8);
+        assert_eq!(w.rescale_cost(4), 0.0);
+    }
+
+    #[test]
+    fn check_catches_violations() {
+        let req = AllocRequest { jobs: vec![job(0, 0, 2, 4)], pool_size: 3, t_fwd: 60.0 };
+        let ok: BTreeMap<_, _> = [(0, 3u32)].into_iter().collect();
+        assert!(req.check(&ok).is_ok());
+        let below_min: BTreeMap<_, _> = [(0, 1u32)].into_iter().collect();
+        assert!(req.check(&below_min).is_err());
+        let above_pool: BTreeMap<_, _> = [(0, 4u32)].into_iter().collect();
+        assert!(req.check(&above_pool).is_err());
+        let unknown: BTreeMap<_, _> = [(9, 2u32)].into_iter().collect();
+        assert!(req.check(&unknown).is_err());
+    }
+
+    #[test]
+    fn objective_sums_values() {
+        let req = AllocRequest { jobs: vec![job(0, 2, 1, 8), job(1, 0, 1, 8)], pool_size: 10, t_fwd: 100.0 };
+        let t: BTreeMap<_, _> = [(0, 2u32), (1, 4u32)].into_iter().collect();
+        let expect = req.jobs[0].value(2, 100.0) + req.jobs[1].value(4, 100.0);
+        assert!((req.objective_of(&t) - expect).abs() < 1e-9);
+    }
+}

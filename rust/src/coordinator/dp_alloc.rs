@@ -1,0 +1,215 @@
+//! Exact dynamic-programming allocator — the performance fast path.
+//!
+//! Because nodes are interchangeable and migration is forbidden, the
+//! MILP's optimum depends only on the *counts* `n_j` (DESIGN.md §6.2):
+//! the problem is a multiple-choice knapsack
+//!
+//! ```text
+//!   max Σ_j v_j(n_j)   s.t.  Σ_j n_j ≤ |N|,  n_j ∈ {0} ∪ [min_j, max_j]
+//! ```
+//!
+//! with `v_j(n) = T_fwd·O_j(n) − O_j(C_j)·R_j(n)` (Eqn 16). DP over jobs ×
+//! pool capacity solves it exactly in `O(J · |N| · range)`. Property tests
+//! in `rust/tests/` verify it matches both MILP formulations.
+
+use super::alloc::{AllocOutcome, AllocRequest, Allocator, SolverStats};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Exact DP allocator.
+#[derive(Clone, Debug, Default)]
+pub struct DpAllocator;
+
+impl Allocator for DpAllocator {
+    fn name(&self) -> &'static str {
+        "dp"
+    }
+
+    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome {
+        let t0 = Instant::now();
+        let cap = req.pool_size as usize;
+        let nj = req.jobs.len();
+        const NEG: f64 = f64::NEG_INFINITY;
+
+        // dp[k] = best value with capacity k using jobs[0..j]; choice[j][k]
+        // records the n chosen by job j at capacity k.
+        let mut dp = vec![0.0f64; cap + 1];
+        let mut choice = vec![vec![0u32; cap + 1]; nj];
+        for (ji, job) in req.jobs.iter().enumerate() {
+            let mut next = vec![NEG; cap + 1];
+            // Precompute v(n) for admissible n.
+            let v0 = job.value(0, req.t_fwd);
+            let lo = job.n_min as usize;
+            let hi = (job.n_max as usize).min(cap);
+            let vals: Vec<f64> = if hi >= lo {
+                (lo..=hi).map(|n| job.value(n as u32, req.t_fwd)).collect()
+            } else {
+                Vec::new()
+            };
+            for k in 0..=cap {
+                // n = 0 option
+                let mut best = dp[k] + v0;
+                let mut best_n = 0u32;
+                // n in [lo, min(hi, k)]
+                if hi >= lo {
+                    let top = hi.min(k);
+                    let mut n = lo;
+                    while n <= top {
+                        let cand = dp[k - n] + vals[n - lo];
+                        if cand > best {
+                            best = cand;
+                            best_n = n as u32;
+                        }
+                        n += 1;
+                    }
+                }
+                next[k] = best;
+                choice[ji][k] = best_n;
+            }
+            dp = next;
+        }
+        // Best capacity (dp is monotone in k only if v ≥ v(0); scan all).
+        let mut best_k = 0usize;
+        for k in 0..=cap {
+            if dp[k] > dp[best_k] {
+                best_k = k;
+            }
+        }
+        // Backtrack.
+        let mut targets: BTreeMap<_, _> = BTreeMap::new();
+        let mut k = best_k;
+        for ji in (0..nj).rev() {
+            let n = choice[ji][k];
+            targets.insert(req.jobs[ji].id, n);
+            k -= n as usize;
+        }
+        let objective = req.objective_of(&targets);
+        debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
+        AllocOutcome {
+            targets,
+            objective,
+            stats: SolverStats {
+                solve_time: t0.elapsed(),
+                nodes_explored: nj * (cap + 1),
+                fell_back: false,
+                optimal: true,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::alloc::testutil::{job, random_request};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_pool_all_zero() {
+        let req = AllocRequest { jobs: vec![job(0, 0, 1, 8)], pool_size: 0, t_fwd: 60.0 };
+        let out = DpAllocator.allocate(&req);
+        assert_eq!(out.targets[&0], 0);
+    }
+
+    #[test]
+    fn single_job_gets_max_useful() {
+        let req = AllocRequest { jobs: vec![job(0, 0, 1, 8)], pool_size: 20, t_fwd: 600.0 };
+        let out = DpAllocator.allocate(&req);
+        // concave increasing gain, no downside: takes n_max
+        assert_eq!(out.targets[&0], 8);
+    }
+
+    #[test]
+    fn capacity_shared_between_jobs() {
+        let req = AllocRequest {
+            jobs: vec![job(0, 0, 1, 8), job(1, 0, 1, 8)],
+            pool_size: 8,
+            t_fwd: 600.0,
+        };
+        let out = DpAllocator.allocate(&req);
+        let total: u32 = out.targets.values().sum();
+        assert!(total <= 8);
+        // concave symmetric gains: equal split 4/4 is optimal
+        assert_eq!(out.targets[&0], 4);
+        assert_eq!(out.targets[&1], 4);
+    }
+
+    #[test]
+    fn respects_min_scale_or_zero() {
+        // min 5 with pool 4: must sit at 0
+        let req = AllocRequest { jobs: vec![job(0, 0, 5, 8)], pool_size: 4, t_fwd: 600.0 };
+        let out = DpAllocator.allocate(&req);
+        assert_eq!(out.targets[&0], 0);
+    }
+
+    #[test]
+    fn rescale_cost_can_forbid_upscale() {
+        // Current 4; t_fwd so small the up-cost dominates the extra gain.
+        let mut j = job(0, 4, 1, 8);
+        j.r_up = 1000.0;
+        let req = AllocRequest { jobs: vec![j], pool_size: 8, t_fwd: 1.0 };
+        let out = DpAllocator.allocate(&req);
+        assert_eq!(out.targets[&0], 4, "should keep current scale");
+    }
+
+    #[test]
+    fn long_horizon_encourages_upscale() {
+        let mut j = job(0, 4, 1, 8);
+        j.r_up = 1000.0;
+        let req = AllocRequest { jobs: vec![j], pool_size: 8, t_fwd: 1.0e6 };
+        let out = DpAllocator.allocate(&req);
+        assert_eq!(out.targets[&0], 8);
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_instances() {
+        let mut rng = Rng::new(0xD9);
+        for case in 0..40 {
+            let req = random_request(&mut rng, 3, 12);
+            let out = DpAllocator.allocate(&req);
+            assert!(req.check(&out.targets).is_ok(), "case {case}");
+            // brute force over all admissible combos
+            let mut best = f64::NEG_INFINITY;
+            let opts: Vec<Vec<u32>> = req
+                .jobs
+                .iter()
+                .map(|j| {
+                    let mut v = vec![0u32];
+                    v.extend(j.n_min..=j.n_max);
+                    v
+                })
+                .collect();
+            let mut idx = vec![0usize; opts.len()];
+            loop {
+                let combo: Vec<u32> = idx.iter().zip(&opts).map(|(&i, o)| o[i]).collect();
+                if combo.iter().sum::<u32>() <= req.pool_size {
+                    let m: std::collections::BTreeMap<_, _> =
+                        req.jobs.iter().map(|j| j.id).zip(combo.iter().copied()).collect();
+                    best = best.max(req.objective_of(&m));
+                }
+                // odometer
+                let mut d = 0;
+                loop {
+                    idx[d] += 1;
+                    if idx[d] < opts[d].len() {
+                        break;
+                    }
+                    idx[d] = 0;
+                    d += 1;
+                    if d == opts.len() {
+                        break;
+                    }
+                }
+                if d == opts.len() {
+                    break;
+                }
+            }
+            assert!(
+                (out.objective - best).abs() < 1e-6,
+                "case {case}: dp {} vs brute {}",
+                out.objective,
+                best
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Equal-share heuristic — the paper's baseline scheme (§5.1).
+//!
+//! "A baseline scheme that distributes nodes equally to Trainers": every
+//! admitted Trainer gets ⌊|N|/J⌋ nodes clamped into its `{0} ∪ [min,max]`
+//! set; leftover nodes are handed out one at a time (FCFS order) to
+//! Trainers below their max. The paper notes this heuristic satisfies all
+//! MILP constraints and is optimal when rescaling is free and no
+//! preemption occurs — which is exactly why MILP's advantage (Fig 10) is
+//! concentrated where rescale costs and churn are high.
+
+use super::alloc::{AllocOutcome, AllocRequest, Allocator, SolverStats};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Equal-share baseline allocator.
+#[derive(Clone, Debug, Default)]
+pub struct EqualShareAllocator;
+
+impl Allocator for EqualShareAllocator {
+    fn name(&self) -> &'static str {
+        "equal-share"
+    }
+
+    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome {
+        let t0 = Instant::now();
+        let mut targets: BTreeMap<_, u32> = BTreeMap::new();
+        let nj = req.jobs.len() as u32;
+        if nj == 0 {
+            return AllocOutcome {
+                targets,
+                objective: 0.0,
+                stats: SolverStats { solve_time: t0.elapsed(), ..Default::default() },
+            };
+        }
+        let share = req.pool_size / nj;
+        let mut used = 0u32;
+        for job in &req.jobs {
+            let n = if share >= job.n_min { share.min(job.n_max) } else { 0 };
+            targets.insert(job.id, n);
+            used += n;
+        }
+        // Hand out the remainder one node at a time, FCFS order, repeatedly.
+        let mut leftover = req.pool_size - used;
+        let mut progressed = true;
+        while leftover > 0 && progressed {
+            progressed = false;
+            for job in &req.jobs {
+                if leftover == 0 {
+                    break;
+                }
+                let cur = targets[&job.id];
+                // growing from 0 must jump to n_min
+                let next = if cur == 0 { job.n_min } else { cur + 1 };
+                let need = next - cur;
+                if next <= job.n_max && need <= leftover {
+                    targets.insert(job.id, next);
+                    leftover -= need;
+                    progressed = true;
+                }
+            }
+        }
+        debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
+        let objective = req.objective_of(&targets);
+        AllocOutcome {
+            targets,
+            objective,
+            stats: SolverStats {
+                solve_time: t0.elapsed(),
+                nodes_explored: 0,
+                fell_back: false,
+                optimal: false,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::alloc::testutil::job;
+
+    #[test]
+    fn splits_equally() {
+        let req = AllocRequest {
+            jobs: vec![job(0, 0, 1, 10), job(1, 0, 1, 10)],
+            pool_size: 8,
+            t_fwd: 60.0,
+        };
+        let out = EqualShareAllocator.allocate(&req);
+        assert_eq!(out.targets[&0], 4);
+        assert_eq!(out.targets[&1], 4);
+    }
+
+    #[test]
+    fn remainder_goes_fcfs() {
+        let req = AllocRequest {
+            jobs: vec![job(0, 0, 1, 10), job(1, 0, 1, 10), job(2, 0, 1, 10)],
+            pool_size: 11,
+            t_fwd: 60.0,
+        };
+        let out = EqualShareAllocator.allocate(&req);
+        assert_eq!(out.targets[&0], 4);
+        assert_eq!(out.targets[&1], 4);
+        assert_eq!(out.targets[&2], 3);
+    }
+
+    #[test]
+    fn clamps_to_max_and_redistributes() {
+        let req = AllocRequest {
+            jobs: vec![job(0, 0, 1, 2), job(1, 0, 1, 16)],
+            pool_size: 12,
+            t_fwd: 60.0,
+        };
+        let out = EqualShareAllocator.allocate(&req);
+        assert_eq!(out.targets[&0], 2);
+        assert_eq!(out.targets[&1], 10);
+    }
+
+    #[test]
+    fn below_min_waits() {
+        let req = AllocRequest {
+            jobs: vec![job(0, 0, 8, 16), job(1, 0, 1, 16)],
+            pool_size: 6,
+            t_fwd: 60.0,
+        };
+        let out = EqualShareAllocator.allocate(&req);
+        // share = 3 < 8: job0 waits; its nodes go to job1
+        assert_eq!(out.targets[&0], 0);
+        assert_eq!(out.targets[&1], 6);
+    }
+
+    #[test]
+    fn zero_jobs_ok() {
+        let req = AllocRequest { jobs: vec![], pool_size: 5, t_fwd: 60.0 };
+        let out = EqualShareAllocator.allocate(&req);
+        assert!(out.targets.is_empty());
+    }
+
+    #[test]
+    fn never_exceeds_pool() {
+        for pool in 0..20u32 {
+            let req = AllocRequest {
+                jobs: vec![job(0, 0, 2, 5), job(1, 0, 3, 9), job(2, 0, 1, 2)],
+                pool_size: pool,
+                t_fwd: 60.0,
+            };
+            let out = EqualShareAllocator.allocate(&req);
+            assert!(req.check(&out.targets).is_ok(), "pool={pool}: {:?}", out.targets);
+        }
+    }
+}

@@ -1,0 +1,534 @@
+//! Paper-faithful per-node MILP formulation (§3.2–§3.5, Eqns 1–16).
+//!
+//! Decision variable `x_jn ∈ {0,1}` — node n allocated to Trainer j —
+//! with the paper's literal constraint encodings:
+//!
+//! * Eqn 4   — job-size bounds via big-M binaries `y_j^l`, `y_j^u`
+//! * Eqn 5   — node exclusivity `Σ_j x_jn ≤ 1`
+//! * Eqn 9   — XOR linearization `u_jn = x_jn ⊕ c_jn`
+//! * Eqn 10  — no-migration: `|Σx − Σc| = Σu` via binary `z_j`
+//! * Eqn 11–12 — SOS2 piecewise-linear objective approximation
+//! * Eqn 14–15 — rescale-cost indicators `z_j^u`, `z_j^d`
+//! * Eqn 16  — objective `Σ T_fwd·O_j(N_j) − Σ O_j(C_j)·R_j`
+//!
+//! This model has `O(J·|N|)` binaries, so it is exercised at the scales a
+//! dense-tableau B&B handles (tests & small Fig 5 points); the equivalent
+//! aggregate model ([`super::milp_aggregate`]) is the production path.
+//! Equivalence between the two is property-tested.
+
+use super::alloc::{AllocOutcome, AllocRequest, Allocator, SolverStats};
+use crate::milp::{self, Direction, LinExpr, Model, Sense};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Per-node MILP allocator. `current_nodes[j]` must list the concrete
+/// nodes each job currently holds (the map `c_jn`).
+#[derive(Clone, Debug)]
+pub struct PerNodeMilpAllocator {
+    pub limits: milp::Limits,
+}
+
+impl Default for PerNodeMilpAllocator {
+    fn default() -> Self {
+        PerNodeMilpAllocator { limits: milp::Limits::default() }
+    }
+}
+
+/// Build the paper's model. `c` is the current assignment: `c[j][n]` over
+/// jobs × pool-node indices (dense 0..pool_size).
+pub fn build_model(req: &AllocRequest, c: &[Vec<bool>]) -> (Model, Vec<Vec<milp::VarId>>) {
+    let nn = req.pool_size as usize;
+    let nj = req.jobs.len();
+    assert_eq!(c.len(), nj);
+    for row in c {
+        assert_eq!(row.len(), nn);
+    }
+    let mut m = Model::new(Direction::Maximize);
+    let big_m = (nn + 1) as f64;
+
+    // x_jn
+    let x: Vec<Vec<milp::VarId>> = (0..nj)
+        .map(|j| (0..nn).map(|n| m.binary(format!("x[{j},{n}]"))).collect())
+        .collect();
+
+    let mut objective = LinExpr::new();
+
+    for (j, job) in req.jobs.iter().enumerate() {
+        let jid = job.id;
+        // N_j = Σ_n x_jn  (Eqn 2) — expression reused below.
+        let nj_expr = || {
+            let mut e = LinExpr::new();
+            for n in 0..nn {
+                e.add(x[j][n], 1.0);
+            }
+            e
+        };
+        let c_j = c[j].iter().filter(|&&b| b).count() as f64;
+
+        // ---- Eqn 4: size bounds with y^l, y^u ----------------------------
+        let yl = m.binary(format!("yl[{jid}]"));
+        let yu = m.binary(format!("yu[{jid}]"));
+        // N_j >= Nmin - M yl
+        let mut e = nj_expr();
+        e.add(yl, big_m);
+        m.constrain(e, Sense::Ge, job.n_min as f64, format!("e4a[{jid}]"));
+        // N_j <= M (1 - yl)
+        let mut e = nj_expr();
+        e.add(yl, big_m);
+        m.constrain(e, Sense::Le, big_m, format!("e4b[{jid}]"));
+        // Nmax >= N_j - M yu
+        let mut e = nj_expr();
+        e.add(yu, -big_m);
+        m.constrain(e, Sense::Le, job.n_max as f64, format!("e4c[{jid}]"));
+        // N_j <= M (1 - yu)
+        let mut e = nj_expr();
+        e.add(yu, big_m);
+        m.constrain(e, Sense::Le, big_m, format!("e4d[{jid}]"));
+        // NOTE (paper fidelity): Eqn 4 as printed allows the spurious
+        // "yl=0, yu=1, N_j=0" combination only when N_j=0 satisfies both
+        // halves — the intended semantics (N_j = 0 or min<=N_j<=max) hold
+        // because yl=1 forces N_j = 0 and yl=0 forces N_j >= Nmin.
+        // yu=1 would force N_j = 0 too (consistent).
+
+        // ---- Eqn 9: u_jn = x_jn XOR c_jn ---------------------------------
+        let mut u_sum = LinExpr::new();
+        for n in 0..nn {
+            let u = m.binary(format!("u[{jid},{n}]"));
+            let cjn = if c[j][n] { 1.0 } else { 0.0 };
+            // u <= x + c
+            m.constrain(
+                LinExpr::new().term(u, 1.0).term(x[j][n], -1.0),
+                Sense::Le,
+                cjn,
+                format!("e9a[{jid},{n}]"),
+            );
+            // u >= x - c
+            m.constrain(
+                LinExpr::new().term(u, 1.0).term(x[j][n], -1.0),
+                Sense::Ge,
+                -cjn,
+                format!("e9b[{jid},{n}]"),
+            );
+            // u >= c - x
+            m.constrain(
+                LinExpr::new().term(u, 1.0).term(x[j][n], 1.0),
+                Sense::Ge,
+                cjn,
+                format!("e9c[{jid},{n}]"),
+            );
+            // u <= 2 - x - c
+            m.constrain(
+                LinExpr::new().term(u, 1.0).term(x[j][n], 1.0),
+                Sense::Le,
+                2.0 - cjn,
+                format!("e9d[{jid},{n}]"),
+            );
+            u_sum.add(u, 1.0);
+        }
+
+        // ---- Eqn 10: no-migration ----------------------------------------
+        // NOTE: Eqn 10's big-M must satisfy M >= Σx + Σc + Σu (worst case
+        // 2|N|) — the paper's "M > |N|" is insufficient for the `<=` half
+        // when a job grows from zero. We use M' = 2|N| + 1.
+        let big_m2 = 2.0 * nn as f64 + 1.0;
+        let z = m.binary(format!("z[{jid}]"));
+        // Σx - Σc >= Σu - M z
+        let mut e = nj_expr();
+        for &(v, coef) in &u_sum.terms {
+            e.add(v, -coef);
+        }
+        e.add(z, big_m2);
+        m.constrain(e, Sense::Ge, c_j, format!("e10a[{jid}]"));
+        // Σx - Σc <= -Σu + M (1 - z)
+        let mut e = nj_expr();
+        for &(v, coef) in &u_sum.terms {
+            e.add(v, coef);
+        }
+        e.add(z, big_m2);
+        m.constrain(e, Sense::Le, c_j + big_m2, format!("e10b[{jid}]"));
+
+        // ---- Eqn 11–12: SOS2 objective approximation ---------------------
+        let mut bps: Vec<(f64, f64)> = vec![(0.0, 0.0)];
+        for &(bn, bv) in &job.points {
+            bps.push((bn as f64, bv));
+        }
+        let ws: Vec<milp::VarId> = (0..bps.len())
+            .map(|i| m.continuous(0.0, 1.0, format!("w[{jid},{i}]")))
+            .collect();
+        let mut convex = LinExpr::new();
+        let mut ndef = nj_expr();
+        for (i, &(bn, _)) in bps.iter().enumerate() {
+            convex.add(ws[i], 1.0);
+            ndef.add(ws[i], -bn);
+        }
+        m.constrain(convex, Sense::Eq, 1.0, format!("e11a[{jid}]"));
+        m.constrain(ndef, Sense::Eq, 0.0, format!("e11b[{jid}]"));
+        m.add_sos2(ws.clone(), format!("sos2[{jid}]"));
+        for (i, &(_, bv)) in bps.iter().enumerate() {
+            if bv != 0.0 {
+                objective.add(ws[i], req.t_fwd * bv);
+            }
+        }
+
+        // ---- Eqn 14–15: rescale indicators -------------------------------
+        let zu = m.binary(format!("zu[{jid}]"));
+        let zd = m.binary(format!("zd[{jid}]"));
+        // N <= C + (M - C) zu
+        let mut e = nj_expr();
+        e.add(zu, -(big_m - c_j));
+        m.constrain(e, Sense::Le, c_j, format!("e15a[{jid}]"));
+        // N >= (C+1) zu
+        let mut e = nj_expr();
+        e.add(zu, -(c_j + 1.0));
+        m.constrain(e, Sense::Ge, 0.0, format!("e15b[{jid}]"));
+        // N <= (C-1) + (M - (C-1))(1 - zd)
+        let mut e = nj_expr();
+        e.add(zd, big_m - (c_j - 1.0));
+        m.constrain(e, Sense::Le, big_m, format!("e15c[{jid}]"));
+        // N >= C (1 - zd)
+        let mut e = nj_expr();
+        e.add(zd, c_j);
+        m.constrain(e, Sense::Ge, c_j, format!("e15d[{jid}]"));
+        let rate_now = if job.current == 0 { 0.0 } else { job.gain(job.current) };
+        if rate_now * job.r_up != 0.0 {
+            objective.add(zu, -rate_now * job.r_up);
+        }
+        if rate_now * job.r_dw != 0.0 {
+            objective.add(zd, -rate_now * job.r_dw);
+        }
+    }
+
+    // ---- Eqn 5: node exclusivity -----------------------------------------
+    for n in 0..nn {
+        let mut e = LinExpr::new();
+        for j in 0..nj {
+            e.add(x[j][n], 1.0);
+        }
+        m.constrain(e, Sense::Le, 1.0, format!("e5[{n}]"));
+    }
+
+    m.set_objective(objective, 0.0);
+    (m, x)
+}
+
+/// Dense current-assignment matrix from the jobs' `current` counts: job j
+/// holds nodes [offset, offset + C_j) — concrete ids are irrelevant to the
+/// optimum (tested), only the counts matter.
+pub fn dense_assignment(req: &AllocRequest) -> Vec<Vec<bool>> {
+    let nn = req.pool_size as usize;
+    let mut c = vec![vec![false; nn]; req.jobs.len()];
+    let mut off = 0usize;
+    for (j, job) in req.jobs.iter().enumerate() {
+        for n in off..(off + job.current as usize).min(nn) {
+            c[j][n] = true;
+        }
+        off += job.current as usize;
+    }
+    c
+}
+
+impl Allocator for PerNodeMilpAllocator {
+    fn name(&self) -> &'static str {
+        "milp-pernode"
+    }
+
+    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome {
+        let t0 = Instant::now();
+        let c = dense_assignment(req);
+        let (model, x) = build_model(req, &c);
+        // Warm-start with the exact DP optimum embedded (feasible by the
+        // aggregate-equivalence argument); falls back to the current map.
+        let dp = super::dp_alloc::DpAllocator.allocate(req);
+        let warm = embed_targets(req, &model, &x, &c, &dp.targets)
+            .or_else(|| embed_targets(req, &model, &x, &c, &req.current_map()));
+        let res = milp::solve(&model, &self.limits, warm.as_deref());
+        let (targets, fell_back, optimal) = match res.status {
+            milp::MilpStatus::Optimal | milp::MilpStatus::Feasible => {
+                let mut t: BTreeMap<_, u32> = BTreeMap::new();
+                for (j, job) in req.jobs.iter().enumerate() {
+                    let n: f64 = x[j].iter().map(|v| res.x[v.0]).sum();
+                    t.insert(job.id, n.round().max(0.0) as u32);
+                }
+                let current = req.current_map();
+                if req.check(&current).is_ok()
+                    && req.objective_of(&current) > req.objective_of(&t) + 1e-9
+                {
+                    (current, true, false)
+                } else {
+                    (t, false, res.status == milp::MilpStatus::Optimal)
+                }
+            }
+            _ => (req.current_map(), true, false),
+        };
+        debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
+        let objective = req.objective_of(&targets);
+        AllocOutcome {
+            targets,
+            objective,
+            stats: SolverStats {
+                solve_time: t0.elapsed(),
+                nodes_explored: res.nodes_explored,
+                fell_back,
+                optimal,
+            },
+        }
+    }
+}
+
+/// Embed a target count map into the per-node variable space (for warm
+/// starts): shrinks keep a prefix of current nodes, grows take free nodes.
+/// Returns None if the embedding is infeasible (shouldn't happen).
+fn embed_targets(
+    req: &AllocRequest,
+    model: &Model,
+    x: &[Vec<milp::VarId>],
+    c: &[Vec<bool>],
+    targets: &BTreeMap<usize, u32>,
+) -> Option<Vec<f64>> {
+    let nn = req.pool_size as usize;
+    let mut assign = vec![usize::MAX; nn]; // node -> job
+    for (j, row) in c.iter().enumerate() {
+        let want = targets.get(&req.jobs[j].id).copied().unwrap_or(0) as usize;
+        let mut kept = 0usize;
+        for (n, &mine) in row.iter().enumerate() {
+            if mine && kept < want {
+                assign[n] = j;
+                kept += 1;
+            }
+        }
+    }
+    // grows
+    for (j, row) in c.iter().enumerate() {
+        let want = targets.get(&req.jobs[j].id).copied().unwrap_or(0) as usize;
+        let have = assign.iter().filter(|&&a| a == j).count();
+        if have < want {
+            let mut need = want - have;
+            for n in 0..nn {
+                if need == 0 {
+                    break;
+                }
+                if assign[n] == usize::MAX && !row[n] {
+                    assign[n] = j;
+                    need -= 1;
+                }
+            }
+            if need > 0 {
+                return None;
+            }
+        }
+    }
+    // Build full variable vector by walking model var names in order.
+    let mut xs = vec![0.0; model.n_vars()];
+    for (j, jx) in x.iter().enumerate() {
+        for (n, v) in jx.iter().enumerate() {
+            if assign[n] == j {
+                xs[v.0] = 1.0;
+            }
+        }
+    }
+    // Fill auxiliaries by name-driven recomputation.
+    for (vi, var) in model.vars.iter().enumerate() {
+        let name = &var.name;
+        let parse_j = |pfx: &str| -> Option<usize> {
+            name.strip_prefix(pfx)?.strip_suffix(']')?.split(',').next()?.parse().ok()
+        };
+        if let Some(j) = parse_j("yl[") {
+            let njv = assign.iter().filter(|&&a| a == j).count();
+            xs[vi] = if njv == 0 { 1.0 } else { 0.0 };
+        } else if name.starts_with("yu[") {
+            xs[vi] = 0.0; // N_j <= n_max always in our embeddings
+        } else if let Some(j) = parse_j("u[") {
+            let n: usize = name
+                .strip_prefix("u[")
+                .unwrap()
+                .strip_suffix(']')
+                .unwrap()
+                .split(',')
+                .nth(1)
+                .unwrap()
+                .parse()
+                .unwrap();
+            let xv = assign[n] == j;
+            xs[vi] = if xv != c[j][n] { 1.0 } else { 0.0 };
+        } else if let Some(j) = parse_j("z[") {
+            // z=1 selects the "scale down" branch of Eqn 10
+            let njv = assign.iter().filter(|&&a| a == j).count();
+            let cj = c[j].iter().filter(|&&b| b).count();
+            xs[vi] = if njv < cj { 1.0 } else { 0.0 };
+        } else if let Some(j) = parse_j("w[") {
+            let i: usize = name
+                .strip_prefix("w[")
+                .unwrap()
+                .strip_suffix(']')
+                .unwrap()
+                .split(',')
+                .nth(1)
+                .unwrap()
+                .parse()
+                .unwrap();
+            let njv = assign.iter().filter(|&&a| a == j).count() as f64;
+            let mut bps: Vec<f64> = vec![0.0];
+            bps.extend(req.jobs[j].points.iter().map(|&(bn, _)| bn as f64));
+            // piecewise weights for njv
+            let mut w = vec![0.0; bps.len()];
+            let mut placed = false;
+            for k in 0..bps.len() - 1 {
+                if njv >= bps[k] && njv <= bps[k + 1] {
+                    let span = bps[k + 1] - bps[k];
+                    let f = if span > 0.0 { (njv - bps[k]) / span } else { 0.0 };
+                    w[k] = 1.0 - f;
+                    w[k + 1] = f;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                w[bps.len() - 1] = 1.0;
+            }
+            xs[vi] = w[i];
+        } else if let Some(j) = parse_j("zu[") {
+            let njv = assign.iter().filter(|&&a| a == j).count();
+            let cj = c[j].iter().filter(|&&b| b).count();
+            xs[vi] = if njv > cj { 1.0 } else { 0.0 };
+        } else if let Some(j) = parse_j("zd[") {
+            let njv = assign.iter().filter(|&&a| a == j).count();
+            let cj = c[j].iter().filter(|&&b| b).count();
+            xs[vi] = if njv < cj { 1.0 } else { 0.0 };
+        }
+    }
+    if model.is_feasible(&xs, 1e-6) {
+        Some(xs)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::alloc::testutil::{job, random_request};
+    use crate::coordinator::dp_alloc::DpAllocator;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_job_takes_max() {
+        let req = AllocRequest { jobs: vec![job(0, 0, 1, 4)], pool_size: 6, t_fwd: 600.0 };
+        let out = PerNodeMilpAllocator::default().allocate(&req);
+        assert_eq!(out.targets[&0], 4);
+    }
+
+    #[test]
+    fn warm_start_embedding_feasible() {
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let mut req = random_request(&mut rng, 3, 6);
+            req.pool_size = req.pool_size.min(10); // keep model small
+            let share = req.pool_size / req.jobs.len().max(1) as u32;
+            for j in req.jobs.iter_mut() {
+                j.current = j.current.min(share);
+                if j.current > 0 && j.current < j.n_min {
+                    j.current = 0;
+                }
+            }
+            let cur_sum: u32 = req.jobs.iter().map(|j| j.current).sum();
+            req.pool_size = req.pool_size.max(cur_sum);
+            let c = dense_assignment(&req);
+            let (model, x) = build_model(&req, &c);
+            let w = embed_targets(&req, &model, &x, &c, &req.current_map());
+            assert!(w.is_some(), "current map must embed feasibly");
+        }
+    }
+
+    #[test]
+    fn matches_dp_on_small_instances() {
+        let mut rng = Rng::new(0xFACE);
+        let mut alloc = PerNodeMilpAllocator::default();
+        for case in 0..10 {
+            let mut req = random_request(&mut rng, 2, 5);
+            req.pool_size = req.pool_size.min(8);
+            for j in req.jobs.iter_mut() {
+                j.n_max = j.n_max.min(8);
+                j.current = j.current.min(j.n_max);
+                if j.current < j.n_min {
+                    j.current = 0;
+                }
+            }
+            let cur_sum: u32 = req.jobs.iter().map(|j| j.current).sum();
+            req.pool_size = req.pool_size.max(cur_sum);
+            let dp = DpAllocator.allocate(&req);
+            let pn = alloc.allocate(&req);
+            assert!(
+                (dp.objective - pn.objective).abs() < 1e-5,
+                "case {case}: dp {} pernode {} optimal={}\nreq {req:?}",
+                dp.objective,
+                pn.objective,
+                pn.stats.optimal
+            );
+        }
+    }
+
+    #[test]
+    fn node_identity_irrelevant() {
+        // Permuting which concrete nodes a job currently holds must not
+        // change the optimal objective.
+        let req = AllocRequest {
+            jobs: vec![job(0, 2, 1, 4), job(1, 1, 1, 4)],
+            pool_size: 6,
+            t_fwd: 120.0,
+        };
+        let mut c1 = vec![vec![false; 6]; 2];
+        c1[0][0] = true;
+        c1[0][1] = true;
+        c1[1][2] = true;
+        let mut c2 = vec![vec![false; 6]; 2];
+        c2[0][5] = true;
+        c2[0][3] = true;
+        c2[1][0] = true;
+        let (m1, _) = build_model(&req, &c1);
+        let (m2, _) = build_model(&req, &c2);
+        let r1 = milp::solve(&m1, &milp::Limits::default(), None);
+        let r2 = milp::solve(&m2, &milp::Limits::default(), None);
+        assert_eq!(r1.status, milp::MilpStatus::Optimal);
+        assert_eq!(r2.status, milp::MilpStatus::Optimal);
+        assert!((r1.objective - r2.objective).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_migration_enforced_in_model() {
+        // One job holding nodes {0,1} of a 3-node pool; a solution keeping
+        // scale 2 but moving to nodes {1,2} must be infeasible.
+        let req = AllocRequest { jobs: vec![job(0, 2, 1, 2)], pool_size: 3, t_fwd: 60.0 };
+        let mut c = vec![vec![false; 3]];
+        c[0][0] = true;
+        c[0][1] = true;
+        let (model, x) = build_model(&req, &c);
+        // candidate: x = {1,2}
+        let mut xs = vec![0.0; model.n_vars()];
+        xs[x[0][1].0] = 1.0;
+        xs[x[0][2].0] = 1.0;
+        // even with the best aux settings this violates Eqn 10; check by
+        // trying both z values with consistent u.
+        // u = x XOR c = [1,0,1] -> Σu = 2, Σx-Σc = 0: |0| != 2.
+        // Feasibility requires either 0 >= 2 - M z (z=1: ok) AND
+        // 0 <= -2 + M(1-z) (z=1: 0 <= -2 + 0 false) -> infeasible.
+        // Fill u correctly and scan z in {0,1}.
+        for zval in [0.0, 1.0] {
+            let mut cand = xs.clone();
+            for (vi, var) in model.vars.iter().enumerate() {
+                if var.name == "u[0,0]" || var.name == "u[0,2]" {
+                    cand[vi] = 1.0;
+                }
+                if var.name == "z[0]" {
+                    cand[vi] = zval;
+                }
+                if var.name == "w[0,2]" {
+                    cand[vi] = 1.0; // n=2 breakpoint weight
+                }
+            }
+            assert!(
+                model.feasibility_violation(&cand, 1e-6).is_some(),
+                "migration should be infeasible (z={zval})"
+            );
+        }
+    }
+}

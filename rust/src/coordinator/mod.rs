@@ -1,0 +1,429 @@
+//! The BFTrainer coordinator (L3) — the paper's system contribution.
+//!
+//! Owns the idle-node pool, the Trainer queue (FCFS admission capped at
+//! `Pj_max`, §5.3), the objective metric and the allocation policy. Every
+//! pool change, Trainer completion or submission triggers a reallocation
+//! (paper §3: "we solve a MILP whenever there is a change to N, a Trainer
+//! completes, or a new Trainer is ready to run").
+
+pub mod alloc;
+pub mod dp_alloc;
+pub mod heuristic;
+pub mod milp_aggregate;
+pub mod milp_pernode;
+pub mod objective;
+pub mod pool;
+pub mod trainer;
+
+pub use alloc::{AllocJob, AllocOutcome, AllocRequest, Allocator, SolverStats};
+pub use dp_alloc::DpAllocator;
+pub use heuristic::EqualShareAllocator;
+pub use milp_aggregate::AggregateMilpAllocator;
+pub use milp_pernode::PerNodeMilpAllocator;
+pub use objective::Objective;
+pub use pool::Pool;
+pub use trainer::{Phase, TrainerId, TrainerSpec, TrainerState};
+
+use crate::trace::PoolEvent;
+use std::collections::BTreeMap;
+
+/// Which allocation policy to run.
+pub enum Policy {
+    /// The paper's MILP (aggregate formulation, DP warm start).
+    Milp(AggregateMilpAllocator),
+    /// Paper-faithful per-node MILP (small pools only).
+    PerNode(PerNodeMilpAllocator),
+    /// Exact DP (identical optimum to MILP, fastest).
+    Dp(DpAllocator),
+    /// Equal-share baseline.
+    Heuristic(EqualShareAllocator),
+}
+
+impl Policy {
+    pub fn by_name(name: &str) -> Option<Policy> {
+        match name.to_ascii_lowercase().as_str() {
+            "milp" | "milp-aggregate" => Some(Policy::Milp(Default::default())),
+            "milp-pernode" | "pernode" => Some(Policy::PerNode(Default::default())),
+            "dp" => Some(Policy::Dp(DpAllocator)),
+            "heuristic" | "equal" | "equal-share" => Some(Policy::Heuristic(Default::default())),
+            _ => None,
+        }
+    }
+
+    fn as_allocator(&mut self) -> &mut dyn Allocator {
+        match self {
+            Policy::Milp(a) => a,
+            Policy::PerNode(a) => a,
+            Policy::Dp(a) => a,
+            Policy::Heuristic(a) => a,
+        }
+    }
+
+    pub fn name(&mut self) -> &'static str {
+        self.as_allocator().name()
+    }
+}
+
+/// Per-event record for metrics/ROI analysis.
+#[derive(Clone, Debug, Default)]
+pub struct EventRecord {
+    pub t: f64,
+    /// Rescale cost invested at this event, in samples (Σ_j O_j(C_j)·R_j).
+    pub rescale_cost_samples: f64,
+    /// Trainers preempted (forced down) at this event.
+    pub preempted: usize,
+    /// Solver wall time.
+    pub solve_time_s: f64,
+    /// Whether the §3.6 fallback was taken.
+    pub fell_back: bool,
+    /// Pool size after the event.
+    pub pool_size: usize,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub pool: Pool,
+    pub trainers: Vec<TrainerState>,
+    /// FCFS queue of not-yet-admitted trainers.
+    pub queue: Vec<TrainerId>,
+    /// Admitted (waiting or running) trainers.
+    pub admitted: Vec<TrainerId>,
+    /// Maximum parallel trainers (Pj_max, §5.3).
+    pub pj_max: usize,
+    pub objective: Objective,
+    pub policy: Policy,
+    /// Forward-looking time T_fwd (seconds).
+    pub t_fwd: f64,
+    /// Priority weights (only used by Objective::Priority).
+    pub weights: BTreeMap<TrainerId, f64>,
+    /// Per-event records (for Figs 7, 8, 11).
+    pub event_log: Vec<EventRecord>,
+    /// Global multiplier on rescale costs (Fig 16's artificial 2–10×).
+    pub rescale_cost_multiplier: f64,
+}
+
+impl Coordinator {
+    pub fn new(policy: Policy, objective: Objective, t_fwd: f64, pj_max: usize) -> Self {
+        Coordinator {
+            pool: Pool::new(),
+            trainers: Vec::new(),
+            queue: Vec::new(),
+            admitted: Vec::new(),
+            pj_max,
+            objective,
+            policy,
+            t_fwd,
+            weights: BTreeMap::new(),
+            event_log: Vec::new(),
+            rescale_cost_multiplier: 1.0,
+        }
+    }
+
+    /// Submit a trainer; returns its id. Admission is immediate if below
+    /// Pj_max; reallocation is left to the caller/event loop.
+    pub fn submit(&mut self, spec: TrainerSpec, now: f64) -> TrainerId {
+        let id = self.trainers.len();
+        self.trainers.push(TrainerState::new(id, spec, now));
+        self.queue.push(id);
+        self.admit(now);
+        id
+    }
+
+    /// FCFS admission up to pj_max.
+    fn admit(&mut self, now: f64) {
+        while self.admitted.len() < self.pj_max && !self.queue.is_empty() {
+            let id = self.queue.remove(0);
+            let t = &mut self.trainers[id];
+            t.phase = Phase::Waiting;
+            t.admit_t = Some(now);
+            self.admitted.push(id);
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.admitted.len()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.queue.is_empty() && self.admitted.is_empty()
+    }
+
+    /// Currently running scale of a trainer.
+    pub fn scale_of(&self, id: TrainerId) -> u32 {
+        self.pool.count_of(id)
+    }
+
+    /// Advance all admitted trainers by `dt` at their current scales.
+    /// Completions are detected by the caller via [`Self::finish_time_within`]
+    /// + [`Self::complete_finished`] so reallocation happens at the exact
+    /// completion instant. Returns total samples processed.
+    pub fn advance(&mut self, now: f64, dt: f64) -> f64 {
+        let mut total = 0.0;
+        for &id in &self.admitted {
+            let n = self.pool.count_of(id);
+            total += self.trainers[id].advance(now, dt, n);
+        }
+        total
+    }
+
+    /// Samples below this are "done" — guards float-precision loops where
+    /// `now + remaining/rate == now`.
+    pub const EPS_SAMPLES: f64 = 1e-6;
+
+    /// Earliest completion time of any admitted trainer within
+    /// `(now, now+dt]` at current scales, if any.
+    pub fn finish_time_within(&self, now: f64, dt: f64) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for &id in &self.admitted {
+            let t = &self.trainers[id];
+            let n = self.pool.count_of(id);
+            if n == 0 || t.is_done() || t.remaining() <= Self::EPS_SAMPLES {
+                continue;
+            }
+            let rate = t.spec.throughput(n);
+            if rate <= 0.0 {
+                continue;
+            }
+            // account for stall at interval start; clamp the work time to
+            // >= 1 us so `now + need` always advances the f64 clock (a
+            // sub-ULP `need` at large `now` would stall the replay loop)
+            let stall = (t.stalled_until - now).max(0.0);
+            let need = (t.remaining() / rate).max(1e-6) + stall;
+            if need <= dt + 1e-9 {
+                let ft = now + need;
+                best = Some(best.map_or(ft, |b: f64| b.min(ft)));
+            }
+        }
+        best
+    }
+
+    /// Mark trainers that have no remaining work as done, release their
+    /// nodes, admit queued trainers. Returns ids completed.
+    pub fn complete_finished(&mut self, now: f64) -> Vec<TrainerId> {
+        let mut done = Vec::new();
+        let ids: Vec<TrainerId> = self.admitted.clone();
+        for id in ids {
+            if self.trainers[id].remaining() <= Self::EPS_SAMPLES {
+                self.trainers[id].phase = Phase::Done;
+                self.trainers[id].done_t = Some(now);
+                self.pool.release_all(id);
+                self.admitted.retain(|&a| a != id);
+                done.push(id);
+            }
+        }
+        if !done.is_empty() {
+            self.admit(now);
+        }
+        done
+    }
+
+    /// Handle a pool event (nodes join/leave), then reallocate.
+    pub fn handle_event(&mut self, now: f64, ev: &PoolEvent) {
+        self.pool.join(&ev.joins);
+        let hit = self.pool.leave(&ev.leaves);
+        let mut preempted = 0usize;
+        for (&id, &lost) in &hit {
+            let new = self.pool.count_of(id);
+            let old = new + lost;
+            let t = &mut self.trainers[id];
+            t.apply_rescale(now, old, new, true);
+            preempted += 1;
+            // Below minimum scale the job cannot run at all: it waits (its
+            // remaining nodes return to the free pool) until the allocator
+            // assigns >= n_min again.
+            if new > 0 && new < t.spec.n_min {
+                self.pool.release_all(id);
+                self.trainers[id].apply_rescale(now, new, 0, true);
+            }
+        }
+        self.reallocate(now, preempted);
+    }
+
+    /// Build the allocation request for the currently admitted trainers.
+    pub fn request(&self) -> AllocRequest {
+        let jobs: Vec<AllocJob> = self
+            .admitted
+            .iter()
+            .map(|&id| {
+                let t = &self.trainers[id];
+                let w = self.weights.get(&id).copied().unwrap_or(1.0);
+                AllocJob {
+                    id,
+                    current: self.pool.count_of(id),
+                    n_min: t.spec.n_min,
+                    n_max: t.spec.n_max,
+                    r_up: t.spec.r_up * self.rescale_cost_multiplier,
+                    r_dw: t.spec.r_dw * self.rescale_cost_multiplier,
+                    points: self.objective.breakpoints(&t.spec.curve, w, t.spec.n_min, t.spec.n_max),
+                }
+            })
+            .collect();
+        AllocRequest { jobs, pool_size: self.pool.len() as u32, t_fwd: self.t_fwd }
+    }
+
+    /// Re-run the allocator and apply the decision (records an event).
+    pub fn reallocate(&mut self, now: f64, preempted: usize) {
+        let req = self.request();
+        let outcome = self.policy.as_allocator().allocate(&req);
+        let mut rescale_cost_samples = 0.0;
+        for job in &req.jobs {
+            let new = outcome.targets.get(&job.id).copied().unwrap_or(0);
+            let old = job.current;
+            if new != old {
+                let t = &mut self.trainers[job.id];
+                let mult = self.rescale_cost_multiplier;
+                // Eqn 16 cost accounting in samples: real throughput at the
+                // old scale × stall duration.
+                let rate = t.spec.throughput(old);
+                let stall = if new > old { t.spec.r_up } else { t.spec.r_dw } * mult;
+                rescale_cost_samples += rate * stall;
+                // apply with the multiplied costs
+                let (saved_up, saved_dw) = (t.spec.r_up, t.spec.r_dw);
+                t.spec.r_up *= mult;
+                t.spec.r_dw *= mult;
+                t.apply_rescale(now, old, new, false);
+                t.spec.r_up = saved_up;
+                t.spec.r_dw = saved_dw;
+            }
+        }
+        self.pool.apply_allocation(&outcome.targets);
+        self.event_log.push(EventRecord {
+            t: now,
+            rescale_cost_samples,
+            preempted,
+            solve_time_s: outcome.stats.solve_time.as_secs_f64(),
+            fell_back: outcome.stats.fell_back,
+            pool_size: self.pool.len(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::ScalingCurve;
+
+    fn spec(total: f64) -> TrainerSpec {
+        TrainerSpec {
+            name: "t".into(),
+            n_min: 1,
+            n_max: 8,
+            r_up: 20.0,
+            r_dw: 5.0,
+            curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+            total_samples: total,
+        }
+    }
+
+    fn coord(pj_max: usize) -> Coordinator {
+        Coordinator::new(Policy::Dp(DpAllocator), Objective::Throughput, 120.0, pj_max)
+    }
+
+    #[test]
+    fn admission_respects_pj_max() {
+        let mut c = coord(2);
+        for _ in 0..4 {
+            c.submit(spec(1000.0), 0.0);
+        }
+        assert_eq!(c.admitted.len(), 2);
+        assert_eq!(c.queue.len(), 2);
+        assert_eq!(c.trainers[0].phase, Phase::Waiting);
+        assert_eq!(c.trainers[3].phase, Phase::Queued);
+    }
+
+    #[test]
+    fn event_allocates_nodes_to_trainers() {
+        let mut c = coord(4);
+        c.submit(spec(1e9), 0.0);
+        c.submit(spec(1e9), 0.0);
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..8).collect(), leaves: vec![] });
+        let total: u32 = (0..2).map(|id| c.scale_of(id)).sum();
+        assert!(total > 0 && total <= 8);
+        assert_eq!(c.trainers[0].phase, Phase::Running);
+    }
+
+    #[test]
+    fn node_leave_preempts_and_pays_cost() {
+        let mut c = coord(4);
+        c.submit(spec(1e9), 0.0);
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        assert_eq!(c.scale_of(0), 4);
+        let mine = c.pool.allocation()[&0].clone();
+        c.handle_event(100.0, &PoolEvent { t: 100.0, joins: vec![], leaves: mine[..2].to_vec() });
+        assert!(c.trainers[0].preemptions >= 1);
+    }
+
+    #[test]
+    fn below_min_forces_waiting() {
+        let mut c = coord(4);
+        let mut s = spec(1e9);
+        s.n_min = 4;
+        c.submit(s, 0.0);
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        assert_eq!(c.scale_of(0), 4);
+        let mine = c.pool.allocation()[&0].clone();
+        c.handle_event(10.0, &PoolEvent { t: 10.0, joins: vec![], leaves: mine[..2].to_vec() });
+        assert_eq!(c.scale_of(0), 0);
+        assert_eq!(c.trainers[0].phase, Phase::Waiting);
+    }
+
+    #[test]
+    fn completion_releases_and_admits_next() {
+        let mut c = coord(1);
+        c.submit(spec(100.0), 0.0); // tiny job
+        c.submit(spec(1e9), 0.0);
+        assert_eq!(c.admitted, vec![0]);
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        let ft = c.finish_time_within(0.0, 100.0).expect("finishes");
+        assert!(ft > 0.0 && ft < 100.0);
+        c.advance(0.0, ft);
+        let done = c.complete_finished(ft);
+        assert_eq!(done, vec![0]);
+        assert_eq!(c.admitted, vec![1]);
+        assert!(c.trainers[0].done_t.is_some());
+        c.reallocate(ft, 0);
+        assert_eq!(c.scale_of(1), 4);
+    }
+
+    #[test]
+    fn advance_totals_progress() {
+        let mut c = coord(4);
+        c.submit(spec(1e9), 0.0);
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        // cold start 0 -> 4 pays r_up = 20 s of stall; progress only after
+        let none = c.advance(0.0, 10.0);
+        assert_eq!(none, 0.0);
+        let got = c.advance(10.0, 20.0);
+        assert!(got > 0.0);
+        assert!((c.trainers[0].progress - got).abs() < 1e-9);
+    }
+
+    #[test]
+    fn event_log_records_solver_stats() {
+        let mut c = coord(4);
+        c.submit(spec(1e9), 0.0);
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        assert_eq!(c.event_log.len(), 1);
+        assert_eq!(c.event_log[0].pool_size, 4);
+    }
+
+    #[test]
+    fn rescale_multiplier_scales_cost() {
+        let mut a = coord(4);
+        a.submit(spec(1e9), 0.0);
+        a.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        let mut b = coord(4);
+        b.rescale_cost_multiplier = 2.0;
+        b.submit(spec(1e9), 0.0);
+        b.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        // first event scales 0 -> n (rate at 0 is 0, cost-free in Eqn 16):
+        // compare the 4 -> 8 upscale, profitable under both multipliers.
+        a.handle_event(1e4, &PoolEvent { t: 1e4, joins: (100..104).collect(), leaves: vec![] });
+        b.handle_event(1e4, &PoolEvent { t: 1e4, joins: (100..104).collect(), leaves: vec![] });
+        assert_eq!(a.scale_of(0), 8);
+        assert_eq!(b.scale_of(0), 8);
+        let ca = a.event_log.last().unwrap().rescale_cost_samples;
+        let cb = b.event_log.last().unwrap().rescale_cost_samples;
+        assert!((cb - 2.0 * ca).abs() < 1e-6, "multiplier not applied: {ca} vs {cb}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Objective metrics (paper §3.4, §5.2 "Objective metric").
+//!
+//! The administrator/user chooses what `O_j(n)` measures:
+//! * **Throughput** — raw samples/s. Biases allocation toward
+//!   high-throughput DNNs (AlexNet) and starves compute-intensive ones
+//!   (DenseNet) — Fig 12/Tab 3.
+//! * **ScalingEfficiency** — throughput normalized per-Trainer by its own
+//!   single-node throughput (speedup). Trainer-agnostic; gives fair share
+//!   (Fig 12/Tab 4).
+//! * **Priority** — speedup weighted by an admin-assigned score.
+
+use crate::scaling::ScalingCurve;
+
+/// The metric BFTrainer optimizes when reallocating nodes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Objective {
+    /// Aggregated raw throughput (samples/s).
+    Throughput,
+    /// Normalized throughput (speedup vs 1 node) — fair across Trainers.
+    ScalingEfficiency,
+    /// Speedup scaled by a per-Trainer priority weight.
+    Priority,
+}
+
+impl Objective {
+    /// Gain-per-second for a trainer running at `n` nodes. `weight` only
+    /// applies to [`Objective::Priority`].
+    pub fn gain(&self, curve: &ScalingCurve, weight: f64, n: u32) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        match self {
+            Objective::Throughput => curve.throughput(n),
+            Objective::ScalingEfficiency => {
+                let t1 = curve.throughput(1);
+                if t1 > 0.0 {
+                    curve.throughput(n) / t1
+                } else {
+                    0.0
+                }
+            }
+            Objective::Priority => {
+                let t1 = curve.throughput(1);
+                if t1 > 0.0 {
+                    weight * curve.throughput(n) / t1
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Gain values at the discretized breakpoints used by the MILP SOS2
+    /// encoding (paper Eqn 11–12): (n, gain(n)) for n in the trainer's
+    /// allowed range.
+    pub fn breakpoints(
+        &self,
+        curve: &ScalingCurve,
+        weight: f64,
+        n_min: u32,
+        n_max: u32,
+    ) -> Vec<(u32, f64)> {
+        curve
+            .discretize(n_min, n_max)
+            .into_iter()
+            .map(|(n, _)| (n, self.gain(curve, weight, n)))
+            .collect()
+    }
+
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "throughput" | "samples" | "raw" => Some(Objective::Throughput),
+            "efficiency" | "scaling-efficiency" | "speedup" | "normalized" => {
+                Some(Objective::ScalingEfficiency)
+            }
+            "priority" => Some(Objective::Priority),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Throughput => "throughput",
+            Objective::ScalingEfficiency => "scaling-efficiency",
+            Objective::Priority => "priority",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> ScalingCurve {
+        ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)])
+    }
+
+    #[test]
+    fn throughput_gain_is_curve() {
+        let o = Objective::Throughput;
+        assert!((o.gain(&curve(), 1.0, 4) - 30.0).abs() < 1e-12);
+        assert_eq!(o.gain(&curve(), 1.0, 0), 0.0);
+    }
+
+    #[test]
+    fn efficiency_gain_is_speedup() {
+        let o = Objective::ScalingEfficiency;
+        assert!((o.gain(&curve(), 1.0, 4) - 3.0).abs() < 1e-12); // 30/10
+        assert!((o.gain(&curve(), 1.0, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_is_trainer_agnostic() {
+        // Two curves differing only by a constant factor give identical
+        // normalized gains — the fairness property of §5.2.
+        let o = Objective::ScalingEfficiency;
+        let big = curve().scaled(7.0);
+        for n in [1u32, 2, 3, 8] {
+            assert!((o.gain(&curve(), 1.0, n) - o.gain(&big, 1.0, n)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn priority_weights_speedup() {
+        let o = Objective::Priority;
+        assert!((o.gain(&curve(), 2.5, 4) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakpoints_span_range() {
+        let o = Objective::Throughput;
+        let bp = o.breakpoints(&curve(), 1.0, 2, 6);
+        assert_eq!(bp.first().unwrap().0, 2);
+        assert_eq!(bp.last().unwrap().0, 6);
+        assert!(bp.iter().all(|&(_, g)| g > 0.0));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Objective::parse("throughput"), Some(Objective::Throughput));
+        assert_eq!(Objective::parse("EFFICIENCY"), Some(Objective::ScalingEfficiency));
+        assert_eq!(Objective::parse("priority"), Some(Objective::Priority));
+        assert_eq!(Objective::parse("x"), None);
+    }
+}

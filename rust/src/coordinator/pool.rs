@@ -1,0 +1,259 @@
+//! Idle-node pool and the current nodes→Trainers map `c_jn` (paper §3.1).
+//!
+//! The pool tracks which nodes are currently in `N`, and which Trainer
+//! each is assigned to. The no-migration constraint means assignments
+//! only ever change by adding free nodes to a Trainer or releasing some
+//! of its nodes — [`Pool::apply_allocation`] enforces exactly that.
+
+use crate::trace::NodeId;
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::trainer::TrainerId;
+
+/// Pool state: idle nodes and their assignment.
+#[derive(Clone, Debug, Default)]
+pub struct Pool {
+    /// All nodes currently in N.
+    nodes: BTreeSet<NodeId>,
+    /// node -> trainer assignment (absent = free).
+    assigned: BTreeMap<NodeId, TrainerId>,
+}
+
+impl Pool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn contains(&self, n: NodeId) -> bool {
+        self.nodes.contains(&n)
+    }
+
+    /// Nodes not assigned to any Trainer.
+    pub fn free_nodes(&self) -> Vec<NodeId> {
+        self.nodes.iter().copied().filter(|n| !self.assigned.contains_key(n)).collect()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.nodes.len() - self.assigned.len()
+    }
+
+    /// Current scale C_j of a trainer.
+    pub fn count_of(&self, j: TrainerId) -> u32 {
+        self.assigned.values().filter(|&&t| t == j).count() as u32
+    }
+
+    /// Current allocation as trainer -> node list.
+    pub fn allocation(&self) -> BTreeMap<TrainerId, Vec<NodeId>> {
+        let mut out: BTreeMap<TrainerId, Vec<NodeId>> = BTreeMap::new();
+        for (&n, &j) in &self.assigned {
+            out.entry(j).or_default().push(n);
+        }
+        out
+    }
+
+    /// Trainer assigned to a node, if any.
+    pub fn trainer_of(&self, n: NodeId) -> Option<TrainerId> {
+        self.assigned.get(&n).copied()
+    }
+
+    /// Nodes join N. Returns how many were genuinely new.
+    pub fn join(&mut self, nodes: &[NodeId]) -> usize {
+        let mut added = 0;
+        for &n in nodes {
+            if self.nodes.insert(n) {
+                added += 1;
+            }
+        }
+        added
+    }
+
+    /// Nodes leave N (reclaimed by the main scheduler). Any Trainer using
+    /// them is implicitly shrunk. Returns the affected trainers and how
+    /// many nodes each lost.
+    pub fn leave(&mut self, nodes: &[NodeId]) -> BTreeMap<TrainerId, u32> {
+        let mut hit: BTreeMap<TrainerId, u32> = BTreeMap::new();
+        for &n in nodes {
+            if self.nodes.remove(&n) {
+                if let Some(j) = self.assigned.remove(&n) {
+                    *hit.entry(j).or_insert(0) += 1;
+                }
+            }
+        }
+        hit
+    }
+
+    /// Release all nodes of a trainer (completion or forced to waiting).
+    pub fn release_all(&mut self, j: TrainerId) -> u32 {
+        let mine: Vec<NodeId> =
+            self.assigned.iter().filter(|&(_, &t)| t == j).map(|(&n, _)| n).collect();
+        for n in &mine {
+            self.assigned.remove(n);
+        }
+        mine.len() as u32
+    }
+
+    /// Apply a target scale map (trainer -> n_j), respecting no-migration:
+    /// trainers that shrink keep an arbitrary subset of their own nodes;
+    /// trainers that grow receive only free/released nodes. Panics if the
+    /// targets are infeasible (sum exceeds pool size) — allocators must
+    /// never produce that.
+    pub fn apply_allocation(&mut self, targets: &BTreeMap<TrainerId, u32>) {
+        let total: u32 = targets.values().sum();
+        assert!(
+            total as usize <= self.nodes.len(),
+            "allocation {total} exceeds pool {}",
+            self.nodes.len()
+        );
+        // Phase 1: shrink (including to zero) — releases nodes.
+        for (&j, &want) in targets {
+            let have = self.count_of(j);
+            if want < have {
+                let mut excess = have - want;
+                let mine: Vec<NodeId> =
+                    self.assigned.iter().filter(|&(_, &t)| t == j).map(|(&n, _)| n).collect();
+                // Release highest-numbered first (deterministic).
+                for n in mine.into_iter().rev() {
+                    if excess == 0 {
+                        break;
+                    }
+                    self.assigned.remove(&n);
+                    excess -= 1;
+                }
+            }
+        }
+        // Drop assignments for trainers not in the target map at all.
+        let known: BTreeSet<TrainerId> = targets.keys().copied().collect();
+        let stray: Vec<NodeId> = self
+            .assigned
+            .iter()
+            .filter(|&(_, t)| !known.contains(t))
+            .map(|(&n, _)| n)
+            .collect();
+        for n in stray {
+            self.assigned.remove(&n);
+        }
+        // Phase 2: grow from the free list.
+        let mut free = self.free_nodes().into_iter();
+        for (&j, &want) in targets {
+            let have = self.count_of(j);
+            if want > have {
+                for _ in 0..(want - have) {
+                    let n = free.next().expect("free node accounting broken");
+                    self.assigned.insert(n, j);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(entries: &[(TrainerId, u32)]) -> BTreeMap<TrainerId, u32> {
+        entries.iter().copied().collect()
+    }
+
+    #[test]
+    fn join_and_free_accounting() {
+        let mut p = Pool::new();
+        assert_eq!(p.join(&[1, 2, 3]), 3);
+        assert_eq!(p.join(&[3]), 0); // duplicate
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.n_free(), 3);
+    }
+
+    #[test]
+    fn allocation_grows_from_free_nodes_only() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3, 4]);
+        p.apply_allocation(&map(&[(0, 2), (1, 2)]));
+        assert_eq!(p.count_of(0), 2);
+        assert_eq!(p.count_of(1), 2);
+        assert_eq!(p.n_free(), 0);
+    }
+
+    #[test]
+    fn shrink_keeps_subset_of_own_nodes() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3, 4]);
+        p.apply_allocation(&map(&[(0, 4)]));
+        let before: BTreeSet<NodeId> = p.allocation()[&0].iter().copied().collect();
+        p.apply_allocation(&map(&[(0, 2)]));
+        let after: BTreeSet<NodeId> = p.allocation()[&0].iter().copied().collect();
+        assert_eq!(after.len(), 2);
+        assert!(after.is_subset(&before), "no-migration violated");
+    }
+
+    #[test]
+    fn grow_keeps_all_own_nodes() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3, 4, 5]);
+        p.apply_allocation(&map(&[(0, 2)]));
+        let before: BTreeSet<NodeId> = p.allocation()[&0].iter().copied().collect();
+        p.apply_allocation(&map(&[(0, 4)]));
+        let after: BTreeSet<NodeId> = p.allocation()[&0].iter().copied().collect();
+        assert!(before.is_subset(&after), "no-migration violated on grow");
+    }
+
+    #[test]
+    fn leave_reports_affected_trainers() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3, 4]);
+        p.apply_allocation(&map(&[(0, 2), (1, 2)]));
+        let t0_nodes = p.allocation()[&0].clone();
+        let hit = p.leave(&[t0_nodes[0], 99]); // 99 not in pool
+        assert_eq!(hit, map(&[(0, 1)]));
+        assert_eq!(p.count_of(0), 1);
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn swap_between_trainers_respects_no_migration() {
+        // Shrink A by 1 and grow B by 1 in one call: B gets A's released
+        // node (that's allowed — B only adds).
+        let mut p = Pool::new();
+        p.join(&[1, 2]);
+        p.apply_allocation(&map(&[(0, 2)]));
+        p.apply_allocation(&map(&[(0, 1), (1, 1)]));
+        assert_eq!(p.count_of(0), 1);
+        assert_eq!(p.count_of(1), 1);
+    }
+
+    #[test]
+    fn trainer_absent_from_target_is_fully_released() {
+        let mut p = Pool::new();
+        p.join(&[1, 2]);
+        p.apply_allocation(&map(&[(0, 2)]));
+        p.apply_allocation(&map(&[(1, 1)]));
+        assert_eq!(p.count_of(0), 0);
+        assert_eq!(p.count_of(1), 1);
+        assert_eq!(p.n_free(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_allocation_panics() {
+        let mut p = Pool::new();
+        p.join(&[1]);
+        p.apply_allocation(&map(&[(0, 2)]));
+    }
+
+    #[test]
+    fn release_all_frees_nodes() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3]);
+        p.apply_allocation(&map(&[(0, 3)]));
+        assert_eq!(p.release_all(0), 3);
+        assert_eq!(p.n_free(), 3);
+    }
+}

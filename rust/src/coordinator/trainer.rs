@@ -1,0 +1,253 @@
+//! Trainer specification and runtime state (paper §3.1).
+//!
+//! A *Trainer* is one malleable DNN training job managed by BFTrainer.
+//! The user supplies `N_min`, `N_max`, the rescale costs `R_up`/`R_dw`
+//! and (optionally) the scalability curve `O_j(n)`; BFTrainer decides the
+//! node count `n_j ∈ {0} ∪ [N_min, N_max]` at every event.
+
+use crate::scaling::ScalingCurve;
+
+/// Unique Trainer id.
+pub type TrainerId = usize;
+
+/// Static specification of a Trainer (paper §3.1 symbols in comments).
+#[derive(Clone, Debug)]
+pub struct TrainerSpec {
+    pub name: String,
+    /// N_j^min — smallest node count the job can run on.
+    pub n_min: u32,
+    /// N_j^max — largest node count the job can use.
+    pub n_max: u32,
+    /// R_j^up — seconds the whole job stalls when scaling up
+    /// (clone model to new ranks, rebuild the data pipeline).
+    pub r_up: f64,
+    /// R_j^dw — seconds the whole job stalls when scaling down.
+    pub r_dw: f64,
+    /// O_j(n) — throughput (samples/s) at n nodes.
+    pub curve: ScalingCurve,
+    /// Total work: samples to process before the Trainer completes.
+    pub total_samples: f64,
+}
+
+impl TrainerSpec {
+    /// Validate invariants; panics on nonsense specs.
+    pub fn validate(&self) {
+        assert!(self.n_min >= 1, "{}: n_min must be >= 1", self.name);
+        assert!(self.n_min <= self.n_max, "{}: n_min > n_max", self.name);
+        assert!(self.r_up >= 0.0 && self.r_dw >= 0.0, "{}: negative rescale cost", self.name);
+        assert!(self.total_samples > 0.0, "{}: no work", self.name);
+    }
+
+    /// Throughput at scale n (0 => waiting => 0).
+    pub fn throughput(&self, n: u32) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.curve.throughput(n)
+        }
+    }
+}
+
+/// Lifecycle phase of a Trainer inside the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Submitted, not yet admitted (beyond Pj_max or FCFS order).
+    Queued,
+    /// Admitted; currently holds `n == 0` nodes.
+    Waiting,
+    /// Running on >= n_min nodes.
+    Running,
+    /// All samples processed.
+    Done,
+}
+
+/// Dynamic state of a Trainer.
+#[derive(Clone, Debug)]
+pub struct TrainerState {
+    pub id: TrainerId,
+    pub spec: TrainerSpec,
+    pub phase: Phase,
+    /// Samples processed so far.
+    pub progress: f64,
+    /// Stall: time until which the job makes no progress (rescale cost
+    /// being paid). Absolute simulation time; f64::NEG_INFINITY if none.
+    pub stalled_until: f64,
+    /// Submission time (for runtime metrics).
+    pub submit_t: f64,
+    /// Admission time (left the queue).
+    pub admit_t: Option<f64>,
+    /// Completion time.
+    pub done_t: Option<f64>,
+    /// Accounting: rescale cost paid, in node-seconds and in samples.
+    pub rescale_cost_node_s: f64,
+    pub rescale_cost_samples: f64,
+    /// Accounting: preemption-forced downscale count.
+    pub preemptions: u64,
+    pub upscales: u64,
+    pub downscales: u64,
+}
+
+impl TrainerState {
+    pub fn new(id: TrainerId, spec: TrainerSpec, submit_t: f64) -> Self {
+        spec.validate();
+        TrainerState {
+            id,
+            spec,
+            phase: Phase::Queued,
+            progress: 0.0,
+            stalled_until: f64::NEG_INFINITY,
+            submit_t,
+            admit_t: None,
+            done_t: None,
+            rescale_cost_node_s: 0.0,
+            rescale_cost_samples: 0.0,
+            preemptions: 0,
+            upscales: 0,
+            downscales: 0,
+        }
+    }
+
+    pub fn remaining(&self) -> f64 {
+        (self.spec.total_samples - self.progress).max(0.0)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Done
+    }
+
+    /// Advance progress by running `dt` seconds at scale `n`, honoring a
+    /// stall window. Returns samples actually processed.
+    pub fn advance(&mut self, now: f64, dt: f64, n: u32) -> f64 {
+        if self.phase == Phase::Done || n == 0 || dt <= 0.0 {
+            return 0.0;
+        }
+        // Portion of [now, now+dt] spent stalled.
+        let stall = (self.stalled_until - now).clamp(0.0, dt);
+        let eff = dt - stall;
+        let gained = (self.spec.throughput(n) * eff).min(self.remaining());
+        self.progress += gained;
+        if self.remaining() <= 0.0 {
+            self.phase = Phase::Done;
+            // done_t is set by the coordinator which knows `now + dt`.
+        }
+        gained
+    }
+
+    /// Apply a rescale from `from` to `to` nodes at time `now`: record the
+    /// stall and cost accounting. `preempted` marks forced downscales.
+    pub fn apply_rescale(&mut self, now: f64, from: u32, to: u32, preempted: bool) {
+        use std::cmp::Ordering;
+        let cost_s = match to.cmp(&from) {
+            Ordering::Greater => {
+                self.upscales += 1;
+                self.spec.r_up
+            }
+            Ordering::Less => {
+                self.downscales += 1;
+                if preempted {
+                    self.preemptions += 1;
+                }
+                self.spec.r_dw
+            }
+            Ordering::Equal => 0.0,
+        };
+        if cost_s > 0.0 && to > 0 {
+            // The *surviving* ranks stall for cost_s (paper §2.1 example:
+            // adding 1 node to a 10-node job costs 10 nodes × 20 s).
+            self.stalled_until = (now + cost_s).max(self.stalled_until);
+            self.rescale_cost_node_s += cost_s * to as f64;
+            self.rescale_cost_samples += self.spec.throughput(to) * cost_s;
+        }
+        if to == 0 && self.phase != Phase::Done {
+            self.phase = Phase::Waiting;
+        } else if to > 0 && self.phase != Phase::Done {
+            self.phase = Phase::Running;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::ScalingCurve;
+
+    pub fn spec(name: &str) -> TrainerSpec {
+        TrainerSpec {
+            name: name.into(),
+            n_min: 1,
+            n_max: 8,
+            r_up: 20.0,
+            r_dw: 5.0,
+            curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+            total_samples: 1000.0,
+        }
+    }
+
+    #[test]
+    fn advance_accumulates_progress() {
+        let mut t = TrainerState::new(0, spec("a"), 0.0);
+        t.phase = Phase::Running;
+        let got = t.advance(0.0, 10.0, 2);
+        assert!((got - 180.0).abs() < 1e-9);
+        assert!((t.progress - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_caps_at_total_and_marks_done() {
+        let mut t = TrainerState::new(0, spec("a"), 0.0);
+        t.phase = Phase::Running;
+        let got = t.advance(0.0, 1000.0, 8); // would be 44000 >> 1000
+        assert!((got - 1000.0).abs() < 1e-9);
+        assert!(t.is_done());
+        // further advance is a no-op
+        assert_eq!(t.advance(1000.0, 10.0, 8), 0.0);
+    }
+
+    #[test]
+    fn stall_blocks_progress() {
+        let mut t = TrainerState::new(0, spec("a"), 0.0);
+        t.phase = Phase::Running;
+        t.stalled_until = 5.0;
+        // 10s interval at n=1 (10/s): 5s stalled -> 50 samples
+        let got = t.advance(0.0, 10.0, 1);
+        assert!((got - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rescale_up_records_cost_and_stall() {
+        let mut t = TrainerState::new(0, spec("a"), 0.0);
+        t.apply_rescale(100.0, 2, 4, false);
+        assert_eq!(t.upscales, 1);
+        assert!((t.stalled_until - 120.0).abs() < 1e-9);
+        assert!((t.rescale_cost_node_s - 20.0 * 4.0).abs() < 1e-9);
+        assert!((t.rescale_cost_samples - 30.0 * 20.0).abs() < 1e-9);
+        assert_eq!(t.phase, Phase::Running);
+    }
+
+    #[test]
+    fn rescale_down_to_zero_is_waiting_no_stall_cost() {
+        let mut t = TrainerState::new(0, spec("a"), 0.0);
+        t.apply_rescale(0.0, 4, 0, true);
+        assert_eq!(t.phase, Phase::Waiting);
+        assert_eq!(t.preemptions, 1);
+        assert_eq!(t.downscales, 1);
+        // no surviving ranks -> no node-seconds burned
+        assert_eq!(t.rescale_cost_node_s, 0.0);
+    }
+
+    #[test]
+    fn no_cost_when_scale_unchanged() {
+        let mut t = TrainerState::new(0, spec("a"), 0.0);
+        t.apply_rescale(0.0, 4, 4, false);
+        assert_eq!(t.upscales + t.downscales, 0);
+        assert_eq!(t.rescale_cost_node_s, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_spec_rejected() {
+        let mut s = spec("bad");
+        s.n_min = 9; // > n_max
+        TrainerState::new(0, s, 0.0);
+    }
+}

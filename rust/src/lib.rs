@@ -1,0 +1,33 @@
+//! # BFTrainer — reproduction
+//!
+//! Rust + JAX + Pallas reproduction of *BFTrainer: Low-Cost Training of
+//! Neural Networks on Unfillable Supercomputer Nodes* (Liu, Kettimuthu,
+//! Papka, Foster; cs.DC 2021).
+//!
+//! BFTrainer harvests transiently-idle ("unfillable") supercomputer nodes
+//! for elastic DNN training. Each time the idle-node pool changes, a
+//! mixed-integer linear program reallocates nodes across malleable
+//! training jobs ("Trainers"), trading rescaling cost against expected
+//! gain over a forward-looking horizon.
+//!
+//! Layering (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: idle-node pool, event handling,
+//!   a from-scratch MILP solver ([`milp`]), the paper's per-node and
+//!   aggregate formulations plus an exact DP fast path ([`coordinator`]),
+//!   trace substrate ([`trace`]), replay engine ([`sim`]), and a PJRT
+//!   runtime ([`runtime`]) that executes the AOT-compiled training step.
+//! * **L2 (python/compile/model.py)** — JAX train-step (fwd/bwd + SGD),
+//!   AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the hot spots,
+//!   lowered into the same HLO.
+
+pub mod config;
+pub mod coordinator;
+pub mod milp;
+pub mod mini;
+pub mod runtime;
+pub mod scaling;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod workload;

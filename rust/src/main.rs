@@ -1,0 +1,372 @@
+//! `bftrainer` — leader CLI.
+//!
+//! Subcommands map to the paper's experiments:
+//!
+//! * `characterize`  — idle-node statistics of a machine preset (Tab 1/Fig 1)
+//! * `synth-trace`   — generate + save an idle-node event trace (CSV)
+//! * `replay`        — replay a trace against a Trainer workload (§5)
+//! * `milp-bench`    — MILP solve-time scaling (Fig 5)
+//! * `scaling-table` — the Tab 2 model zoo
+//! * `train`         — live mode: real AOT Trainers on a replayed trace
+//!
+//! Run `bftrainer <cmd> --help` for per-command options.
+
+use bftrainer::config::{ExperimentConfig, WorkloadKind};
+use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::mini::argparse::Command;
+use bftrainer::scaling::zoo::{self, Dnn, TAB2_NODES};
+use bftrainer::sim::{self, ReplayOpts};
+use bftrainer::trace::{self, machines};
+use bftrainer::util::table::{f, Table};
+use bftrainer::workload;
+use std::collections::BTreeMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("characterize") => cmd_characterize(&args[1..]),
+        Some("synth-trace") => cmd_synth_trace(&args[1..]),
+        Some("replay") => cmd_replay(&args[1..]),
+        Some("milp-bench") => cmd_milp_bench(&args[1..]),
+        Some("scaling-table") => cmd_scaling_table(&args[1..]),
+        Some("train") => cmd_train(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand `{other}`\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "bftrainer — elastic DNN training on unfillable supercomputer nodes\n\n\
+         USAGE: bftrainer <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n  \
+         characterize   idle-node statistics for a machine preset (Tab 1 / Fig 1)\n  \
+         synth-trace    generate an idle-node event trace CSV\n  \
+         replay         replay a trace against a Trainer workload (§5 experiments)\n  \
+         milp-bench     MILP solve-time scaling (Fig 5)\n  \
+         scaling-table  print the Tab 2 DNN zoo\n  \
+         train          live mode — real AOT-compiled Trainers (needs `make artifacts`)"
+    );
+}
+
+fn unwrap_args(
+    r: Result<bftrainer::mini::argparse::Matches, bftrainer::mini::argparse::ParseError>,
+) -> Option<bftrainer::mini::argparse::Matches> {
+    match r {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("{e}");
+            None
+        }
+    }
+}
+
+fn cmd_characterize(args: &[String]) -> i32 {
+    let cmd = Command::new("characterize", "idle-node statistics (Tab 1 / Fig 1)")
+        .opt("machine", "summit", "summit | summit-full | theta | mira")
+        .opt("seed", "42", "trace seed")
+        .opt("hours", "0", "override duration (0 = preset)");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let mut params = match machines::by_name(&m.get_str("machine").unwrap()) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown machine");
+            return 2;
+        }
+    };
+    let hours = m.get_f64("hours").unwrap();
+    if hours > 0.0 {
+        params.duration_s = hours * 3600.0;
+    }
+    let t = trace::generate(&params, m.get_u64("seed").unwrap());
+    let s = trace::characterize(&t, params.duration_s);
+    let frags = trace::extract(&t, params.duration_s);
+    let cdf = trace::fragment_cdf(&frags);
+    let mut tab = Table::new(vec!["metric", "value"]);
+    tab.row(vec!["machine nodes".to_string(), t.machine_nodes.to_string()])
+        .row(vec!["INC/h".to_string(), f(s.inc_per_hour, 1)])
+        .row(vec!["DEC/h".to_string(), f(s.dec_per_hour, 1)])
+        .row(vec!["idle ratio".to_string(), format!("{:.1}%", 100.0 * s.idle_ratio)])
+        .row(vec!["eq-nodes".to_string(), f(s.eq_nodes, 0)])
+        .row(vec!["idle node-hours".to_string(), f(s.idle_node_hours, 0)])
+        .row(vec!["fragments".to_string(), s.n_fragments.to_string()])
+        .row(vec![
+            "fragments <10 min".to_string(),
+            format!("{:.0}%", 100.0 * cdf.frac_shorter(600.0)),
+        ])
+        .row(vec![
+            "node-time in <10 min".to_string(),
+            format!("{:.0}%", 100.0 * cdf.nodetime_frac_shorter(600.0)),
+        ]);
+    println!("{}", tab.render());
+    0
+}
+
+fn cmd_synth_trace(args: &[String]) -> i32 {
+    let cmd = Command::new("synth-trace", "generate an idle-node trace CSV")
+        .opt("machine", "summit", "machine preset")
+        .opt("seed", "42", "trace seed")
+        .opt("out", "trace.csv", "output path");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let params = machines::by_name(&m.get_str("machine").unwrap()).expect("machine");
+    let t = trace::generate(&params, m.get_u64("seed").unwrap());
+    let out = m.get_str("out").unwrap();
+    if let Err(e) = t.save_csv(std::path::Path::new(&out)) {
+        eprintln!("write failed: {e}");
+        return 1;
+    }
+    println!(
+        "wrote {} events ({} nodes, {:.1} h) to {out}",
+        t.len(),
+        t.machine_nodes,
+        t.duration() / 3600.0
+    );
+    0
+}
+
+fn build_coordinator(cfg: &ExperimentConfig) -> Coordinator {
+    let policy = Policy::by_name(&cfg.policy).expect("validated");
+    let objective = Objective::parse(&cfg.objective).expect("validated");
+    let mut c = Coordinator::new(policy, objective, cfg.t_fwd, cfg.pj_max);
+    c.rescale_cost_multiplier = cfg.rescale_multiplier;
+    c
+}
+
+fn build_workload(cfg: &ExperimentConfig) -> sim::Workload {
+    match cfg.workload {
+        WorkloadKind::Hpo => workload::hpo_campaign(
+            Dnn::from_name(&cfg.dnn).expect("validated"),
+            cfg.trainers,
+            cfg.epochs,
+        ),
+        WorkloadKind::Diverse => {
+            workload::diverse_poisson(cfg.trainers, cfg.epochs, cfg.mean_gap_s, cfg.seed)
+        }
+    }
+}
+
+fn cmd_replay(args: &[String]) -> i32 {
+    let cmd = Command::new("replay", "replay a trace against a Trainer workload")
+        .opt("config", "", "TOML config file (flags override)")
+        .opt("policy", "milp", "milp | dp | heuristic | milp-pernode")
+        .opt("objective", "throughput", "throughput | efficiency | priority")
+        .opt("t-fwd", "120", "forward-looking time (s)")
+        .opt("pj-max", "10", "max parallel trainers")
+        .opt("machine", "summit", "machine preset")
+        .opt("seed", "42", "seed")
+        .opt("workload", "hpo", "hpo | diverse")
+        .opt("trainers", "50", "number of trainers")
+        .opt("dnn", "ShuffleNet", "HPO model (Tab 2 name)")
+        .opt("epochs", "2", "ImageNet epochs per trainer")
+        .opt("hours", "24", "trace hours to replay")
+        .flag("run-to-completion", "continue past trace end");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let mut cfg = if m.get_str("config").unwrap().is_empty() {
+        ExperimentConfig::default()
+    } else {
+        match ExperimentConfig::load(std::path::Path::new(&m.get_str("config").unwrap())) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
+    cfg.policy = m.get_str("policy").unwrap();
+    cfg.objective = m.get_str("objective").unwrap();
+    cfg.t_fwd = m.get_f64("t-fwd").unwrap();
+    cfg.pj_max = m.get_usize("pj-max").unwrap();
+    cfg.machine = m.get_str("machine").unwrap();
+    cfg.seed = m.get_u64("seed").unwrap();
+    cfg.workload = if m.get_str("workload").unwrap() == "diverse" {
+        WorkloadKind::Diverse
+    } else {
+        WorkloadKind::Hpo
+    };
+    cfg.trainers = m.get_usize("trainers").unwrap();
+    cfg.dnn = m.get_str("dnn").unwrap();
+    cfg.epochs = m.get_f64("epochs").unwrap();
+    cfg.duration_hours = m.get_f64("hours").unwrap();
+    if let Err(e) = cfg.validate() {
+        eprintln!("config error: {e}");
+        return 2;
+    }
+
+    let mut params = machines::by_name(&cfg.machine).unwrap();
+    params.duration_s = cfg.duration_hours * 3600.0;
+    let t = trace::generate(&params, cfg.seed);
+    let wl = build_workload(&cfg);
+    let coord = build_coordinator(&cfg);
+    let opts = ReplayOpts { run_to_completion: m.flag("run-to-completion"), ..Default::default() };
+    let res = sim::replay(coord, &t, &wl, &opts);
+    let a_s = sim::static_baseline_outcome(
+        build_coordinator(&cfg),
+        res.metrics.eq_nodes.round() as u32,
+        res.metrics.duration_s,
+        &wl,
+    );
+    let u = if a_s > 0.0 { res.metrics.samples_processed / a_s } else { 0.0 };
+    let mm = &res.metrics;
+    let mut tab = Table::new(vec!["metric", "value"]);
+    tab.row(vec!["policy".to_string(), cfg.policy.clone()])
+        .row(vec!["events".to_string(), mm.n_events.to_string()])
+        .row(vec![
+            "samples processed (A_e)".to_string(),
+            format!("{:.3e}", mm.samples_processed),
+        ])
+        .row(vec!["static baseline (A_s)".to_string(), format!("{a_s:.3e}")])
+        .row(vec!["utilization efficiency U".to_string(), format!("{:.1}%", 100.0 * u)])
+        .row(vec![
+            "resource integral".to_string(),
+            format!("{:.0} node-h", mm.resource_node_hours),
+        ])
+        .row(vec!["eq-nodes".to_string(), f(mm.eq_nodes, 1)])
+        .row(vec![
+            "rescale cost".to_string(),
+            format!("{:.3e} samples", mm.rescale_cost_samples),
+        ])
+        .row(vec!["preemptions".to_string(), mm.preemptions.to_string()])
+        .row(vec![
+            "completed trainers".to_string(),
+            format!("{}/{}", mm.completed, cfg.trainers),
+        ])
+        .row(vec!["mean solve time".to_string(), format!("{:.2} ms", 1e3 * mm.mean_solve_s)])
+        .row(vec!["max solve time".to_string(), format!("{:.2} ms", 1e3 * mm.max_solve_s)])
+        .row(vec!["fallbacks (§3.6)".to_string(), mm.fallbacks.to_string()]);
+    println!("{}", tab.render());
+    0
+}
+
+fn cmd_milp_bench(args: &[String]) -> i32 {
+    let cmd = Command::new("milp-bench", "MILP solve-time scaling (Fig 5)")
+        .opt("jobs", "5,10,20,30", "job counts")
+        .opt("nodes", "50,100,200,400,800", "pool sizes")
+        .opt("reps", "5", "repetitions per point")
+        .opt("solver", "milp", "milp | dp | pernode");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let jobs = m.get_usize_list("jobs").unwrap();
+    let nodes = m.get_usize_list("nodes").unwrap();
+    let reps = m.get_usize("reps").unwrap();
+    let solver = m.get_str("solver").unwrap();
+    let mut tab = Table::new(vec!["jobs", "nodes", "mean solve (ms)", "max (ms)"]);
+    let mut rng = bftrainer::util::rng::Rng::new(7);
+    for &j in &jobs {
+        for &n in &nodes {
+            let mut times = Vec::new();
+            for _ in 0..reps {
+                let req = bftrainer::workload::random_alloc_request(&mut rng, j, n as u32);
+                let t0 = std::time::Instant::now();
+                match solver.as_str() {
+                    "dp" => {
+                        use bftrainer::coordinator::{Allocator, DpAllocator};
+                        let _ = DpAllocator.allocate(&req);
+                    }
+                    "pernode" => {
+                        use bftrainer::coordinator::{Allocator, PerNodeMilpAllocator};
+                        let _ = PerNodeMilpAllocator::default().allocate(&req);
+                    }
+                    _ => {
+                        use bftrainer::coordinator::{AggregateMilpAllocator, Allocator};
+                        let _ = AggregateMilpAllocator::default().allocate(&req);
+                    }
+                }
+                times.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            let mean = bftrainer::util::stats::mean(&times);
+            let max = times.iter().cloned().fold(0.0, f64::max);
+            tab.row(vec![j.to_string(), n.to_string(), f(mean, 2), f(max, 2)]);
+        }
+    }
+    println!("{}", tab.render());
+    0
+}
+
+fn cmd_scaling_table(args: &[String]) -> i32 {
+    let cmd = Command::new("scaling-table", "Tab 2 DNN zoo (samples/s ×1000)");
+    let Some(_m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let mut header = vec!["DNN".to_string()];
+    header.extend(TAB2_NODES.iter().map(|n| n.to_string()));
+    header.push("eff@64".to_string());
+    let mut tab = Table::new(header);
+    for d in Dnn::ALL {
+        let c = zoo::curve(d);
+        let mut row = vec![d.name().to_string()];
+        row.extend(TAB2_NODES.iter().map(|&n| f(c.throughput(n) / 1000.0, 1)));
+        row.push(format!("{:.0}%", 100.0 * c.efficiency(64)));
+        tab.row(row);
+    }
+    println!("{}", tab.render());
+    0
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let cmd = Command::new("train", "live mode: real AOT Trainers on a replayed trace")
+        .opt("variant", "tiny", "model variant from artifacts/manifest.json")
+        .opt("steps", "200", "max total training steps")
+        .opt("trainers", "2", "number of live trainers")
+        .opt("lr", "0.05", "learning rate")
+        .opt("machine", "summit", "trace preset")
+        .opt("hours", "2", "trace hours")
+        .opt("seed", "42", "seed")
+        .opt("max-nodes", "8", "n_max per trainer");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    match run_train(&m) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn run_train(m: &bftrainer::mini::argparse::Matches) -> anyhow::Result<()> {
+    use bftrainer::runtime::{self, live};
+    let man = runtime::Manifest::load(&runtime::default_dir())?;
+    let variant = man.variant(&m.get_str("variant").unwrap())?.clone();
+    let engine = runtime::Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+
+    let mut params = machines::by_name(&m.get_str("machine").unwrap()).expect("machine");
+    params.duration_s = m.get_f64("hours").unwrap() * 3600.0;
+    params.total_nodes = 64; // small slice: live mode runs real compute
+    params.mean_interarrival_s *= 16.0; // keep the small slice lively but sane
+    let t = trace::generate(&params, m.get_u64("seed").unwrap());
+
+    let opts = live::LiveOpts {
+        virtual_step_s: 10.0,
+        max_total_steps: m.get_u64("steps").unwrap(),
+        lr: m.get_f64("lr").unwrap() as f32,
+        log_every: 10,
+    };
+    let mut coord = Coordinator::new(
+        Policy::by_name("milp").unwrap(),
+        Objective::Throughput,
+        120.0,
+        m.get_usize("trainers").unwrap(),
+    );
+    let n_max = m.get_u64("max-nodes").unwrap() as u32;
+    let mut variants = BTreeMap::new();
+    for i in 0..m.get_usize("trainers").unwrap() {
+        let spec = live::live_spec(&variant, &format!("live-{i}"), n_max, 1_000_000, &opts);
+        let id = coord.submit(spec, 0.0);
+        variants.insert(id, variant.clone());
+    }
+    let res = live::run(coord, &t, &engine, &variants, &opts)?;
+    println!("\ntotal steps: {}  total samples: {}", res.total_steps, res.total_samples);
+    let mut tab = Table::new(vec!["step", "t(s)", "trainer", "nodes", "loss"]);
+    for (i, &(t, id, n, loss)) in res.loss_curve.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == res.loss_curve.len() {
+            tab.row(vec![i.to_string(), f(t, 0), id.to_string(), n.to_string(), f(loss as f64, 4)]);
+        }
+    }
+    println!("{}", tab.render());
+    Ok(())
+}

@@ -1,0 +1,572 @@
+//! Best-first branch-and-bound MILP solver with integer and SOS2 branching.
+//!
+//! Mirrors the solver behaviour the paper relies on from Gurobi (§3.6):
+//! LP-relaxation-driven search, an incumbent that improves monotonically,
+//! and a *timeout contract* — if the time/node limit is hit, the best
+//! feasible incumbent so far is returned with [`MilpStatus::Feasible`];
+//! if none was found the caller keeps the current allocation map
+//! (handled in `coordinator`). Warm starts (e.g. from the DP fast path)
+//! can be injected so the search starts with a strong bound.
+
+use super::model::{Model, VarKind};
+use super::simplex::{solve_lp, LpStatus};
+use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
+
+const INT_TOL: f64 = 1e-6;
+
+/// Search limits.
+#[derive(Clone, Debug)]
+pub struct Limits {
+    pub max_nodes: usize,
+    pub time_limit: Duration,
+    /// Stop when (upper bound - incumbent) / max(|incumbent|,1) < rel_gap.
+    pub rel_gap: f64,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_nodes: 200_000, time_limit: Duration::from_secs(30), rel_gap: 1e-6 }
+    }
+}
+
+/// Final solver status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MilpStatus {
+    /// Proven optimal (within rel_gap).
+    Optimal,
+    /// Limits hit, but a feasible incumbent is available.
+    Feasible,
+    /// Proven infeasible.
+    Infeasible,
+    /// Limits hit with no incumbent found.
+    NoSolution,
+    /// LP relaxation unbounded at the root.
+    Unbounded,
+}
+
+/// Result: status, best point, its objective, best proven bound, stats.
+#[derive(Clone, Debug)]
+pub struct MilpResult {
+    pub status: MilpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub bound: f64,
+    pub nodes_explored: usize,
+    pub solve_time: Duration,
+}
+
+/// One open node: bound overrides + SOS2 forced-zero masks.
+#[derive(Clone, Debug)]
+struct Node {
+    bounds: Vec<(f64, f64)>,
+    /// relaxation objective (in maximize space) — the node's potential
+    relax_obj: f64,
+    depth: usize,
+}
+
+/// Heap ordering: best relaxation bound first (max-heap).
+struct HeapNode(Node);
+impl PartialEq for HeapNode {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.relax_obj == other.0.relax_obj
+    }
+}
+impl Eq for HeapNode {}
+impl PartialOrd for HeapNode {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapNode {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .relax_obj
+            .partial_cmp(&other.0.relax_obj)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(other.0.depth.cmp(&self.0.depth)) // deeper first on ties
+    }
+}
+
+/// Solve `model` (direction taken from the model). `warm_start`, if given
+/// and feasible, seeds the incumbent.
+pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> MilpResult {
+    let t0 = Instant::now();
+    // Internally work in "maximize" space: flip sign for Minimize.
+    let max_sign = match model.direction {
+        super::model::Direction::Maximize => 1.0,
+        super::model::Direction::Minimize => -1.0,
+    };
+    let to_max = |v: f64| max_sign * v;
+
+    let mut incumbent: Option<(Vec<f64>, f64)> = None; // (x, obj in maximize space)
+    if let Some(ws) = warm_start {
+        if model.is_feasible(ws, 1e-6) {
+            incumbent = Some((ws.to_vec(), to_max(model.objective_value(ws))));
+        }
+    }
+
+    let root_bounds: Vec<(f64, f64)> = model.vars.iter().map(|v| (v.lo, v.hi)).collect();
+    let root_lp = solve_lp(model, &root_bounds);
+    match root_lp.status {
+        LpStatus::Infeasible => {
+            return MilpResult {
+                status: MilpStatus::Infeasible,
+                x: vec![],
+                objective: 0.0,
+                bound: 0.0,
+                nodes_explored: 1,
+                solve_time: t0.elapsed(),
+            };
+        }
+        LpStatus::Unbounded => {
+            return MilpResult {
+                status: MilpStatus::Unbounded,
+                x: vec![],
+                objective: 0.0,
+                bound: f64::INFINITY,
+                nodes_explored: 1,
+                solve_time: t0.elapsed(),
+            };
+        }
+        LpStatus::Stalled => {
+            // Treat as no information: fall through with +inf bound only if
+            // we have an incumbent; otherwise report NoSolution.
+            return stalled_result(incumbent, max_sign, t0, 1);
+        }
+        LpStatus::Optimal => {}
+    }
+
+    let mut heap = BinaryHeap::new();
+    heap.push(HeapNode(Node { bounds: root_bounds, relax_obj: to_max(root_lp.objective), depth: 0 }));
+
+    let mut nodes = 0usize;
+    let mut best_bound = to_max(root_lp.objective);
+    let mut exhausted = true;
+
+    while let Some(HeapNode(node)) = heap.pop() {
+        nodes += 1;
+        best_bound = node.relax_obj; // best-first: top of heap is global UB
+        if let Some((_, inc_obj)) = &incumbent {
+            let gap = (best_bound - inc_obj) / inc_obj.abs().max(1.0);
+            if gap <= limits.rel_gap {
+                let (x, obj) = incumbent.unwrap();
+                return MilpResult {
+                    status: MilpStatus::Optimal,
+                    x,
+                    objective: max_sign * obj,
+                    bound: max_sign * best_bound,
+                    nodes_explored: nodes,
+                    solve_time: t0.elapsed(),
+                };
+            }
+        }
+        if nodes >= limits.max_nodes || t0.elapsed() >= limits.time_limit {
+            exhausted = false;
+            break;
+        }
+
+        let lp = solve_lp(model, &node.bounds);
+        let (x, relax_obj) = match lp.status {
+            LpStatus::Optimal => (lp.x, to_max(lp.objective)),
+            _ => continue, // infeasible/stalled child: prune
+        };
+        if let Some((_, inc_obj)) = &incumbent {
+            if relax_obj <= inc_obj + inc_obj.abs().max(1.0) * limits.rel_gap {
+                continue; // dominated
+            }
+        }
+
+        // 1) fractional integer variable?
+        let frac = most_fractional(model, &x);
+        // 2) SOS2 violation?
+        let sos_branch = if frac.is_none() { sos2_violation(model, &x) } else { None };
+
+        match (frac, sos_branch) {
+            (None, None) => {
+                // Integral and SOS2-feasible: candidate incumbent.
+                debug_assert!(
+                    model.feasibility_violation(&rounded(model, &x), 1e-5).is_none(),
+                    "B&B produced infeasible candidate: {:?}",
+                    model.feasibility_violation(&rounded(model, &x), 1e-5)
+                );
+                let xr = rounded(model, &x);
+                let obj = to_max(model.objective_value(&xr));
+                if incumbent.as_ref().map_or(true, |(_, io)| obj > *io) {
+                    incumbent = Some((xr, obj));
+                }
+            }
+            (Some((vi, xval)), _) => {
+                // Branch on floor/ceil.
+                let mut lo_child = node.bounds.clone();
+                lo_child[vi].1 = lo_child[vi].1.min(xval.floor());
+                let mut hi_child = node.bounds.clone();
+                hi_child[vi].0 = hi_child[vi].0.max(xval.ceil());
+                for b in [lo_child, hi_child] {
+                    if b[vi].0 <= b[vi].1 + 1e-9 {
+                        heap.push(HeapNode(Node {
+                            bounds: b,
+                            relax_obj,
+                            depth: node.depth + 1,
+                        }));
+                    }
+                }
+            }
+            (None, Some((set_idx, split))) => {
+                // SOS2 branching at index `split`:
+                // child A: w_i = 0 for i > split;  child B: w_i = 0 for i < split.
+                let vars = &model.sos2[set_idx].vars;
+                let mut a = node.bounds.clone();
+                for &v in vars.iter().skip(split + 1) {
+                    a[v.0] = (0.0, 0.0);
+                }
+                let mut b = node.bounds.clone();
+                for &v in vars.iter().take(split) {
+                    b[v.0] = (0.0, 0.0);
+                }
+                for child in [a, b] {
+                    heap.push(HeapNode(Node {
+                        bounds: child,
+                        relax_obj,
+                        depth: node.depth + 1,
+                    }));
+                }
+            }
+        }
+    }
+
+    let solve_time = t0.elapsed();
+    let complete = exhausted && heap.is_empty();
+    match incumbent {
+        Some((x, obj)) => {
+            let status = if complete { MilpStatus::Optimal } else { MilpStatus::Feasible };
+            // bound: best of remaining open nodes (or incumbent if search done)
+            let bound = if complete { obj } else { best_bound.max(obj) };
+            MilpResult {
+                status,
+                x,
+                objective: max_sign * obj,
+                bound: max_sign * bound,
+                nodes_explored: nodes,
+                solve_time,
+            }
+        }
+        None => MilpResult {
+            status: if complete { MilpStatus::Infeasible } else { MilpStatus::NoSolution },
+            x: vec![],
+            objective: 0.0,
+            bound: max_sign * best_bound,
+            nodes_explored: nodes,
+            solve_time,
+        },
+    }
+}
+
+fn stalled_result(
+    incumbent: Option<(Vec<f64>, f64)>,
+    max_sign: f64,
+    t0: Instant,
+    nodes: usize,
+) -> MilpResult {
+    match incumbent {
+        Some((x, obj)) => MilpResult {
+            status: MilpStatus::Feasible,
+            x,
+            objective: max_sign * obj,
+            bound: f64::INFINITY * max_sign,
+            nodes_explored: nodes,
+            solve_time: t0.elapsed(),
+        },
+        None => MilpResult {
+            status: MilpStatus::NoSolution,
+            x: vec![],
+            objective: 0.0,
+            bound: f64::INFINITY * max_sign,
+            nodes_explored: nodes,
+            solve_time: t0.elapsed(),
+        },
+    }
+}
+
+/// Most-fractional integer/binary variable, if any.
+fn most_fractional(model: &Model, x: &[f64]) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    let mut best_dist = INT_TOL;
+    for (i, v) in model.vars.iter().enumerate() {
+        if matches!(v.kind, VarKind::Integer | VarKind::Binary) {
+            let f = x[i] - x[i].floor();
+            let dist = f.min(1.0 - f);
+            if dist > best_dist {
+                best_dist = dist;
+                best = Some((i, x[i]));
+            }
+        }
+    }
+    best
+}
+
+/// First violated SOS2 set and a split index (weighted-center heuristic).
+fn sos2_violation(model: &Model, x: &[f64]) -> Option<(usize, usize)> {
+    for (si, s) in model.sos2.iter().enumerate() {
+        let nz: Vec<usize> = s
+            .vars
+            .iter()
+            .enumerate()
+            .filter(|&(_, v)| x[v.0].abs() > INT_TOL)
+            .map(|(i, _)| i)
+            .collect();
+        let violated = nz.len() > 2 || (nz.len() == 2 && nz[1] != nz[0] + 1);
+        if violated {
+            // Split at the weighted center of mass of the nonzeros.
+            let tot: f64 = nz.iter().map(|&i| x[s.vars[i].0].abs()).sum();
+            let com: f64 = nz.iter().map(|&i| i as f64 * x[s.vars[i].0].abs()).sum::<f64>() / tot;
+            let split = (com.round() as usize).clamp(1, s.vars.len() - 2);
+            return Some((si, split));
+        }
+    }
+    None
+}
+
+/// Round integer variables to nearest (cleanup for the incumbent).
+fn rounded(model: &Model, x: &[f64]) -> Vec<f64> {
+    x.iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            if matches!(model.vars[i].kind, VarKind::Integer | VarKind::Binary) {
+                v.round()
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::milp::model::{Direction, LinExpr, Model, Sense};
+
+    fn solve_default(m: &Model) -> MilpResult {
+        solve(m, &Limits::default(), None)
+    }
+
+    #[test]
+    fn pure_lp_passes_through() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 4.0, "x");
+        m.set_objective(LinExpr::new().term(x, 2.0), 0.0);
+        let r = solve_default(&m);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn knapsack_binary() {
+        // max 10a + 6b + 4c s.t. a+b+c <= 2 (binary) -> a,b = 16
+        let mut m = Model::new(Direction::Maximize);
+        let a = m.binary("a");
+        let b = m.binary("b");
+        let c = m.binary("c");
+        m.constrain(
+            LinExpr::new().term(a, 1.0).term(b, 1.0).term(c, 1.0),
+            Sense::Le,
+            2.0,
+            "cap",
+        );
+        m.set_objective(LinExpr::new().term(a, 10.0).term(b, 6.0).term(c, 4.0), 0.0);
+        let r = solve_default(&m);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 16.0).abs() < 1e-6, "{}", r.objective);
+        assert!((r.x[0] - 1.0).abs() < 1e-6 && (r.x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn integer_rounding_not_lp_rounding() {
+        // Classic: max x + y, 2x + y <= 5, x + 3y <= 6, integer.
+        // LP opt is fractional; integer opt is 3 (e.g. x=2,y=1).
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.integer(0.0, 10.0, "x");
+        let y = m.integer(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 2.0).term(y, 1.0), Sense::Le, 5.0, "c1");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 3.0), Sense::Le, 6.0, "c2");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 1.0), 0.0);
+        let r = solve_default(&m);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 3.0).abs() < 1e-6, "{}", r.objective);
+    }
+
+    #[test]
+    fn minimize_direction() {
+        // min 3x + 2y s.t. x + y >= 4, integers >= 0 -> y=4: 8
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.integer(0.0, 100.0, "x");
+        let y = m.integer(0.0, 100.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Ge, 4.0, "c");
+        m.set_objective(LinExpr::new().term(x, 3.0).term(y, 2.0), 0.0);
+        let r = solve_default(&m);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 8.0).abs() < 1e-6, "{}", r.objective);
+    }
+
+    #[test]
+    fn infeasible_integer_model() {
+        // 2x = 3 with x integer
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.integer(0.0, 10.0, "x");
+        m.constrain(LinExpr::new().term(x, 2.0), Sense::Eq, 3.0, "odd");
+        m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        let r = solve_default(&m);
+        assert_eq!(r.status, MilpStatus::Infeasible);
+    }
+
+    #[test]
+    fn sos2_piecewise_linear_max() {
+        // Approximate concave f over points x = [0, 1, 2, 3], f = [0, 3, 4, 4.2]
+        // subject to x <= 1.5 ->  f(1.5) = 3.5 via SOS2 interpolation.
+        let mut m = Model::new(Direction::Maximize);
+        let pts = [0.0, 1.0, 2.0, 3.0];
+        let vals = [0.0, 3.0, 4.0, 4.2];
+        let ws: Vec<_> = (0..4).map(|i| m.continuous(0.0, 1.0, format!("w{i}"))).collect();
+        let mut convex = LinExpr::new();
+        let mut xdef = LinExpr::new();
+        let mut fdef = LinExpr::new();
+        for i in 0..4 {
+            convex.add(ws[i], 1.0);
+            xdef.add(ws[i], pts[i]);
+            fdef.add(ws[i], vals[i]);
+        }
+        m.constrain(convex, Sense::Eq, 1.0, "convexity");
+        m.constrain(xdef, Sense::Le, 1.5, "xcap");
+        m.add_sos2(ws.clone(), "pw");
+        m.set_objective(fdef, 0.0);
+        let r = solve_default(&m);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 3.5).abs() < 1e-5, "{}", r.objective);
+    }
+
+    #[test]
+    fn sos2_forces_adjacency_on_nonconcave() {
+        // Non-concave values make the LP want non-adjacent extremes;
+        // SOS2 must forbid that. points x=[0,1,2], f=[0, -1, 5] and
+        // constraint x = 1 (exactly). Without SOS2, w0=0.5,w2=0.5 gives
+        // f=2.5; with SOS2 feasible combos at x=1 are (w1=1) -> f=-1.
+        let mut m = Model::new(Direction::Maximize);
+        let pts = [0.0, 1.0, 2.0];
+        let vals = [0.0, -1.0, 5.0];
+        let ws: Vec<_> = (0..3).map(|i| m.continuous(0.0, 1.0, format!("w{i}"))).collect();
+        let mut convex = LinExpr::new();
+        let mut xdef = LinExpr::new();
+        let mut fdef = LinExpr::new();
+        for i in 0..3 {
+            convex.add(ws[i], 1.0);
+            xdef.add(ws[i], pts[i]);
+            fdef.add(ws[i], vals[i]);
+        }
+        m.constrain(convex, Sense::Eq, 1.0, "convexity");
+        m.constrain(xdef, Sense::Eq, 1.0, "x=1");
+        m.add_sos2(ws.clone(), "pw");
+        m.set_objective(fdef, 0.0);
+        let r = solve_default(&m);
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - (-1.0)).abs() < 1e-5, "{}", r.objective);
+    }
+
+    #[test]
+    fn warm_start_seeds_incumbent() {
+        let mut m = Model::new(Direction::Maximize);
+        let a = m.binary("a");
+        let b = m.binary("b");
+        m.constrain(LinExpr::new().term(a, 1.0).term(b, 1.0), Sense::Le, 1.0, "cap");
+        m.set_objective(LinExpr::new().term(a, 2.0).term(b, 3.0), 0.0);
+        // Warm start with the optimal point; zero extra nodes needed to
+        // find it (still explores to prove bound).
+        let r = solve(&m, &Limits::default(), Some(&[0.0, 1.0]));
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_warm_start_ignored() {
+        let mut m = Model::new(Direction::Maximize);
+        let a = m.binary("a");
+        m.set_objective(LinExpr::new().term(a, 1.0), 0.0);
+        let r = solve(&m, &Limits::default(), Some(&[5.0])); // infeasible ws
+        assert_eq!(r.status, MilpStatus::Optimal);
+        assert!((r.objective - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn node_limit_returns_feasible_or_nosolution() {
+        // Tight node budget on a nontrivial knapsack.
+        let mut m = Model::new(Direction::Maximize);
+        let n = 20;
+        let mut cap = LinExpr::new();
+        let mut obj = LinExpr::new();
+        for i in 0..n {
+            let b = m.binary(format!("b{i}"));
+            cap.add(b, 1.0 + (i % 7) as f64);
+            obj.add(b, 1.0 + ((i * 13) % 11) as f64);
+        }
+        m.constrain(cap, Sense::Le, 20.0, "cap");
+        m.set_objective(obj, 0.0);
+        let limits = Limits { max_nodes: 3, ..Default::default() };
+        let r = solve(&m, &limits, None);
+        assert!(
+            matches!(r.status, MilpStatus::Feasible | MilpStatus::NoSolution | MilpStatus::Optimal),
+            "{:?}",
+            r.status
+        );
+        // And with generous limits it must solve to optimality...
+        let r_full = solve(&m, &Limits::default(), None);
+        assert_eq!(r_full.status, MilpStatus::Optimal);
+        // ...and the limited run's incumbent can't beat the optimum.
+        if r.status == MilpStatus::Feasible {
+            assert!(r.objective <= r_full.objective + 1e-6);
+        }
+    }
+
+    #[test]
+    fn random_knapsacks_match_bruteforce() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xBEEF);
+        for case in 0..30 {
+            let n = rng.range_usize(3, 10);
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 9.0).round()).collect();
+            let values: Vec<f64> = (0..n).map(|_| rng.range_f64(1.0, 20.0).round()).collect();
+            let cap = rng.range_f64(5.0, 25.0).round();
+            // brute force
+            let mut best = 0.0f64;
+            for mask in 0u32..(1 << n) {
+                let (mut w, mut v) = (0.0, 0.0);
+                for i in 0..n {
+                    if mask >> i & 1 == 1 {
+                        w += weights[i];
+                        v += values[i];
+                    }
+                }
+                if w <= cap + 1e-9 {
+                    best = best.max(v);
+                }
+            }
+            // milp
+            let mut m = Model::new(Direction::Maximize);
+            let mut capex = LinExpr::new();
+            let mut obj = LinExpr::new();
+            for i in 0..n {
+                let b = m.binary(format!("b{i}"));
+                capex.add(b, weights[i]);
+                obj.add(b, values[i]);
+            }
+            m.constrain(capex, Sense::Le, cap, "cap");
+            m.set_objective(obj, 0.0);
+            let r = solve_default(&m);
+            assert_eq!(r.status, MilpStatus::Optimal, "case {case}");
+            assert!(
+                (r.objective - best).abs() < 1e-6,
+                "case {case}: milp {} vs brute {}",
+                r.objective,
+                best
+            );
+        }
+    }
+}

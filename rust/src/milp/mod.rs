@@ -1,0 +1,17 @@
+//! From-scratch MILP stack (the paper uses Gurobi; this image has no
+//! external solver).
+//!
+//! * [`model`] — variables / linear constraints / SOS2 sets / objective
+//! * [`simplex`] — two-phase dense simplex for LP relaxations
+//! * [`branch_bound`] — best-first B&B with integer and SOS2 branching,
+//!   warm starts, and the paper's timeout semantics
+//!
+//! The allocation formulations built on top live in [`crate::coordinator`].
+
+pub mod branch_bound;
+pub mod model;
+pub mod simplex;
+
+pub use branch_bound::{solve, Limits, MilpResult, MilpStatus};
+pub use model::{Direction, LinExpr, Model, Sense, Sos2, Var, VarId, VarKind};
+pub use simplex::{model_bounds, solve_lp, LpSolution, LpStatus};

@@ -1,0 +1,300 @@
+//! MILP model builder: variables, linear constraints, SOS2 sets, objective.
+//!
+//! The paper solves its allocation problem with Gurobi; this image has no
+//! external solver, so `milp` implements the whole stack from scratch:
+//! a model builder (this file), a two-phase dense simplex for the LP
+//! relaxation ([`super::simplex`]) and a best-first branch-and-bound with
+//! integer and SOS2 branching ([`super::branch_bound`]).
+
+/// Variable identifier (index into the model's variable table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarId(pub usize);
+
+/// Variable integrality class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VarKind {
+    Continuous,
+    /// Integer with the variable's bounds.
+    Integer,
+    /// Binary — shorthand for Integer with bounds [0, 1].
+    Binary,
+}
+
+/// A variable: kind, bounds and a debug name.
+#[derive(Clone, Debug)]
+pub struct Var {
+    pub kind: VarKind,
+    pub lo: f64,
+    pub hi: f64,
+    pub name: String,
+}
+
+/// Sparse linear expression: sum of coeff * var (+ no constant; constants
+/// live on the constraint rhs / objective offset).
+#[derive(Clone, Debug, Default)]
+pub struct LinExpr {
+    pub terms: Vec<(VarId, f64)>,
+}
+
+impl LinExpr {
+    pub fn new() -> Self {
+        LinExpr { terms: Vec::new() }
+    }
+
+    pub fn term(mut self, v: VarId, c: f64) -> Self {
+        self.terms.push((v, c));
+        self
+    }
+
+    pub fn add(&mut self, v: VarId, c: f64) -> &mut Self {
+        self.terms.push((v, c));
+        self
+    }
+
+    /// Evaluate against a dense assignment.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.terms.iter().map(|&(v, c)| c * x[v.0]).sum()
+    }
+
+    /// Merge duplicate variables (sums coefficients, drops ~zeros).
+    pub fn normalized(&self) -> LinExpr {
+        let mut sorted = self.terms.clone();
+        sorted.sort_by_key(|&(v, _)| v);
+        let mut out: Vec<(VarId, f64)> = Vec::with_capacity(sorted.len());
+        for (v, c) in sorted {
+            match out.last_mut() {
+                Some((lv, lc)) if *lv == v => *lc += c,
+                _ => out.push((v, c)),
+            }
+        }
+        out.retain(|&(_, c)| c.abs() > 1e-12);
+        LinExpr { terms: out }
+    }
+}
+
+/// Constraint comparison sense.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear constraint `expr (<=|>=|==) rhs`.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub expr: LinExpr,
+    pub sense: Sense,
+    pub rhs: f64,
+    pub name: String,
+}
+
+/// A type-2 special ordered set: among the ordered variables, at most two
+/// may be nonzero and they must be consecutive. Used for piecewise-linear
+/// approximation of the scalability curve O_j(n) (paper Eqn 11–12).
+#[derive(Clone, Debug)]
+pub struct Sos2 {
+    pub vars: Vec<VarId>,
+    pub name: String,
+}
+
+/// Optimization direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Maximize,
+    Minimize,
+}
+
+/// The full MILP model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub vars: Vec<Var>,
+    pub constraints: Vec<Constraint>,
+    pub sos2: Vec<Sos2>,
+    pub objective: LinExpr,
+    pub obj_offset: f64,
+    pub direction: Direction,
+}
+
+impl Default for Model {
+    fn default() -> Self {
+        Self::new(Direction::Maximize)
+    }
+}
+
+impl Model {
+    pub fn new(direction: Direction) -> Self {
+        Model {
+            vars: Vec::new(),
+            constraints: Vec::new(),
+            sos2: Vec::new(),
+            objective: LinExpr::new(),
+            obj_offset: 0.0,
+            direction,
+        }
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn add_var(&mut self, kind: VarKind, lo: f64, hi: f64, name: impl Into<String>) -> VarId {
+        assert!(lo <= hi, "variable bounds inverted: {lo} > {hi}");
+        let (lo, hi) = match kind {
+            VarKind::Binary => (0.0, 1.0),
+            _ => (lo, hi),
+        };
+        self.vars.push(Var { kind, lo, hi, name: name.into() });
+        VarId(self.vars.len() - 1)
+    }
+
+    pub fn continuous(&mut self, lo: f64, hi: f64, name: impl Into<String>) -> VarId {
+        self.add_var(VarKind::Continuous, lo, hi, name)
+    }
+
+    pub fn binary(&mut self, name: impl Into<String>) -> VarId {
+        self.add_var(VarKind::Binary, 0.0, 1.0, name)
+    }
+
+    pub fn integer(&mut self, lo: f64, hi: f64, name: impl Into<String>) -> VarId {
+        self.add_var(VarKind::Integer, lo, hi, name)
+    }
+
+    pub fn constrain(&mut self, expr: LinExpr, sense: Sense, rhs: f64, name: impl Into<String>) {
+        self.constraints.push(Constraint { expr: expr.normalized(), sense, rhs, name: name.into() });
+    }
+
+    pub fn add_sos2(&mut self, vars: Vec<VarId>, name: impl Into<String>) {
+        assert!(vars.len() >= 2, "SOS2 needs at least two variables");
+        self.sos2.push(Sos2 { vars, name: name.into() });
+    }
+
+    pub fn set_objective(&mut self, expr: LinExpr, offset: f64) {
+        self.objective = expr.normalized();
+        self.obj_offset = offset;
+    }
+
+    /// True if the assignment satisfies all bounds, constraints,
+    /// integrality and SOS2 conditions within `tol`.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        self.feasibility_violation(x, tol).is_none()
+    }
+
+    /// First violated condition as a human-readable string (for tests).
+    pub fn feasibility_violation(&self, x: &[f64], tol: f64) -> Option<String> {
+        if x.len() != self.vars.len() {
+            return Some(format!("assignment len {} != vars {}", x.len(), self.vars.len()));
+        }
+        for (i, v) in self.vars.iter().enumerate() {
+            if x[i] < v.lo - tol || x[i] > v.hi + tol {
+                return Some(format!("var {} = {} out of [{}, {}]", v.name, x[i], v.lo, v.hi));
+            }
+            if matches!(v.kind, VarKind::Binary | VarKind::Integer)
+                && (x[i] - x[i].round()).abs() > tol
+            {
+                return Some(format!("var {} = {} not integral", v.name, x[i]));
+            }
+        }
+        for c in &self.constraints {
+            let lhs = c.expr.eval(x);
+            let ok = match c.sense {
+                Sense::Le => lhs <= c.rhs + tol,
+                Sense::Ge => lhs >= c.rhs - tol,
+                Sense::Eq => (lhs - c.rhs).abs() <= tol,
+            };
+            if !ok {
+                return Some(format!("constraint {}: {} {:?} {}", c.name, lhs, c.sense, c.rhs));
+            }
+        }
+        for s in &self.sos2 {
+            let nz: Vec<usize> = s
+                .vars
+                .iter()
+                .enumerate()
+                .filter(|&(_, v)| x[v.0].abs() > tol)
+                .map(|(i, _)| i)
+                .collect();
+            if nz.len() > 2 {
+                return Some(format!("SOS2 {}: {} nonzeros", s.name, nz.len()));
+            }
+            if nz.len() == 2 && nz[1] != nz[0] + 1 {
+                return Some(format!("SOS2 {}: nonzeros {} and {} not adjacent", s.name, nz[0], nz[1]));
+            }
+        }
+        None
+    }
+
+    /// Objective value (including offset) for an assignment.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.objective.eval(x) + self.obj_offset
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_basics() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let b = m.binary("b");
+        assert_eq!(m.n_vars(), 2);
+        assert_eq!(m.vars[b.0].hi, 1.0);
+        m.constrain(LinExpr::new().term(x, 1.0).term(b, 5.0), Sense::Le, 8.0, "c0");
+        m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        assert!(m.is_feasible(&[3.0, 1.0], 1e-9));
+        assert!(!m.is_feasible(&[4.0, 1.0], 1e-9)); // 4 + 5 > 8
+    }
+
+    #[test]
+    fn normalized_merges_terms() {
+        let e = LinExpr::new().term(VarId(1), 2.0).term(VarId(0), 1.0).term(VarId(1), 3.0);
+        let n = e.normalized();
+        assert_eq!(n.terms, vec![(VarId(0), 1.0), (VarId(1), 5.0)]);
+    }
+
+    #[test]
+    fn normalized_drops_zeros() {
+        let e = LinExpr::new().term(VarId(0), 1.0).term(VarId(0), -1.0);
+        assert!(e.normalized().terms.is_empty());
+    }
+
+    #[test]
+    fn integrality_checked() {
+        let mut m = Model::new(Direction::Maximize);
+        m.integer(0.0, 5.0, "n");
+        assert!(m.is_feasible(&[3.0], 1e-9));
+        assert!(!m.is_feasible(&[2.5], 1e-9));
+    }
+
+    #[test]
+    fn sos2_adjacency_checked() {
+        let mut m = Model::new(Direction::Maximize);
+        let w: Vec<VarId> = (0..4).map(|i| m.continuous(0.0, 1.0, format!("w{i}"))).collect();
+        m.add_sos2(w.clone(), "s");
+        assert!(m.is_feasible(&[0.5, 0.5, 0.0, 0.0], 1e-9)); // adjacent pair
+        assert!(m.is_feasible(&[0.0, 0.0, 1.0, 0.0], 1e-9)); // single
+        assert!(!m.is_feasible(&[0.5, 0.0, 0.5, 0.0], 1e-9)); // gap
+        assert!(!m.is_feasible(&[0.4, 0.3, 0.3, 0.0], 1e-9)); // three nonzeros
+    }
+
+    #[test]
+    fn violation_messages_name_culprit() {
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(0.0, 1.0, "alpha");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Ge, 0.5, "half");
+        let v = m.feasibility_violation(&[0.1], 1e-9).unwrap();
+        assert!(v.contains("half"), "{v}");
+        let v = m.feasibility_violation(&[2.0], 1e-9).unwrap();
+        assert!(v.contains("alpha"), "{v}");
+    }
+
+    #[test]
+    fn objective_with_offset() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 1.0, "x");
+        m.set_objective(LinExpr::new().term(x, 2.0), 10.0);
+        assert!((m.objective_value(&[0.5]) - 11.0).abs() < 1e-12);
+    }
+}

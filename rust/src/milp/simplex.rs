@@ -1,0 +1,564 @@
+//! Two-phase dense (tableau) simplex for the LP relaxation.
+//!
+//! Scope: the models BFTrainer builds are small-to-medium (hundreds of
+//! variables/constraints for the aggregate formulation; the per-node,
+//! paper-faithful formulation is only solved at sizes where a dense
+//! tableau is still comfortable). Variables are shifted by their lower
+//! bound; finite upper bounds become explicit rows. Phase 1 minimizes
+//! artificial infeasibility; phase 2 optimizes the true objective.
+//! Dantzig pricing with a Bland's-rule fallback guards against cycling.
+
+use super::model::{Direction, Model, Sense};
+
+const EPS: f64 = 1e-9;
+
+/// LP outcome classification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LpStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+    /// Iteration limit hit — numerically stuck (treated as failure).
+    Stalled,
+}
+
+/// LP result: status, primal point (original variable space), objective
+/// value in the model's direction (including offset).
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub status: LpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+/// Solve the LP relaxation of `model` with per-variable bounds overridden
+/// by `bounds` (same length as `model.vars`; use the model's own bounds
+/// via [`model_bounds`]). Integrality and SOS2 conditions are ignored —
+/// branch-and-bound layers them on top.
+pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
+    assert_eq!(bounds.len(), model.vars.len());
+    let n = model.vars.len();
+
+    // Quick bound sanity: empty box -> infeasible.
+    for &(lo, hi) in bounds {
+        if lo > hi + EPS {
+            return LpSolution { status: LpStatus::Infeasible, x: vec![], objective: 0.0 };
+        }
+        assert!(lo.is_finite(), "lower bounds must be finite");
+    }
+
+    // Internally minimize. min_c = -c for Maximize.
+    let sign = match model.direction {
+        Direction::Maximize => -1.0,
+        Direction::Minimize => 1.0,
+    };
+    let mut c = vec![0.0; n];
+    for &(v, coef) in &model.objective.terms {
+        c[v.0] += sign * coef;
+    }
+
+    // Shift x = y + lo, y >= 0. Collect rows: constraints with adjusted
+    // rhs, plus upper-bound rows y_i <= hi - lo (when finite).
+    struct Row {
+        coeffs: Vec<(usize, f64)>,
+        sense: Sense,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::with_capacity(model.constraints.len() + n);
+    for con in &model.constraints {
+        let mut rhs = con.rhs;
+        let mut coeffs = Vec::with_capacity(con.expr.terms.len());
+        for &(v, coef) in &con.expr.terms {
+            rhs -= coef * bounds[v.0].0;
+            coeffs.push((v.0, coef));
+        }
+        rows.push(Row { coeffs, sense: con.sense, rhs });
+    }
+    for (i, &(lo, hi)) in bounds.iter().enumerate() {
+        if hi.is_finite() && hi - lo > EPS {
+            rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Le, rhs: hi - lo });
+        }
+    }
+    // Fixed variables (hi == lo): y_i <= 0 handled by not adding a row and
+    // zeroing the column is implicit since y_i >= 0 and we must also stop
+    // it from increasing — add equality row y_i = 0.
+    for (i, &(lo, hi)) in bounds.iter().enumerate() {
+        if hi.is_finite() && hi - lo <= EPS {
+            rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Eq, rhs: 0.0 });
+        }
+    }
+
+    let m = rows.len();
+    // Column layout: [structural 0..n | slack/surplus | artificial]
+    #[allow(unused_assignments)]
+    let mut n_slack = 0usize;
+    for r in &rows {
+        if !matches!(r.sense, Sense::Eq) {
+            n_slack += 1;
+        }
+        let _ = r;
+    }
+    // Count artificials: Ge (after b>=0 normalization) and Eq rows get one;
+    // Le rows with negative rhs flip to Ge. Determine after normalization.
+    struct Norm {
+        coeffs: Vec<(usize, f64)>,
+        rhs: f64,
+        slack: Option<(usize, f64)>, // (col, +1/-1)
+        artificial: Option<usize>,
+    }
+    let mut norms: Vec<Norm> = Vec::with_capacity(m);
+    let mut slack_idx = 0usize;
+    // First pass: normalize senses to rhs >= 0 and assign slack columns.
+    let mut needs_artificial = Vec::with_capacity(m);
+    for r in rows.iter() {
+        let mut coeffs = r.coeffs.clone();
+        let mut rhs = r.rhs;
+        let mut sense = r.sense;
+        if rhs < 0.0 {
+            for t in coeffs.iter_mut() {
+                t.1 = -t.1;
+            }
+            rhs = -rhs;
+            sense = match sense {
+                Sense::Le => Sense::Ge,
+                Sense::Ge => Sense::Le,
+                Sense::Eq => Sense::Eq,
+            };
+        }
+        let (slack, art) = match sense {
+            Sense::Le => {
+                let s = Some((n + slack_idx, 1.0));
+                slack_idx += 1;
+                (s, false)
+            }
+            Sense::Ge => {
+                let s = Some((n + slack_idx, -1.0));
+                slack_idx += 1;
+                (s, true)
+            }
+            Sense::Eq => (None, true),
+        };
+        needs_artificial.push(art);
+        norms.push(Norm { coeffs, rhs, slack, artificial: None });
+    }
+    n_slack = slack_idx;
+    let mut n_art = 0usize;
+    for (i, norm) in norms.iter_mut().enumerate() {
+        if needs_artificial[i] {
+            norm.artificial = Some(n + n_slack + n_art);
+            n_art += 1;
+        }
+    }
+    let ncols = n + n_slack + n_art;
+
+    // Dense tableau: m rows × (ncols + 1), last column = rhs.
+    let mut t = vec![vec![0.0f64; ncols + 1]; m];
+    let mut basis = vec![usize::MAX; m];
+    for (i, norm) in norms.iter().enumerate() {
+        for &(j, v) in &norm.coeffs {
+            t[i][j] += v;
+        }
+        if let Some((j, v)) = norm.slack {
+            t[i][j] = v;
+            if v > 0.0 && norm.artificial.is_none() {
+                basis[i] = j;
+            }
+        }
+        if let Some(j) = norm.artificial {
+            t[i][j] = 1.0;
+            basis[i] = j;
+        }
+        t[i][ncols] = norm.rhs;
+        debug_assert!(basis[i] != usize::MAX);
+    }
+
+    // Objective rows as reduced-cost vectors. obj[ncols] holds -z.
+    // Phase 1: minimize sum of artificials.
+    let max_iter = 200 * (m + ncols) + 1000;
+
+    if n_art > 0 {
+        let mut obj1 = vec![0.0f64; ncols + 1];
+        for j in (n + n_slack)..ncols {
+            obj1[j] = 1.0;
+        }
+        // Make reduced costs of basic artificials zero.
+        for i in 0..m {
+            if basis[i] >= n + n_slack {
+                for j in 0..=ncols {
+                    obj1[j] -= t[i][j];
+                }
+            }
+        }
+        match run_simplex(&mut t, &mut obj1, &mut basis, max_iter) {
+            SimplexOutcome::Optimal => {}
+            SimplexOutcome::Unbounded => {
+                // Phase-1 objective is bounded below by 0; reaching here
+                // means numerical trouble.
+                return LpSolution { status: LpStatus::Stalled, x: vec![], objective: 0.0 };
+            }
+            SimplexOutcome::IterLimit => {
+                return LpSolution { status: LpStatus::Stalled, x: vec![], objective: 0.0 };
+            }
+        }
+        let phase1_val = -obj1[ncols];
+        if phase1_val > 1e-7 {
+            return LpSolution { status: LpStatus::Infeasible, x: vec![], objective: 0.0 };
+        }
+        // Pivot remaining basic artificials out where possible.
+        for i in 0..m {
+            if basis[i] >= n + n_slack {
+                if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > 1e-7) {
+                    pivot(&mut t, &mut vec![0.0; ncols + 1], &mut basis, i, j);
+                }
+                // else: redundant row; leave artificial basic at 0.
+            }
+        }
+    }
+
+    // Phase 2: true objective over structural columns.
+    let mut obj2 = vec![0.0f64; ncols + 1];
+    for (j, &cj) in c.iter().enumerate() {
+        obj2[j] = cj;
+    }
+    // Canonicalize: zero out reduced costs of basic columns.
+    for i in 0..m {
+        let b = basis[i];
+        if obj2[b].abs() > 0.0 {
+            let f = obj2[b];
+            for j in 0..=ncols {
+                obj2[j] -= f * t[i][j];
+            }
+        }
+    }
+    // Forbid artificials from re-entering by giving them +inf cost
+    // (implemented: skip them in pricing inside run_simplex via a cutoff
+    // column index — encode by setting their reduced cost to +1e30).
+    for j in (n + n_slack)..ncols {
+        if !basis.contains(&j) {
+            obj2[j] = 1e30;
+        }
+    }
+
+    match run_simplex(&mut t, &mut obj2, &mut basis, max_iter) {
+        SimplexOutcome::Optimal => {}
+        SimplexOutcome::Unbounded => {
+            return LpSolution { status: LpStatus::Unbounded, x: vec![], objective: 0.0 };
+        }
+        SimplexOutcome::IterLimit => {
+            return LpSolution { status: LpStatus::Stalled, x: vec![], objective: 0.0 };
+        }
+    }
+
+    // Extract structural solution, unshift.
+    let mut y = vec![0.0f64; ncols];
+    for i in 0..m {
+        y[basis[i]] = t[i][ncols];
+    }
+    let x: Vec<f64> = (0..n).map(|i| y[i] + bounds[i].0).collect();
+    let objective = model.objective.eval(&x) + model.obj_offset;
+    LpSolution { status: LpStatus::Optimal, x, objective }
+}
+
+/// Convenience: the model's own bounds as the override vector.
+pub fn model_bounds(model: &Model) -> Vec<(f64, f64)> {
+    model.vars.iter().map(|v| (v.lo, v.hi)).collect()
+}
+
+enum SimplexOutcome {
+    Optimal,
+    Unbounded,
+    IterLimit,
+}
+
+/// Run primal simplex to optimality on a canonical tableau.
+/// `obj` is the reduced-cost row (minimization); entering columns must
+/// have negative reduced cost.
+fn run_simplex(
+    t: &mut [Vec<f64>],
+    obj: &mut Vec<f64>,
+    basis: &mut [usize],
+    max_iter: usize,
+) -> SimplexOutcome {
+    let m = t.len();
+    let ncols = obj.len() - 1;
+    let bland_after = max_iter / 2;
+    for iter in 0..max_iter {
+        // Pricing.
+        let entering = if iter < bland_after {
+            // Dantzig: most negative reduced cost.
+            let mut best = None;
+            let mut best_val = -1e-9;
+            for j in 0..ncols {
+                if obj[j] < best_val {
+                    best_val = obj[j];
+                    best = Some(j);
+                }
+            }
+            best
+        } else {
+            // Bland: smallest index with negative reduced cost.
+            (0..ncols).find(|&j| obj[j] < -1e-9)
+        };
+        let Some(e) = entering else {
+            return SimplexOutcome::Optimal;
+        };
+        // Ratio test.
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            let a = t[i][e];
+            if a > 1e-9 {
+                let ratio = t[i][ncols] / a;
+                // Tie-break by smaller basis index (anti-cycling aid).
+                if ratio < best_ratio - 1e-12
+                    || (ratio < best_ratio + 1e-12
+                        && leave.map_or(true, |l| basis[i] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return SimplexOutcome::Unbounded;
+        };
+        pivot(t, obj, basis, l, e);
+    }
+    SimplexOutcome::IterLimit
+}
+
+/// Gauss-Jordan pivot on (row, col); updates tableau, objective row, basis.
+fn pivot(t: &mut [Vec<f64>], obj: &mut Vec<f64>, basis: &mut [usize], row: usize, col: usize) {
+    let ncols = t[0].len() - 1;
+    let p = t[row][col];
+    debug_assert!(p.abs() > 1e-12, "pivot on ~zero element");
+    let inv = 1.0 / p;
+    for j in 0..=ncols {
+        t[row][j] *= inv;
+    }
+    t[row][col] = 1.0; // exact
+    for i in 0..t.len() {
+        if i != row {
+            let f = t[i][col];
+            if f.abs() > 1e-12 {
+                // Manual split to satisfy the borrow checker.
+                let (pr, tr) = if i < row {
+                    let (a, b) = t.split_at_mut(row);
+                    (&b[0], &mut a[i])
+                } else {
+                    let (a, b) = t.split_at_mut(i);
+                    (&a[row], &mut b[0])
+                };
+                for j in 0..=ncols {
+                    tr[j] -= f * pr[j];
+                }
+                tr[col] = 0.0;
+            }
+        }
+    }
+    let f = obj[col];
+    if f.abs() > 1e-12 {
+        for j in 0..=ncols {
+            obj[j] -= f * t[row][j];
+        }
+        obj[col] = 0.0;
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::milp::model::{LinExpr, Model, Sense, VarKind};
+
+    fn lp(m: &Model) -> LpSolution {
+        solve_lp(m, &model_bounds(m))
+    }
+
+    #[test]
+    fn textbook_max() {
+        // max 3x + 5y s.t. x <= 4, 2y <= 12, 3x + 2y <= 18 -> (2, 6), z = 36
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, f64::INFINITY, "x");
+        let y = m.continuous(0.0, f64::INFINITY, "y");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Le, 4.0, "c1");
+        m.constrain(LinExpr::new().term(y, 2.0), Sense::Le, 12.0, "c2");
+        m.constrain(LinExpr::new().term(x, 3.0).term(y, 2.0), Sense::Le, 18.0, "c3");
+        m.set_objective(LinExpr::new().term(x, 3.0).term(y, 5.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 36.0).abs() < 1e-6, "{}", s.objective);
+        assert!((s.x[0] - 2.0).abs() < 1e-6 && (s.x[1] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minimize_with_ge() {
+        // min 2x + 3y s.t. x + y >= 10, x >= 2 -> x=8..? optimal x=10,y=0? cost 2x+3y: put all in x: x=10,y=0 -> 20
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(0.0, f64::INFINITY, "x");
+        let y = m.continuous(0.0, f64::INFINITY, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Ge, 10.0, "sum");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Ge, 2.0, "xmin");
+        m.set_objective(LinExpr::new().term(x, 2.0).term(y, 3.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 20.0).abs() < 1e-6, "{}", s.objective);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // max x + y s.t. x + y = 5, x - y = 1 -> x=3, y=2
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, f64::INFINITY, "x");
+        let y = m.continuous(0.0, f64::INFINITY, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Eq, 5.0, "e1");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, -1.0), Sense::Eq, 1.0, "e2");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 1.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.x[0] - 3.0).abs() < 1e-6 && (s.x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 1.0, "x");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Ge, 2.0, "imposs");
+        m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        assert_eq!(lp(&m).status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, f64::INFINITY, "x");
+        m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        assert_eq!(lp(&m).status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn respects_upper_bounds() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 2.5, "x");
+        m.set_objective(LinExpr::new().term(x, 4.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn respects_nonzero_lower_bounds() {
+        // min x + y with x in [3, 10], y in [2, 10], x + y >= 7 -> 7 (e.g. 5,2 or 3,4)
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(3.0, 10.0, "x");
+        let y = m.continuous(2.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Ge, 7.0, "c");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 1.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 7.0).abs() < 1e-6, "{}", s.objective);
+        assert!(s.x[0] >= 3.0 - 1e-9 && s.x[1] >= 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn fixed_variable_via_bounds_override() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 10.0, "cap");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 2.0), 0.0);
+        // Fix x = 4 via override.
+        let s = solve_lp(&m, &[(4.0, 4.0), (0.0, 10.0)]);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.x[0] - 4.0).abs() < 1e-6);
+        assert!((s.objective - 16.0).abs() < 1e-6, "{}", s.objective); // 4 + 2*6
+    }
+
+    #[test]
+    fn inverted_override_bounds_infeasible() {
+        let mut m = Model::new(Direction::Maximize);
+        let _ = m.continuous(0.0, 10.0, "x");
+        m.set_objective(LinExpr::new(), 0.0);
+        let s = solve_lp(&m, &[(5.0, 4.0)]);
+        assert_eq!(s.status, LpStatus::Infeasible);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // x - y <= -2 with x,y in [0,10]: i.e. y >= x + 2. max x + y -> x=8,y=10
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, -1.0), Sense::Le, -2.0, "c");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 1.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 18.0).abs() < 1e-6, "{}", s.objective);
+    }
+
+    #[test]
+    fn degenerate_redundant_constraints() {
+        // Duplicate equalities should not break phase-1 cleanup.
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Eq, 3.0, "e1");
+        m.constrain(LinExpr::new().term(x, 2.0), Sense::Eq, 6.0, "e2");
+        m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn binary_bounds_respected_in_relaxation() {
+        let mut m = Model::new(Direction::Maximize);
+        let b = m.add_var(VarKind::Binary, 0.0, 1.0, "b");
+        m.set_objective(LinExpr::new().term(b, 7.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_lps_feasible_and_bounded() {
+        // Property-ish: random small LPs with box bounds and <= rows are
+        // always feasible (x = lo) and bounded (box), so Optimal expected,
+        // and the returned point must satisfy the model.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xF00D);
+        for _case in 0..60 {
+            let nv = rng.range_usize(1, 6);
+            let nc = rng.range_usize(0, 6);
+            let mut m = Model::new(Direction::Maximize);
+            let vars: Vec<_> = (0..nv)
+                .map(|i| {
+                    let lo = rng.range_f64(0.0, 2.0);
+                    m.continuous(lo, lo + rng.range_f64(0.5, 5.0), format!("v{i}"))
+                })
+                .collect();
+            for ci in 0..nc {
+                let mut e = LinExpr::new();
+                let mut lo_lhs = 0.0; // value at x = lo (all coeffs >= 0)
+                for &v in &vars {
+                    let c = rng.range_f64(0.0, 1.0);
+                    lo_lhs += c * m.vars[v.0].lo;
+                    e.add(v, c);
+                }
+                // rhs >= lhs(lo) keeps x=lo feasible
+                m.constrain(e, Sense::Le, lo_lhs + rng.range_f64(0.0, 3.0), format!("c{ci}"));
+            }
+            let mut obj = LinExpr::new();
+            for &v in &vars {
+                obj.add(v, rng.range_f64(-1.0, 2.0));
+            }
+            m.set_objective(obj, 0.0);
+            let s = lp(&m);
+            assert_eq!(s.status, LpStatus::Optimal, "case {_case}");
+            assert!(
+                m.feasibility_violation(&s.x, 1e-6).is_none(),
+                "case {_case}: {:?}",
+                m.feasibility_violation(&s.x, 1e-6)
+            );
+        }
+    }
+}

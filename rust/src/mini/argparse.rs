@@ -1,0 +1,306 @@
+//! Minimal declarative command-line parser (the vendor set has no clap).
+//!
+//! Supports: subcommands, `--flag`, `--opt value` / `--opt=value`,
+//! positional arguments, defaults, typed accessors, and generated help.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath flags)
+//! use bftrainer::mini::argparse::Command;
+//! let cmd = Command::new("demo", "demo tool")
+//!     .opt("seed", "42", "rng seed")
+//!     .flag("verbose", "chatty output");
+//! let m = cmd.parse_from(&["--seed".into(), "7".into()]).unwrap();
+//! assert_eq!(m.get_u64("seed").unwrap(), 7);
+//! assert!(!m.flag("verbose"));
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Option/flag specification.
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    default: Option<String>,
+    help: String,
+    is_flag: bool,
+}
+
+/// A command (or subcommand) definition.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    specs: Vec<Spec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed matches: resolved option values and flags.
+#[derive(Clone, Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+/// Parse error with a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for ParseError {}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Add an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            default: Some(default.to_string()),
+            help: help.to_string(),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Add a required option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Add a boolean flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (for help text; all extras collected).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Generated usage/help text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for s in &self.specs {
+            let left = if s.is_flag {
+                format!("  --{}", s.name)
+            } else if let Some(d) = &s.default {
+                format!("  --{} <v> (default {})", s.name, d)
+            } else {
+                format!("  --{} <v> (required)", s.name)
+            };
+            out.push_str(&format!("{left:<42} {}\n", s.help));
+        }
+        for (p, h) in &self.positionals {
+            out.push_str(&format!("  <{p:<38}> {h}\n"));
+        }
+        out
+    }
+
+    /// Parse from an argument list (not including argv[0]/subcommand name).
+    pub fn parse_from(&self, args: &[String]) -> Result<Matches, ParseError> {
+        let mut m = Matches::default();
+        // seed defaults
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                m.values.insert(s.name.clone(), d.clone());
+            }
+            if s.is_flag {
+                m.flags.insert(s.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(ParseError(self.help()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| ParseError(format!("unknown option --{key}\n\n{}", self.help())))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(ParseError(format!("flag --{key} takes no value")));
+                    }
+                    m.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| ParseError(format!("option --{key} needs a value")))?
+                        }
+                    };
+                    m.values.insert(key, val);
+                }
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // check required
+        for s in &self.specs {
+            if !s.is_flag && !m.values.contains_key(&s.name) {
+                return Err(ParseError(format!("missing required option --{}", s.name)));
+            }
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<String, ParseError> {
+        self.get(name)
+            .map(String::from)
+            .ok_or_else(|| ParseError(format!("option {name} not set")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, ParseError> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| ParseError(format!("--{name}: {e}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, ParseError> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| ParseError(format!("--{name}: {e}")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, ParseError> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| ParseError(format!("--{name}: {e}")))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Parse a comma-separated list of f64.
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>, ParseError> {
+        self.get_str(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| ParseError(format!("--{name}: {e}"))))
+            .collect()
+    }
+
+    /// Parse a comma-separated list of usize.
+    pub fn get_usize_list(&self, name: &str) -> Result<Vec<usize>, ParseError> {
+        self.get_str(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| ParseError(format!("--{name}: {e}"))))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Command::new("t", "").opt("x", "5", "");
+        let m = c.parse_from(&[]).unwrap();
+        assert_eq!(m.get_u64("x").unwrap(), 5);
+    }
+
+    #[test]
+    fn override_and_inline_forms() {
+        let c = Command::new("t", "").opt("x", "5", "");
+        assert_eq!(c.parse_from(&v(&["--x", "9"])).unwrap().get_u64("x").unwrap(), 9);
+        assert_eq!(c.parse_from(&v(&["--x=7"])).unwrap().get_u64("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let c = Command::new("t", "").flag("fast", "");
+        let m = c.parse_from(&v(&["pos1", "--fast", "pos2"])).unwrap();
+        assert!(m.flag("fast"));
+        assert_eq!(m.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let c = Command::new("t", "");
+        assert!(c.parse_from(&v(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let c = Command::new("t", "").req("must", "");
+        assert!(c.parse_from(&[]).is_err());
+        assert!(c.parse_from(&v(&["--must", "1"])).is_ok());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let c = Command::new("t", "").opt("x", "1", "");
+        assert!(c.parse_from(&v(&["--x"])).is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let c = Command::new("t", "").opt("ts", "1,2.5,3", "");
+        let m = c.parse_from(&[]).unwrap();
+        assert_eq!(m.get_f64_list("ts").unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let c = Command::new("t", "about").opt("x", "1", "the x");
+        let h = c.help();
+        assert!(h.contains("--x"));
+        assert!(h.contains("the x"));
+        // -h routes through ParseError carrying the help text
+        let e = c.parse_from(&v(&["-h"])).unwrap_err();
+        assert!(e.0.contains("USAGE"));
+    }
+}

@@ -1,0 +1,218 @@
+//! Criterion-style micro-benchmark harness (the vendor set has no criterion).
+//!
+//! Each bench target is a `harness = false` binary that builds a
+//! [`BenchRunner`], registers closures, and calls [`BenchRunner::finish`].
+//! Per benchmark we run a warmup phase, then collect `samples` timed
+//! iterations and report mean / p50 / p95 / min plus optional throughput.
+//!
+//! `cargo bench -- <filter>` filters by substring, matching criterion's CLI.
+
+use crate::util::stats;
+use crate::util::table::Table;
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub throughput_items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+}
+
+/// Benchmark registry + runner.
+pub struct BenchRunner {
+    pub title: String,
+    pub warmup: Duration,
+    pub samples: usize,
+    filter: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl BenchRunner {
+    /// Create a runner; reads the optional CLI filter (first non-flag arg,
+    /// skipping cargo-bench's `--bench` flag).
+    pub fn new(title: &str) -> Self {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        BenchRunner {
+            title: title.to_string(),
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+
+    pub fn with_warmup_ms(mut self, ms: u64) -> Self {
+        self.warmup = Duration::from_millis(ms);
+        self
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Time `f` (which should perform one full iteration of the workload).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        self.bench_with_items(name, None, move || f());
+    }
+
+    /// Time `f`, also reporting items/s computed from `items` per iteration.
+    pub fn bench_items(&mut self, name: &str, items: f64, mut f: impl FnMut()) {
+        self.bench_with_items(name, Some(items), move || f());
+    }
+
+    fn bench_with_items(&mut self, name: &str, items: Option<f64>, mut f: impl FnMut()) {
+        if !self.selected(name) {
+            return;
+        }
+        // Warmup: run until warmup duration elapsed (at least once).
+        let start = Instant::now();
+        loop {
+            f();
+            if start.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: name.to_string(), samples, throughput_items: items };
+        eprintln!("  done: {}", r.name);
+        self.results.push(r);
+    }
+
+    /// Record an externally-measured sample set (for one-shot workloads
+    /// like full trace replays where re-running 20× is wasteful).
+    pub fn record(&mut self, name: &str, seconds: Vec<f64>, items: Option<f64>) {
+        if !self.selected(name) {
+            return;
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: seconds,
+            throughput_items: items,
+        });
+    }
+
+    /// Render the result table and return it (also printed to stdout).
+    pub fn finish(&self) -> String {
+        let mut t = Table::new(vec!["benchmark", "mean", "p50", "p95", "min", "thrpt"]);
+        for r in &self.results {
+            let mut s = r.samples.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = stats::mean(&s);
+            let thrpt = match r.throughput_items {
+                Some(items) if mean > 0.0 => format!("{:.1}/s", items / mean),
+                _ => "-".to_string(),
+            };
+            t.row(vec![
+                r.name.clone(),
+                fmt_dur(mean),
+                fmt_dur(stats::percentile(&s, 50.0)),
+                fmt_dur(stats::percentile(&s, 95.0)),
+                fmt_dur(s[0]),
+                thrpt,
+            ]);
+        }
+        let out = format!("\n== {} ==\n{}", self.title, t.render());
+        println!("{out}");
+        out
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Human-friendly duration formatting (s/ms/µs/ns).
+pub fn fmt_dur(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3}s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3}ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3}µs", seconds * 1e6)
+    } else {
+        format!("{:.1}ns", seconds * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut r = BenchRunner::new("t").with_samples(5).with_warmup_ms(1);
+        r.filter = None;
+        let mut acc = 0u64;
+        r.bench("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.results().len(), 1);
+        assert_eq!(r.results()[0].samples.len(), 5);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut r = BenchRunner::new("t").with_samples(1).with_warmup_ms(1);
+        r.filter = Some("yes".to_string());
+        r.bench("yes_me", || {});
+        r.bench("not_this", || {});
+        assert_eq!(r.results().len(), 1);
+        assert_eq!(r.results()[0].name, "yes_me");
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut r = BenchRunner::new("t").with_samples(3).with_warmup_ms(1);
+        r.filter = None;
+        r.bench_items("work", 100.0, || {
+            std::thread::sleep(Duration::from_micros(50));
+        });
+        let out = r.finish();
+        assert!(out.contains("/s"), "{out}");
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(2.0).ends_with('s'));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut r = BenchRunner::new("t");
+        r.filter = None;
+        r.record("one_shot", vec![1.5, 1.6], Some(10.0));
+        assert_eq!(r.results().len(), 1);
+        assert!((r.results()[0].mean_s() - 1.55).abs() < 1e-9);
+    }
+}

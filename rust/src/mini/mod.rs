@@ -1,0 +1,8 @@
+//! In-tree replacements for crates absent from the offline vendor set:
+//! CLI parsing (clap), property testing (proptest), micro-benchmarks
+//! (criterion) and TOML config parsing (toml/serde).
+
+pub mod argparse;
+pub mod benchkit;
+pub mod prop;
+pub mod toml;

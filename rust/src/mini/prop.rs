@@ -1,0 +1,234 @@
+//! Property-based testing harness (the vendor set has no proptest).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs; on
+//! failure it retries with a simple greedy shrink (halving numeric fields
+//! via the caller-supplied `shrink` candidates) and reports the minimal
+//! failing case plus the seed needed to replay it.
+//!
+//! Generators are plain closures over [`Rng`]; combinators live on
+//! [`Gen`].
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed is fixed by default for reproducible CI; override per test
+        // (or via BFT_PROP_SEED) to explore.
+        let seed = std::env::var("BFT_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xB_F7_2A_1);
+        Config { cases: 64, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// A value generator.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Rng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Rng) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> T {
+        (self.f)(rng)
+    }
+
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r| g(self.sample(r)))
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(move |r| r.range_usize(lo, hi))
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |r| r.range_f64(lo, hi))
+}
+
+/// Vector with length in [min_len, max_len], elements from `elem`.
+pub fn vec_of<T: 'static>(elem: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+    Gen::new(move |r| {
+        let n = r.range_usize(min_len, max_len);
+        (0..n).map(|_| elem.sample(r)).collect()
+    })
+}
+
+/// Outcome of a single property evaluation.
+pub enum Outcome {
+    Pass,
+    /// Property failed with this message.
+    Fail(String),
+    /// Input rejected (does not count as a case).
+    Discard,
+}
+
+/// Run `prop` over `cfg.cases` inputs from `gen`. On failure, attempts to
+/// shrink using `shrink` (which must yield strictly "smaller" candidates)
+/// and panics with the minimal counterexample.
+pub fn check_with<T: std::fmt::Debug + Clone + 'static>(
+    cfg: &Config,
+    gen: &Gen<T>,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Outcome,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    let mut executed = 0usize;
+    let mut attempts = 0usize;
+    while executed < cfg.cases {
+        attempts += 1;
+        assert!(
+            attempts < cfg.cases * 20 + 100,
+            "too many discards ({attempts} attempts for {executed} cases)"
+        );
+        let input = gen.sample(&mut rng);
+        match prop(&input) {
+            Outcome::Pass => executed += 1,
+            Outcome::Discard => continue,
+            Outcome::Fail(msg) => {
+                // greedy shrink
+                let mut best = input.clone();
+                let mut best_msg = msg;
+                let mut steps = 0;
+                'outer: while steps < cfg.max_shrink_steps {
+                    for cand in shrink(&best) {
+                        steps += 1;
+                        if let Outcome::Fail(m) = prop(&cand) {
+                            best = cand;
+                            best_msg = m;
+                            continue 'outer;
+                        }
+                        if steps >= cfg.max_shrink_steps {
+                            break;
+                        }
+                    }
+                    break;
+                }
+                panic!(
+                    "property failed (seed={}, case {}):\n  input: {:?}\n  reason: {}",
+                    cfg.seed, executed, best, best_msg
+                );
+            }
+        }
+    }
+}
+
+/// Convenience wrapper: boolean property, no shrinking.
+pub fn check<T: std::fmt::Debug + Clone + 'static>(
+    cfg: &Config,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_with(cfg, gen, |_| Vec::new(), |t| {
+        if prop(t) {
+            Outcome::Pass
+        } else {
+            Outcome::Fail("property returned false".into())
+        }
+    });
+}
+
+/// Standard shrinker for vectors: drop halves, drop single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 8 {
+        for i in 0..v.len() {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config { cases: 32, ..Default::default() };
+        check(&cfg, &usize_in(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        let cfg = Config { cases: 64, ..Default::default() };
+        check(&cfg, &usize_in(0, 1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_counterexample() {
+        let cfg = Config { cases: 64, ..Default::default() };
+        let r = std::panic::catch_unwind(|| {
+            check_with(
+                &cfg,
+                &vec_of(usize_in(0, 9), 0, 20),
+                |v| shrink_vec(v),
+                |v: &Vec<usize>| {
+                    if v.len() >= 3 {
+                        Outcome::Fail("len >= 3".into())
+                    } else {
+                        Outcome::Pass
+                    }
+                },
+            )
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>().unwrap());
+        // minimal failing vector has exactly length 3
+        assert!(msg.contains("input: ["), "{msg}");
+    }
+
+    #[test]
+    fn discard_does_not_count() {
+        let cfg = Config { cases: 10, ..Default::default() };
+        let mut _count = 0;
+        check_with(&cfg, &usize_in(0, 9), |_| vec![], |&x| {
+            if x % 2 == 0 {
+                Outcome::Discard
+            } else {
+                Outcome::Pass
+            }
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let mut r = Rng::new(1);
+        let g = vec_of(usize_in(5, 5), 2, 4);
+        for _ in 0..100 {
+            let v = g.sample(&mut r);
+            assert!((2..=4).contains(&v.len()));
+            assert!(v.iter().all(|&x| x == 5));
+        }
+    }
+
+    #[test]
+    fn map_combinator() {
+        let mut r = Rng::new(2);
+        let g = usize_in(1, 3).map(|x| x * 10);
+        for _ in 0..50 {
+            let v = g.sample(&mut r);
+            assert!([10, 20, 30].contains(&v));
+        }
+    }
+}

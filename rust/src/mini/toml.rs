@@ -1,0 +1,292 @@
+//! TOML-subset parser for experiment configuration files (no serde/toml in
+//! the vendor set).
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` with
+//! string ("..."), integer, float, boolean, and flat arrays of those;
+//! `#` comments; blank lines. Keys are addressed as `section.sub.key`.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: flattened dotted-key → value map.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, TomlError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(v.trim()).map_err(|m| err(&m))?;
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                doc.map.insert(full, value);
+            } else {
+                return Err(err("expected `key = value` or `[section]`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Doc, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Doc::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
+        self.get(key)?.as_array().map(|a| a.iter().filter_map(Value::as_f64).collect())
+    }
+
+    /// All keys under a dotted prefix (e.g. every `trainer.*` key).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let pfx = format!("{prefix}.");
+        self.map.keys().filter(move |k| k.starts_with(&pfx)).map(|k| k.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Remove a `#` comment, respecting `"` quoting.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("unescaped quote in string".into());
+        }
+        return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split on commas not inside quotes (arrays are flat: no nesting needed).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let d = Doc::parse(
+            r#"
+            top = 1
+            [sim]
+            seed = 42        # comment
+            t_fwd = 120.5
+            name = "hpo run"
+            fast = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(d.i64_or("top", 0), 1);
+        assert_eq!(d.i64_or("sim.seed", 0), 42);
+        assert!((d.f64_or("sim.t_fwd", 0.0) - 120.5).abs() < 1e-12);
+        assert_eq!(d.str_or("sim.name", ""), "hpo run");
+        assert!(d.bool_or("sim.fast", false));
+    }
+
+    #[test]
+    fn arrays_parse() {
+        let d = Doc::parse("xs = [1, 2.5, 3]\nnames = [\"a\", \"b,c\"]").unwrap();
+        assert_eq!(d.f64_list("xs").unwrap(), vec![1.0, 2.5, 3.0]);
+        let names = d.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str().unwrap(), "b,c");
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let d = Doc::parse("x = 3").unwrap();
+        assert_eq!(d.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Doc::parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let d = Doc::parse(r##"s = "a # b""##).unwrap();
+        assert_eq!(d.str_or("s", ""), "a # b");
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let d = Doc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = d.keys_under("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(Doc::parse("x = ").is_err());
+        assert!(Doc::parse("x = \"unterminated").is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+        assert!(Doc::parse("x = nope").is_err());
+    }
+}

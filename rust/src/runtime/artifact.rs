@@ -1,0 +1,212 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Describes, per model variant, the ordered parameter
+//! layout and the HLO files for the `grad` and `apply` computations.
+
+use super::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor's spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    /// Per-node microbatch size.
+    pub batch: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub grad_hlo: PathBuf,
+    pub apply_hlo: PathBuf,
+    /// Initial parameters: concatenated little-endian f32 in spec order.
+    pub init_bin: PathBuf,
+    /// Token input shape: [batch, seq + 1].
+    pub token_shape: Vec<usize>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let fingerprint = doc
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        let mut variants = Vec::new();
+        let vmap = doc
+            .get("variants")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing `variants`"))?;
+        for (name, v) in vmap {
+            let get_usize = |k: &str| -> Result<usize> {
+                v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("{name}: missing {k}"))
+            };
+            let params = v
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing params"))?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let file = |k: &str| -> Result<PathBuf> {
+                Ok(dir.join(
+                    v.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: missing {k}"))?,
+                ))
+            };
+            let variant = Variant {
+                name: name.clone(),
+                vocab: get_usize("vocab")?,
+                d_model: get_usize("d_model")?,
+                n_layers: get_usize("n_layers")?,
+                seq: get_usize("seq")?,
+                batch: get_usize("batch")?,
+                n_params: get_usize("n_params")?,
+                params,
+                grad_hlo: file("grad_hlo")?,
+                apply_hlo: file("apply_hlo")?,
+                init_bin: file("init_bin")?,
+                token_shape: v
+                    .get("token_shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing token_shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+            };
+            // consistency checks
+            let total: usize = variant.params.iter().map(ParamSpec::numel).sum();
+            if total != variant.n_params {
+                bail!("{name}: param shapes sum to {total}, manifest says {}", variant.n_params);
+            }
+            if variant.token_shape != vec![variant.batch, variant.seq + 1] {
+                bail!("{name}: token_shape {:?} inconsistent", variant.token_shape);
+            }
+            variants.push(variant);
+        }
+        Ok(Manifest { fingerprint, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow!("variant {name} not in manifest ({:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.variants.iter().map(|v| v.name.as_str()).collect()
+    }
+}
+
+/// Default artifacts directory: $BFT_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("BFT_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const GOOD: &str = r#"{
+      "fingerprint": "abc",
+      "variants": {
+        "t": {
+          "name": "t", "vocab": 16, "d_model": 4, "n_layers": 1, "n_heads": 1,
+          "seq": 8, "batch": 2, "n_params": 20,
+          "params": [
+            {"name": "a", "shape": [4, 4]},
+            {"name": "b", "shape": [4]}
+          ],
+          "grad_hlo": "t_grad.hlo.txt", "apply_hlo": "t_apply.hlo.txt",
+          "init_bin": "t_init.bin",
+          "token_shape": [2, 9]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn loads_and_validates() {
+        let dir = std::env::temp_dir().join("bft_manifest_ok");
+        write_manifest(&dir, GOOD);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.fingerprint, "abc");
+        let v = m.variant("t").unwrap();
+        assert_eq!(v.params.len(), 2);
+        assert_eq!(v.params[0].numel(), 16);
+        assert!(v.grad_hlo.ends_with("t_grad.hlo.txt"));
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let dir = std::env::temp_dir().join("bft_manifest_bad");
+        write_manifest(&dir, &GOOD.replace("\"n_params\": 20", "\"n_params\": 99"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_context_error() {
+        let dir = std::env::temp_dir().join("bft_manifest_absent");
+        let _ = std::fs::remove_dir_all(&dir);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.variant("tiny").is_ok());
+            let v = m.variant("tiny").unwrap();
+            assert!(v.grad_hlo.exists());
+            assert!(v.apply_hlo.exists());
+        }
+    }
+}

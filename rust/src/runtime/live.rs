@@ -1,0 +1,175 @@
+//! Live mode: the coordinator drives *real* AOT-compiled Trainers while
+//! replaying an idle-node trace in virtual time.
+//!
+//! Each simulated node contributes one data-parallel rank; one training
+//! step takes `virtual_step_s` of trace time. Between pool events every
+//! running Trainer executes `dt / virtual_step_s` genuine grad+apply
+//! steps at its current scale via [`super::TrainerExec`] — so the loss
+//! curves produced here come from real gradients flowing through the
+//! Pallas kernels, while the MILP rescales the jobs exactly as in the
+//! pure simulation.
+
+use super::artifact::Variant;
+use super::executor::{Engine, TrainerExec};
+use crate::coordinator::{Coordinator, TrainerSpec};
+use crate::scaling::ScalingCurve;
+use crate::trace::Trace;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Options for a live run.
+#[derive(Clone, Debug)]
+pub struct LiveOpts {
+    /// Trace seconds one training step represents.
+    pub virtual_step_s: f64,
+    /// Hard cap on total real steps across all trainers (budget guard).
+    pub max_total_steps: u64,
+    /// Learning rate for every trainer.
+    pub lr: f32,
+    /// Print a progress line every N events (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for LiveOpts {
+    fn default() -> Self {
+        LiveOpts { virtual_step_s: 10.0, max_total_steps: 400, lr: 0.05, log_every: 0 }
+    }
+}
+
+/// Result of a live run.
+pub struct LiveResult {
+    /// (trace time, trainer id, n_nodes, loss) per executed step.
+    pub loss_curve: Vec<(f64, usize, u32, f32)>,
+    pub total_steps: u64,
+    pub total_samples: f64,
+    pub coordinator: Coordinator,
+}
+
+/// Ideal weak-scaling throughput curve for a live trainer: samples/s at
+/// n ranks = n · batch / virtual_step_s (the allocator's O_j(n)).
+pub fn live_curve(variant: &Variant, n_max: u32, virtual_step_s: f64) -> ScalingCurve {
+    let pts: Vec<(u32, f64)> = [1u32, 2, 4, 8, 16, 32, 64]
+        .iter()
+        .filter(|&&n| n <= n_max)
+        .map(|&n| (n, n as f64 * variant.batch as f64 / virtual_step_s))
+        .collect();
+    ScalingCurve::new(if pts.is_empty() { vec![(1, 1.0)] } else { pts })
+}
+
+/// Spec for a live trainer (total work expressed in samples).
+pub fn live_spec(variant: &Variant, name: &str, n_max: u32, total_steps_at_1: u64, opts: &LiveOpts) -> TrainerSpec {
+    TrainerSpec {
+        name: name.to_string(),
+        n_min: 1,
+        n_max,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: live_curve(variant, n_max, opts.virtual_step_s),
+        total_samples: total_steps_at_1 as f64 * variant.batch as f64,
+    }
+}
+
+/// Run `coord` (already loaded with submitted trainers whose ids map to
+/// `variants`) against `trace`, executing real steps.
+pub fn run(
+    mut coord: Coordinator,
+    trace: &Trace,
+    engine: &Engine,
+    variants: &BTreeMap<usize, Variant>,
+    opts: &LiveOpts,
+) -> Result<LiveResult> {
+    let mut execs: BTreeMap<usize, TrainerExec> = BTreeMap::new();
+    for (&id, v) in variants {
+        execs.insert(id, TrainerExec::new(engine, v, opts.lr, 1000 + id as u64)?);
+    }
+    let mut loss_curve = Vec::new();
+    let mut total_steps = 0u64;
+
+    let events = &trace.events;
+    for (k, ev) in events.iter().enumerate() {
+        coord.handle_event(ev.t, ev);
+        let dt = events.get(k + 1).map(|n| n.t - ev.t).unwrap_or(0.0);
+        let n_steps = (dt / opts.virtual_step_s).floor() as u64;
+        // run each admitted trainer for n_steps at its current scale
+        for step in 0..n_steps {
+            if total_steps >= opts.max_total_steps {
+                break;
+            }
+            let t_now = ev.t + step as f64 * opts.virtual_step_s;
+            let ids: Vec<usize> = coord.admitted.clone();
+            for id in ids {
+                let n = coord.scale_of(id);
+                if n == 0 {
+                    continue;
+                }
+                let exec = execs.get_mut(&id).expect("exec for admitted trainer");
+                let loss = exec.step(n)?;
+                loss_curve.push((t_now, id, n, loss));
+                total_steps += 1;
+                // progress accounting in the coordinator's sample units
+                coord.trainers[id].progress += (n as usize * exec.variant.batch) as f64;
+            }
+            let done = coord.complete_finished(t_now);
+            if !done.is_empty() {
+                coord.reallocate(t_now, 0);
+            }
+        }
+        if opts.log_every > 0 && k % opts.log_every == 0 {
+            let losses: Vec<String> = execs
+                .iter()
+                .map(|(id, e)| format!("T{id}@{}: {:.3}", coord.scale_of(*id), e.last_loss))
+                .collect();
+            eprintln!("[live] t={:>8.0}s pool={:>3} {}", ev.t, coord.pool.len(), losses.join("  "));
+        }
+        if total_steps >= opts.max_total_steps {
+            break;
+        }
+    }
+    let total_samples = execs.values().map(|e| e.samples_processed).sum();
+    Ok(LiveResult { loss_curve, total_steps, total_samples, coordinator: coord })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{DpAllocator, Objective, Policy};
+    use crate::runtime::artifact::{default_dir, Manifest};
+    use crate::trace::PoolEvent;
+
+    #[test]
+    fn live_run_trains_with_rescaling() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let v = man.variant("tiny").unwrap().clone();
+        let engine = Engine::cpu().unwrap();
+
+        let opts = LiveOpts { virtual_step_s: 10.0, max_total_steps: 30, lr: 0.1, log_every: 0 };
+        let mut coord =
+            Coordinator::new(Policy::Dp(DpAllocator), Objective::Throughput, 120.0, 4);
+        let spec = live_spec(&v, "live-tiny", 4, 10_000, &opts);
+        let id = coord.submit(spec, 0.0);
+
+        let mut trace = Trace::new(8);
+        trace.push(PoolEvent { t: 0.0, joins: vec![0, 1], leaves: vec![] });
+        trace.push(PoolEvent { t: 100.0, joins: vec![2, 3], leaves: vec![] });
+        trace.push(PoolEvent { t: 200.0, joins: vec![], leaves: vec![0] });
+        trace.push(PoolEvent { t: 300.0, joins: vec![], leaves: vec![] });
+
+        let vars: BTreeMap<usize, Variant> = [(id, v)].into_iter().collect();
+        let res = run(coord, &trace, &engine, &vars, &opts).unwrap();
+        assert!(res.total_steps > 10, "only {} steps", res.total_steps);
+        assert!(res.loss_curve.iter().all(|&(_, _, _, l)| l.is_finite()));
+        // the trace rescales 2 -> 4 -> 3: distinct scales must appear
+        let scales: std::collections::BTreeSet<u32> =
+            res.loss_curve.iter().map(|&(_, _, n, _)| n).collect();
+        assert!(scales.len() >= 2, "no rescaling observed: {scales:?}");
+        // loss trending down
+        let first = res.loss_curve.first().unwrap().3;
+        let last = res.loss_curve.last().unwrap().3;
+        assert!(last < first, "loss {first} -> {last}");
+    }
+}

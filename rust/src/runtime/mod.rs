@@ -1,0 +1,15 @@
+//! PJRT runtime bridge: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compile on the CPU PJRT client, and run real
+//! elastic data-parallel training steps from the L3 hot path. Python is
+//! never on this path.
+
+pub mod artifact;
+pub mod data;
+pub mod executor;
+pub mod json;
+pub mod live;
+
+pub use artifact::{default_dir, Manifest, ParamSpec, Variant};
+pub use data::DataGen;
+pub use executor::{Engine, TrainerExec};
+pub use live::{live_spec, LiveOpts, LiveResult};

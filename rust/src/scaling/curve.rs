@@ -1,0 +1,250 @@
+//! Scalability curves `O_j(n)` — the per-Trainer objective-metric function
+//! of paper §3.4.1.
+//!
+//! A [`ScalingCurve`] holds measured (nodes, throughput) sample points and
+//! provides the piecewise-linear interpolation the MILP's SOS2 sets encode
+//! (Fig 4), plus scaling efficiency (the normalized metric of §5.2) and an
+//! Amdahl-law fit used to extrapolate between/beyond measured points.
+
+/// A throughput scalability curve: ordered (nodes, samples/s) points.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalingCurve {
+    /// Strictly increasing node counts; points[0].0 is the minimum scale.
+    points: Vec<(u32, f64)>,
+}
+
+impl ScalingCurve {
+    /// Build from sample points (sorted + validated).
+    pub fn new(mut points: Vec<(u32, f64)>) -> Self {
+        assert!(!points.is_empty(), "curve needs at least one point");
+        points.sort_by_key(|&(n, _)| n);
+        for w in points.windows(2) {
+            assert!(w[0].0 < w[1].0, "duplicate node count {}", w[0].0);
+        }
+        for &(n, t) in &points {
+            assert!(n > 0 && t >= 0.0, "invalid point ({n}, {t})");
+        }
+        ScalingCurve { points }
+    }
+
+    pub fn points(&self) -> &[(u32, f64)] {
+        &self.points
+    }
+
+    pub fn min_nodes(&self) -> u32 {
+        self.points[0].0
+    }
+
+    pub fn max_nodes(&self) -> u32 {
+        self.points[self.points.len() - 1].0
+    }
+
+    /// Throughput at `n` nodes by piecewise-linear interpolation — exactly
+    /// the value the SOS2 encoding (Eqn 11–12) reproduces inside the MILP.
+    /// `n = 0` means the Trainer is waiting: throughput 0.
+    /// Beyond the last point the curve is extended with the Amdahl fit
+    /// (clamped to be monotone non-decreasing at the boundary).
+    pub fn throughput(&self, n: u32) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let pts = &self.points;
+        if n <= pts[0].0 {
+            // Below the first measured point: scale linearly from origin
+            // (data parallel throughput ~ nodes at small scale).
+            return pts[0].1 * n as f64 / pts[0].0 as f64;
+        }
+        for w in pts.windows(2) {
+            let (n0, t0) = w[0];
+            let (n1, t1) = w[1];
+            if n <= n1 {
+                let f = (n - n0) as f64 / (n1 - n0) as f64;
+                return t0 + f * (t1 - t0);
+            }
+        }
+        // Extrapolate with the Amdahl fit, never below the last point.
+        let (_, last_t) = pts[pts.len() - 1];
+        self.amdahl_throughput(n).max(last_t)
+    }
+
+    /// Scaling efficiency at `n` nodes: throughput(n) / (n * throughput(1)).
+    /// throughput(1) is interpolated if 1 is not a sample point.
+    pub fn efficiency(&self, n: u32) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let t1 = self.throughput(1);
+        if t1 <= 0.0 {
+            return 0.0;
+        }
+        self.throughput(n) / (n as f64 * t1)
+    }
+
+    /// Fit Amdahl's law `T(n) = T1 * n / (1 + sigma*(n-1))` by least squares
+    /// on 1/T(n) (linear in n), returning the serial fraction sigma.
+    pub fn amdahl_sigma(&self) -> f64 {
+        // 1/T(n) = (1-sigma)/(T1*n) + sigma/T1 — fit y = a/n + b with
+        // y = 1/T: then sigma = b/(a+b).
+        let pts: Vec<(f64, f64)> = self
+            .points
+            .iter()
+            .filter(|&&(_, t)| t > 0.0)
+            .map(|&(n, t)| (1.0 / n as f64, 1.0 / t))
+            .collect();
+        if pts.len() < 2 {
+            return 0.0;
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (b, a) = crate::util::stats::linear_fit(&xs, &ys); // y = b + a*x
+        let denom = a + b;
+        if denom.abs() < 1e-15 {
+            0.0
+        } else {
+            (b / denom).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Amdahl-model throughput (used for extrapolation beyond samples).
+    pub fn amdahl_throughput(&self, n: u32) -> f64 {
+        let sigma = self.amdahl_sigma();
+        let t1 = self.throughput(1);
+        let n = n as f64;
+        t1 * n / (1.0 + sigma * (n - 1.0))
+    }
+
+    /// Discretization for the MILP SOS2 encoding: the sample points whose
+    /// node counts fall in [n_min, n_max], with interpolated endpoints
+    /// inserted so the breakpoints exactly span the allowed range.
+    pub fn discretize(&self, n_min: u32, n_max: u32) -> Vec<(u32, f64)> {
+        assert!(n_min >= 1 && n_min <= n_max);
+        let mut out: Vec<(u32, f64)> = Vec::new();
+        if self.points.iter().all(|&(n, _)| n != n_min) {
+            out.push((n_min, self.throughput(n_min)));
+        }
+        for &(n, t) in &self.points {
+            if n >= n_min && n <= n_max {
+                out.push((n, t));
+            }
+        }
+        if self.points.iter().all(|&(n, _)| n != n_max) {
+            out.push((n_max, self.throughput(n_max)));
+        }
+        out.sort_by_key(|&(n, _)| n);
+        out.dedup_by_key(|p| p.0);
+        out
+    }
+
+    /// Uniform rescale of throughput (used to derive per-trial HPO curves).
+    pub fn scaled(&self, factor: f64) -> ScalingCurve {
+        ScalingCurve {
+            points: self.points.iter().map(|&(n, t)| (n, t * factor)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_curve() -> ScalingCurve {
+        ScalingCurve::new(vec![(1, 10.0), (2, 20.0), (4, 40.0), (8, 80.0)])
+    }
+
+    fn sublinear_curve() -> ScalingCurve {
+        // efficiency decays with scale
+        ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)])
+    }
+
+    #[test]
+    fn interpolation_hits_sample_points() {
+        let c = sublinear_curve();
+        assert!((c.throughput(1) - 10.0).abs() < 1e-12);
+        assert!((c.throughput(4) - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interpolation_between_points() {
+        let c = sublinear_curve();
+        // between 2 (18) and 4 (30): at 3 -> 24
+        assert!((c.throughput(3) - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_nodes_zero_throughput() {
+        assert_eq!(sublinear_curve().throughput(0), 0.0);
+    }
+
+    #[test]
+    fn below_min_scales_linearly() {
+        let c = ScalingCurve::new(vec![(4, 40.0), (8, 70.0)]);
+        assert!((c.throughput(2) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_of_linear_curve_is_one() {
+        let c = linear_curve();
+        for n in 1..=8 {
+            assert!((c.efficiency(n) - 1.0).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn efficiency_decays_for_sublinear() {
+        let c = sublinear_curve();
+        assert!(c.efficiency(8) < c.efficiency(2));
+        assert!(c.efficiency(8) > 0.0);
+    }
+
+    #[test]
+    fn amdahl_fit_recovers_sigma() {
+        // Generate an exact Amdahl curve with sigma = 0.05, T1 = 100.
+        let sigma = 0.05;
+        let pts: Vec<(u32, f64)> = [1u32, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&n| (n, 100.0 * n as f64 / (1.0 + sigma * (n as f64 - 1.0))))
+            .collect();
+        let c = ScalingCurve::new(pts);
+        assert!((c.amdahl_sigma() - sigma).abs() < 1e-6, "{}", c.amdahl_sigma());
+    }
+
+    #[test]
+    fn extrapolation_monotone() {
+        let c = sublinear_curve();
+        let t8 = c.throughput(8);
+        let t16 = c.throughput(16);
+        assert!(t16 >= t8, "extrapolation must not drop below last point");
+    }
+
+    #[test]
+    fn discretize_spans_range() {
+        let c = sublinear_curve();
+        let d = c.discretize(2, 6);
+        assert_eq!(d.first().unwrap().0, 2);
+        assert_eq!(d.last().unwrap().0, 6);
+        // interior measured point 4 kept
+        assert!(d.iter().any(|&(n, _)| n == 4));
+        // endpoint at 6 is the interpolated value
+        let (_, t6) = *d.last().unwrap();
+        assert!((t6 - c.throughput(6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn discretize_exact_bounds_no_dup() {
+        let c = sublinear_curve();
+        let d = c.discretize(1, 8);
+        assert_eq!(d.len(), 4); // no duplicated endpoints
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_duplicate_nodes() {
+        ScalingCurve::new(vec![(2, 1.0), (2, 2.0)]);
+    }
+
+    #[test]
+    fn scaled_multiplies_throughput() {
+        let c = sublinear_curve().scaled(2.0);
+        assert!((c.throughput(1) - 20.0).abs() < 1e-12);
+    }
+}

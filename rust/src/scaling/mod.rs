@@ -1,0 +1,8 @@
+//! Trainer scalability curves `O_j(n)` (paper §3.4.1, Fig 4) and the
+//! paper's measured DNN zoo (Tab 2).
+
+pub mod curve;
+pub mod zoo;
+
+pub use curve::ScalingCurve;
+pub use zoo::{curve as dnn_curve, Dnn};

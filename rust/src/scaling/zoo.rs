@@ -1,0 +1,166 @@
+//! The paper's DNN model zoo (Tab 2): weak-scaling throughput of seven
+//! ImageNet models on Summit (samples/second ×1000, minibatch 32/GPU),
+//! measured by the authors with Horovod + PyTorch.
+//!
+//! These published curves are the `O_j(n)` inputs for every experiment in
+//! §5; shipping them verbatim reproduces the paper's trade-offs exactly
+//! (the MILP only ever consumes the sample points). Curves measured on
+//! this repo's own PJRT runtime can be produced with
+//! `bftrainer scaling-table --measure`.
+
+use super::curve::ScalingCurve;
+
+/// Identifier for the seven paper DNNs, ordered as in Tab 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dnn {
+    AlexNet,
+    ResNet18,
+    MnasNet,
+    MobileNets,
+    ShuffleNet,
+    Vgg16,
+    DenseNet,
+}
+
+impl Dnn {
+    pub const ALL: [Dnn; 7] = [
+        Dnn::AlexNet,
+        Dnn::ResNet18,
+        Dnn::MnasNet,
+        Dnn::MobileNets,
+        Dnn::ShuffleNet,
+        Dnn::Vgg16,
+        Dnn::DenseNet,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dnn::AlexNet => "AlexNet",
+            Dnn::ResNet18 => "ResNet18",
+            Dnn::MnasNet => "MnasNet",
+            Dnn::MobileNets => "MobileNets",
+            Dnn::ShuffleNet => "ShuffleNet",
+            Dnn::Vgg16 => "VGG-16",
+            Dnn::DenseNet => "DenseNet",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Dnn> {
+        Dnn::ALL.iter().copied().find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Node counts of Tab 2's columns.
+pub const TAB2_NODES: [u32; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Tab 2 rows: samples/second ×1000 at the node counts above.
+const TAB2_KSPS: [(Dnn, [f64; 7]); 7] = [
+    (Dnn::AlexNet, [7.1, 13.1, 21.1, 40.5, 74.0, 130.8, 202.1]),
+    (Dnn::ResNet18, [5.2, 10.6, 20.4, 39.6, 78.0, 144.8, 262.7]),
+    (Dnn::MnasNet, [3.2, 6.0, 11.5, 23.1, 43.9, 83.5, 160.5]),
+    (Dnn::MobileNets, [3.0, 5.9, 11.4, 22.0, 42.5, 82.3, 155.2]),
+    (Dnn::ShuffleNet, [2.8, 5.3, 10.0, 20.4, 38.9, 74.1, 145.1]),
+    (Dnn::Vgg16, [1.2, 2.4, 4.7, 9.3, 18.3, 36.2, 70.2]),
+    (Dnn::DenseNet, [1.0, 2.0, 3.8, 7.6, 15.0, 28.8, 57.8]),
+];
+
+/// Throughput curve for a paper DNN, in samples/second (not ×1000).
+pub fn curve(dnn: Dnn) -> ScalingCurve {
+    let row = TAB2_KSPS.iter().find(|(d, _)| *d == dnn).unwrap();
+    ScalingCurve::new(
+        TAB2_NODES.iter().zip(row.1.iter()).map(|(&n, &k)| (n, k * 1000.0)).collect(),
+    )
+}
+
+/// Samples processed in 100 epochs of ImageNet (paper §4.2: 130 M samples;
+/// ImageNet-1k train split is 1.281 M images).
+pub const IMAGENET_100_EPOCH_SAMPLES: f64 = 130.0e6;
+
+/// Samples per epoch of ImageNet-1k.
+pub const IMAGENET_EPOCH_SAMPLES: f64 = 1.30e6;
+
+/// Scaling efficiency at 64 nodes — the paper orders Fig 15's x-axis by
+/// this ("DNN scaling efficiency increases from left to right").
+pub fn efficiency_at_64(dnn: Dnn) -> f64 {
+    curve(dnn).efficiency(64)
+}
+
+/// All DNNs ordered by ascending 64-node scaling efficiency (Fig 15 order).
+pub fn by_scaling_efficiency() -> Vec<Dnn> {
+    let mut v = Dnn::ALL.to_vec();
+    v.sort_by(|a, b| efficiency_at_64(*a).partial_cmp(&efficiency_at_64(*b)).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_curves_build_and_are_positive() {
+        for d in Dnn::ALL {
+            let c = curve(d);
+            assert_eq!(c.min_nodes(), 1);
+            assert_eq!(c.max_nodes(), 64);
+            for n in [1u32, 3, 7, 33, 64] {
+                assert!(c.throughput(n) > 0.0, "{d:?} at {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn tab2_values_match_paper_rows() {
+        // Spot-check the table against the paper.
+        assert!((curve(Dnn::AlexNet).throughput(1) - 7_100.0).abs() < 1e-6);
+        assert!((curve(Dnn::DenseNet).throughput(64) - 57_800.0).abs() < 1e-6);
+        assert!((curve(Dnn::ShuffleNet).throughput(8) - 20_400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alexnet_least_scalable_vgg_most() {
+        // Paper §5.3: "AlexNet has the worst scaling efficiency and VGG-16
+        // is the best according to Tab 2."
+        let effs: Vec<(Dnn, f64)> =
+            Dnn::ALL.iter().map(|&d| (d, efficiency_at_64(d))).collect();
+        let min = effs.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        let max = effs.iter().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        assert_eq!(min.0, Dnn::AlexNet, "{effs:?}");
+        assert_eq!(max.0, Dnn::Vgg16, "{effs:?}");
+    }
+
+    #[test]
+    fn throughput_order_alexnet_top_densenet_bottom() {
+        // Paper §5.3: AlexNet and DenseNet have the highest and lowest
+        // throughputs respectively.
+        for n in TAB2_NODES {
+            let a = curve(Dnn::AlexNet).throughput(n);
+            let d = curve(Dnn::DenseNet).throughput(n);
+            assert!(a > d);
+        }
+    }
+
+    #[test]
+    fn alexnet_vs_densenet_roughly_7x() {
+        // Paper §5.2: "the difference between Alexnet and DenseNet on
+        // throughput is only about 7x".
+        let r = curve(Dnn::AlexNet).throughput(1) / curve(Dnn::DenseNet).throughput(1);
+        assert!((6.0..8.0).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn name_round_trip() {
+        for d in Dnn::ALL {
+            assert_eq!(Dnn::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Dnn::from_name("vgg-16"), Some(Dnn::Vgg16));
+        assert_eq!(Dnn::from_name("nope"), None);
+    }
+
+    #[test]
+    fn fig15_order_is_scaling_order() {
+        let order = by_scaling_efficiency();
+        assert_eq!(order.first(), Some(&Dnn::AlexNet));
+        assert_eq!(order.last(), Some(&Dnn::Vgg16));
+        assert_eq!(order.len(), 7);
+    }
+}

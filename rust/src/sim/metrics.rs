@@ -1,0 +1,124 @@
+//! Evaluation metrics (paper §4.1).
+//!
+//! * **Resource integral** `R = Σ_k N_k · Δt_k` (Eqn 17) — node-hours the
+//!   pool actually offered.
+//! * **eq-nodes** `N_eq = R / t` (Eqn 18) — equivalent static machine.
+//! * **Utilization efficiency** `U = A_e / A_s` — outcome with BFTrainer
+//!   over outcome on the eq-nodes static machine with no costs.
+//! * **ROI** — per-event return (samples between events) over investment
+//!   (rescale cost paid at the event) — Fig 8.
+
+use crate::coordinator::EventRecord;
+
+/// Resource integral in node-hours over (t, |N|) samples (Eqn 17).
+pub fn resource_integral_node_hours(pool_sizes: &[(f64, usize)]) -> f64 {
+    let mut acc = 0.0;
+    for w in pool_sizes.windows(2) {
+        acc += w[0].1 as f64 * (w[1].0 - w[0].0);
+    }
+    acc / 3600.0
+}
+
+/// Equivalent static node count (Eqn 18).
+pub fn eq_nodes(pool_sizes: &[(f64, usize)], duration_s: f64) -> f64 {
+    if duration_s <= 0.0 {
+        return 0.0;
+    }
+    resource_integral_node_hours(pool_sizes) * 3600.0 / duration_s
+}
+
+/// Aggregate outcome and cost accounting of one replay.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayMetrics {
+    /// Total samples processed by all trainers (A_e).
+    pub samples_processed: f64,
+    /// Resource integral offered by the pool (node-hours).
+    pub resource_node_hours: f64,
+    /// Equivalent static nodes over the replay window.
+    pub eq_nodes: f64,
+    /// Replay window (seconds).
+    pub duration_s: f64,
+    /// Total rescale cost paid, in samples (Eqn 16 cost term).
+    pub rescale_cost_samples: f64,
+    /// Total preemption events (forced downscales).
+    pub preemptions: u64,
+    /// Completed trainers.
+    pub completed: usize,
+    /// Mean/max MILP solve time per event.
+    pub mean_solve_s: f64,
+    pub max_solve_s: f64,
+    /// Fallbacks taken (§3.6).
+    pub fallbacks: usize,
+    /// Number of allocation events processed.
+    pub n_events: usize,
+}
+
+/// Per-window efficiency series (Fig 10): (window start, U).
+#[derive(Clone, Debug, Default)]
+pub struct WindowedSeries {
+    pub window_s: f64,
+    pub values: Vec<(f64, f64)>,
+}
+
+/// Return-on-investment analysis per event (Fig 8).
+#[derive(Clone, Debug, Default)]
+pub struct RoiStats {
+    /// Mean samples invested in rescaling per event.
+    pub mean_investment: f64,
+    /// Mean samples returned between consecutive events.
+    pub mean_return: f64,
+    /// Aggregate ROI = Σreturn / Σinvestment.
+    pub roi: f64,
+}
+
+/// Compute ROI from the coordinator event log plus per-interval outcomes
+/// (samples processed in [e_i, e_{i+1})).
+pub fn roi(events: &[EventRecord], interval_samples: &[f64]) -> RoiStats {
+    assert!(interval_samples.len() + 1 >= events.len().max(1));
+    let inv: f64 = events.iter().map(|e| e.rescale_cost_samples).sum();
+    let ret: f64 = interval_samples.iter().sum();
+    let n = events.len().max(1) as f64;
+    RoiStats {
+        mean_investment: inv / n,
+        mean_return: ret / interval_samples.len().max(1) as f64,
+        roi: if inv > 0.0 { ret / inv } else { f64::INFINITY },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_integral_weights_intervals() {
+        // 10 nodes for 1800 s then 20 nodes for 1800 s = 15 node-hours
+        let ps = vec![(0.0, 10), (1800.0, 20), (3600.0, 0)];
+        assert!((resource_integral_node_hours(&ps) - 15.0).abs() < 1e-9);
+        assert!((eq_nodes(&ps, 3600.0) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        assert_eq!(resource_integral_node_hours(&[]), 0.0);
+        assert_eq!(eq_nodes(&[], 0.0), 0.0);
+    }
+
+    #[test]
+    fn roi_aggregates() {
+        let events = vec![
+            EventRecord { rescale_cost_samples: 100.0, ..Default::default() },
+            EventRecord { rescale_cost_samples: 300.0, ..Default::default() },
+        ];
+        let r = roi(&events, &[1000.0, 3000.0]);
+        assert!((r.roi - 10.0).abs() < 1e-9);
+        assert!((r.mean_investment - 200.0).abs() < 1e-9);
+        assert!((r.mean_return - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roi_with_zero_investment_is_infinite() {
+        let events = vec![EventRecord::default()];
+        let r = roi(&events, &[50.0]);
+        assert!(r.roi.is_infinite());
+    }
+}

@@ -1,0 +1,40 @@
+//! Discrete-event replay of idle-node traces against the coordinator,
+//! plus the §4.1 evaluation metrics.
+
+pub mod metrics;
+pub mod replay;
+
+pub use metrics::{eq_nodes, resource_integral_node_hours, ReplayMetrics, RoiStats};
+pub use replay::{preemption_within_tfwd, replay, static_baseline_outcome, ReplayOpts, ReplayResult, Workload};
+
+use crate::coordinator::{Coordinator, Objective, Policy};
+use crate::trace::Trace;
+
+/// Convenience wrapper used by the benches: replay `wl` on `trace` with a
+/// fresh coordinator, then compute the §4.1.2 baseline `A_s` on the
+/// equivalent static machine and return (result, U).
+pub fn run_with_baseline(
+    policy: &str,
+    objective: Objective,
+    t_fwd: f64,
+    pj_max: usize,
+    rescale_multiplier: f64,
+    trace: &Trace,
+    wl: &Workload,
+    opts: &ReplayOpts,
+) -> (ReplayResult, f64) {
+    let mut coord =
+        Coordinator::new(Policy::by_name(policy).expect("policy"), objective.clone(), t_fwd, pj_max);
+    coord.rescale_cost_multiplier = rescale_multiplier;
+    let res = replay(coord, trace, wl, opts);
+    let baseline_coord =
+        Coordinator::new(Policy::by_name(policy).expect("policy"), objective, t_fwd, pj_max);
+    let a_s = static_baseline_outcome(
+        baseline_coord,
+        res.metrics.eq_nodes.round().max(1.0) as u32,
+        res.metrics.duration_s,
+        wl,
+    );
+    let u = if a_s > 0.0 { res.metrics.samples_processed / a_s } else { 0.0 };
+    (res, u)
+}

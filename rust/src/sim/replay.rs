@@ -1,0 +1,383 @@
+//! Discrete-event replay: drive a [`Coordinator`] with an idle-node trace
+//! and a Trainer workload, with exact completion handling and the full
+//! §4.1 metrics.
+//!
+//! Between consecutive pool events the admitted Trainers run at their
+//! assigned scales; completions inside an interval trigger an immediate
+//! reallocation at the completion instant (paper §3: the MILP runs when a
+//! Trainer completes). The replay also computes the §4.1.2 baseline
+//! `A_s` — the same workload on the equivalent static machine — to report
+//! utilization efficiency `U = A_e / A_s`.
+
+use super::metrics::{self, ReplayMetrics, RoiStats, WindowedSeries};
+use crate::coordinator::{Coordinator, TrainerSpec};
+use crate::trace::{PoolEvent, Trace};
+
+/// A submission stream: (time, spec) sorted by time.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    pub submissions: Vec<(f64, TrainerSpec)>,
+}
+
+impl Workload {
+    pub fn all_at_zero(specs: Vec<TrainerSpec>) -> Workload {
+        Workload { submissions: specs.into_iter().map(|s| (0.0, s)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.submissions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.submissions.is_empty()
+    }
+}
+
+/// Full result of a replay.
+pub struct ReplayResult {
+    pub metrics: ReplayMetrics,
+    /// Samples processed between consecutive events (for ROI).
+    pub interval_samples: Vec<f64>,
+    /// U per fixed window (populated when `window_s > 0`).
+    pub windowed_samples: WindowedSeries,
+    /// Final coordinator state (trainer runtimes etc.).
+    pub coordinator: Coordinator,
+    /// Replay horizon actually simulated.
+    pub horizon: f64,
+}
+
+impl ReplayResult {
+    pub fn roi(&self) -> RoiStats {
+        metrics::roi(&self.coordinator.event_log, &self.interval_samples)
+    }
+}
+
+/// Replay options.
+#[derive(Clone, Debug)]
+pub struct ReplayOpts {
+    /// Stop after this many seconds even if trainers remain (0 = trace end).
+    pub horizon_s: f64,
+    /// Window size for the Fig 10 efficiency series (0 = off).
+    pub window_s: f64,
+    /// If the trace runs out before the workload finishes, keep the final
+    /// pool and continue until done (the paper replays ~200 h of logs for
+    /// 168 h of trace for exactly this reason).
+    pub run_to_completion: bool,
+}
+
+impl Default for ReplayOpts {
+    fn default() -> Self {
+        ReplayOpts { horizon_s: 0.0, window_s: 0.0, run_to_completion: false }
+    }
+}
+
+/// Drive `coord` with `trace` + `workload`.
+pub fn replay(
+    mut coord: Coordinator,
+    trace: &Trace,
+    workload: &Workload,
+    opts: &ReplayOpts,
+) -> ReplayResult {
+    let mut subs = workload.submissions.clone();
+    subs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut next_sub = 0usize;
+
+    let mut now = 0.0f64;
+    let mut interval_samples: Vec<f64> = Vec::new();
+    let mut windowed = WindowedSeries { window_s: opts.window_s, values: Vec::new() };
+    let mut window_acc = 0.0f64;
+    let mut window_start = 0.0f64;
+    let mut pool_sizes: Vec<(f64, usize)> = vec![(0.0, 0)];
+
+    let trace_end = trace.events.last().map(|e| e.t).unwrap_or(0.0);
+    let horizon = if opts.horizon_s > 0.0 { opts.horizon_s } else { trace_end };
+
+    // Unified timeline: pool events + submissions, processed in order;
+    // completions subdivide intervals.
+    let mut ev_idx = 0usize;
+    loop {
+        // Next timeline point.
+        let t_event = trace.events.get(ev_idx).map(|e| e.t).filter(|&t| t <= horizon);
+        let t_sub = subs.get(next_sub).map(|s| s.0).filter(|&t| t <= horizon);
+        let t_next = match (t_event, t_sub) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => {
+                if opts.run_to_completion && !coord.all_done() {
+                    f64::INFINITY
+                } else {
+                    break;
+                }
+            }
+        };
+        // Run-to-completion tail: no more events, advance to completions.
+        let seg_end = if t_next.is_infinite() { f64::INFINITY } else { t_next };
+        // Advance [now, seg_end), splitting at completions.
+        let mut samples_this_interval = 0.0;
+        let mut inner = 0u64;
+        while now < seg_end {
+            inner += 1;
+            if inner % 100_000 == 0 && std::env::var("BFT_REPLAY_DEBUG").is_ok() {
+                eprintln!("[inner {inner}] now={now} seg_end={seg_end} admitted={} queue={}", coord.admitted.len(), coord.queue.len());
+            }
+            let dt = seg_end - now;
+            let stop = match coord.finish_time_within(now, dt) {
+                Some(ft) => ft,
+                None => {
+                    if dt.is_infinite() {
+                        // nothing will ever finish: deadlocked workload
+                        break;
+                    }
+                    seg_end
+                }
+            };
+            let step = stop - now;
+            let got = coord.advance(now, step);
+            samples_this_interval += got;
+            window_acc += got;
+            now = stop;
+            // flush full windows
+            while opts.window_s > 0.0 && now - window_start >= opts.window_s {
+                windowed.values.push((window_start, window_acc));
+                window_acc = 0.0;
+                window_start += opts.window_s;
+            }
+            let done = coord.complete_finished(now);
+            if !done.is_empty() {
+                coord.reallocate(now, 0);
+            }
+        }
+        if t_next.is_infinite() && !coord.all_done() {
+            // deadlock guard (e.g. pool empty forever)
+            break;
+        }
+        if !samples_this_interval.is_nan() {
+            interval_samples.push(samples_this_interval);
+        }
+        if now >= horizon && t_event.is_none() && t_sub.is_none() {
+            break;
+        }
+        // Process the event/submission at t_next.
+        if let Some(te) = t_event {
+            if te <= t_next {
+                let ev: &PoolEvent = &trace.events[ev_idx];
+                coord.handle_event(te, ev);
+                pool_sizes.push((te, coord.pool.len()));
+                ev_idx += 1;
+            }
+        }
+        if let Some(ts) = t_sub {
+            if ts <= t_next && t_event.map_or(true, |te| ts <= te) {
+                let (t, spec) = subs[next_sub].clone();
+                let id = coord.submit(spec, t);
+                // reallocate only if the trainer was actually admitted
+                // (queued-beyond-Pj_max submissions change nothing)
+                if coord.admitted.contains(&id) {
+                    coord.reallocate(t, 0);
+                }
+                next_sub += 1;
+            }
+        }
+    }
+    pool_sizes.push((now, coord.pool.len()));
+
+    // final partial window
+    if opts.window_s > 0.0 && window_acc > 0.0 {
+        windowed.values.push((window_start, window_acc));
+    }
+
+    let samples_processed: f64 = coord.trainers.iter().map(|t| t.progress).sum();
+    let rescale_cost_samples: f64 =
+        coord.event_log.iter().map(|e| e.rescale_cost_samples).sum();
+    let preemptions: u64 = coord.trainers.iter().map(|t| t.preemptions).sum();
+    let completed = coord.trainers.iter().filter(|t| t.is_done()).count();
+    let solve_times: Vec<f64> = coord.event_log.iter().map(|e| e.solve_time_s).collect();
+    let metrics = ReplayMetrics {
+        samples_processed,
+        resource_node_hours: metrics::resource_integral_node_hours(&pool_sizes),
+        eq_nodes: metrics::eq_nodes(&pool_sizes, now.max(1e-9)),
+        duration_s: now,
+        rescale_cost_samples,
+        preemptions,
+        completed,
+        mean_solve_s: crate::util::stats::mean(&solve_times),
+        max_solve_s: solve_times.iter().cloned().fold(0.0, f64::max),
+        fallbacks: coord.event_log.iter().filter(|e| e.fell_back).count(),
+        n_events: coord.event_log.len(),
+    };
+    ReplayResult { metrics, interval_samples, windowed_samples: windowed, coordinator: coord, horizon: now }
+}
+
+/// The §4.1.2 baseline `A_s`: run the same workload on `eq_nodes` static
+/// nodes for `duration_s` with zero rescale costs, using the same policy
+/// pieces but a trivial two-event trace. Returns total samples (A_s).
+pub fn static_baseline_outcome(
+    mut coord: Coordinator,
+    eq_nodes: u32,
+    duration_s: f64,
+    workload: &Workload,
+) -> f64 {
+    // zero out costs: dedicated nodes never rescale mid-flight
+    let mut wl = workload.clone();
+    for (_, spec) in wl.submissions.iter_mut() {
+        spec.r_up = 0.0;
+        spec.r_dw = 0.0;
+    }
+    let mut trace = Trace::new(eq_nodes);
+    trace.push(PoolEvent { t: 0.0, joins: (0..eq_nodes).collect(), leaves: vec![] });
+    trace.push(PoolEvent {
+        t: duration_s,
+        joins: vec![],
+        leaves: (0..eq_nodes).collect(),
+    });
+    coord.rescale_cost_multiplier = 0.0;
+    let res = replay(coord, &trace, &wl, &ReplayOpts { horizon_s: duration_s, ..Default::default() });
+    res.metrics.samples_processed
+}
+
+/// Fraction of events followed by a node-leave within `t_fwd` seconds —
+/// the preemption-within-horizon probability of Fig 7a. This is a trace
+/// property, independent of policy.
+pub fn preemption_within_tfwd(trace: &Trace, t_fwd: f64) -> f64 {
+    let leave_times: Vec<f64> =
+        trace.events.iter().filter(|e| !e.leaves.is_empty()).map(|e| e.t).collect();
+    if trace.events.is_empty() {
+        return 0.0;
+    }
+    let mut hit = 0usize;
+    for ev in &trace.events {
+        let until = ev.t + t_fwd;
+        // binary search first leave strictly after ev.t
+        let idx = leave_times.partition_point(|&t| t <= ev.t);
+        if idx < leave_times.len() && leave_times[idx] <= until {
+            hit += 1;
+        }
+    }
+    hit as f64 / trace.events.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{DpAllocator, Objective, Policy};
+    use crate::scaling::ScalingCurve;
+
+    fn spec(total: f64) -> TrainerSpec {
+        TrainerSpec {
+            name: "t".into(),
+            n_min: 1,
+            n_max: 8,
+            r_up: 20.0,
+            r_dw: 5.0,
+            curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+            total_samples: total,
+        }
+    }
+
+    fn coord() -> Coordinator {
+        Coordinator::new(Policy::Dp(DpAllocator), Objective::Throughput, 120.0, 10)
+    }
+
+    fn simple_trace() -> Trace {
+        let mut t = Trace::new(16);
+        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        t.push(PoolEvent { t: 1000.0, joins: (4..8).collect(), leaves: vec![] });
+        t.push(PoolEvent { t: 2000.0, joins: vec![], leaves: (0..8).collect() });
+        t
+    }
+
+    #[test]
+    fn replay_processes_work() {
+        let wl = Workload::all_at_zero(vec![spec(1e6)]);
+        let res = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
+        assert!(res.metrics.samples_processed > 0.0);
+        assert!(res.metrics.n_events >= 3);
+        assert_eq!(res.metrics.completed, 0); // 1e6 samples won't finish
+    }
+
+    #[test]
+    fn completion_mid_interval_detected() {
+        // 4 nodes -> 30/s after a 20 s cold-start stall; 3000 samples
+        // finish at t = 20 + 100 = 120 < 1000.
+        let wl = Workload::all_at_zero(vec![spec(3000.0)]);
+        let res = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
+        assert_eq!(res.metrics.completed, 1);
+        let done_t = res.coordinator.trainers[0].done_t.unwrap();
+        assert!((done_t - 120.0).abs() < 1.0, "done at {done_t}");
+    }
+
+    #[test]
+    fn samples_conserved() {
+        // Σ interval samples == Σ trainer progress
+        let wl = Workload::all_at_zero(vec![spec(1e5), spec(1e5)]);
+        let res = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
+        let isum: f64 = res.interval_samples.iter().sum();
+        assert!(
+            (isum - res.metrics.samples_processed).abs() < 1e-6,
+            "{isum} vs {}",
+            res.metrics.samples_processed
+        );
+    }
+
+    #[test]
+    fn resource_integral_matches_trace() {
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let res = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
+        // 4 nodes × 1000 s + 8 × 1000 s = 12000 node-s = 10/3 node-h
+        assert!((res.metrics.resource_node_hours - 12000.0 / 3600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn static_baseline_beats_or_equals_dynamic() {
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let res = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
+        let a_s = static_baseline_outcome(
+            coord(),
+            res.metrics.eq_nodes.round() as u32,
+            res.metrics.duration_s,
+            &wl,
+        );
+        assert!(a_s > 0.0);
+        let u = res.metrics.samples_processed / a_s;
+        assert!(u <= 1.05, "U = {u} should not exceed 1");
+        assert!(u > 0.3, "U = {u} suspiciously low");
+    }
+
+    #[test]
+    fn windowed_series_partitions_total() {
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let opts = ReplayOpts { window_s: 500.0, ..Default::default() };
+        let res = replay(coord(), &simple_trace(), &wl, &opts);
+        let wsum: f64 = res.windowed_samples.values.iter().map(|&(_, v)| v).sum();
+        assert!((wsum - res.metrics.samples_processed).abs() < 1e-6);
+        assert!(res.windowed_samples.values.len() >= 4);
+    }
+
+    #[test]
+    fn preemption_within_tfwd_monotone() {
+        let t = simple_trace();
+        let p10 = preemption_within_tfwd(&t, 10.0);
+        let p5000 = preemption_within_tfwd(&t, 5000.0);
+        assert!(p10 <= p5000);
+        // with t_fwd=5000 every event sees the leave at t=2000? events at
+        // 0 (leave at 2000 within 5000: yes), 1000 (yes), 2000 (no leave
+        // after) -> 2/3
+        assert!((p5000 - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_to_completion_extends_past_trace() {
+        // trace ends at 2000 with an empty pool; without nodes the job can
+        // never finish, so completion must rely on... give it a pool that
+        // persists: modify trace to keep 2 nodes.
+        let mut t = Trace::new(16);
+        t.push(PoolEvent { t: 0.0, joins: (0..2).collect(), leaves: vec![] });
+        t.push(PoolEvent { t: 100.0, joins: vec![2], leaves: vec![] });
+        let wl = Workload::all_at_zero(vec![spec(100_000.0)]);
+        let opts = ReplayOpts { run_to_completion: true, ..Default::default() };
+        let res = replay(coord(), &t, &wl, &opts);
+        assert_eq!(res.metrics.completed, 1);
+        assert!(res.horizon > 100.0);
+    }
+}

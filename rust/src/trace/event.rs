@@ -1,0 +1,260 @@
+//! Idle-node pool events and trace containers.
+//!
+//! The paper's unit of scheduling input is the *event*: a change in the
+//! composition of the idle-node set `N` (nodes joining and/or leaving at
+//! the same instant are one event — §2.1). A [`Trace`] is a time-ordered
+//! event sequence; the replay engine feeds it to the coordinator.
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// Node identifier (dense indices into the simulated machine).
+pub type NodeId = u32;
+
+/// One change to the idle-node pool at time `t` (seconds from trace start).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolEvent {
+    pub t: f64,
+    /// Nodes that became idle (joined N) at `t`.
+    pub joins: Vec<NodeId>,
+    /// Nodes reclaimed by the main scheduler (left N) at `t`.
+    pub leaves: Vec<NodeId>,
+}
+
+impl PoolEvent {
+    pub fn is_empty(&self) -> bool {
+        self.joins.is_empty() && self.leaves.is_empty()
+    }
+}
+
+/// A time-ordered idle-node event trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<PoolEvent>,
+    /// Total machine size the trace was generated from (for ratios).
+    pub machine_nodes: u32,
+}
+
+impl Trace {
+    pub fn new(machine_nodes: u32) -> Self {
+        Trace { events: Vec::new(), machine_nodes }
+    }
+
+    /// Append an event; panics if out of order.
+    pub fn push(&mut self, ev: PoolEvent) {
+        if let Some(last) = self.events.last() {
+            assert!(ev.t >= last.t, "events out of order: {} < {}", ev.t, last.t);
+        }
+        if !ev.is_empty() {
+            self.events.push(ev);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Duration from first to last event (seconds).
+    pub fn duration(&self) -> f64 {
+        match (self.events.first(), self.events.last()) {
+            (Some(a), Some(b)) => b.t - a.t,
+            _ => 0.0,
+        }
+    }
+
+    /// Pool size over time: (t, |N| after the event at t).
+    pub fn pool_sizes(&self) -> Vec<(f64, usize)> {
+        let mut size = 0isize;
+        let mut out = Vec::with_capacity(self.events.len());
+        for ev in &self.events {
+            size += ev.joins.len() as isize - ev.leaves.len() as isize;
+            debug_assert!(size >= 0, "pool size went negative at t={}", ev.t);
+            out.push((ev.t, size.max(0) as usize));
+        }
+        out
+    }
+
+    /// Average idle-node count weighted by interval length (≈ eq-nodes
+    /// over the whole trace; Eqn 18).
+    pub fn mean_pool_size(&self) -> f64 {
+        let sizes = self.pool_sizes();
+        if sizes.len() < 2 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for w in sizes.windows(2) {
+            acc += w[0].1 as f64 * (w[1].0 - w[0].0);
+        }
+        acc / self.duration()
+    }
+
+    /// Keep only events in [t0, t1), rebasing nothing (times preserved).
+    /// The initial pool population at t0 is emitted as a synthetic join
+    /// event so replay starts from the correct |N|.
+    pub fn window(&self, t0: f64, t1: f64) -> Trace {
+        let mut live: std::collections::BTreeSet<NodeId> = std::collections::BTreeSet::new();
+        let mut out = Trace::new(self.machine_nodes);
+        let mut boot = PoolEvent { t: t0, ..Default::default() };
+        for ev in &self.events {
+            if ev.t < t0 {
+                for &n in &ev.joins {
+                    live.insert(n);
+                }
+                for &n in &ev.leaves {
+                    live.remove(&n);
+                }
+            } else if ev.t < t1 {
+                if !boot.is_empty() || !live.is_empty() {
+                    if boot.joins.is_empty() && !live.is_empty() {
+                        boot.joins = live.iter().copied().collect();
+                        out.push(std::mem::take(&mut boot));
+                        live.clear();
+                    }
+                }
+                out.push(ev.clone());
+            }
+        }
+        // Window with no events after t0 but a live pool: still emit boot.
+        if !live.is_empty() {
+            boot.joins = live.iter().copied().collect();
+            let mut t = Trace::new(self.machine_nodes);
+            t.push(boot);
+            for e in out.events {
+                t.push(e);
+            }
+            return t;
+        }
+        out
+    }
+
+    /// Serialize as CSV: `t,kind,node` rows (kind: J join / L leave).
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "t,kind,node")?;
+        for ev in &self.events {
+            for &n in &ev.joins {
+                writeln!(f, "{},J,{}", ev.t, n)?;
+            }
+            for &n in &ev.leaves {
+                writeln!(f, "{},L,{}", ev.t, n)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from the CSV format written by [`Trace::save_csv`].
+    pub fn load_csv(path: &Path, machine_nodes: u32) -> std::io::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let mut trace = Trace::new(machine_nodes);
+        let mut cur: Option<PoolEvent> = None;
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 && line.starts_with("t,") {
+                continue;
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split(',');
+            let parse_err =
+                |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}: {m}", i + 1));
+            let t: f64 = parts
+                .next()
+                .ok_or_else(|| parse_err("missing t"))?
+                .parse()
+                .map_err(|_| parse_err("bad t"))?;
+            let kind = parts.next().ok_or_else(|| parse_err("missing kind"))?;
+            let node: NodeId = parts
+                .next()
+                .ok_or_else(|| parse_err("missing node"))?
+                .parse()
+                .map_err(|_| parse_err("bad node"))?;
+            let flush = cur.as_ref().map_or(false, |c: &PoolEvent| (c.t - t).abs() > 1e-9);
+            if flush {
+                trace.push(cur.take().unwrap());
+            }
+            let ev = cur.get_or_insert_with(|| PoolEvent { t, ..Default::default() });
+            match kind {
+                "J" => ev.joins.push(node),
+                "L" => ev.leaves.push(node),
+                other => return Err(parse_err(&format!("bad kind {other}"))),
+            }
+        }
+        if let Some(ev) = cur {
+            trace.push(ev);
+        }
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new(16);
+        t.push(PoolEvent { t: 0.0, joins: vec![0, 1, 2], leaves: vec![] });
+        t.push(PoolEvent { t: 10.0, joins: vec![3], leaves: vec![1] });
+        t.push(PoolEvent { t: 30.0, joins: vec![], leaves: vec![0, 2] });
+        t
+    }
+
+    #[test]
+    fn pool_sizes_track_events() {
+        let t = sample_trace();
+        assert_eq!(t.pool_sizes(), vec![(0.0, 3), (10.0, 3), (30.0, 1)]);
+    }
+
+    #[test]
+    fn mean_pool_size_weighted() {
+        let t = sample_trace();
+        // 3 nodes for 10s, 3 nodes for 20s over 30s total -> 3.0
+        assert!((t.mean_pool_size() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_order_push_panics() {
+        let mut t = Trace::new(4);
+        t.push(PoolEvent { t: 5.0, joins: vec![0], leaves: vec![] });
+        t.push(PoolEvent { t: 1.0, joins: vec![1], leaves: vec![] });
+    }
+
+    #[test]
+    fn empty_events_dropped() {
+        let mut t = Trace::new(4);
+        t.push(PoolEvent { t: 0.0, ..Default::default() });
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn window_carries_live_pool_forward() {
+        let t = sample_trace();
+        let w = t.window(5.0, 40.0);
+        // nodes 0,1,2 live at t=5 -> boot join event, then the two later events
+        assert_eq!(w.events.len(), 3);
+        assert_eq!(w.events[0].t, 5.0);
+        assert_eq!(w.events[0].joins, vec![0, 1, 2]);
+        assert_eq!(w.events[1].t, 10.0);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("bft_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        t.save_csv(&p).unwrap();
+        let t2 = Trace::load_csv(&p, 16).unwrap();
+        assert_eq!(t.events, t2.events);
+        assert_eq!(t2.machine_nodes, 16);
+    }
+
+    #[test]
+    fn duration_empty_is_zero() {
+        assert_eq!(Trace::new(4).duration(), 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Fragment extraction and idle-node characterization (paper §2.1).
+//!
+//! A *fragment* is a maximal period during which one node stays idle.
+//! This module regenerates the paper's characterization artifacts:
+//! Fig 1 (fragment-length CDF, with the node×time-weighted companion
+//! curve) and Tab 1 (INC/h, DEC/h, idle ratio, eq-nodes).
+
+use super::event::{NodeId, Trace};
+use crate::util::stats::Ecdf;
+
+/// One idle fragment of a node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fragment {
+    pub node: NodeId,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Fragment {
+    pub fn len(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Extract all fragments; nodes still idle at `horizon` are closed there.
+pub fn extract(trace: &Trace, horizon: f64) -> Vec<Fragment> {
+    let mut open: std::collections::BTreeMap<NodeId, f64> = Default::default();
+    let mut out = Vec::new();
+    for ev in &trace.events {
+        for &n in &ev.leaves {
+            if let Some(start) = open.remove(&n) {
+                out.push(Fragment { node: n, start, end: ev.t });
+            }
+        }
+        for &n in &ev.joins {
+            open.insert(n, ev.t);
+        }
+    }
+    for (node, start) in open {
+        if horizon > start {
+            out.push(Fragment { node, start, end: horizon });
+        }
+    }
+    out
+}
+
+/// Tab 1 row: idle-resource characteristics of a trace.
+#[derive(Clone, Debug)]
+pub struct IdleStats {
+    /// Average number of events per hour in which nodes joined N.
+    pub inc_per_hour: f64,
+    /// Average number of events per hour in which nodes left N.
+    pub dec_per_hour: f64,
+    /// Idle node×time as a fraction of machine node×time.
+    pub idle_ratio: f64,
+    /// Nodes that, held continuously, deliver equal node×time (Eqn 18).
+    pub eq_nodes: f64,
+    /// Total idle node-hours.
+    pub idle_node_hours: f64,
+    /// Number of fragments.
+    pub n_fragments: usize,
+    /// Total events.
+    pub n_events: usize,
+}
+
+/// Characterize a trace over `[0, horizon]` seconds.
+pub fn characterize(trace: &Trace, horizon: f64) -> IdleStats {
+    let frags = extract(trace, horizon);
+    let idle_node_seconds: f64 = frags.iter().map(Fragment::len).sum();
+    let hours = horizon / 3600.0;
+    let inc = trace.events.iter().filter(|e| !e.joins.is_empty()).count();
+    let dec = trace.events.iter().filter(|e| !e.leaves.is_empty()).count();
+    IdleStats {
+        inc_per_hour: inc as f64 / hours,
+        dec_per_hour: dec as f64 / hours,
+        idle_ratio: idle_node_seconds / (trace.machine_nodes as f64 * horizon),
+        eq_nodes: idle_node_seconds / horizon,
+        idle_node_hours: idle_node_seconds / 3600.0,
+        n_fragments: frags.len(),
+        n_events: trace.events.len(),
+    }
+}
+
+/// Fig 1 data: CDF of fragment length by count and by node×time weight.
+pub struct FragmentCdf {
+    /// Plain ECDF over fragment lengths (seconds).
+    pub by_count: Ecdf,
+    /// Sorted (length, cumulative fraction of idle node×time contributed
+    /// by fragments of at most this length).
+    pub by_nodetime: Vec<(f64, f64)>,
+}
+
+pub fn fragment_cdf(frags: &[Fragment]) -> FragmentCdf {
+    let mut lens: Vec<f64> = frags.iter().map(Fragment::len).collect();
+    lens.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total: f64 = lens.iter().sum();
+    let mut acc = 0.0;
+    let by_nodetime = lens
+        .iter()
+        .map(|&l| {
+            acc += l;
+            (l, if total > 0.0 { acc / total } else { 0.0 })
+        })
+        .collect();
+    FragmentCdf { by_count: Ecdf::new(lens), by_nodetime }
+}
+
+impl FragmentCdf {
+    /// Fraction of fragments shorter than `len_s`.
+    pub fn frac_shorter(&self, len_s: f64) -> f64 {
+        self.by_count.eval(len_s)
+    }
+
+    /// Fraction of total idle node×time contributed by fragments
+    /// shorter than `len_s` (the paper: 58% of fragments <10 min carry
+    /// only ~10% of node×time).
+    pub fn nodetime_frac_shorter(&self, len_s: f64) -> f64 {
+        match self.by_nodetime.iter().rev().find(|&&(l, _)| l <= len_s) {
+            Some(&(_, f)) => f,
+            None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::PoolEvent;
+
+    fn trace_two_nodes() -> Trace {
+        let mut t = Trace::new(8);
+        t.push(PoolEvent { t: 0.0, joins: vec![0], leaves: vec![] });
+        t.push(PoolEvent { t: 100.0, joins: vec![1], leaves: vec![] });
+        t.push(PoolEvent { t: 150.0, joins: vec![], leaves: vec![0] });
+        t.push(PoolEvent { t: 400.0, joins: vec![0], leaves: vec![1] });
+        t
+    }
+
+    #[test]
+    fn extract_closes_open_fragments_at_horizon() {
+        let frags = extract(&trace_two_nodes(), 500.0);
+        // node0: [0,150], node1: [100,400], node0 again: [400,500]
+        assert_eq!(frags.len(), 3);
+        let n0: Vec<&Fragment> = frags.iter().filter(|f| f.node == 0).collect();
+        assert_eq!(n0.len(), 2);
+        assert!((n0[0].len() - 150.0).abs() < 1e-9);
+        assert!((n0[1].len() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn characterize_counts_events() {
+        let s = characterize(&trace_two_nodes(), 3600.0);
+        assert_eq!(s.n_events, 4);
+        // events with joins: t=0, t=100, t=400 -> 3 per hour
+        assert!((s.inc_per_hour - 3.0).abs() < 1e-9);
+        assert!((s.dec_per_hour - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_ratio_and_eq_nodes() {
+        let s = characterize(&trace_two_nodes(), 500.0);
+        // idle node-seconds: 150 + 300 + 100 = 550
+        assert!((s.eq_nodes - 550.0 / 500.0).abs() < 1e-9);
+        assert!((s.idle_ratio - 550.0 / (8.0 * 500.0)).abs() < 1e-9);
+        assert!((s.idle_node_hours - 550.0 / 3600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_count_and_nodetime_weights_differ() {
+        // Many short fragments + one long one: by-count CDF rises fast,
+        // node×time CDF rises slowly (the paper's §2.1 observation).
+        let frags: Vec<Fragment> = (0..9)
+            .map(|i| Fragment { node: i, start: 0.0, end: 60.0 })
+            .chain(std::iter::once(Fragment { node: 9, start: 0.0, end: 5400.0 }))
+            .collect();
+        let cdf = fragment_cdf(&frags);
+        assert!((cdf.frac_shorter(60.0) - 0.9).abs() < 1e-9);
+        let nt = cdf.nodetime_frac_shorter(60.0);
+        assert!(nt < 0.1, "node-time share {nt}");
+    }
+
+    #[test]
+    fn empty_fragments_safe() {
+        let cdf = fragment_cdf(&[]);
+        assert_eq!(cdf.frac_shorter(10.0), 0.0);
+        assert_eq!(cdf.nodetime_frac_shorter(10.0), 0.0);
+    }
+}

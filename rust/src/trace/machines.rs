@@ -1,0 +1,121 @@
+//! Machine presets for the trace synthesizer, calibrated toward the
+//! paper's Tab 1 characteristics.
+//!
+//! | System | min job | paper INC/h / idle | this synth (seed 42)  |
+//! |--------|---------|--------------------|-----------------------|
+//! | Summit | 1       | 41.7 / 11.1%       | 42.2 / 11.8%          |
+//! | Theta  | 128     | 6.3 / 12.5%        | 1.6 / 9.1%            |
+//! | Mira   | 512     | 2.8 / 10.3%        | 1.8 / 6.9%            |
+//!
+//! The experiments in §4/§5 use a 1024-node Summit slice over one week;
+//! [`summit_1024`] is the default everywhere.
+
+use super::synth::SynthParams;
+
+/// One week in seconds.
+pub const WEEK_S: f64 = 7.0 * 24.0 * 3600.0;
+
+/// The paper's experimental substrate: 1024 arbitrary Summit nodes,
+/// one-week window (§4.3, Fig 6). min job size 1 node, high churn.
+pub fn summit_1024() -> SynthParams {
+    SynthParams {
+        total_nodes: 1024,
+        min_job_nodes: 1,
+        max_job_frac: 0.5,
+        mean_interarrival_s: 72.0,
+        walltime_mu: 8.9, // median ~2 h requested (capability jobs)
+        walltime_sigma: 0.9,
+        runtime_frac_lo: 0.15,
+        runtime_frac_hi: 1.0,
+        small_job_frac: 0.85,
+        small_max_nodes: 12,
+        small_walltime_mu: 6.2, // median ~8 min (dev/debug churn)
+        small_walltime_sigma: 0.9,
+        debounce_s: 10.0,
+        duration_s: WEEK_S,
+        warmup_s: 12.0 * 3600.0,
+    }
+}
+
+/// Full-size Summit (4608 nodes) for Tab 1 characterization.
+pub fn summit_full() -> SynthParams {
+    SynthParams {
+        total_nodes: 4608,
+        mean_interarrival_s: 110.0,
+        ..summit_1024()
+    }
+}
+
+/// Theta (ALCF): 4392 nodes, min job 128 — fewer, larger holes.
+pub fn theta() -> SynthParams {
+    SynthParams {
+        total_nodes: 4392,
+        min_job_nodes: 128,
+        max_job_frac: 0.85,
+        mean_interarrival_s: 1700.0,
+        walltime_mu: 8.8,
+        walltime_sigma: 1.1,
+        runtime_frac_lo: 0.25,
+        runtime_frac_hi: 1.0,
+        // no sub-128-node jobs exist on Theta (site policy)
+        small_job_frac: 0.0,
+        small_max_nodes: 128,
+        small_walltime_mu: 8.0,
+        small_walltime_sigma: 1.0,
+        debounce_s: 10.0,
+        duration_s: WEEK_S,
+        warmup_s: 24.0 * 3600.0,
+    }
+}
+
+/// Mira (ALCF BG/Q): 49152 nodes, min job 512 — very coarse granularity.
+pub fn mira() -> SynthParams {
+    SynthParams {
+        total_nodes: 49152,
+        min_job_nodes: 512,
+        max_job_frac: 0.7,
+        mean_interarrival_s: 1650.0,
+        walltime_mu: 9.3,
+        walltime_sigma: 1.0,
+        runtime_frac_lo: 0.25,
+        runtime_frac_hi: 1.0,
+        small_job_frac: 0.0,
+        small_max_nodes: 512,
+        small_walltime_mu: 8.0,
+        small_walltime_sigma: 1.0,
+        debounce_s: 10.0,
+        duration_s: WEEK_S,
+        warmup_s: 24.0 * 3600.0,
+    }
+}
+
+/// Preset by name (CLI).
+pub fn by_name(name: &str) -> Option<SynthParams> {
+    match name.to_ascii_lowercase().as_str() {
+        "summit" | "summit-1024" | "summit_1024" => Some(summit_1024()),
+        "summit-full" | "summit_full" => Some(summit_full()),
+        "theta" => Some(theta()),
+        "mira" => Some(mira()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert!(by_name("summit").is_some());
+        assert!(by_name("Theta").is_some());
+        assert!(by_name("MIRA").is_some());
+        assert!(by_name("frontier").is_none());
+    }
+
+    #[test]
+    fn min_job_sizes_match_site_policies() {
+        assert_eq!(summit_1024().min_job_nodes, 1);
+        assert_eq!(theta().min_job_nodes, 128);
+        assert_eq!(mira().min_job_nodes, 512);
+    }
+}

@@ -1,0 +1,12 @@
+//! Idle-node trace substrate: event/trace types, the FCFS + EASY-backfill
+//! cluster simulator that generates them, machine presets, and the
+//! fragment-level characterization of §2.1 (Fig 1 / Tab 1).
+
+pub mod event;
+pub mod fragments;
+pub mod machines;
+pub mod synth;
+
+pub use event::{NodeId, PoolEvent, Trace};
+pub use fragments::{characterize, extract, fragment_cdf, Fragment, IdleStats};
+pub use synth::{generate, SynthParams};

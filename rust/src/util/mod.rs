@@ -1,0 +1,5 @@
+//! Shared utilities: PRNG, statistics, report tables.
+
+pub mod rng;
+pub mod stats;
+pub mod table;

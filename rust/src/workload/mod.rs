@@ -1,0 +1,154 @@
+//! Trainer workload generators for the paper's experiment scenarios.
+//!
+//! * [`hpo_campaign`] — §5.1: K identical trials of one DNN (here
+//!   ShuffleNet by default), submitted up-front.
+//! * [`diverse_poisson`] — §5.2/§5.3: Poisson submissions cycling through
+//!   the Tab 2 model zoo.
+
+use crate::coordinator::TrainerSpec;
+use crate::scaling::zoo::{self, Dnn};
+use crate::sim::Workload;
+use crate::util::rng::Rng;
+
+/// Default rescale costs used across the experiments: scale-up ~30 s
+/// (model clone + data-pipeline warmup), scale-down ~10 s. The paper's
+/// §2.1 example uses a 20 s scale-up; Fig 16 sweeps multipliers.
+pub const R_UP_S: f64 = 30.0;
+pub const R_DW_S: f64 = 10.0;
+
+/// Per-trainer node bounds used in the experiments (Tab 2 spans 1..64).
+pub const N_MIN: u32 = 1;
+pub const N_MAX: u32 = 64;
+
+/// One Trainer spec for a zoo DNN processing `epochs` ImageNet epochs.
+pub fn dnn_trainer(dnn: Dnn, epochs: f64) -> TrainerSpec {
+    TrainerSpec {
+        name: dnn.name().to_string(),
+        n_min: N_MIN,
+        n_max: N_MAX,
+        r_up: R_UP_S,
+        r_dw: R_DW_S,
+        curve: zoo::curve(dnn),
+        total_samples: epochs * zoo::IMAGENET_EPOCH_SAMPLES,
+    }
+}
+
+/// §5.1 HPO campaign: `trials` identical ShuffleNet trainers (same
+/// scalability, as the paper assumes for HPO), each `epochs` epochs,
+/// all submitted at t = 0.
+pub fn hpo_campaign(dnn: Dnn, trials: usize, epochs: f64) -> Workload {
+    Workload::all_at_zero(
+        (0..trials)
+            .map(|i| {
+                let mut s = dnn_trainer(dnn, epochs);
+                s.name = format!("{}-trial{:04}", s.name, i);
+                s
+            })
+            .collect(),
+    )
+}
+
+/// §5.2 diverse-Trainer stream: `count` trainers whose DNN cycles through
+/// Tab 2, submitted by a Poisson process with the given mean gap.
+pub fn diverse_poisson(
+    count: usize,
+    epochs: f64,
+    mean_gap_s: f64,
+    seed: u64,
+) -> Workload {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut subs = Vec::with_capacity(count);
+    for i in 0..count {
+        let dnn = Dnn::ALL[i % Dnn::ALL.len()];
+        let mut s = dnn_trainer(dnn, epochs);
+        s.name = format!("{}-{:04}", s.name, i);
+        subs.push((t, s));
+        t += rng.exponential(1.0 / mean_gap_s);
+    }
+    Workload { submissions: subs }
+}
+
+/// Random allocation request mirroring the paper's Fig 5 benchmark setup:
+/// a random feasible current map over Tab 2-like curves. Shared by the
+/// `milp-bench` CLI and the fig5 bench target.
+pub fn random_alloc_request(
+    rng: &mut Rng,
+    n_jobs: usize,
+    pool: u32,
+) -> crate::coordinator::AllocRequest {
+    use crate::coordinator::{AllocJob, AllocRequest};
+    let mut remaining = pool;
+    let jobs: Vec<AllocJob> = (0..n_jobs)
+        .map(|i| {
+            let dnn = Dnn::ALL[i % Dnn::ALL.len()];
+            let curve = zoo::curve(dnn);
+            let n_max = 64u32.min(pool.max(1));
+            let current = if rng.chance(0.3) || remaining == 0 {
+                0
+            } else {
+                let c = rng.range_u64(1, (remaining.min(n_max)) as u64) as u32;
+                remaining -= c;
+                c
+            };
+            AllocJob {
+                id: i,
+                current,
+                n_min: 1,
+                n_max,
+                r_up: R_UP_S,
+                r_dw: R_DW_S,
+                points: curve.discretize(1, n_max),
+            }
+        })
+        .collect();
+    AllocRequest { jobs, pool_size: pool, t_fwd: 120.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hpo_trainers_identical_scalability() {
+        let wl = hpo_campaign(Dnn::ShuffleNet, 10, 1.0);
+        assert_eq!(wl.len(), 10);
+        let c0 = &wl.submissions[0].1.curve;
+        for (_, s) in &wl.submissions {
+            assert_eq!(&s.curve, c0);
+            assert!((s.total_samples - zoo::IMAGENET_EPOCH_SAMPLES).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn diverse_cycles_models() {
+        let wl = diverse_poisson(14, 1.0, 100.0, 1);
+        assert_eq!(wl.len(), 14);
+        assert!(wl.submissions[0].1.name.starts_with("AlexNet"));
+        assert!(wl.submissions[7].1.name.starts_with("AlexNet"));
+        assert!(wl.submissions[6].1.name.starts_with("DenseNet"));
+        // times non-decreasing
+        for w in wl.submissions.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn random_alloc_request_feasible_current() {
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let req = random_alloc_request(&mut rng, 10, 100);
+            let cur: u32 = req.jobs.iter().map(|j| j.current).sum();
+            assert!(cur <= req.pool_size);
+            assert!(req.check(&req.current_map()).is_ok());
+        }
+    }
+
+    #[test]
+    fn poisson_gaps_reasonable() {
+        let wl = diverse_poisson(500, 1.0, 100.0, 2);
+        let total = wl.submissions.last().unwrap().0;
+        let mean_gap = total / 499.0;
+        assert!((mean_gap - 100.0).abs() < 15.0, "mean gap {mean_gap}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Cross-formulation equivalence — the central correctness claim of the
+//! allocator stack (DESIGN.md §6): the paper-faithful per-node MILP, the
+//! aggregate MILP, and the exact DP must all attain the same optimal
+//! objective on the same instance; every returned map must satisfy the
+//! §3.3 constraints.
+
+use bftrainer::coordinator::{
+    AggregateMilpAllocator, AllocJob, AllocRequest, Allocator, DpAllocator, EqualShareAllocator,
+    PerNodeMilpAllocator,
+};
+use bftrainer::mini::prop::{check_with, Config, Gen, Outcome};
+use bftrainer::util::rng::Rng;
+
+/// Random small instance generator (kept small enough for the per-node
+/// formulation's dense tableau).
+fn gen_instance(max_jobs: usize, max_pool: u32) -> Gen<AllocRequest> {
+    Gen::new(move |rng: &mut Rng| {
+        let n_jobs = rng.range_usize(1, max_jobs);
+        let mut used = 0u32;
+        let jobs: Vec<AllocJob> = (0..n_jobs)
+            .map(|i| {
+                let n_min = rng.range_u64(1, 3) as u32;
+                let n_max = n_min + rng.range_u64(0, 5) as u32;
+                let current = if rng.chance(0.4) {
+                    0
+                } else {
+                    let c = rng.range_u64(n_min as u64, n_max as u64) as u32;
+                    used += c;
+                    c
+                };
+                // concave-ish random curve
+                let base = rng.range_f64(5.0, 50.0);
+                let exp = rng.range_f64(0.5, 1.0);
+                let mut points = Vec::new();
+                let mut n = n_min;
+                loop {
+                    points.push((n, base * (n as f64).powf(exp)));
+                    if n >= n_max {
+                        break;
+                    }
+                    n = (n + rng.range_u64(1, 3) as u32).min(n_max);
+                }
+                AllocJob {
+                    id: i,
+                    current,
+                    n_min,
+                    n_max,
+                    r_up: rng.range_f64(0.0, 40.0),
+                    r_dw: rng.range_f64(0.0, 15.0),
+                    points,
+                }
+            })
+            .collect();
+        let pool_size = used + rng.range_u64(0, max_pool as u64) as u32;
+        AllocRequest { jobs, pool_size, t_fwd: rng.range_f64(5.0, 240.0) }
+    })
+}
+
+#[test]
+fn dp_equals_aggregate_milp() {
+    let cfg = Config { cases: 40, ..Default::default() };
+    check_with(&cfg, &gen_instance(4, 20), |_| vec![], |req| {
+        let dp = DpAllocator.allocate(req);
+        let milp = AggregateMilpAllocator::default().allocate(req);
+        if req.check(&dp.targets).is_err() {
+            return Outcome::Fail(format!("dp infeasible: {:?}", req.check(&dp.targets)));
+        }
+        if req.check(&milp.targets).is_err() {
+            return Outcome::Fail(format!("milp infeasible: {:?}", req.check(&milp.targets)));
+        }
+        if (dp.objective - milp.objective).abs() > 1e-5 * dp.objective.abs().max(1.0) {
+            return Outcome::Fail(format!("dp {} != milp {}", dp.objective, milp.objective));
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn dp_equals_pernode_milp_small() {
+    let cfg = Config { cases: 12, ..Default::default() };
+    check_with(&cfg, &gen_instance(3, 6), |_| vec![], |req| {
+        if req.pool_size > 10 {
+            return Outcome::Discard; // keep per-node model small
+        }
+        let dp = DpAllocator.allocate(req);
+        let pn = PerNodeMilpAllocator::default().allocate(req);
+        if !pn.stats.optimal && !pn.stats.fell_back {
+            return Outcome::Discard; // timeout without proof: not a counterexample
+        }
+        if (dp.objective - pn.objective).abs() > 1e-5 * dp.objective.abs().max(1.0) {
+            return Outcome::Fail(format!("dp {} != pernode {}", dp.objective, pn.objective));
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn milp_never_below_heuristic() {
+    // The heuristic satisfies all MILP constraints (paper §5.1), so the
+    // exact optimizers can never score below it.
+    let cfg = Config { cases: 60, ..Default::default() };
+    check_with(&cfg, &gen_instance(5, 30), |_| vec![], |req| {
+        let h = EqualShareAllocator.allocate(req);
+        let dp = DpAllocator.allocate(req);
+        if req.check(&h.targets).is_err() {
+            return Outcome::Fail(format!("heuristic infeasible: {:?}", req.check(&h.targets)));
+        }
+        if dp.objective < h.objective - 1e-6 {
+            return Outcome::Fail(format!(
+                "dp {} below heuristic {}",
+                dp.objective, h.objective
+            ));
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn all_allocators_respect_capacity_and_bounds() {
+    let cfg = Config { cases: 40, ..Default::default() };
+    check_with(&cfg, &gen_instance(6, 40), |_| vec![], |req| {
+        for out in [
+            DpAllocator.allocate(req),
+            AggregateMilpAllocator::default().allocate(req),
+            EqualShareAllocator.allocate(req),
+        ] {
+            if let Err(e) = req.check(&out.targets) {
+                return Outcome::Fail(e);
+            }
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn zero_rescale_cost_optimum_ignores_current_map() {
+    // With free rescaling, the optimum must not depend on C_j.
+    let cfg = Config { cases: 30, ..Default::default() };
+    check_with(&cfg, &gen_instance(4, 20), |_| vec![], |req| {
+        let mut free = req.clone();
+        for j in free.jobs.iter_mut() {
+            j.r_up = 0.0;
+            j.r_dw = 0.0;
+        }
+        let a = DpAllocator.allocate(&free);
+        let mut moved = free.clone();
+        for j in moved.jobs.iter_mut() {
+            j.current = 0;
+        }
+        let b = DpAllocator.allocate(&moved);
+        if (a.objective - b.objective).abs() > 1e-6 * a.objective.abs().max(1.0) {
+            return Outcome::Fail(format!("{} vs {}", a.objective, b.objective));
+        }
+        Outcome::Pass
+    });
+}

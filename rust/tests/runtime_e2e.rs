@@ -1,0 +1,79 @@
+//! Runtime integration: AOT artifacts → PJRT → elastic training, plus
+//! coordinator-driven live mode. Skipped (with a message) when
+//! `artifacts/` has not been built.
+
+use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::runtime::{self, live, Engine, TrainerExec};
+use bftrainer::trace::{PoolEvent, Trace};
+use std::collections::BTreeMap;
+
+fn setup() -> Option<(Engine, runtime::Variant)> {
+    let dir = runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let man = runtime::Manifest::load(&dir).unwrap();
+    Some((Engine::cpu().unwrap(), man.variant("tiny").unwrap().clone()))
+}
+
+#[test]
+fn gradient_average_is_scale_invariant_in_expectation() {
+    // Same seed => same data stream; a 2-rank step consumes two batches.
+    // Loss magnitudes must stay in the same band regardless of scale.
+    let Some((engine, v)) = setup() else { return };
+    let mut a = TrainerExec::new(&engine, &v, 0.0, 5).unwrap(); // lr=0: pure eval
+    let l1 = a.step(1).unwrap();
+    let l4 = a.step(4).unwrap();
+    assert!((l1 - l4).abs() < 1.0, "losses diverged: {l1} vs {l4}");
+}
+
+#[test]
+fn zero_lr_keeps_params_fixed() {
+    let Some((engine, v)) = setup() else { return };
+    let mut t = TrainerExec::new(&engine, &v, 0.0, 6).unwrap();
+    let n0 = t.param_norm();
+    t.step(2).unwrap();
+    assert!((t.param_norm() - n0).abs() < 1e-9, "params moved with lr=0");
+}
+
+#[test]
+fn training_converges_toward_corpus_structure() {
+    // The arithmetic-progression corpus is near-deterministic; 40 steps
+    // of SGD must cut the loss by a wide margin below ln(256).
+    let Some((engine, v)) = setup() else { return };
+    let mut t = TrainerExec::new(&engine, &v, 0.15, 7).unwrap();
+    let first = t.step(2).unwrap();
+    let mut last = first;
+    for _ in 0..70 {
+        last = t.step(2).unwrap();
+    }
+    assert!(
+        last < first - 0.6,
+        "expected >0.6 nat improvement: {first:.3} -> {last:.3}"
+    );
+}
+
+#[test]
+fn live_mode_survives_full_preemption() {
+    // All nodes vanish mid-run; the trainer waits, then resumes when
+    // nodes return — no crash, progress continues.
+    let Some((engine, v)) = setup() else { return };
+    let opts = live::LiveOpts { virtual_step_s: 10.0, max_total_steps: 20, lr: 0.05, log_every: 0 };
+    let mut coord = Coordinator::new(Policy::by_name("dp").unwrap(), Objective::Throughput, 60.0, 2);
+    let spec = live::live_spec(&v, "t", 4, 1_000_000, &opts);
+    let id = coord.submit(spec, 0.0);
+    let mut trace = Trace::new(8);
+    trace.push(PoolEvent { t: 0.0, joins: vec![0, 1], leaves: vec![] });
+    trace.push(PoolEvent { t: 50.0, joins: vec![], leaves: vec![0, 1] }); // total preemption
+    trace.push(PoolEvent { t: 100.0, joins: vec![2, 3, 4], leaves: vec![] });
+    // trailing event so the [100, 300) interval has nonzero duration
+    // (empty events are dropped by Trace::push)
+    trace.push(PoolEvent { t: 300.0, joins: vec![5], leaves: vec![] });
+    let vars: BTreeMap<usize, runtime::Variant> = [(id, v)].into_iter().collect();
+    let res = live::run(coord, &trace, &engine, &vars, &opts).unwrap();
+    assert!(res.total_steps > 5);
+    // steps at scale 3 must exist (post-recovery)
+    assert!(res.loss_curve.iter().any(|&(_, _, n, _)| n == 3));
+    assert!(res.coordinator.trainers[0].preemptions >= 1);
+}
