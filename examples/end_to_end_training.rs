@@ -17,10 +17,8 @@
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end_training
 //! ```
-//!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective};
 use bftrainer::runtime::{self, live};
 use bftrainer::trace::{self, machines};
 use bftrainer::util::table::{f, Table};
@@ -55,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         log_every: 25,
     };
     let mut coord = Coordinator::new(
-        Policy::by_name("milp").unwrap(),
+        allocator_by_name("milp").unwrap(),
         Objective::Throughput,
         120.0,
         2,

@@ -9,7 +9,7 @@
 //! cargo run --release --example hpo_campaign
 //! ```
 
-use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective};
 use bftrainer::scaling::Dnn;
 use bftrainer::sim::{self, ReplayOpts};
 use bftrainer::trace::{self, machines};
@@ -30,14 +30,14 @@ fn main() {
     for policy in ["heuristic", "milp"] {
         for t_fwd in [10.0, 120.0, 600.0] {
             let coord = Coordinator::new(
-                Policy::by_name(policy).unwrap(),
+                allocator_by_name(policy).unwrap(),
                 Objective::Throughput,
                 t_fwd,
                 10,
             );
             let res = sim::replay(coord, &trace, &wl, &ReplayOpts::default());
             let a_s = sim::static_baseline_outcome(
-                Coordinator::new(Policy::by_name(policy).unwrap(), Objective::Throughput, t_fwd, 10),
+                Coordinator::new(allocator_by_name(policy).unwrap(), Objective::Throughput, t_fwd, 10),
                 res.metrics.eq_nodes.round() as u32,
                 res.metrics.duration_s,
                 &wl,

@@ -10,7 +10,7 @@
 //! cargo run --release --example multi_tenant
 //! ```
 
-use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective};
 use bftrainer::scaling::Dnn;
 use bftrainer::sim::{self, ReplayOpts};
 use bftrainer::trace::{self, machines};
@@ -28,7 +28,7 @@ fn main() {
     let mut results: BTreeMap<&str, BTreeMap<&str, (f64, usize)>> = BTreeMap::new();
     for objective in [Objective::Throughput, Objective::ScalingEfficiency] {
         let coord = Coordinator::new(
-            Policy::by_name("milp").unwrap(),
+            allocator_by_name("milp").unwrap(),
             objective.clone(),
             120.0,
             10,

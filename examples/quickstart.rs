@@ -8,7 +8,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use bftrainer::coordinator::{Coordinator, Objective, Policy, TrainerSpec};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective, TrainerSpec};
 use bftrainer::scaling::{zoo, Dnn, ScalingCurve};
 use bftrainer::sim::{self, ReplayOpts, Workload};
 use bftrainer::trace::{PoolEvent, Trace};
@@ -41,7 +41,7 @@ fn main() {
 
     // 3. The coordinator: MILP policy, throughput objective, T_fwd = 120 s.
     let coord = Coordinator::new(
-        Policy::by_name("milp").unwrap(),
+        allocator_by_name("milp").unwrap(),
         Objective::Throughput,
         120.0,
         10,

@@ -6,17 +6,16 @@ TPU-style: the grid tiles the output into (bm × bn) blocks sized for the
 and `w` column-panel into VMEM, runs the matmul on the MXU, adds the bias
 and applies the activation on the VPU, and writes one output block.
 
-HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's Trainers
-ran CUDA kernels tiled for SM shared memory; the same insight — keep the
-reduction operand resident in fast memory while streaming the other —
-maps to `BlockSpec`-scheduled HBM→VMEM copies here. K is kept whole per
-block (fits VMEM for the model sizes we lower; see the VMEM budget note
-in EXPERIMENTS.md §Perf).
+HARDWARE ADAPTATION (DESIGN.md §9 Hardware adaptation): the paper's
+Trainers ran CUDA kernels tiled for SM shared memory; the same insight —
+keep the reduction operand resident in fast memory while streaming the
+other — maps to `BlockSpec`-scheduled HBM→VMEM copies here. K is kept
+whole per block (fits VMEM for the model sizes we lower).
 
 `interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
 custom-calls; interpret mode lowers to plain HLO so the AOT artifact is
 executable on the rust side. Real-TPU efficiency is *estimated* from the
-block geometry instead (EXPERIMENTS.md §Perf).
+block geometry instead.
 """
 
 import functools

@@ -32,8 +32,8 @@ fn main() {
     let mut params = machines::summit_1024();
     params.duration_s = 72.0 * 3600.0;
     let trace = trace::generate(&params, 42);
-    // 140 trainers (20 per DNN), scaled-down work (see EXPERIMENTS.md for
-    // the scaling argument), Poisson gap 10 min.
+    // 140 trainers (20 per DNN), work scaled down so the bench finishes
+    // in minutes while preserving the Fig 12 contrast, Poisson gap 2 min.
     let wl = workload::diverse_poisson(140, 30.0, 120.0, 7);
     let opts = ReplayOpts { run_to_completion: true, ..Default::default() };
 

@@ -6,12 +6,16 @@
 //!   * `dp`      — exact DP fast path (identical optimum)
 //!   * `pernode` — the paper's literal x_jn formulation (small sizes only;
 //!     a dense-tableau B&B does not reach 800-node per-node models)
+//!
+//! plus the **incremental** variant (DESIGN.md §7): consecutive pool
+//! events solved cold vs warm-started from the previous event's solution
+//! and root basis, reporting the measured speedup.
 
 use bftrainer::coordinator::{AggregateMilpAllocator, Allocator, DpAllocator, PerNodeMilpAllocator};
 use bftrainer::util::rng::Rng;
 use bftrainer::util::stats;
 use bftrainer::util::table::{f, Table};
-use bftrainer::workload::random_alloc_request;
+use bftrainer::workload::{advance_request, random_alloc_request};
 use std::time::Instant;
 
 fn main() {
@@ -75,4 +79,59 @@ fn main() {
     }
     println!("== Fig 5 (paper-literal per-node formulation, small sizes) ==");
     println!("{}", tab2.render());
+
+    // Cold vs warm on consecutive-event workloads: the same sequence of
+    // pool-delta events solved (a) from scratch each time and (b) by one
+    // stateful allocator carrying the previous solution + basis. Both
+    // run without the DP incumbent so the incremental lever is isolated;
+    // "agreement" checks every warm objective against the exact DP.
+    let events = 12usize;
+    let mut tab3 = Table::new(vec![
+        "jobs", "nodes", "events", "cold mean(ms)", "warm mean(ms)", "speedup", "agreement",
+    ]);
+    for &(jobs, nodes) in &[(5usize, 100u32), (10, 200), (20, 400)] {
+        let mut req = random_alloc_request(&mut rng, jobs, nodes);
+        let mut seq = Vec::with_capacity(events);
+        for _ in 0..events {
+            seq.push(req.clone());
+            let dp = DpAllocator.allocate(&req);
+            advance_request(&mut rng, &mut req, &dp.targets, 4);
+        }
+        let mut cold_ms = Vec::new();
+        for q in &seq {
+            let t0 = Instant::now();
+            let _ = AggregateMilpAllocator::cold().allocate(q);
+            cold_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mut warm = AggregateMilpAllocator::incremental_only();
+        let mut warm_ms = Vec::new();
+        let mut agree = true;
+        for (i, q) in seq.iter().enumerate() {
+            let t0 = Instant::now();
+            let plan = warm.allocate(q);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            if i > 0 {
+                // event 0 has no previous solution: it is itself cold
+                warm_ms.push(ms);
+            }
+            let dp = DpAllocator.allocate(q);
+            if (plan.objective - dp.objective).abs() > 1e-5 * dp.objective.abs().max(1.0) {
+                agree = false;
+            }
+        }
+        let cold_mean = stats::mean(&cold_ms[1..]);
+        let warm_mean = stats::mean(&warm_ms);
+        tab3.row(vec![
+            jobs.to_string(),
+            nodes.to_string(),
+            events.to_string(),
+            f(cold_mean, 2),
+            f(warm_mean, 2),
+            format!("{:.1}x", cold_mean / warm_mean.max(1e-9)),
+            if agree { "yes".to_string() } else { "NO".to_string() },
+        ]);
+    }
+    println!("== Fig 5 (incremental): cold vs warm-started consecutive events ==");
+    println!("{}", tab3.render());
+    println!("warm = previous-event solution as incumbent + previous root basis (DESIGN.md §7)\n");
 }

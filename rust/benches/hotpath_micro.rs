@@ -31,6 +31,28 @@ fn main() {
         black_box(DpAllocator.allocate(&big));
     });
 
+    // Incremental resolve (DESIGN.md §7): one consecutive-event sequence
+    // solved cold each event vs by a stateful warm-started allocator.
+    let mut seq_rng = Rng::new(11);
+    let mut q = random_alloc_request(&mut seq_rng, 10, 400);
+    let mut seq = Vec::new();
+    for _ in 0..8 {
+        seq.push(q.clone());
+        let dp = DpAllocator.allocate(&q);
+        workload::advance_request(&mut seq_rng, &mut q, &dp.targets, 4);
+    }
+    r.bench("alloc/milp-aggregate cold event-seq 10x400 (8 events)", || {
+        for q in &seq {
+            black_box(AggregateMilpAllocator::cold().allocate(q));
+        }
+    });
+    r.bench("alloc/milp-aggregate warm event-seq 10x400 (8 events)", || {
+        let mut warm = AggregateMilpAllocator::incremental_only();
+        for q in &seq {
+            black_box(warm.allocate(q));
+        }
+    });
+
     // Trace synthesis (day of Summit-1024).
     let mut day = machines::summit_1024();
     day.duration_s = 24.0 * 3600.0;

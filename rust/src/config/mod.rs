@@ -101,7 +101,7 @@ impl ExperimentConfig {
 
     /// Validate cross-field invariants.
     pub fn validate(&self) -> Result<(), String> {
-        if crate::coordinator::Policy::by_name(&self.policy).is_none() {
+        if crate::coordinator::allocator_by_name(&self.policy).is_none() {
             return Err(format!("unknown policy {:?}", self.policy));
         }
         if crate::coordinator::Objective::parse(&self.objective).is_none() {

@@ -118,6 +118,27 @@ impl AllocRequest {
     pub fn current_map(&self) -> BTreeMap<TrainerId, u32> {
         self.jobs.iter().map(|j| (j.id, j.current)).collect()
     }
+
+    /// Shed nodes from the largest assignments until `targets` fits the
+    /// pool capacity — the preemption repair rule shared by the warm-start
+    /// target adaptation and the synthetic event generator: decrement the
+    /// biggest assignment while it stays at or above its job's minimum,
+    /// drop it to 0 otherwise. Entries already feasible are untouched; if
+    /// everything is at 0 and the map still exceeds capacity (malformed
+    /// input), the map is left as-is for [`Self::check`] to reject.
+    pub fn shed_to_capacity(&self, targets: &mut BTreeMap<TrainerId, u32>) {
+        let mut total: u32 = targets.values().sum();
+        while total > self.pool_size {
+            let (id, n) = match targets.iter().max_by_key(|&(_, &n)| n) {
+                Some((&id, &n)) if n > 0 => (id, n),
+                _ => return,
+            };
+            let n_min = self.jobs.iter().find(|j| j.id == id).map(|j| j.n_min).unwrap_or(1);
+            let next = if n > n_min { n - 1 } else { 0 };
+            total -= n - next;
+            targets.insert(id, next);
+        }
+    }
 }
 
 /// Statistics from the solver behind an allocation.
@@ -129,20 +150,40 @@ pub struct SolverStats {
     pub fell_back: bool,
     /// True when the solver proved optimality.
     pub optimal: bool,
+    /// True when warm-start state carried over from the previous event
+    /// (incumbent and/or simplex basis) entered this solve.
+    pub warm_started: bool,
 }
 
-/// Result of one allocation decision.
+/// The plan an [`Allocator`] answers an [`AllocRequest`] with: target
+/// scales per admitted trainer, their Eqn-16 objective value, and solver
+/// statistics. Trainers absent from `targets` are assigned 0 nodes.
 #[derive(Clone, Debug)]
-pub struct AllocOutcome {
+pub struct AllocPlan {
     pub targets: BTreeMap<TrainerId, u32>,
     pub objective: f64,
     pub stats: SolverStats,
 }
 
-/// Allocation policy interface.
-pub trait Allocator {
+/// Former name of [`AllocPlan`], kept for downstream code.
+pub type AllocOutcome = AllocPlan;
+
+/// Allocation policy interface — the single `AllocRequest → AllocPlan`
+/// contract every strategy (per-node MILP, aggregate MILP, exact DP,
+/// equal-share heuristic) implements. The [`crate::coordinator::Coordinator`]
+/// holds one boxed `Allocator` for its whole lifetime and calls
+/// [`Allocator::allocate`] on every pool event, trainer completion and
+/// admission, so implementations may carry warm-start state from one
+/// event to the next (see `AggregateMilpAllocator`); such state must only
+/// accelerate the solve, never change the optimal objective.
+pub trait Allocator: Send {
+    /// Stable name used by the CLI (`--policy`) and in reports.
     fn name(&self) -> &'static str;
-    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome;
+    /// Solve one event's reallocation problem.
+    fn allocate(&mut self, req: &AllocRequest) -> AllocPlan;
+    /// Drop any warm-start state carried between consecutive events.
+    /// No-op for stateless allocators.
+    fn reset(&mut self) {}
 }
 
 #[cfg(test)]
@@ -235,6 +276,32 @@ mod tests {
         assert!(req.check(&above_pool).is_err());
         let unknown: BTreeMap<_, _> = [(9, 2u32)].into_iter().collect();
         assert!(req.check(&unknown).is_err());
+    }
+
+    #[test]
+    fn shed_to_capacity_prefers_largest_and_respects_minimums() {
+        let req = AllocRequest {
+            jobs: vec![job(0, 0, 1, 8), job(1, 0, 3, 8)],
+            pool_size: 5,
+            t_fwd: 60.0,
+        };
+        // 5 + 3 = 8 over a pool of 5: shed from the largest first. The
+        // result fits the pool but may undershoot it when a job at its
+        // minimum has to drop all the way to 0.
+        let mut t: BTreeMap<_, _> = [(0, 5u32), (1, 3u32)].into_iter().collect();
+        req.shed_to_capacity(&mut t);
+        assert!(req.check(&t).is_ok(), "{:?}", t);
+        assert!(t.values().sum::<u32>() <= 5);
+        assert!(t[&0] < 5, "largest assignment must shrink first");
+        // A job at its minimum drops straight to 0 rather than below min.
+        let mut t2: BTreeMap<_, _> = [(0, 3u32), (1, 3u32)].into_iter().collect();
+        req.shed_to_capacity(&mut t2);
+        assert!(req.check(&t2).is_ok(), "{:?}", t2);
+        // Already-feasible maps are untouched.
+        let mut t3: BTreeMap<_, _> = [(0, 2u32), (1, 3u32)].into_iter().collect();
+        let before = t3.clone();
+        req.shed_to_capacity(&mut t3);
+        assert_eq!(t3, before);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! pool capacity solves it exactly in `O(J · |N| · range)`. Property tests
 //! in `rust/tests/` verify it matches both MILP formulations.
 
-use super::alloc::{AllocOutcome, AllocRequest, Allocator, SolverStats};
+use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -25,7 +25,7 @@ impl Allocator for DpAllocator {
         "dp"
     }
 
-    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome {
+    fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
         let t0 = Instant::now();
         let cap = req.pool_size as usize;
         let nj = req.jobs.len();
@@ -85,7 +85,7 @@ impl Allocator for DpAllocator {
         }
         let objective = req.objective_of(&targets);
         debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
-        AllocOutcome {
+        AllocPlan {
             targets,
             objective,
             stats: SolverStats {
@@ -93,6 +93,7 @@ impl Allocator for DpAllocator {
                 nodes_explored: nj * (cap + 1),
                 fell_back: false,
                 optimal: true,
+                warm_started: false,
             },
         }
     }

@@ -8,7 +8,7 @@
 //! preemption occurs — which is exactly why MILP's advantage (Fig 10) is
 //! concentrated where rescale costs and churn are high.
 
-use super::alloc::{AllocOutcome, AllocRequest, Allocator, SolverStats};
+use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -21,12 +21,12 @@ impl Allocator for EqualShareAllocator {
         "equal-share"
     }
 
-    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome {
+    fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
         let t0 = Instant::now();
         let mut targets: BTreeMap<_, u32> = BTreeMap::new();
         let nj = req.jobs.len() as u32;
         if nj == 0 {
-            return AllocOutcome {
+            return AllocPlan {
                 targets,
                 objective: 0.0,
                 stats: SolverStats { solve_time: t0.elapsed(), ..Default::default() },
@@ -61,7 +61,7 @@ impl Allocator for EqualShareAllocator {
         }
         debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
         let objective = req.objective_of(&targets);
-        AllocOutcome {
+        AllocPlan {
             targets,
             objective,
             stats: SolverStats {
@@ -69,6 +69,7 @@ impl Allocator for EqualShareAllocator {
                 nodes_explored: 0,
                 fell_back: false,
                 optimal: false,
+                warm_started: false,
             },
         }
     }

@@ -19,18 +19,40 @@
 //! binaries. Equivalence is property-tested against the per-node model
 //! and the exact DP in `rust/tests/alloc_equivalence.rs`.
 
-use super::alloc::{AllocOutcome, AllocRequest, Allocator, SolverStats};
+use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
+use super::trainer::TrainerId;
 use crate::milp::{self, Direction, LinExpr, Model, Sense};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// Warm-start state carried from one event's solve to the next: the
+/// applied target map and the root-LP basis of the model it solved.
+#[derive(Clone, Debug)]
+struct PrevSolve {
+    targets: BTreeMap<TrainerId, u32>,
+    root_basis: milp::LpBasis,
+}
+
 /// MILP allocator over aggregate scale variables.
+///
+/// Two independent warm-start levers, both optional and both objective-
+/// preserving (they only prune/pivot, never change the optimum):
+/// * `warm_start_with_dp` — seed the incumbent with the exact DP optimum;
+///   the B&B then only has to *prove* optimality (the Fig 5 fast path).
+/// * `warm_start_from_previous` — the incremental resolve of DESIGN.md
+///   §7: consecutive pool events differ by a handful of nodes, so the
+///   previous event's solution (repaired to the new bounds) is seeded as
+///   an incumbent and the previous root basis hot-starts the simplex.
 #[derive(Clone, Debug)]
 pub struct AggregateMilpAllocator {
     pub limits: milp::Limits,
     /// Warm-start from the exact DP solution (solver then only needs to
     /// prove optimality — the Fig 5 fast path).
     pub warm_start_with_dp: bool,
+    /// Carry the previous event's solution + root basis into the next
+    /// solve (incremental resolve).
+    pub warm_start_from_previous: bool,
+    prev: Option<PrevSolve>,
 }
 
 impl Default for AggregateMilpAllocator {
@@ -45,8 +67,54 @@ impl Default for AggregateMilpAllocator {
                 ..Default::default()
             },
             warm_start_with_dp: true,
+            warm_start_from_previous: true,
+            prev: None,
         }
     }
+}
+
+impl AggregateMilpAllocator {
+    /// Fully cold configuration: no DP incumbent, no carry-over from the
+    /// previous event. The baseline the cold-vs-warm benches compare
+    /// against; same optimum, slowest proof.
+    pub fn cold() -> Self {
+        AggregateMilpAllocator {
+            warm_start_with_dp: false,
+            warm_start_from_previous: false,
+            ..Default::default()
+        }
+    }
+
+    /// Incremental-only configuration: previous-event warm start without
+    /// the DP incumbent. Isolates the DESIGN.md §7 speedup in benches and
+    /// equivalence tests.
+    pub fn incremental_only() -> Self {
+        AggregateMilpAllocator { warm_start_with_dp: false, ..Default::default() }
+    }
+}
+
+/// Repair a previous event's target map against a new request: drop
+/// vanished jobs, clamp to the new `[n_min, n_max ∩ pool]` boxes (jobs
+/// pushed below their minimum go to 0), then shed nodes from the largest
+/// assignments until the new pool capacity holds
+/// ([`AllocRequest::shed_to_capacity`]). Returns `None` when no feasible
+/// repair exists (never happens for well-formed requests — the all-zero
+/// map is always feasible — but kept defensive).
+pub fn adapt_targets(
+    req: &AllocRequest,
+    prev: &BTreeMap<TrainerId, u32>,
+) -> Option<BTreeMap<TrainerId, u32>> {
+    let mut targets: BTreeMap<TrainerId, u32> = BTreeMap::new();
+    for job in &req.jobs {
+        let hi = job.n_max.min(req.pool_size);
+        let mut n = prev.get(&job.id).copied().unwrap_or(0).min(hi);
+        if n < job.n_min {
+            n = 0;
+        }
+        targets.insert(job.id, n);
+    }
+    req.shed_to_capacity(&mut targets);
+    req.check(&targets).ok().map(|_| targets)
 }
 
 /// Build the aggregate MILP for a request. Returns (model, n-var ids).
@@ -164,31 +232,66 @@ impl Allocator for AggregateMilpAllocator {
         "milp-aggregate"
     }
 
-    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome {
+    fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
         let t0 = Instant::now();
         let (model, n_vars) = build_model(req);
 
-        // Optional DP warm start mapped into model space.
-        let warm = if self.warm_start_with_dp {
+        // Candidate incumbents in model space: the previous event's
+        // solution (repaired to the new request) and/or the DP optimum.
+        // (x, target map, Eqn-16 objective)
+        let mut incumbents: Vec<(Vec<f64>, BTreeMap<TrainerId, u32>, f64)> = Vec::new();
+        let mut warm_started = false;
+        if self.warm_start_from_previous {
+            if let Some(prev) = &self.prev {
+                if let Some(t) = adapt_targets(req, &prev.targets) {
+                    let x = embed_solution(req, &model, &n_vars, &t);
+                    if model.is_feasible(&x, 1e-6) {
+                        let obj = req.objective_of(&t);
+                        incumbents.push((x, t, obj));
+                        warm_started = true;
+                    }
+                }
+            }
+        }
+        if self.warm_start_with_dp {
             let dp = super::dp_alloc::DpAllocator.allocate(req);
-            Some((embed_solution(req, &model, &n_vars, &dp.targets), dp))
+            let x = embed_solution(req, &model, &n_vars, &dp.targets);
+            debug_assert!(model.is_feasible(&x, 1e-6));
+            incumbents.push((x, dp.targets, dp.objective));
+        }
+        incumbents.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+
+        // Root LP relaxation, hot-started from the previous event's basis
+        // when available. Solved here only when an incumbent exists to
+        // compare against — without one the B&B solves its own root and
+        // duplicating the work would be pure loss.
+        let prev_basis = if self.warm_start_from_previous {
+            self.prev.as_ref().map(|p| p.root_basis.clone())
         } else {
             None
         };
-        // PERF (EXPERIMENTS.md §Perf L3-1): root-gap early accept. For the
-        // mostly-concave Tab 2 curves the LP relaxation is nearly tight,
-        // so if the root LP bound already matches the DP incumbent the
+        let root = if incumbents.is_empty() {
+            None
+        } else {
+            Some(milp::solve_lp_warm(&model, &milp::model_bounds(&model), prev_basis.as_ref()))
+        };
+
+        // PERF (DESIGN.md §7.2): root-gap early accept. For the mostly-
+        // concave Tab 2 curves the LP relaxation is nearly tight, so if
+        // the root LP bound already matches the best incumbent the
         // branch-and-bound proof is redundant — skip it entirely. This is
         // the common case on the event hot path (>90% of solves).
-        if let Some((ref wx, ref dp)) = warm {
-            let root = milp::solve_lp(&model, &milp::model_bounds(&model));
+        if let (Some(root), Some((_, best_targets, best_obj))) =
+            (root.as_ref(), incumbents.first())
+        {
             if root.status == milp::LpStatus::Optimal
-                && root.objective <= dp.objective + self.limits.rel_gap * dp.objective.abs().max(1.0)
+                && root.objective <= best_obj + self.limits.rel_gap * best_obj.abs().max(1.0)
             {
-                debug_assert!(model.is_feasible(wx, 1e-6));
-                let targets = dp.targets.clone();
+                let targets = best_targets.clone();
                 let objective = req.objective_of(&targets);
-                return AllocOutcome {
+                self.prev =
+                    Some(PrevSolve { targets: targets.clone(), root_basis: root.basis.clone() });
+                return AllocPlan {
                     targets,
                     objective,
                     stats: SolverStats {
@@ -196,12 +299,20 @@ impl Allocator for AggregateMilpAllocator {
                         nodes_explored: 1,
                         fell_back: false,
                         optimal: true,
+                        warm_started,
                     },
                 };
             }
         }
-        let warm = warm.map(|(wx, _)| wx);
-        let res = milp::solve(&model, &self.limits, warm.as_deref());
+
+        let warm = milp::MilpWarmStart {
+            incumbent: incumbents.first().map(|(x, _, _)| x.as_slice()),
+            basis: match root.as_ref() {
+                Some(r) if r.status == milp::LpStatus::Optimal => Some(&r.basis),
+                _ => prev_basis.as_ref(),
+            },
+        };
+        let res = milp::solve_warm(&model, &self.limits, &warm);
 
         let (targets, fell_back, optimal) = match res.status {
             milp::MilpStatus::Optimal | milp::MilpStatus::Feasible => {
@@ -228,7 +339,8 @@ impl Allocator for AggregateMilpAllocator {
         };
         debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
         let objective = req.objective_of(&targets);
-        AllocOutcome {
+        self.prev = Some(PrevSolve { targets: targets.clone(), root_basis: res.root_basis });
+        AllocPlan {
             targets,
             objective,
             stats: SolverStats {
@@ -236,8 +348,13 @@ impl Allocator for AggregateMilpAllocator {
                 nodes_explored: res.nodes_explored,
                 fell_back,
                 optimal,
+                warm_started,
             },
         }
+    }
+
+    fn reset(&mut self) {
+        self.prev = None;
     }
 }
 
@@ -357,14 +474,85 @@ mod tests {
     #[test]
     fn fallback_keeps_current_map_under_zero_budget() {
         // max_nodes = 0 forces the no-incumbent path... with warm start the
-        // incumbent exists; disable warm start to exercise the fallback.
+        // incumbent exists; disable warm starts to exercise the fallback.
         let mut alloc = AggregateMilpAllocator {
-            limits: milp::Limits { max_nodes: 1, time_limit: std::time::Duration::ZERO, ..Default::default() },
-            warm_start_with_dp: false,
+            limits: milp::Limits {
+                max_nodes: 1,
+                time_limit: std::time::Duration::ZERO,
+                ..Default::default()
+            },
+            ..AggregateMilpAllocator::cold()
         };
         let req = AllocRequest { jobs: vec![job(0, 3, 1, 8)], pool_size: 8, t_fwd: 60.0 };
         let out = alloc.allocate(&req);
         assert!(out.stats.fell_back);
         assert_eq!(out.targets[&0], 3, "must keep the current map");
+    }
+
+    #[test]
+    fn adapt_repairs_previous_map_to_new_request() {
+        // Previous solution 5 + 3 = 8; pool shrinks to 6: shed from the
+        // largest assignment first.
+        let req = AllocRequest {
+            jobs: vec![job(0, 5, 1, 8), job(1, 3, 1, 8)],
+            pool_size: 6,
+            t_fwd: 60.0,
+        };
+        let prev: BTreeMap<usize, u32> = [(0, 5u32), (1, 3u32)].into_iter().collect();
+        let t = adapt_targets(&req, &prev).unwrap();
+        assert!(req.check(&t).is_ok());
+        assert_eq!(t.values().sum::<u32>(), 6);
+        // vanished job ids are dropped; unknown ids never appear
+        let stale: BTreeMap<usize, u32> = [(7, 4u32)].into_iter().collect();
+        let t2 = adapt_targets(&req, &stale).unwrap();
+        assert_eq!(t2.values().sum::<u32>(), 0);
+        // below-minimum clamp goes to zero, not to an infeasible 1
+        let mut j = job(0, 0, 4, 8);
+        j.n_min = 4;
+        let req3 = AllocRequest { jobs: vec![j], pool_size: 2, t_fwd: 60.0 };
+        let prev3: BTreeMap<usize, u32> = [(0, 6u32)].into_iter().collect();
+        assert_eq!(adapt_targets(&req3, &prev3).unwrap()[&0], 0);
+    }
+
+    #[test]
+    fn incremental_warm_start_matches_dp_across_events() {
+        // A stateful incremental allocator replaying a pool-delta sequence
+        // must track the exact DP optimum at every event.
+        let mut rng = Rng::new(0x17C);
+        let mut warm = AggregateMilpAllocator::incremental_only();
+        let mut req = random_request(&mut rng, 4, 16);
+        for step in 0..8 {
+            let dp = DpAllocator.allocate(&req);
+            let plan = warm.allocate(&req);
+            assert!(req.check(&plan.targets).is_ok(), "step {step}");
+            assert!(
+                (plan.objective - dp.objective).abs() < 1e-5 * dp.objective.abs().max(1.0),
+                "step {step}: warm {} vs dp {}",
+                plan.objective,
+                dp.objective
+            );
+            assert_eq!(plan.stats.warm_started, step > 0, "step {step}");
+            // apply the plan and perturb the pool by a few nodes
+            for j in req.jobs.iter_mut() {
+                j.current = plan.targets.get(&j.id).copied().unwrap_or(0);
+            }
+            let grow = rng.chance(0.5);
+            let delta = rng.range_u64(1, 3) as u32;
+            req.pool_size = if grow { req.pool_size + delta } else { req.pool_size.saturating_sub(delta) };
+            let cur: u32 = req.jobs.iter().map(|j| j.current).sum();
+            req.pool_size = req.pool_size.max(cur);
+        }
+    }
+
+    #[test]
+    fn reset_clears_carry_over() {
+        let mut a = AggregateMilpAllocator::default();
+        let req = AllocRequest { jobs: vec![job(0, 0, 1, 8)], pool_size: 8, t_fwd: 60.0 };
+        let _ = a.allocate(&req);
+        assert!(a.prev.is_some());
+        a.reset();
+        assert!(a.prev.is_none());
+        let again = a.allocate(&req);
+        assert!(!again.stats.warm_started, "reset must drop the warm-start state");
     }
 }

@@ -16,7 +16,7 @@
 //! aggregate model ([`super::milp_aggregate`]) is the production path.
 //! Equivalence between the two is property-tested.
 
-use super::alloc::{AllocOutcome, AllocRequest, Allocator, SolverStats};
+use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
 use crate::milp::{self, Direction, LinExpr, Model, Sense};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -232,7 +232,7 @@ impl Allocator for PerNodeMilpAllocator {
         "milp-pernode"
     }
 
-    fn allocate(&mut self, req: &AllocRequest) -> AllocOutcome {
+    fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
         let t0 = Instant::now();
         let c = dense_assignment(req);
         let (model, x) = build_model(req, &c);
@@ -262,7 +262,7 @@ impl Allocator for PerNodeMilpAllocator {
         };
         debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
         let objective = req.objective_of(&targets);
-        AllocOutcome {
+        AllocPlan {
             targets,
             objective,
             stats: SolverStats {
@@ -270,6 +270,7 @@ impl Allocator for PerNodeMilpAllocator {
                 nodes_explored: res.nodes_explored,
                 fell_back,
                 optimal,
+                warm_started: false,
             },
         }
     }

@@ -5,6 +5,12 @@
 //! pool change, Trainer completion or submission triggers a reallocation
 //! (paper §3: "we solve a MILP whenever there is a change to N, a Trainer
 //! completes, or a new Trainer is ready to run").
+//!
+//! All four strategies implement the single [`Allocator`] trait
+//! (`AllocRequest → AllocPlan`); [`allocator_by_name`] is the registry.
+//! The coordinator keeps its allocator for the whole run, which is what
+//! lets the aggregate MILP warm-start each event's solve from the
+//! previous one (DESIGN.md §7).
 
 pub mod alloc;
 pub mod dp_alloc;
@@ -15,7 +21,7 @@ pub mod objective;
 pub mod pool;
 pub mod trainer;
 
-pub use alloc::{AllocJob, AllocOutcome, AllocRequest, Allocator, SolverStats};
+pub use alloc::{AllocJob, AllocOutcome, AllocPlan, AllocRequest, Allocator, SolverStats};
 pub use dp_alloc::DpAllocator;
 pub use heuristic::EqualShareAllocator;
 pub use milp_aggregate::AggregateMilpAllocator;
@@ -27,60 +33,48 @@ pub use trainer::{Phase, TrainerId, TrainerSpec, TrainerState};
 use crate::trace::PoolEvent;
 use std::collections::BTreeMap;
 
-/// Which allocation policy to run.
-pub enum Policy {
-    /// The paper's MILP (aggregate formulation, DP warm start).
-    Milp(AggregateMilpAllocator),
-    /// Paper-faithful per-node MILP (small pools only).
-    PerNode(PerNodeMilpAllocator),
-    /// Exact DP (identical optimum to MILP, fastest).
-    Dp(DpAllocator),
-    /// Equal-share baseline.
-    Heuristic(EqualShareAllocator),
-}
+/// Canonical CLI names of the built-in allocation strategies, in the
+/// order `DESIGN.md` §5 describes them.
+pub const ALLOCATOR_NAMES: [&str; 4] = ["milp", "milp-pernode", "dp", "heuristic"];
 
-impl Policy {
-    pub fn by_name(name: &str) -> Option<Policy> {
-        match name.to_ascii_lowercase().as_str() {
-            "milp" | "milp-aggregate" => Some(Policy::Milp(Default::default())),
-            "milp-pernode" | "pernode" => Some(Policy::PerNode(Default::default())),
-            "dp" => Some(Policy::Dp(DpAllocator)),
-            "heuristic" | "equal" | "equal-share" => Some(Policy::Heuristic(Default::default())),
-            _ => None,
-        }
-    }
-
-    fn as_allocator(&mut self) -> &mut dyn Allocator {
-        match self {
-            Policy::Milp(a) => a,
-            Policy::PerNode(a) => a,
-            Policy::Dp(a) => a,
-            Policy::Heuristic(a) => a,
-        }
-    }
-
-    pub fn name(&mut self) -> &'static str {
-        self.as_allocator().name()
+/// Construct a boxed [`Allocator`] from its CLI name. Accepted names
+/// (case-insensitive): `milp`/`milp-aggregate` (the production aggregate
+/// MILP with DP + incremental warm starts), `milp-pernode`/`pernode` (the
+/// paper-literal per-node formulation, small pools only), `dp` (exact
+/// dynamic program, identical optimum to the MILPs), and
+/// `heuristic`/`equal`/`equal-share` (the §5.1 baseline).
+pub fn allocator_by_name(name: &str) -> Option<Box<dyn Allocator>> {
+    match name.to_ascii_lowercase().as_str() {
+        "milp" | "milp-aggregate" => Some(Box::<AggregateMilpAllocator>::default()),
+        "milp-pernode" | "pernode" => Some(Box::<PerNodeMilpAllocator>::default()),
+        "dp" => Some(Box::new(DpAllocator)),
+        "heuristic" | "equal" | "equal-share" => Some(Box::<EqualShareAllocator>::default()),
+        _ => None,
     }
 }
 
 /// Per-event record for metrics/ROI analysis.
 #[derive(Clone, Debug, Default)]
 pub struct EventRecord {
+    /// Event time (seconds from replay start).
     pub t: f64,
     /// Rescale cost invested at this event, in samples (Σ_j O_j(C_j)·R_j).
     pub rescale_cost_samples: f64,
     /// Trainers preempted (forced down) at this event.
     pub preempted: usize,
-    /// Solver wall time.
+    /// Solver wall time (seconds).
     pub solve_time_s: f64,
     /// Whether the §3.6 fallback was taken.
     pub fell_back: bool,
+    /// Whether the solve warm-started from the previous event's solution.
+    pub warm_started: bool,
     /// Pool size after the event.
     pub pool_size: usize,
 }
 
-/// The coordinator.
+/// The coordinator: owns the idle-node pool, the trainer queue, the
+/// objective and one long-lived [`Allocator`] — the boxed strategy that
+/// answers every [`AllocRequest`] with an [`AllocPlan`].
 pub struct Coordinator {
     pub pool: Pool,
     pub trainers: Vec<TrainerState>,
@@ -91,7 +85,9 @@ pub struct Coordinator {
     /// Maximum parallel trainers (Pj_max, §5.3).
     pub pj_max: usize,
     pub objective: Objective,
-    pub policy: Policy,
+    /// The allocation strategy; kept across events so stateful allocators
+    /// can warm-start consecutive solves (DESIGN.md §7).
+    pub allocator: Box<dyn Allocator>,
     /// Forward-looking time T_fwd (seconds).
     pub t_fwd: f64,
     /// Priority weights (only used by Objective::Priority).
@@ -103,7 +99,15 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(policy: Policy, objective: Objective, t_fwd: f64, pj_max: usize) -> Self {
+    /// Build a coordinator. `allocator` is usually obtained from
+    /// [`allocator_by_name`]; `t_fwd` is the forward-looking horizon in
+    /// seconds; `pj_max` caps concurrently admitted trainers (§5.3).
+    pub fn new(
+        allocator: Box<dyn Allocator>,
+        objective: Objective,
+        t_fwd: f64,
+        pj_max: usize,
+    ) -> Self {
         Coordinator {
             pool: Pool::new(),
             trainers: Vec::new(),
@@ -111,7 +115,7 @@ impl Coordinator {
             admitted: Vec::new(),
             pj_max,
             objective,
-            policy,
+            allocator,
             t_fwd,
             weights: BTreeMap::new(),
             event_log: Vec::new(),
@@ -119,8 +123,14 @@ impl Coordinator {
         }
     }
 
-    /// Submit a trainer; returns its id. Admission is immediate if below
-    /// Pj_max; reallocation is left to the caller/event loop.
+    /// Name of the active allocation strategy (for reports).
+    pub fn policy_name(&self) -> &'static str {
+        self.allocator.name()
+    }
+
+    /// Submit a trainer at time `now` (seconds); returns its id. Admission
+    /// is immediate if below Pj_max; reallocation is left to the
+    /// caller/event loop.
     pub fn submit(&mut self, spec: TrainerSpec, now: f64) -> TrainerId {
         let id = self.trainers.len();
         self.trainers.push(TrainerState::new(id, spec, now));
@@ -140,22 +150,25 @@ impl Coordinator {
         }
     }
 
+    /// Number of currently admitted (waiting or running) trainers.
     pub fn n_active(&self) -> usize {
         self.admitted.len()
     }
 
+    /// True when no trainer is queued or admitted anymore.
     pub fn all_done(&self) -> bool {
         self.queue.is_empty() && self.admitted.is_empty()
     }
 
-    /// Currently running scale of a trainer.
+    /// Currently running scale (node count) of a trainer.
     pub fn scale_of(&self, id: TrainerId) -> u32 {
         self.pool.count_of(id)
     }
 
-    /// Advance all admitted trainers by `dt` at their current scales.
-    /// Completions are detected by the caller via [`Self::finish_time_within`]
-    /// + [`Self::complete_finished`] so reallocation happens at the exact
+    /// Advance all admitted trainers by `dt` seconds starting at time
+    /// `now` (seconds), at their current scales. Completions are detected
+    /// by the caller via [`Self::finish_time_within`] +
+    /// [`Self::complete_finished`] so reallocation happens at the exact
     /// completion instant. Returns total samples processed.
     pub fn advance(&mut self, now: f64, dt: f64) -> f64 {
         let mut total = 0.0;
@@ -171,7 +184,8 @@ impl Coordinator {
     pub const EPS_SAMPLES: f64 = 1e-6;
 
     /// Earliest completion time of any admitted trainer within
-    /// `(now, now+dt]` at current scales, if any.
+    /// `(now, now+dt]` at current scales, if any. `now` and `dt` are in
+    /// seconds; the returned time is absolute (seconds from replay start).
     pub fn finish_time_within(&self, now: f64, dt: f64) -> Option<f64> {
         let mut best: Option<f64> = None;
         for &id in &self.admitted {
@@ -197,8 +211,9 @@ impl Coordinator {
         best
     }
 
-    /// Mark trainers that have no remaining work as done, release their
-    /// nodes, admit queued trainers. Returns ids completed.
+    /// Mark trainers that have no remaining work as done at time `now`
+    /// (seconds), release their nodes, admit queued trainers. Returns ids
+    /// completed.
     pub fn complete_finished(&mut self, now: f64) -> Vec<TrainerId> {
         let mut done = Vec::new();
         let ids: Vec<TrainerId> = self.admitted.clone();
@@ -217,7 +232,8 @@ impl Coordinator {
         done
     }
 
-    /// Handle a pool event (nodes join/leave), then reallocate.
+    /// Handle a pool event (nodes join/leave) at time `now` (seconds),
+    /// then reallocate via the active [`Allocator`].
     pub fn handle_event(&mut self, now: f64, ev: &PoolEvent) {
         self.pool.join(&ev.joins);
         let hit = self.pool.leave(&ev.leaves);
@@ -239,7 +255,9 @@ impl Coordinator {
         self.reallocate(now, preempted);
     }
 
-    /// Build the allocation request for the currently admitted trainers.
+    /// Build the [`AllocRequest`] for the currently admitted trainers:
+    /// their current scales, bounds, rescale costs (with the global
+    /// multiplier applied) and objective breakpoints.
     pub fn request(&self) -> AllocRequest {
         let jobs: Vec<AllocJob> = self
             .admitted
@@ -261,13 +279,16 @@ impl Coordinator {
         AllocRequest { jobs, pool_size: self.pool.len() as u32, t_fwd: self.t_fwd }
     }
 
-    /// Re-run the allocator and apply the decision (records an event).
+    /// Re-run the allocator at time `now` (seconds) and apply its
+    /// [`AllocPlan`]: pay Eqn-16 rescale costs, move nodes, record an
+    /// [`EventRecord`]. `preempted` is the number of trainers forced down
+    /// by the triggering event (0 for completions/submissions).
     pub fn reallocate(&mut self, now: f64, preempted: usize) {
         let req = self.request();
-        let outcome = self.policy.as_allocator().allocate(&req);
+        let plan = self.allocator.allocate(&req);
         let mut rescale_cost_samples = 0.0;
         for job in &req.jobs {
-            let new = outcome.targets.get(&job.id).copied().unwrap_or(0);
+            let new = plan.targets.get(&job.id).copied().unwrap_or(0);
             let old = job.current;
             if new != old {
                 let t = &mut self.trainers[job.id];
@@ -286,13 +307,14 @@ impl Coordinator {
                 t.spec.r_dw = saved_dw;
             }
         }
-        self.pool.apply_allocation(&outcome.targets);
+        self.pool.apply_allocation(&plan.targets);
         self.event_log.push(EventRecord {
             t: now,
             rescale_cost_samples,
             preempted,
-            solve_time_s: outcome.stats.solve_time.as_secs_f64(),
-            fell_back: outcome.stats.fell_back,
+            solve_time_s: plan.stats.solve_time.as_secs_f64(),
+            fell_back: plan.stats.fell_back,
+            warm_started: plan.stats.warm_started,
             pool_size: self.pool.len(),
         });
     }
@@ -316,7 +338,18 @@ mod tests {
     }
 
     fn coord(pj_max: usize) -> Coordinator {
-        Coordinator::new(Policy::Dp(DpAllocator), Objective::Throughput, 120.0, pj_max)
+        Coordinator::new(Box::new(DpAllocator), Objective::Throughput, 120.0, pj_max)
+    }
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in ALLOCATOR_NAMES {
+            let a = allocator_by_name(name).expect(name);
+            assert!(!a.name().is_empty());
+        }
+        assert!(allocator_by_name("MILP").is_some(), "case-insensitive");
+        assert!(allocator_by_name("equal-share").is_some(), "alias");
+        assert!(allocator_by_name("quantum").is_none());
     }
 
     #[test]

@@ -10,12 +10,14 @@
 //! training jobs ("Trainers"), trading rescaling cost against expected
 //! gain over a forward-looking horizon.
 //!
-//! Layering (see DESIGN.md):
+//! Layering (see DESIGN.md §2):
 //! * **L3 (this crate)** — coordinator: idle-node pool, event handling,
-//!   a from-scratch MILP solver ([`milp`]), the paper's per-node and
-//!   aggregate formulations plus an exact DP fast path ([`coordinator`]),
-//!   trace substrate ([`trace`]), replay engine ([`sim`]), and a PJRT
-//!   runtime ([`runtime`]) that executes the AOT-compiled training step.
+//!   a from-scratch MILP solver with warm-start incremental resolve
+//!   ([`milp`], DESIGN.md §7), the paper's per-node and aggregate
+//!   formulations plus an exact DP fast path behind one `Allocator`
+//!   trait ([`coordinator`]), trace substrate ([`trace`]), replay and
+//!   multi-scenario sweep engines ([`sim`]), and a PJRT runtime
+//!   ([`runtime`]) that executes the AOT-compiled training step.
 //! * **L2 (python/compile/model.py)** — JAX train-step (fwd/bwd + SGD),
 //!   AOT-lowered to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the hot spots,

@@ -5,6 +5,8 @@
 //! * `characterize`  — idle-node statistics of a machine preset (Tab 1/Fig 1)
 //! * `synth-trace`   — generate + save an idle-node event trace (CSV)
 //! * `replay`        — replay a trace against a Trainer workload (§5)
+//! * `sweep`         — N (trace × policy × objective) replays in parallel,
+//!                     with a comparison table
 //! * `milp-bench`    — MILP solve-time scaling (Fig 5)
 //! * `scaling-table` — the Tab 2 model zoo
 //! * `train`         — live mode: real AOT Trainers on a replayed trace
@@ -12,14 +14,15 @@
 //! Run `bftrainer <cmd> --help` for per-command options.
 
 use bftrainer::config::{ExperimentConfig, WorkloadKind};
-use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective};
 use bftrainer::mini::argparse::Command;
 use bftrainer::scaling::zoo::{self, Dnn, TAB2_NODES};
-use bftrainer::sim::{self, ReplayOpts};
+use bftrainer::sim::{self, ReplayOpts, SweepCase};
 use bftrainer::trace::{self, machines};
 use bftrainer::util::table::{f, Table};
 use bftrainer::workload;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -27,6 +30,7 @@ fn main() {
         Some("characterize") => cmd_characterize(&args[1..]),
         Some("synth-trace") => cmd_synth_trace(&args[1..]),
         Some("replay") => cmd_replay(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         Some("milp-bench") => cmd_milp_bench(&args[1..]),
         Some("scaling-table") => cmd_scaling_table(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
@@ -51,6 +55,7 @@ fn print_usage() {
          characterize   idle-node statistics for a machine preset (Tab 1 / Fig 1)\n  \
          synth-trace    generate an idle-node event trace CSV\n  \
          replay         replay a trace against a Trainer workload (§5 experiments)\n  \
+         sweep          parallel multi-scenario sweep (trace × policy × objective)\n  \
          milp-bench     MILP solve-time scaling (Fig 5)\n  \
          scaling-table  print the Tab 2 DNN zoo\n  \
          train          live mode — real AOT-compiled Trainers (needs `make artifacts`)"
@@ -133,9 +138,9 @@ fn cmd_synth_trace(args: &[String]) -> i32 {
 }
 
 fn build_coordinator(cfg: &ExperimentConfig) -> Coordinator {
-    let policy = Policy::by_name(&cfg.policy).expect("validated");
+    let allocator = allocator_by_name(&cfg.policy).expect("validated");
     let objective = Objective::parse(&cfg.objective).expect("validated");
-    let mut c = Coordinator::new(policy, objective, cfg.t_fwd, cfg.pj_max);
+    let mut c = Coordinator::new(allocator, objective, cfg.t_fwd, cfg.pj_max);
     c.rescale_cost_multiplier = cfg.rescale_multiplier;
     c
 }
@@ -245,6 +250,127 @@ fn cmd_replay(args: &[String]) -> i32 {
     0
 }
 
+fn cmd_sweep(args: &[String]) -> i32 {
+    let cmd = Command::new("sweep", "parallel multi-scenario sweep (trace × policy × objective)")
+        .opt("policies", "milp,dp,heuristic", "comma list: milp | dp | heuristic | milp-pernode")
+        .opt("objectives", "throughput", "comma list: throughput | efficiency | priority")
+        .opt("machine", "summit", "machine preset")
+        .opt("seeds", "42", "comma list of trace seeds (one scenario each)")
+        .opt("hours", "8", "trace hours per scenario")
+        .opt("workload", "hpo", "hpo | diverse")
+        .opt("trainers", "20", "number of trainers")
+        .opt("dnn", "ShuffleNet", "HPO model (Tab 2 name)")
+        .opt("epochs", "2", "ImageNet epochs per trainer")
+        .opt("mean-gap-s", "600", "mean submission gap for the diverse workload (s)")
+        .opt("t-fwd", "120", "forward-looking time (s)")
+        .opt("pj-max", "10", "max parallel trainers")
+        .opt("rescale-multiplier", "1", "global rescale-cost multiplier")
+        .opt("threads", "0", "worker threads (0 = one per core)")
+        .flag("run-to-completion", "continue each replay past trace end");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+
+    let policies: Vec<String> = m
+        .get_str("policies")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    for p in &policies {
+        if allocator_by_name(p).is_none() {
+            eprintln!("unknown policy {p:?}");
+            return 2;
+        }
+    }
+    let objectives: Vec<Objective> = {
+        let mut v = Vec::new();
+        for s in m.get_str("objectives").unwrap().split(',').filter(|s| !s.trim().is_empty()) {
+            match Objective::parse(s.trim()) {
+                Some(o) => v.push(o),
+                None => {
+                    eprintln!("unknown objective {s:?}");
+                    return 2;
+                }
+            }
+        }
+        v
+    };
+    let seeds: Vec<u64> = {
+        let mut v = Vec::new();
+        for s in m.get_str("seeds").unwrap().split(',').filter(|s| !s.trim().is_empty()) {
+            match s.trim().parse() {
+                Ok(x) => v.push(x),
+                Err(e) => {
+                    eprintln!("--seeds: {e}");
+                    return 2;
+                }
+            }
+        }
+        v
+    };
+    if policies.is_empty() || objectives.is_empty() || seeds.is_empty() {
+        eprintln!("need at least one policy, objective and seed");
+        return 2;
+    }
+    let Some(mut params) = machines::by_name(&m.get_str("machine").unwrap()) else {
+        eprintln!("unknown machine");
+        return 2;
+    };
+    params.duration_s = m.get_f64("hours").unwrap() * 3600.0;
+
+    let trainers = m.get_usize("trainers").unwrap();
+    let epochs = m.get_f64("epochs").unwrap();
+    let mean_gap_s = m.get_f64("mean-gap-s").unwrap();
+    let diverse = m.get_str("workload").unwrap() == "diverse";
+    let dnn = match Dnn::from_name(&m.get_str("dnn").unwrap()) {
+        Some(d) => d,
+        None => {
+            eprintln!("unknown dnn");
+            return 2;
+        }
+    };
+    let opts =
+        ReplayOpts { run_to_completion: m.flag("run-to-completion"), ..Default::default() };
+
+    // One trace + workload per seed, shared across the policy × objective
+    // grid of that scenario.
+    let mut cases = Vec::new();
+    for &seed in &seeds {
+        let trace = Arc::new(trace::generate(&params, seed));
+        let wl = Arc::new(if diverse {
+            workload::diverse_poisson(trainers, epochs, mean_gap_s, seed)
+        } else {
+            workload::hpo_campaign(dnn, trainers, epochs)
+        });
+        for policy in &policies {
+            for objective in &objectives {
+                cases.push(SweepCase {
+                    label: format!("{}/s{}", m.get_str("machine").unwrap(), seed),
+                    policy: policy.clone(),
+                    objective: objective.clone(),
+                    t_fwd: m.get_f64("t-fwd").unwrap(),
+                    pj_max: m.get_usize("pj-max").unwrap(),
+                    rescale_multiplier: m.get_f64("rescale-multiplier").unwrap(),
+                    trace: trace.clone(),
+                    workload: wl.clone(),
+                    opts: opts.clone(),
+                });
+            }
+        }
+    }
+    eprintln!(
+        "sweep: {} cases ({} seeds × {} policies × {} objectives)",
+        cases.len(),
+        seeds.len(),
+        policies.len(),
+        objectives.len()
+    );
+    let outcomes = sim::run_sweep(&cases, m.get_usize("threads").unwrap());
+    println!("{}", sim::comparison_table(&outcomes).render());
+    println!("(* = best U within its scenario)");
+    0
+}
+
 fn cmd_milp_bench(args: &[String]) -> i32 {
     let cmd = Command::new("milp-bench", "MILP solve-time scaling (Fig 5)")
         .opt("jobs", "5,10,20,30", "job counts")
@@ -347,7 +473,7 @@ fn run_train(m: &bftrainer::mini::argparse::Matches) -> anyhow::Result<()> {
         log_every: 10,
     };
     let mut coord = Coordinator::new(
-        Policy::by_name("milp").unwrap(),
+        allocator_by_name("milp").unwrap(),
         Objective::Throughput,
         120.0,
         m.get_usize("trainers").unwrap(),

@@ -9,7 +9,7 @@
 //! can be injected so the search starts with a strong bound.
 
 use super::model::{Model, VarKind};
-use super::simplex::{solve_lp, LpStatus};
+use super::simplex::{solve_lp_warm, LpBasis, LpStatus};
 use std::collections::BinaryHeap;
 use std::time::{Duration, Instant};
 
@@ -54,6 +54,24 @@ pub struct MilpResult {
     pub bound: f64,
     pub nodes_explored: usize,
     pub solve_time: Duration,
+    /// Basis of the root LP relaxation — feed it back via
+    /// [`MilpWarmStart::basis`] to warm-start the next solve of a
+    /// structurally identical model (the incremental-resolve hot path).
+    pub root_basis: LpBasis,
+}
+
+/// Warm-start inputs for [`solve_warm`]. Both pieces are optional and
+/// independently safe to omit: the incumbent only ever *prunes* the search
+/// (it is discarded if infeasible), the basis only changes the simplex
+/// pivot path (it is discarded if the tableau shape changed), so a
+/// warm-started solve proves the same optimal objective as a cold one.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MilpWarmStart<'a> {
+    /// A feasible point to seed the incumbent (e.g. the previous event's
+    /// solution, or the DP fast-path optimum).
+    pub incumbent: Option<&'a [f64]>,
+    /// A previous root-LP basis for the simplex to start from.
+    pub basis: Option<&'a LpBasis>,
 }
 
 /// One open node: bound overrides + SOS2 forced-zero masks.
@@ -89,8 +107,18 @@ impl Ord for HeapNode {
 }
 
 /// Solve `model` (direction taken from the model). `warm_start`, if given
-/// and feasible, seeds the incumbent.
+/// and feasible, seeds the incumbent. See [`solve_warm`] for the full
+/// warm-start surface (incumbent + simplex basis).
 pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> MilpResult {
+    solve_warm(model, limits, &MilpWarmStart { incumbent: warm_start, basis: None })
+}
+
+/// Solve `model` with the full warm-start surface: an optional incumbent
+/// (pruning bound) and an optional previous root basis (simplex start).
+/// On consecutive-event reallocation problems — which differ by a few
+/// nodes joining/leaving — the previous solution is usually optimal or
+/// near-optimal again, so the search reduces to the optimality proof.
+pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpResult {
     let t0 = Instant::now();
     // Internally work in "maximize" space: flip sign for Minimize.
     let max_sign = match model.direction {
@@ -100,14 +128,14 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
     let to_max = |v: f64| max_sign * v;
 
     let mut incumbent: Option<(Vec<f64>, f64)> = None; // (x, obj in maximize space)
-    if let Some(ws) = warm_start {
+    if let Some(ws) = warm.incumbent {
         if model.is_feasible(ws, 1e-6) {
             incumbent = Some((ws.to_vec(), to_max(model.objective_value(ws))));
         }
     }
 
     let root_bounds: Vec<(f64, f64)> = model.vars.iter().map(|v| (v.lo, v.hi)).collect();
-    let root_lp = solve_lp(model, &root_bounds);
+    let root_lp = solve_lp_warm(model, &root_bounds, warm.basis);
     match root_lp.status {
         LpStatus::Infeasible => {
             return MilpResult {
@@ -117,6 +145,7 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
                 bound: 0.0,
                 nodes_explored: 1,
                 solve_time: t0.elapsed(),
+                root_basis: LpBasis::default(),
             };
         }
         LpStatus::Unbounded => {
@@ -127,6 +156,7 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
                 bound: f64::INFINITY,
                 nodes_explored: 1,
                 solve_time: t0.elapsed(),
+                root_basis: LpBasis::default(),
             };
         }
         LpStatus::Stalled => {
@@ -136,6 +166,7 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
         }
         LpStatus::Optimal => {}
     }
+    let root_basis = root_lp.basis.clone();
 
     let mut heap = BinaryHeap::new();
     heap.push(HeapNode(Node { bounds: root_bounds, relax_obj: to_max(root_lp.objective), depth: 0 }));
@@ -158,6 +189,7 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
                     bound: max_sign * best_bound,
                     nodes_explored: nodes,
                     solve_time: t0.elapsed(),
+                    root_basis,
                 };
             }
         }
@@ -166,7 +198,10 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
             break;
         }
 
-        let lp = solve_lp(model, &node.bounds);
+        // Child relaxations reuse the root basis: when branching did not
+        // change the tableau shape (signature check inside) the simplex
+        // hot-starts near the root optimum instead of running phase 1.
+        let lp = solve_lp_warm(model, &node.bounds, Some(&root_basis));
         let (x, relax_obj) = match lp.status {
             LpStatus::Optimal => (lp.x, to_max(lp.objective)),
             _ => continue, // infeasible/stalled child: prune
@@ -249,6 +284,7 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
                 bound: max_sign * bound,
                 nodes_explored: nodes,
                 solve_time,
+                root_basis,
             }
         }
         None => MilpResult {
@@ -258,6 +294,7 @@ pub fn solve(model: &Model, limits: &Limits, warm_start: Option<&[f64]>) -> Milp
             bound: max_sign * best_bound,
             nodes_explored: nodes,
             solve_time,
+            root_basis,
         },
     }
 }
@@ -276,6 +313,7 @@ fn stalled_result(
             bound: f64::INFINITY * max_sign,
             nodes_explored: nodes,
             solve_time: t0.elapsed(),
+            root_basis: LpBasis::default(),
         },
         None => MilpResult {
             status: MilpStatus::NoSolution,
@@ -284,6 +322,7 @@ fn stalled_result(
             bound: f64::INFINITY * max_sign,
             nodes_explored: nodes,
             solve_time: t0.elapsed(),
+            root_basis: LpBasis::default(),
         },
     }
 }
@@ -493,6 +532,47 @@ mod tests {
         let r = solve(&m, &Limits::default(), Some(&[5.0])); // infeasible ws
         assert_eq!(r.status, MilpStatus::Optimal);
         assert!((r.objective - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warm_solve_with_prev_solution_and_basis_matches_cold() {
+        // The incremental-resolve contract: solving a slightly perturbed
+        // model warm (previous optimum as incumbent + previous root basis)
+        // proves the same optimal objective a cold solve proves.
+        let build = |cap: f64| {
+            let mut m = Model::new(Direction::Maximize);
+            let mut capex = LinExpr::new();
+            let mut obj = LinExpr::new();
+            for i in 0..10 {
+                let b = m.binary(format!("b{i}"));
+                capex.add(b, 1.0 + (i % 5) as f64);
+                obj.add(b, 2.0 + ((i * 7) % 9) as f64);
+            }
+            m.constrain(capex, Sense::Le, cap, "cap");
+            m.set_objective(obj, 0.0);
+            m
+        };
+        let m1 = build(12.0);
+        let r1 = solve(&m1, &Limits::default(), None);
+        assert_eq!(r1.status, MilpStatus::Optimal);
+        assert!(!r1.root_basis.is_empty());
+        for cap in [10.0, 11.0, 13.0, 14.0] {
+            let m2 = build(cap);
+            let cold = solve(&m2, &Limits::default(), None);
+            let warm = solve_warm(
+                &m2,
+                &Limits::default(),
+                &MilpWarmStart { incumbent: Some(&r1.x), basis: Some(&r1.root_basis) },
+            );
+            assert_eq!(cold.status, MilpStatus::Optimal, "cap {cap}");
+            assert_eq!(warm.status, MilpStatus::Optimal, "cap {cap}");
+            assert!(
+                (warm.objective - cold.objective).abs() < 1e-6,
+                "cap {cap}: warm {} vs cold {}",
+                warm.objective,
+                cold.objective
+            );
+        }
     }
 
     #[test]

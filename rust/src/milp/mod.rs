@@ -2,16 +2,18 @@
 //! external solver).
 //!
 //! * [`model`] — variables / linear constraints / SOS2 sets / objective
-//! * [`simplex`] — two-phase dense simplex for LP relaxations
+//! * [`simplex`] — two-phase dense simplex for LP relaxations, with
+//!   basis re-use across structurally identical solves
 //! * [`branch_bound`] — best-first B&B with integer and SOS2 branching,
-//!   warm starts, and the paper's timeout semantics
+//!   incumbent/basis warm starts, and the paper's timeout semantics
 //!
-//! The allocation formulations built on top live in [`crate::coordinator`].
+//! The allocation formulations built on top live in [`crate::coordinator`];
+//! the warm-start contract is documented in `DESIGN.md` §7.
 
 pub mod branch_bound;
 pub mod model;
 pub mod simplex;
 
-pub use branch_bound::{solve, Limits, MilpResult, MilpStatus};
+pub use branch_bound::{solve, solve_warm, Limits, MilpResult, MilpStatus, MilpWarmStart};
 pub use model::{Direction, LinExpr, Model, Sense, Sos2, Var, VarId, VarKind};
-pub use simplex::{model_bounds, solve_lp, LpSolution, LpStatus};
+pub use simplex::{model_bounds, solve_lp, solve_lp_warm, LpBasis, LpSolution, LpStatus};

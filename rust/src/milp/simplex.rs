@@ -23,12 +23,110 @@ pub enum LpStatus {
 }
 
 /// LP result: status, primal point (original variable space), objective
-/// value in the model's direction (including offset).
+/// value in the model's direction (including offset), plus the final
+/// simplex basis for warm-starting a later, structurally identical solve.
 #[derive(Clone, Debug)]
 pub struct LpSolution {
     pub status: LpStatus,
     pub x: Vec<f64>,
     pub objective: f64,
+    /// Final basis; empty unless `status == Optimal`.
+    pub basis: LpBasis,
+}
+
+/// A simplex basis snapshot: the basic column of each tableau row plus a
+/// shape signature of the tableau it came from. [`solve_lp_warm`] re-uses
+/// a basis only when the new tableau's signature matches exactly — bound
+/// and rhs *values* may differ (that is the incremental-resolve case),
+/// the row/column *layout* may not.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LpBasis {
+    /// Basic column index per tableau row.
+    pub cols: Vec<usize>,
+    /// Fingerprint of the tableau shape the basis belongs to.
+    pub sig: u64,
+}
+
+impl LpBasis {
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+}
+
+/// One raw constraint row before sense/rhs normalization.
+struct Row {
+    coeffs: Vec<(usize, f64)>,
+    sense: Sense,
+    rhs: f64,
+}
+
+/// A normalized row (rhs >= 0) with its slack/artificial column layout.
+struct Norm {
+    coeffs: Vec<(usize, f64)>,
+    rhs: f64,
+    slack: Option<(usize, f64)>, // (col, +1/-1)
+    artificial: Option<usize>,
+}
+
+#[inline]
+fn fnv(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+}
+
+/// Build the dense tableau + initial (slack/artificial) basis from `norms`.
+fn build_tableau(norms: &[Norm], ncols: usize, basis: &mut [usize]) -> Vec<Vec<f64>> {
+    let m = norms.len();
+    let mut t = vec![vec![0.0f64; ncols + 1]; m];
+    for (i, norm) in norms.iter().enumerate() {
+        basis[i] = usize::MAX;
+        for &(j, v) in &norm.coeffs {
+            t[i][j] += v;
+        }
+        if let Some((j, v)) = norm.slack {
+            t[i][j] = v;
+            if v > 0.0 && norm.artificial.is_none() {
+                basis[i] = j;
+            }
+        }
+        if let Some(j) = norm.artificial {
+            t[i][j] = 1.0;
+            basis[i] = j;
+        }
+        t[i][ncols] = norm.rhs;
+        debug_assert!(basis[i] != usize::MAX);
+    }
+    t
+}
+
+/// Pivot the tableau onto the given warm basis (one column per row, rows
+/// may be reordered). Returns false — leaving the tableau unusable, the
+/// caller must rebuild — when the basis is singular or not primal
+/// feasible under the current rhs.
+fn try_warm_basis(t: &mut [Vec<f64>], basis: &mut [usize], cols: &[usize]) -> bool {
+    let m = t.len();
+    let ncols = t[0].len() - 1;
+    let mut dummy_obj = vec![0.0f64; ncols + 1];
+    for (i, &c) in cols.iter().enumerate() {
+        // Partial pivoting among the not-yet-assigned rows.
+        let mut best = i;
+        let mut best_abs = t[i][c].abs();
+        for r in (i + 1)..m {
+            let a = t[r][c].abs();
+            if a > best_abs {
+                best_abs = a;
+                best = r;
+            }
+        }
+        if best_abs < 1e-8 {
+            return false; // singular basis for this tableau
+        }
+        t.swap(i, best);
+        basis.swap(i, best);
+        pivot(t, &mut dummy_obj, basis, i, c);
+    }
+    // Primal feasible under the new rhs?
+    (0..m).all(|i| t[i][ncols] >= -1e-7)
 }
 
 /// Solve the LP relaxation of `model` with per-variable bounds overridden
@@ -36,13 +134,27 @@ pub struct LpSolution {
 /// via [`model_bounds`]). Integrality and SOS2 conditions are ignored —
 /// branch-and-bound layers them on top.
 pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
+    solve_lp_warm(model, bounds, None)
+}
+
+/// Like [`solve_lp`], but optionally warm-started from a previous solve's
+/// basis. When the basis matches the new tableau's shape signature, is
+/// nonsingular and primal feasible under the new bounds/rhs, phase 1 is
+/// skipped entirely and phase 2 starts at (or near) the previous optimum;
+/// otherwise the solver silently falls back to the cold two-phase path.
+pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis>) -> LpSolution {
     assert_eq!(bounds.len(), model.vars.len());
     let n = model.vars.len();
 
     // Quick bound sanity: empty box -> infeasible.
     for &(lo, hi) in bounds {
         if lo > hi + EPS {
-            return LpSolution { status: LpStatus::Infeasible, x: vec![], objective: 0.0 };
+            return LpSolution {
+                status: LpStatus::Infeasible,
+                x: vec![],
+                objective: 0.0,
+                basis: LpBasis::default(),
+            };
         }
         assert!(lo.is_finite(), "lower bounds must be finite");
     }
@@ -59,11 +171,6 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
 
     // Shift x = y + lo, y >= 0. Collect rows: constraints with adjusted
     // rhs, plus upper-bound rows y_i <= hi - lo (when finite).
-    struct Row {
-        coeffs: Vec<(usize, f64)>,
-        sense: Sense,
-        rhs: f64,
-    }
     let mut rows: Vec<Row> = Vec::with_capacity(model.constraints.len() + n);
     for con in &model.constraints {
         let mut rhs = con.rhs;
@@ -74,38 +181,25 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
         }
         rows.push(Row { coeffs, sense: con.sense, rhs });
     }
+    // One bound row per finite-upper-bound variable, in variable order:
+    // `y_i <= hi - lo` when the box has width, the equality `y_i = 0`
+    // pinning a collapsed (fixed) variable otherwise. Emitting both kinds
+    // from a single ordered pass keeps the row layout stable across
+    // re-solves, which the warm-start signature relies on.
     for (i, &(lo, hi)) in bounds.iter().enumerate() {
-        if hi.is_finite() && hi - lo > EPS {
-            rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Le, rhs: hi - lo });
-        }
-    }
-    // Fixed variables (hi == lo): y_i <= 0 handled by not adding a row and
-    // zeroing the column is implicit since y_i >= 0 and we must also stop
-    // it from increasing — add equality row y_i = 0.
-    for (i, &(lo, hi)) in bounds.iter().enumerate() {
-        if hi.is_finite() && hi - lo <= EPS {
-            rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Eq, rhs: 0.0 });
+        if hi.is_finite() {
+            if hi - lo > EPS {
+                rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Le, rhs: hi - lo });
+            } else {
+                rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Eq, rhs: 0.0 });
+            }
         }
     }
 
     let m = rows.len();
-    // Column layout: [structural 0..n | slack/surplus | artificial]
-    #[allow(unused_assignments)]
-    let mut n_slack = 0usize;
-    for r in &rows {
-        if !matches!(r.sense, Sense::Eq) {
-            n_slack += 1;
-        }
-        let _ = r;
-    }
-    // Count artificials: Ge (after b>=0 normalization) and Eq rows get one;
-    // Le rows with negative rhs flip to Ge. Determine after normalization.
-    struct Norm {
-        coeffs: Vec<(usize, f64)>,
-        rhs: f64,
-        slack: Option<(usize, f64)>, // (col, +1/-1)
-        artificial: Option<usize>,
-    }
+    // Column layout: [structural 0..n | slack/surplus | artificial].
+    // Artificials: Ge (after b>=0 normalization) and Eq rows get one; Le
+    // rows with negative rhs flip to Ge. Determined after normalization.
     let mut norms: Vec<Norm> = Vec::with_capacity(m);
     let mut slack_idx = 0usize;
     // First pass: normalize senses to rhs >= 0 and assign slack columns.
@@ -141,7 +235,7 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
         needs_artificial.push(art);
         norms.push(Norm { coeffs, rhs, slack, artificial: None });
     }
-    n_slack = slack_idx;
+    let n_slack = slack_idx;
     let mut n_art = 0usize;
     for (i, norm) in norms.iter_mut().enumerate() {
         if needs_artificial[i] {
@@ -151,32 +245,45 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
     }
     let ncols = n + n_slack + n_art;
 
+    // Tableau shape signature: dimensions plus each row's slack sign and
+    // artificial presence. Equal signatures <=> identical column layout.
+    let mut sig = 0xCBF2_9CE4_8422_2325u64;
+    fnv(&mut sig, m as u64);
+    fnv(&mut sig, n as u64);
+    fnv(&mut sig, ncols as u64);
+    for norm in &norms {
+        fnv(&mut sig, match norm.slack {
+            Some((_, s)) if s > 0.0 => 1,
+            Some(_) => 2,
+            None => 3,
+        });
+        fnv(&mut sig, norm.artificial.is_some() as u64);
+    }
+
     // Dense tableau: m rows × (ncols + 1), last column = rhs.
-    let mut t = vec![vec![0.0f64; ncols + 1]; m];
     let mut basis = vec![usize::MAX; m];
-    for (i, norm) in norms.iter().enumerate() {
-        for &(j, v) in &norm.coeffs {
-            t[i][j] += v;
-        }
-        if let Some((j, v)) = norm.slack {
-            t[i][j] = v;
-            if v > 0.0 && norm.artificial.is_none() {
-                basis[i] = j;
+    let mut t = build_tableau(&norms, ncols, &mut basis);
+
+    // Warm start: adopt the previous basis if it still fits. Artificial
+    // columns are never accepted back into a warm basis — a clean optimal
+    // basis only holds structural and slack columns.
+    let mut warmed = false;
+    if let Some(w) = warm {
+        if m > 0 && w.sig == sig && w.cols.len() == m && w.cols.iter().all(|&c| c < n + n_slack) {
+            if try_warm_basis(&mut t, &mut basis, &w.cols) {
+                warmed = true;
+            } else {
+                // Pivoting mutated the tableau: rebuild for the cold path.
+                t = build_tableau(&norms, ncols, &mut basis);
             }
         }
-        if let Some(j) = norm.artificial {
-            t[i][j] = 1.0;
-            basis[i] = j;
-        }
-        t[i][ncols] = norm.rhs;
-        debug_assert!(basis[i] != usize::MAX);
     }
 
     // Objective rows as reduced-cost vectors. obj[ncols] holds -z.
     // Phase 1: minimize sum of artificials.
     let max_iter = 200 * (m + ncols) + 1000;
 
-    if n_art > 0 {
+    if !warmed && n_art > 0 {
         let mut obj1 = vec![0.0f64; ncols + 1];
         for j in (n + n_slack)..ncols {
             obj1[j] = 1.0;
@@ -194,15 +301,15 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
             SimplexOutcome::Unbounded => {
                 // Phase-1 objective is bounded below by 0; reaching here
                 // means numerical trouble.
-                return LpSolution { status: LpStatus::Stalled, x: vec![], objective: 0.0 };
+                return lp_failure(LpStatus::Stalled);
             }
             SimplexOutcome::IterLimit => {
-                return LpSolution { status: LpStatus::Stalled, x: vec![], objective: 0.0 };
+                return lp_failure(LpStatus::Stalled);
             }
         }
         let phase1_val = -obj1[ncols];
         if phase1_val > 1e-7 {
-            return LpSolution { status: LpStatus::Infeasible, x: vec![], objective: 0.0 };
+            return lp_failure(LpStatus::Infeasible);
         }
         // Pivot remaining basic artificials out where possible.
         for i in 0..m {
@@ -242,10 +349,10 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
     match run_simplex(&mut t, &mut obj2, &mut basis, max_iter) {
         SimplexOutcome::Optimal => {}
         SimplexOutcome::Unbounded => {
-            return LpSolution { status: LpStatus::Unbounded, x: vec![], objective: 0.0 };
+            return lp_failure(LpStatus::Unbounded);
         }
         SimplexOutcome::IterLimit => {
-            return LpSolution { status: LpStatus::Stalled, x: vec![], objective: 0.0 };
+            return lp_failure(LpStatus::Stalled);
         }
     }
 
@@ -256,7 +363,12 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
     }
     let x: Vec<f64> = (0..n).map(|i| y[i] + bounds[i].0).collect();
     let objective = model.objective.eval(&x) + model.obj_offset;
-    LpSolution { status: LpStatus::Optimal, x, objective }
+    LpSolution { status: LpStatus::Optimal, x, objective, basis: LpBasis { cols: basis, sig } }
+}
+
+/// A non-optimal outcome (no point, no basis).
+fn lp_failure(status: LpStatus) -> LpSolution {
+    LpSolution { status, x: vec![], objective: 0.0, basis: LpBasis::default() }
 }
 
 /// Convenience: the model's own bounds as the override vector.
@@ -517,6 +629,113 @@ mod tests {
         let s = lp(&m);
         assert_eq!(s.status, LpStatus::Optimal);
         assert!((s.objective - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warm_basis_reproduces_optimum_on_rhs_change() {
+        // Same structure, perturbed constraint rhs — the incremental
+        // resolve case. The warm solve must agree with the cold solve.
+        let build = |cap: f64| {
+            let mut m = Model::new(Direction::Maximize);
+            let x = m.continuous(0.0, 10.0, "x");
+            let y = m.continuous(0.0, 10.0, "y");
+            m.constrain(LinExpr::new().term(x, 3.0).term(y, 2.0), Sense::Le, cap, "c");
+            m.set_objective(LinExpr::new().term(x, 3.0).term(y, 5.0), 0.0);
+            m
+        };
+        let m1 = build(18.0);
+        let s1 = solve_lp(&m1, &model_bounds(&m1));
+        assert_eq!(s1.status, LpStatus::Optimal);
+        assert!(!s1.basis.is_empty());
+        let m2 = build(14.0);
+        let cold = solve_lp(&m2, &model_bounds(&m2));
+        let warm = solve_lp_warm(&m2, &model_bounds(&m2), Some(&s1.basis));
+        assert_eq!(warm.status, LpStatus::Optimal);
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-9,
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+    }
+
+    #[test]
+    fn warm_basis_shape_mismatch_falls_back() {
+        // A basis from an unrelated tableau must be rejected by the
+        // signature check, not corrupt the solve.
+        let mut m1 = Model::new(Direction::Maximize);
+        let a = m1.continuous(0.0, 5.0, "a");
+        m1.set_objective(LinExpr::new().term(a, 1.0), 0.0);
+        let s1 = solve_lp(&m1, &model_bounds(&m1));
+        assert_eq!(s1.status, LpStatus::Optimal);
+
+        let mut m2 = Model::new(Direction::Maximize);
+        let x = m2.continuous(0.0, 10.0, "x");
+        let y = m2.continuous(0.0, 10.0, "y");
+        m2.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 6.0, "cap");
+        m2.set_objective(LinExpr::new().term(x, 2.0).term(y, 1.0), 0.0);
+        let warm = solve_lp_warm(&m2, &model_bounds(&m2), Some(&s1.basis));
+        assert_eq!(warm.status, LpStatus::Optimal);
+        assert!((warm.objective - 12.0).abs() < 1e-6, "{}", warm.objective);
+    }
+
+    #[test]
+    fn warm_basis_with_fixed_variable_falls_back() {
+        // Fixing a variable turns its bound row from Le into Eq, changing
+        // the tableau shape: the stale basis must be ignored safely.
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 10.0, "cap");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 2.0), 0.0);
+        let s1 = solve_lp(&m, &model_bounds(&m));
+        assert_eq!(s1.status, LpStatus::Optimal);
+        let s2 = solve_lp_warm(&m, &[(4.0, 4.0), (0.0, 10.0)], Some(&s1.basis));
+        assert_eq!(s2.status, LpStatus::Optimal);
+        assert!((s2.x[0] - 4.0).abs() < 1e-6);
+        assert!((s2.objective - 16.0).abs() < 1e-6, "{}", s2.objective);
+    }
+
+    #[test]
+    fn random_warm_restarts_match_cold() {
+        // Property: for random LPs, solving with the previous solve's own
+        // basis (same bounds, and slightly shrunk bounds) never changes
+        // the optimal objective.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xBA5E);
+        for _case in 0..40 {
+            let nv = rng.range_usize(2, 6);
+            let mut m = Model::new(Direction::Maximize);
+            let vars: Vec<_> =
+                (0..nv).map(|i| m.continuous(0.0, rng.range_f64(1.0, 8.0), format!("v{i}"))).collect();
+            let mut cap = LinExpr::new();
+            let mut obj = LinExpr::new();
+            for &v in &vars {
+                cap.add(v, rng.range_f64(0.2, 2.0));
+                obj.add(v, rng.range_f64(-1.0, 3.0));
+            }
+            m.constrain(cap, Sense::Le, rng.range_f64(1.0, 10.0), "cap");
+            m.set_objective(obj, 0.0);
+            let cold = solve_lp(&m, &model_bounds(&m));
+            assert_eq!(cold.status, LpStatus::Optimal, "case {_case}");
+            // identical bounds
+            let warm = solve_lp_warm(&m, &model_bounds(&m), Some(&cold.basis));
+            assert_eq!(warm.status, LpStatus::Optimal, "case {_case}");
+            assert!((warm.objective - cold.objective).abs() < 1e-7, "case {_case}");
+            // shrunk boxes (keeps every bound row a Le row)
+            let shrunk: Vec<(f64, f64)> =
+                model_bounds(&m).iter().map(|&(lo, hi)| (lo, lo + 0.7 * (hi - lo))).collect();
+            let wcold = solve_lp(&m, &shrunk);
+            let wwarm = solve_lp_warm(&m, &shrunk, Some(&cold.basis));
+            assert_eq!(wcold.status, LpStatus::Optimal, "case {_case}");
+            assert_eq!(wwarm.status, LpStatus::Optimal, "case {_case}");
+            assert!(
+                (wwarm.objective - wcold.objective).abs() < 1e-7,
+                "case {_case}: {} vs {}",
+                wwarm.objective,
+                wcold.objective
+            );
+        }
     }
 
     #[test]

@@ -132,7 +132,7 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{DpAllocator, Objective, Policy};
+    use crate::coordinator::{DpAllocator, Objective};
     use crate::runtime::artifact::{default_dir, Manifest};
     use crate::trace::PoolEvent;
 
@@ -149,7 +149,7 @@ mod tests {
 
         let opts = LiveOpts { virtual_step_s: 10.0, max_total_steps: 30, lr: 0.1, log_every: 0 };
         let mut coord =
-            Coordinator::new(Policy::Dp(DpAllocator), Objective::Throughput, 120.0, 4);
+            Coordinator::new(Box::new(DpAllocator), Objective::Throughput, 120.0, 4);
         let spec = live_spec(&v, "live-tiny", 4, 10_000, &opts);
         let id = coord.submit(spec, 0.0);
 

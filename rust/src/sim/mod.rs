@@ -1,13 +1,15 @@
 //! Discrete-event replay of idle-node traces against the coordinator,
-//! plus the §4.1 evaluation metrics.
+//! the §4.1 evaluation metrics, and the multi-scenario sweep driver.
 
 pub mod metrics;
 pub mod replay;
+pub mod sweep;
 
 pub use metrics::{eq_nodes, resource_integral_node_hours, ReplayMetrics, RoiStats};
 pub use replay::{preemption_within_tfwd, replay, static_baseline_outcome, ReplayOpts, ReplayResult, Workload};
+pub use sweep::{comparison_table, run_sweep, SweepCase, SweepOutcome};
 
-use crate::coordinator::{Coordinator, Objective, Policy};
+use crate::coordinator::{allocator_by_name, Coordinator, Objective};
 use crate::trace::Trace;
 
 /// Convenience wrapper used by the benches: replay `wl` on `trace` with a
@@ -24,11 +26,11 @@ pub fn run_with_baseline(
     opts: &ReplayOpts,
 ) -> (ReplayResult, f64) {
     let mut coord =
-        Coordinator::new(Policy::by_name(policy).expect("policy"), objective.clone(), t_fwd, pj_max);
+        Coordinator::new(allocator_by_name(policy).expect("policy"), objective.clone(), t_fwd, pj_max);
     coord.rescale_cost_multiplier = rescale_multiplier;
     let res = replay(coord, trace, wl, opts);
     let baseline_coord =
-        Coordinator::new(Policy::by_name(policy).expect("policy"), objective, t_fwd, pj_max);
+        Coordinator::new(allocator_by_name(policy).expect("policy"), objective, t_fwd, pj_max);
     let a_s = static_baseline_outcome(
         baseline_coord,
         res.metrics.eq_nodes.round().max(1.0) as u32,

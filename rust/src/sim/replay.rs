@@ -260,7 +260,7 @@ pub fn preemption_within_tfwd(trace: &Trace, t_fwd: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{DpAllocator, Objective, Policy};
+    use crate::coordinator::{DpAllocator, Objective};
     use crate::scaling::ScalingCurve;
 
     fn spec(total: f64) -> TrainerSpec {
@@ -276,7 +276,7 @@ mod tests {
     }
 
     fn coord() -> Coordinator {
-        Coordinator::new(Policy::Dp(DpAllocator), Objective::Throughput, 120.0, 10)
+        Coordinator::new(Box::new(DpAllocator), Objective::Throughput, 120.0, 10)
     }
 
     fn simple_trace() -> Trace {

@@ -1,0 +1,272 @@
+//! Multi-scenario sweep driver: run N `(trace × policy × objective)`
+//! replays across worker threads and emit a comparison table.
+//!
+//! The single-run replay answers "how does this policy do on this
+//! trace?"; the sweep answers the paper's §5 questions — which policy ×
+//! objective combination wins, and by how much, across scenario
+//! diversity. Each [`SweepCase`] is fully self-contained (shared traces
+//! and workloads ride behind `Arc`), so cases parallelize without any
+//! cross-talk; results come back in case order regardless of which worker
+//! finished first.
+
+use crate::coordinator::{allocator_by_name, Coordinator, Objective};
+use crate::sim::replay::{replay, static_baseline_outcome, ReplayOpts, Workload};
+use crate::trace::Trace;
+use crate::util::table::{f, Table};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One scenario of a sweep: a trace + workload pair replayed under one
+/// policy and objective.
+#[derive(Clone)]
+pub struct SweepCase {
+    /// Scenario tag shown in the table (e.g. `summit/s42`).
+    pub label: String,
+    /// Allocator name for [`allocator_by_name`].
+    pub policy: String,
+    pub objective: Objective,
+    /// Forward-looking horizon T_fwd (seconds).
+    pub t_fwd: f64,
+    /// Max parallel trainers (Pj_max).
+    pub pj_max: usize,
+    /// Global rescale-cost multiplier (1.0 = paper costs).
+    pub rescale_multiplier: f64,
+    pub trace: Arc<Trace>,
+    pub workload: Arc<Workload>,
+    pub opts: ReplayOpts,
+}
+
+/// One case's results: identification + the §4.1 metrics that matter for
+/// cross-scenario comparison.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub label: String,
+    pub policy: String,
+    pub objective: &'static str,
+    pub events: usize,
+    /// Samples processed (A_e).
+    pub samples: f64,
+    /// Static-machine baseline (A_s, §4.1.2).
+    pub baseline: f64,
+    /// Utilization efficiency U = A_e / A_s.
+    pub utilization: f64,
+    pub mean_solve_ms: f64,
+    pub max_solve_ms: f64,
+    /// §3.6 fallbacks taken.
+    pub fallbacks: usize,
+    /// Solves that warm-started from the previous event.
+    pub warm_started: usize,
+    pub preemptions: u64,
+    pub completed: usize,
+    /// Wall-clock time this case took to replay (seconds).
+    pub wall_s: f64,
+}
+
+/// Run every case, `threads` at a time (0 = one per core, capped at the
+/// case count). Returns outcomes in the same order as `cases`.
+pub fn run_sweep(cases: &[SweepCase], threads: usize) -> Vec<SweepOutcome> {
+    let n = cases.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+    .clamp(1, n);
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<SweepOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = run_case(&cases[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every sweep slot filled"))
+        .collect()
+}
+
+fn run_case(case: &SweepCase) -> SweepOutcome {
+    let t0 = Instant::now();
+    let mut coord = Coordinator::new(
+        allocator_by_name(&case.policy).expect("sweep caller validated the policy name"),
+        case.objective.clone(),
+        case.t_fwd,
+        case.pj_max,
+    );
+    coord.rescale_cost_multiplier = case.rescale_multiplier;
+    let res = replay(coord, &case.trace, &case.workload, &case.opts);
+    let baseline_coord = Coordinator::new(
+        allocator_by_name(&case.policy).unwrap(),
+        case.objective.clone(),
+        case.t_fwd,
+        case.pj_max,
+    );
+    let baseline = static_baseline_outcome(
+        baseline_coord,
+        res.metrics.eq_nodes.round().max(1.0) as u32,
+        res.metrics.duration_s,
+        &case.workload,
+    );
+    let m = &res.metrics;
+    SweepOutcome {
+        label: case.label.clone(),
+        policy: case.policy.clone(),
+        objective: case.objective.name(),
+        events: m.n_events,
+        samples: m.samples_processed,
+        baseline,
+        utilization: if baseline > 0.0 { m.samples_processed / baseline } else { 0.0 },
+        mean_solve_ms: 1e3 * m.mean_solve_s,
+        max_solve_ms: 1e3 * m.max_solve_s,
+        fallbacks: m.fallbacks,
+        warm_started: res.coordinator.event_log.iter().filter(|e| e.warm_started).count(),
+        preemptions: m.preemptions,
+        completed: m.completed,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Render the cross-scenario comparison table, one row per outcome plus a
+/// trailing `best U` marker row per scenario label.
+pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
+    let mut tab = Table::new(vec![
+        "scenario", "policy", "objective", "events", "A_e", "U", "solve ms (mean/max)", "warm",
+        "fallbacks", "preempt", "done", "wall s",
+    ]);
+    for o in outcomes {
+        let best = outcomes
+            .iter()
+            .filter(|x| x.label == o.label)
+            .all(|x| o.utilization >= x.utilization - 1e-12);
+        tab.row(vec![
+            o.label.clone(),
+            if best { format!("{} *", o.policy) } else { o.policy.clone() },
+            o.objective.to_string(),
+            o.events.to_string(),
+            format!("{:.3e}", o.samples),
+            format!("{:.1}%", 100.0 * o.utilization),
+            format!("{}/{}", f(o.mean_solve_ms, 2), f(o.max_solve_ms, 2)),
+            o.warm_started.to_string(),
+            o.fallbacks.to_string(),
+            o.preemptions.to_string(),
+            o.completed.to_string(),
+            f(o.wall_s, 1),
+        ]);
+    }
+    tab
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TrainerSpec;
+    use crate::scaling::ScalingCurve;
+    use crate::trace::PoolEvent;
+
+    fn spec(total: f64) -> TrainerSpec {
+        TrainerSpec {
+            name: "t".into(),
+            n_min: 1,
+            n_max: 8,
+            r_up: 20.0,
+            r_dw: 5.0,
+            curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+            total_samples: total,
+        }
+    }
+
+    fn tiny_trace() -> Arc<Trace> {
+        let mut t = Trace::new(16);
+        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        t.push(PoolEvent { t: 1000.0, joins: (4..8).collect(), leaves: vec![] });
+        t.push(PoolEvent { t: 2000.0, joins: vec![], leaves: (0..8).collect() });
+        Arc::new(t)
+    }
+
+    fn cases() -> Vec<SweepCase> {
+        let trace = tiny_trace();
+        let wl = Arc::new(Workload::all_at_zero(vec![spec(1e9), spec(1e9)]));
+        let mut out = Vec::new();
+        for policy in ["dp", "heuristic"] {
+            for objective in [Objective::Throughput, Objective::ScalingEfficiency] {
+                out.push(SweepCase {
+                    label: "tiny/s0".into(),
+                    policy: policy.into(),
+                    objective,
+                    t_fwd: 120.0,
+                    pj_max: 10,
+                    rescale_multiplier: 1.0,
+                    trace: trace.clone(),
+                    workload: wl.clone(),
+                    opts: ReplayOpts::default(),
+                });
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sweep_runs_all_cases_in_order() {
+        let cs = cases();
+        let outs = run_sweep(&cs, 2);
+        assert_eq!(outs.len(), cs.len());
+        for (c, o) in cs.iter().zip(&outs) {
+            assert_eq!(c.policy, o.policy);
+            assert_eq!(c.objective.name(), o.objective);
+            assert!(o.samples > 0.0, "{}: no work done", o.policy);
+            assert!(o.events >= 3);
+        }
+    }
+
+    #[test]
+    fn sweep_single_thread_matches_parallel() {
+        // Replays are deterministic: thread count must not change results.
+        let cs = cases();
+        let seq = run_sweep(&cs, 1);
+        let par = run_sweep(&cs, 4);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.events, b.events);
+            assert!((a.samples - b.samples).abs() < 1e-6, "{} vs {}", a.samples, b.samples);
+            assert!((a.utilization - b.utilization).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn exact_policy_never_below_heuristic_in_sweep() {
+        let outs = run_sweep(&cases(), 0);
+        let u = |policy: &str, obj: &str| {
+            outs.iter()
+                .find(|o| o.policy == policy && o.objective == obj)
+                .map(|o| o.utilization)
+                .unwrap()
+        };
+        assert!(u("dp", "throughput") >= u("heuristic", "throughput") - 0.02);
+    }
+
+    #[test]
+    fn comparison_table_lists_every_case() {
+        let outs = run_sweep(&cases(), 2);
+        let rendered = comparison_table(&outs).render();
+        assert!(rendered.contains("dp"));
+        assert!(rendered.contains("heuristic"));
+        assert!(rendered.contains("scaling-efficiency"));
+        assert!(rendered.contains('*'), "best-U marker missing:\n{rendered}");
+    }
+
+    #[test]
+    fn empty_sweep_is_fine() {
+        assert!(run_sweep(&[], 4).is_empty());
+    }
+}

@@ -1,8 +1,9 @@
 //! Aligned ASCII tables and CSV emission for bench reports.
 //!
-//! Every bench target regenerates one of the paper's tables/figures; the
-//! output format here is intentionally close to the paper's rows so that
-//! EXPERIMENTS.md can paste bench output directly.
+//! Every bench target regenerates one of the paper's tables/figures (see
+//! the bench ↔ figure map in README.md); the output format is
+//! intentionally close to the paper's rows so reports can paste bench
+//! output directly.
 
 /// A simple column-aligned table builder.
 #[derive(Clone, Debug, Default)]

@@ -105,6 +105,37 @@ pub fn random_alloc_request(
     AllocRequest { jobs, pool_size: pool, t_fwd: 120.0 }
 }
 
+/// Advance `req` to the next event of a synthetic consecutive-event
+/// workload (the Fig 5 incremental bench and the warm-start equivalence
+/// tests share this): the applied `targets` become the new current
+/// scales, then the pool grows or shrinks by 1..=`max_delta` nodes.
+/// Shrinks preempt the way the coordinator would — the largest
+/// assignments lose nodes first, and a job pushed below its minimum
+/// scale drops to 0.
+pub fn advance_request(
+    rng: &mut Rng,
+    req: &mut crate::coordinator::AllocRequest,
+    targets: &std::collections::BTreeMap<usize, u32>,
+    max_delta: u32,
+) {
+    for job in req.jobs.iter_mut() {
+        job.current = targets.get(&job.id).copied().unwrap_or(0);
+    }
+    let delta = rng.range_u64(1, max_delta.max(1) as u64) as u32;
+    if rng.chance(0.5) {
+        req.pool_size += delta;
+    } else {
+        req.pool_size = req.pool_size.saturating_sub(delta);
+    }
+    // Same preemption repair the allocator's warm-start adaptation uses.
+    let mut shed = req.current_map();
+    req.shed_to_capacity(&mut shed);
+    for job in req.jobs.iter_mut() {
+        job.current = shed.get(&job.id).copied().unwrap_or(0);
+    }
+    debug_assert!(req.check(&req.current_map()).is_ok());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +171,20 @@ mod tests {
             let req = random_alloc_request(&mut rng, 10, 100);
             let cur: u32 = req.jobs.iter().map(|j| j.current).sum();
             assert!(cur <= req.pool_size);
+            assert!(req.check(&req.current_map()).is_ok());
+        }
+    }
+
+    #[test]
+    fn advance_request_keeps_current_map_feasible() {
+        let mut rng = Rng::new(31);
+        let mut req = random_alloc_request(&mut rng, 6, 40);
+        for _ in 0..50 {
+            let dp = {
+                use crate::coordinator::{Allocator, DpAllocator};
+                DpAllocator.allocate(&req)
+            };
+            advance_request(&mut rng, &mut req, &dp.targets, 5);
             assert!(req.check(&req.current_map()).is_ok());
         }
     }

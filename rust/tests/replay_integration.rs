@@ -2,7 +2,7 @@
 //! workloads × policies, checking the paper's qualitative claims and
 //! conservation invariants end-to-end.
 
-use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective};
 use bftrainer::scaling::Dnn;
 use bftrainer::sim::{self, ReplayOpts};
 use bftrainer::trace::{self, machines, PoolEvent, Trace};
@@ -16,7 +16,7 @@ fn day_trace(seed: u64) -> Trace {
 }
 
 fn coord(policy: &str, objective: Objective, t_fwd: f64, pj: usize) -> Coordinator {
-    Coordinator::new(Policy::by_name(policy).unwrap(), objective, t_fwd, pj)
+    Coordinator::new(allocator_by_name(policy).unwrap(), objective, t_fwd, pj)
 }
 
 fn efficiency(policy: &str, t_fwd: f64, trace: &Trace, wl: &sim::Workload) -> f64 {

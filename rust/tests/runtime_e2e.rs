@@ -2,7 +2,7 @@
 //! coordinator-driven live mode. Skipped (with a message) when
 //! `artifacts/` has not been built.
 
-use bftrainer::coordinator::{Coordinator, Objective, Policy};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective};
 use bftrainer::runtime::{self, live, Engine, TrainerExec};
 use bftrainer::trace::{PoolEvent, Trace};
 use std::collections::BTreeMap;
@@ -60,7 +60,8 @@ fn live_mode_survives_full_preemption() {
     // nodes return — no crash, progress continues.
     let Some((engine, v)) = setup() else { return };
     let opts = live::LiveOpts { virtual_step_s: 10.0, max_total_steps: 20, lr: 0.05, log_every: 0 };
-    let mut coord = Coordinator::new(Policy::by_name("dp").unwrap(), Objective::Throughput, 60.0, 2);
+    let mut coord =
+        Coordinator::new(allocator_by_name("dp").unwrap(), Objective::Throughput, 60.0, 2);
     let spec = live::live_spec(&v, "t", 4, 1_000_000, &opts);
     let id = coord.submit(spec, 0.0);
     let mut trace = Trace::new(8);

@@ -1,0 +1,84 @@
+//! Warm-start correctness (DESIGN.md §7): across randomized pool-event
+//! sequences, a warm-started branch-and-bound — previous solution as the
+//! incumbent, previous root basis hot-starting the simplex — must return
+//! the *same objective value* as a cold solve at every event. Warm starts
+//! are a speed lever only; they may never change the optimum.
+
+use bftrainer::coordinator::{AggregateMilpAllocator, AllocRequest, Allocator, DpAllocator};
+use bftrainer::util::rng::Rng;
+use bftrainer::workload::{advance_request, random_alloc_request};
+
+const REL_TOL: f64 = 1e-5;
+
+fn assert_close(a: f64, b: f64, what: &str) {
+    assert!(
+        (a - b).abs() <= REL_TOL * b.abs().max(1.0),
+        "{what}: {a} vs {b}"
+    );
+}
+
+/// Keep the instances small enough that the cold B&B proves optimality
+/// quickly — it runs at every event of every sequence.
+fn small_request(rng: &mut Rng) -> AllocRequest {
+    let jobs = rng.range_usize(2, 4);
+    let pool = rng.range_u64(8, 24) as u32;
+    random_alloc_request(rng, jobs, pool)
+}
+
+#[test]
+fn incremental_warm_start_objective_equals_cold_solve() {
+    let mut rng = Rng::new(0x5EED);
+    for seq in 0..6 {
+        let mut req = small_request(&mut rng);
+        let mut warm = AggregateMilpAllocator::incremental_only();
+        for step in 0..6 {
+            let tag = format!("seq {seq} step {step}");
+            let warm_plan = warm.allocate(&req);
+            let cold_plan = AggregateMilpAllocator::cold().allocate(&req);
+            let dp = DpAllocator.allocate(&req);
+            req.check(&warm_plan.targets).unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert!(warm_plan.stats.optimal, "{tag}: warm solve did not prove optimality");
+            assert!(cold_plan.stats.optimal, "{tag}: cold solve did not prove optimality");
+            assert_close(warm_plan.objective, cold_plan.objective, &tag);
+            assert_close(warm_plan.objective, dp.objective, &tag);
+            assert_eq!(warm_plan.stats.warm_started, step > 0, "{tag}");
+            // evolve by the DP plan (policy-independent, deterministic)
+            advance_request(&mut rng, &mut req, &dp.targets, 3);
+        }
+    }
+}
+
+#[test]
+fn production_warm_start_objective_equals_cold_solve() {
+    // The default configuration (DP incumbent + incremental carry-over)
+    // must satisfy the same contract.
+    let mut rng = Rng::new(0xCAFE);
+    for seq in 0..4 {
+        let mut req = small_request(&mut rng);
+        let mut prod = AggregateMilpAllocator::default();
+        for step in 0..6 {
+            let tag = format!("seq {seq} step {step}");
+            let plan = prod.allocate(&req);
+            let cold = AggregateMilpAllocator::cold().allocate(&req);
+            assert!(plan.stats.optimal, "{tag}");
+            assert_close(plan.objective, cold.objective, &tag);
+            advance_request(&mut rng, &mut req, &plan.targets, 3);
+        }
+    }
+}
+
+#[test]
+fn reset_between_sequences_is_equivalent_to_fresh_allocator() {
+    // reset() must behave exactly like constructing a new allocator: the
+    // first post-reset solve is cold but still optimal.
+    let mut rng = Rng::new(0xD0D0);
+    let mut warm = AggregateMilpAllocator::incremental_only();
+    for _ in 0..3 {
+        let req = small_request(&mut rng);
+        let a = warm.allocate(&req);
+        warm.reset();
+        let b = warm.allocate(&req);
+        assert!(!b.stats.warm_started, "reset did not clear carry-over");
+        assert_close(a.objective, b.objective, "post-reset resolve");
+    }
+}

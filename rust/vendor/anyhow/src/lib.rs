@@ -1,0 +1,177 @@
+//! Offline stand-in for the `anyhow` crate — the build image has no
+//! crates.io access, so BFTrainer vendors the subset it actually uses:
+//! [`Error`] with context chaining, [`Result`], [`anyhow!`], [`bail!`],
+//! and [`Context`] on `Result`/`Option`. The API shapes match the real
+//! crate, so swapping the genuine dependency back in is a one-line
+//! Cargo.toml change.
+
+use std::fmt;
+
+/// A chain of error messages, innermost (root cause) first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost context (like the real crate);
+    /// `{:#}` joins the whole chain outermost-first.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain.iter().rev();
+        let Some(top) = it.next() else { return Ok(()) };
+        write!(f, "{top}")?;
+        if f.alternate() {
+            for cause in it {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain.iter().rev();
+        let Some(top) = it.next() else { return Ok(()) };
+        write!(f, "{top}")?;
+        let mut first = true;
+        for cause in it {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// Mirrors the real crate: Error itself is deliberately NOT
+// std::error::Error, which is what makes this blanket `?`-conversion
+// coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result<T, anyhow::Error>` by default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Attach context to the error arm of a `Result` or to a `None`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest.json (run `make artifacts` first)")
+            .unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("make artifacts"), "{s}");
+        assert!(!s.contains("no such file"), "plain Display must hide the cause: {s}");
+    }
+
+    #[test]
+    fn alternate_display_joins_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner() -> Result<()> {
+            let x = 3;
+            if x > 2 {
+                bail!("x too big: {x}");
+            }
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "x too big: 3");
+        fn via_qmark() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?; // utf8 error converts via From
+            Ok(s.to_string())
+        }
+        assert!(via_qmark().is_err());
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+}
