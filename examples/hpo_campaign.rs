@@ -37,7 +37,12 @@ fn main() {
             );
             let res = sim::replay(coord, &trace, &wl, &ReplayOpts::default());
             let a_s = sim::static_baseline_outcome(
-                Coordinator::new(allocator_by_name(policy).unwrap(), Objective::Throughput, t_fwd, 10),
+                Coordinator::new(
+                    allocator_by_name(policy).unwrap(),
+                    Objective::Throughput,
+                    t_fwd,
+                    10,
+                ),
                 res.metrics.eq_nodes.round() as u32,
                 res.metrics.duration_s,
                 &wl,

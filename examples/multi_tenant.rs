@@ -50,7 +50,8 @@ fn main() {
         }
     }
 
-    let mut tab = Table::new(vec!["DNN", "runtime h (throughput obj)", "runtime h (efficiency obj)"]);
+    let mut tab =
+        Table::new(vec!["DNN", "runtime h (throughput obj)", "runtime h (efficiency obj)"]);
     for d in Dnn::ALL {
         let get = |o: &str| {
             results

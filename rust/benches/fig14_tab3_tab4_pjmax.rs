@@ -79,7 +79,12 @@ fn main() {
             &wl_u,
             &ReplayOpts::default(),
         );
-        fig14.row(vec![pj.to_string(), f(integral, 0), f(mean_rt, 2), format!("{:.1}%", 100.0 * u)]);
+        fig14.row(vec![
+            pj.to_string(),
+            f(integral, 0),
+            f(mean_rt, 2),
+            format!("{:.1}%", 100.0 * u),
+        ]);
         tab3.insert(pj, runtimes);
 
         // Tab 4: scaling-efficiency objective.

@@ -6,7 +6,7 @@
 //! fragments are <10 min yet carry only ~10% of idle node×time.
 
 use bftrainer::mini::benchkit::BenchRunner;
-use bftrainer::trace::{self, machines};
+use bftrainer::trace::{self, machines, swf};
 use bftrainer::util::table::{f, Table};
 use std::time::Instant;
 
@@ -50,6 +50,59 @@ fn main() {
                 .collect();
         cdf_rows.push((name.to_string(), pts));
     }
+
+    // SWF ingestion path: serialize the Theta job stream to Standard
+    // Workload Format text, parse it back, slice the full machine over
+    // the full window, and characterize the log-derived trace next to
+    // the synthetic presets (times round to whole seconds in SWF, so
+    // the row lands near — not exactly on — the Theta row above).
+    {
+        let params = machines::theta();
+        let jobs = trace::generate_jobs(&params, 42);
+        let swf_jobs: Vec<swf::SwfJob> = jobs
+            .iter()
+            .map(|j| swf::SwfJob {
+                id: j.id,
+                submit: j.submit,
+                runtime: j.runtime,
+                procs: j.nodes,
+                req_time: j.req_walltime,
+                status: 1,
+            })
+            .collect();
+        let text = swf::to_swf_text(&swf_jobs, params.total_nodes);
+        let t0 = Instant::now();
+        let log = swf::parse_str(&text);
+        runner.record("swf:parse", vec![t0.elapsed().as_secs_f64()], Some(log.jobs.len() as f64));
+        let spec = swf::SliceSpec {
+            nodes: params.total_nodes,
+            procs_per_node: 1,
+            t0: params.warmup_s,
+            t1: params.warmup_s + params.duration_s,
+            warmup_s: params.warmup_s,
+            debounce_s: params.debounce_s,
+        };
+        let t0 = Instant::now();
+        let sliced = swf::slice(&log, &spec);
+        runner.record(
+            "swf:slice+replay",
+            vec![t0.elapsed().as_secs_f64()],
+            Some(sliced.trace.len() as f64),
+        );
+        let s = trace::characterize(&sliced.trace, params.duration_s);
+        let pref = paper.iter().find(|p| p.0 == "Theta").unwrap();
+        tab1.row(vec![
+            "Theta (SWF)".to_string(),
+            params.total_nodes.to_string(),
+            f(s.inc_per_hour, 1),
+            f(s.dec_per_hour, 1),
+            format!("{:.1}%", 100.0 * s.idle_ratio),
+            f(s.eq_nodes, 0),
+            f(pref.1, 1),
+            format!("{:.1}%", 100.0 * pref.2),
+        ]);
+    }
+
     println!("\n== Tab 1: idle resources that cannot be backfilled ==");
     println!("{}", tab1.render());
 

@@ -3,7 +3,9 @@
 //! artifacts are built — real AOT training-step latency at several
 //! simulated scales.
 
-use bftrainer::coordinator::{AggregateMilpAllocator, Allocator, DpAllocator, EqualShareAllocator, Objective};
+use bftrainer::coordinator::{
+    AggregateMilpAllocator, Allocator, DpAllocator, EqualShareAllocator, Objective,
+};
 use bftrainer::mini::benchkit::{black_box, BenchRunner};
 use bftrainer::scaling::Dnn;
 use bftrainer::sim::{self, ReplayOpts};
@@ -89,9 +91,13 @@ fn main() {
                 let mut r2 = std::mem::replace(&mut r, BenchRunner::new("x"));
                 for n in [1u32, 4] {
                     let samples_per_iter = (n as usize * v.batch) as f64;
-                    r2.bench_items(&format!("runtime/step {vname} n={n} (samples)"), samples_per_iter, || {
-                        black_box(exec.step(n).unwrap());
-                    });
+                    r2.bench_items(
+                        &format!("runtime/step {vname} n={n} (samples)"),
+                        samples_per_iter,
+                        || {
+                            black_box(exec.step(n).unwrap());
+                        },
+                    );
                 }
                 r = r2;
             }

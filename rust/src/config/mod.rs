@@ -135,7 +135,8 @@ mod tests {
     #[test]
     fn doc_overrides_defaults() {
         let doc = Doc::parse(
-            "[experiment]\npolicy = \"dp\"\nt_fwd = 60\n[workload]\nkind = \"diverse\"\ntrainers = 5",
+            "[experiment]\npolicy = \"dp\"\nt_fwd = 60\n[workload]\nkind = \"diverse\"\n\
+             trainers = 5",
         )
         .unwrap();
         let c = ExperimentConfig::from_doc(&doc);

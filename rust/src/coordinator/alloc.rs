@@ -212,7 +212,11 @@ pub(crate) mod testutil {
     }
 
     /// Random request generator for property tests.
-    pub fn random_request(rng: &mut crate::util::rng::Rng, max_jobs: usize, max_pool: u32) -> AllocRequest {
+    pub fn random_request(
+        rng: &mut crate::util::rng::Rng,
+        max_jobs: usize,
+        max_pool: u32,
+    ) -> AllocRequest {
         let n_jobs = rng.range_usize(1, max_jobs);
         let jobs: Vec<AllocJob> = (0..n_jobs)
             .map(|i| {
@@ -306,7 +310,11 @@ mod tests {
 
     #[test]
     fn objective_sums_values() {
-        let req = AllocRequest { jobs: vec![job(0, 2, 1, 8), job(1, 0, 1, 8)], pool_size: 10, t_fwd: 100.0 };
+        let req = AllocRequest {
+            jobs: vec![job(0, 2, 1, 8), job(1, 0, 1, 8)],
+            pool_size: 10,
+            t_fwd: 100.0,
+        };
         let t: BTreeMap<_, _> = [(0, 2u32), (1, 4u32)].into_iter().collect();
         let expect = req.jobs[0].value(2, 100.0) + req.jobs[1].value(4, 100.0);
         assert!((req.objective_of(&t) - expect).abs() < 1e-9);

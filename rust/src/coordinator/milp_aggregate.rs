@@ -382,7 +382,7 @@ pub fn embed_solution(
         let nf = n as f64;
         let mut placed = false;
         for i in 0..nw - 1 {
-            if nf >= bps[i] && nf <= bps[i + 1] {
+            if (bps[i]..=bps[i + 1]).contains(&nf) {
                 let span = bps[i + 1] - bps[i];
                 let f = if span > 0.0 { (nf - bps[i]) / span } else { 0.0 };
                 x[vi + i] = 1.0 - f;
@@ -538,7 +538,8 @@ mod tests {
             }
             let grow = rng.chance(0.5);
             let delta = rng.range_u64(1, 3) as u32;
-            req.pool_size = if grow { req.pool_size + delta } else { req.pool_size.saturating_sub(delta) };
+            req.pool_size =
+                if grow { req.pool_size + delta } else { req.pool_size.saturating_sub(delta) };
             let cur: u32 = req.jobs.iter().map(|j| j.current).sum();
             req.pool_size = req.pool_size.max(cur);
         }

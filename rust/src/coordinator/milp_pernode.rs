@@ -374,7 +374,7 @@ fn embed_targets(
             let mut w = vec![0.0; bps.len()];
             let mut placed = false;
             for k in 0..bps.len() - 1 {
-                if njv >= bps[k] && njv <= bps[k + 1] {
+                if (bps[k]..=bps[k + 1]).contains(&njv) {
                     let span = bps[k + 1] - bps[k];
                     let f = if span > 0.0 { (njv - bps[k]) / span } else { 0.0 };
                     w[k] = 1.0 - f;

@@ -272,7 +272,9 @@ impl Coordinator {
                     n_max: t.spec.n_max,
                     r_up: t.spec.r_up * self.rescale_cost_multiplier,
                     r_dw: t.spec.r_dw * self.rescale_cost_multiplier,
-                    points: self.objective.breakpoints(&t.spec.curve, w, t.spec.n_min, t.spec.n_max),
+                    points: self
+                        .objective
+                        .breakpoints(&t.spec.curve, w, t.spec.n_min, t.spec.n_max),
                 }
             })
             .collect();

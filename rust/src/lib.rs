@@ -15,8 +15,9 @@
 //!   a from-scratch MILP solver with warm-start incremental resolve
 //!   ([`milp`], DESIGN.md §7), the paper's per-node and aggregate
 //!   formulations plus an exact DP fast path behind one `Allocator`
-//!   trait ([`coordinator`]), trace substrate ([`trace`]), replay and
-//!   multi-scenario sweep engines ([`sim`]), and a PJRT runtime
+//!   trait ([`coordinator`]), trace substrate with synthetic generation
+//!   and SWF scheduler-log ingestion ([`trace`], DESIGN.md §11), replay
+//!   and multi-scenario sweep engines ([`sim`]), and a PJRT runtime
 //!   ([`runtime`]) that executes the AOT-compiled training step.
 //! * **L2 (python/compile/model.py)** — JAX train-step (fwd/bwd + SGD),
 //!   AOT-lowered to HLO text at build time.

@@ -4,9 +4,12 @@
 //!
 //! * `characterize`  — idle-node statistics of a machine preset (Tab 1/Fig 1)
 //! * `synth-trace`   — generate + save an idle-node event trace (CSV)
+//! * `trace`         — ingest a real SWF scheduler log: slice, characterize,
+//!                     optionally emit the event CSV
 //! * `replay`        — replay a trace against a Trainer workload (§5)
 //! * `sweep`         — N (trace × policy × objective) replays in parallel,
-//!                     with a comparison table
+//!                     with a comparison table; `--swf` adds a log-derived
+//!                     scenario next to the synthetic presets
 //! * `milp-bench`    — MILP solve-time scaling (Fig 5)
 //! * `scaling-table` — the Tab 2 model zoo
 //! * `train`         — live mode: real AOT Trainers on a replayed trace
@@ -29,6 +32,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("characterize") => cmd_characterize(&args[1..]),
         Some("synth-trace") => cmd_synth_trace(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("replay") => cmd_replay(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("milp-bench") => cmd_milp_bench(&args[1..]),
@@ -54,6 +58,7 @@ fn print_usage() {
          SUBCOMMANDS:\n  \
          characterize   idle-node statistics for a machine preset (Tab 1 / Fig 1)\n  \
          synth-trace    generate an idle-node event trace CSV\n  \
+         trace          ingest an SWF scheduler log (slice, characterize, emit CSV)\n  \
          replay         replay a trace against a Trainer workload (§5 experiments)\n  \
          sweep          parallel multi-scenario sweep (trace × policy × objective)\n  \
          milp-bench     MILP solve-time scaling (Fig 5)\n  \
@@ -134,6 +139,107 @@ fn cmd_synth_trace(args: &[String]) -> i32 {
         t.machine_nodes,
         t.duration() / 3600.0
     );
+    0
+}
+
+/// Shared slice-spec construction for `trace` and `sweep --swf`: the
+/// paper-shaped [`trace::SliceSpec::week`] window, with the start
+/// optionally pinned to an hour and the length overridden.
+fn swf_slice_spec(
+    nodes: u32,
+    procs_per_node: u32,
+    week: u64,
+    start_h: f64,
+    hours: f64,
+) -> trace::SliceSpec {
+    let mut spec = trace::SliceSpec::week(nodes, week as u32);
+    spec.procs_per_node = procs_per_node;
+    if start_h >= 0.0 {
+        spec.t0 = start_h * 3600.0;
+    }
+    spec.t1 = spec.t0 + hours * 3600.0;
+    spec
+}
+
+fn cmd_trace(args: &[String]) -> i32 {
+    let cmd = Command::new("trace", "ingest an SWF scheduler log into an idle-pool trace")
+        .req("swf", "path to a Standard Workload Format log")
+        .opt("nodes", "1024", "node-slice size")
+        .opt("procs-per-node", "1", "SWF processors per node")
+        .opt("week", "0", "time window: week index from log start")
+        .opt("start-h", "-1", "window start hour (overrides --week when >= 0)")
+        .opt("hours", "168", "window length (h)")
+        .opt("warmup-h", "24", "lead-in replayed before the window (h)")
+        .opt("debounce", "10", "drop idle fragments shorter than this (s)")
+        .opt("out", "", "write the sliced trace as an event CSV");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let path = m.get_str("swf").unwrap();
+    let log = match trace::swf::load(std::path::Path::new(&path)) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "{path}: {} jobs over {:.1} days ({} filtered, {} malformed lines, MaxNodes {}, \
+         MaxProcs {})",
+        log.jobs.len(),
+        log.span_s() / 86400.0,
+        log.filtered_jobs,
+        log.malformed_lines,
+        log.max_nodes.map_or_else(|| "?".into(), |n| n.to_string()),
+        log.max_procs.map_or_else(|| "?".into(), |n| n.to_string()),
+    );
+    let mut spec = swf_slice_spec(
+        m.get_u64("nodes").unwrap() as u32,
+        m.get_u64("procs-per-node").unwrap() as u32,
+        m.get_u64("week").unwrap(),
+        m.get_f64("start-h").unwrap(),
+        m.get_f64("hours").unwrap(),
+    );
+    spec.warmup_s = m.get_f64("warmup-h").unwrap() * 3600.0;
+    spec.debounce_s = m.get_f64("debounce").unwrap();
+    let sliced = trace::swf::slice(&log, &spec);
+    println!(
+        "slice: {} nodes, window [{:.1} h, {:.1} h): {} jobs in window, {} started, \
+         {} too large",
+        spec.nodes,
+        spec.t0 / 3600.0,
+        spec.t1 / 3600.0,
+        sliced.jobs_in_window,
+        sliced.started,
+        sliced.dropped_too_large,
+    );
+    let horizon = spec.t1 - spec.t0;
+    let s = trace::characterize(&sliced.trace, horizon);
+    let frags = trace::extract(&sliced.trace, horizon);
+    let cdf = trace::fragment_cdf(&frags);
+    let mut tab = Table::new(vec!["metric", "value"]);
+    tab.row(vec!["events".to_string(), s.n_events.to_string()])
+        .row(vec!["INC/h".to_string(), f(s.inc_per_hour, 1)])
+        .row(vec!["DEC/h".to_string(), f(s.dec_per_hour, 1)])
+        .row(vec!["idle ratio".to_string(), format!("{:.1}%", 100.0 * s.idle_ratio)])
+        .row(vec!["eq-nodes".to_string(), f(s.eq_nodes, 0)])
+        .row(vec!["idle node-hours".to_string(), f(s.idle_node_hours, 0)])
+        .row(vec!["fragments".to_string(), s.n_fragments.to_string()])
+        .row(vec![
+            "fragments <10 min".to_string(),
+            format!("{:.0}%", 100.0 * cdf.frac_shorter(600.0)),
+        ])
+        .row(vec![
+            "node-time in <10 min".to_string(),
+            format!("{:.0}%", 100.0 * cdf.nodetime_frac_shorter(600.0)),
+        ]);
+    println!("{}", tab.render());
+    let out = m.get_str("out").unwrap();
+    if !out.is_empty() {
+        if let Err(e) = sliced.trace.save_csv(std::path::Path::new(&out)) {
+            eprintln!("write failed: {e}");
+            return 1;
+        }
+        println!("wrote {} events to {out}", sliced.trace.len());
+    }
     0
 }
 
@@ -266,6 +372,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
         .opt("pj-max", "10", "max parallel trainers")
         .opt("rescale-multiplier", "1", "global rescale-cost multiplier")
         .opt("threads", "0", "worker threads (0 = one per core)")
+        .opt("swf", "", "SWF log path: adds a log-derived scenario to the matrix")
+        .opt("swf-nodes", "1024", "node-slice size for the SWF scenario")
+        .opt("swf-week", "0", "week index of the SWF window")
+        .opt("swf-procs-per-node", "1", "SWF processors per node")
         .flag("run-to-completion", "continue each replay past trace end");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
 
@@ -332,11 +442,46 @@ fn cmd_sweep(args: &[String]) -> i32 {
     let opts =
         ReplayOpts { run_to_completion: m.flag("run-to-completion"), ..Default::default() };
 
-    // One trace + workload per seed, shared across the policy × objective
-    // grid of that scenario.
-    let mut cases = Vec::new();
+    // One trace + workload per scenario (synthetic seed or SWF slice),
+    // shared across the policy × objective grid of that scenario.
+    let mut scenarios: Vec<(String, Arc<trace::Trace>)> = Vec::new();
     for &seed in &seeds {
-        let trace = Arc::new(trace::generate(&params, seed));
+        let label = format!("{}/s{}", m.get_str("machine").unwrap(), seed);
+        scenarios.push((label, Arc::new(trace::generate(&params, seed))));
+    }
+    let swf_path = m.get_str("swf").unwrap();
+    if !swf_path.is_empty() {
+        let log = match trace::swf::load(std::path::Path::new(&swf_path)) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("reading {swf_path}: {e}");
+                return 2;
+            }
+        };
+        let spec = swf_slice_spec(
+            m.get_u64("swf-nodes").unwrap() as u32,
+            m.get_u64("swf-procs-per-node").unwrap() as u32,
+            m.get_u64("swf-week").unwrap(),
+            -1.0,
+            m.get_f64("hours").unwrap(),
+        );
+        let sliced = trace::swf::slice(&log, &spec);
+        let stem = std::path::Path::new(&swf_path)
+            .file_stem()
+            .map_or_else(|| "log".to_string(), |s| s.to_string_lossy().into_owned());
+        let label = format!("swf:{}/w{}", stem, m.get_u64("swf-week").unwrap());
+        eprintln!(
+            "{label}: {} jobs in window, {} started, {} too large, {} events",
+            sliced.jobs_in_window,
+            sliced.started,
+            sliced.dropped_too_large,
+            sliced.trace.len()
+        );
+        scenarios.push((label, Arc::new(sliced.trace)));
+    }
+    let mut cases = Vec::new();
+    for (i, (label, trace)) in scenarios.iter().enumerate() {
+        let seed = seeds.get(i).copied().unwrap_or(seeds[0]);
         let wl = Arc::new(if diverse {
             workload::diverse_poisson(trainers, epochs, mean_gap_s, seed)
         } else {
@@ -345,7 +490,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
         for policy in &policies {
             for objective in &objectives {
                 cases.push(SweepCase {
-                    label: format!("{}/s{}", m.get_str("machine").unwrap(), seed),
+                    label: label.clone(),
                     policy: policy.clone(),
                     objective: objective.clone(),
                     t_fwd: m.get_f64("t-fwd").unwrap(),
@@ -359,9 +504,9 @@ fn cmd_sweep(args: &[String]) -> i32 {
         }
     }
     eprintln!(
-        "sweep: {} cases ({} seeds × {} policies × {} objectives)",
+        "sweep: {} cases ({} scenarios × {} policies × {} objectives)",
         cases.len(),
-        seeds.len(),
+        scenarios.len(),
         policies.len(),
         objectives.len()
     );

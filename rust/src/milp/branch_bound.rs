@@ -169,7 +169,11 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
     let root_basis = root_lp.basis.clone();
 
     let mut heap = BinaryHeap::new();
-    heap.push(HeapNode(Node { bounds: root_bounds, relax_obj: to_max(root_lp.objective), depth: 0 }));
+    heap.push(HeapNode(Node {
+        bounds: root_bounds,
+        relax_obj: to_max(root_lp.objective),
+        depth: 0,
+    }));
 
     let mut nodes = 0usize;
     let mut best_bound = to_max(root_lp.objective);
@@ -227,7 +231,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 );
                 let xr = rounded(model, &x);
                 let obj = to_max(model.objective_value(&xr));
-                if incumbent.as_ref().map_or(true, |(_, io)| obj > *io) {
+                if incumbent.as_ref().is_none_or(|(_, io)| obj > *io) {
                     incumbent = Some((xr, obj));
                 }
             }

@@ -161,7 +161,12 @@ impl Model {
     }
 
     pub fn constrain(&mut self, expr: LinExpr, sense: Sense, rhs: f64, name: impl Into<String>) {
-        self.constraints.push(Constraint { expr: expr.normalized(), sense, rhs, name: name.into() });
+        self.constraints.push(Constraint {
+            expr: expr.normalized(),
+            sense,
+            rhs,
+            name: name.into(),
+        });
     }
 
     pub fn add_sos2(&mut self, vars: Vec<VarId>, name: impl Into<String>) {
@@ -218,7 +223,10 @@ impl Model {
                 return Some(format!("SOS2 {}: {} nonzeros", s.name, nz.len()));
             }
             if nz.len() == 2 && nz[1] != nz[0] + 1 {
-                return Some(format!("SOS2 {}: nonzeros {} and {} not adjacent", s.name, nz[0], nz[1]));
+                return Some(format!(
+                    "SOS2 {}: nonzeros {} and {} not adjacent",
+                    s.name, nz[0], nz[1]
+                ));
             }
         }
         None

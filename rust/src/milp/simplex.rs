@@ -424,7 +424,7 @@ fn run_simplex(
                 // Tie-break by smaller basis index (anti-cycling aid).
                 if ratio < best_ratio - 1e-12
                     || (ratio < best_ratio + 1e-12
-                        && leave.map_or(true, |l| basis[i] < basis[l]))
+                        && leave.is_none_or(|l| basis[i] < basis[l]))
                 {
                     best_ratio = ratio;
                     leave = Some(i);
@@ -505,7 +505,8 @@ mod tests {
 
     #[test]
     fn minimize_with_ge() {
-        // min 2x + 3y s.t. x + y >= 10, x >= 2 -> x=8..? optimal x=10,y=0? cost 2x+3y: put all in x: x=10,y=0 -> 20
+        // min 2x + 3y s.t. x + y >= 10, x >= 2: put everything in the
+        // cheaper x -> x=10, y=0, cost 20
         let mut m = Model::new(Direction::Minimize);
         let x = m.continuous(0.0, f64::INFINITY, "x");
         let y = m.continuous(0.0, f64::INFINITY, "y");
@@ -706,8 +707,9 @@ mod tests {
         for _case in 0..40 {
             let nv = rng.range_usize(2, 6);
             let mut m = Model::new(Direction::Maximize);
-            let vars: Vec<_> =
-                (0..nv).map(|i| m.continuous(0.0, rng.range_f64(1.0, 8.0), format!("v{i}"))).collect();
+            let vars: Vec<_> = (0..nv)
+                .map(|i| m.continuous(0.0, rng.range_f64(1.0, 8.0), format!("v{i}")))
+                .collect();
             let mut cap = LinExpr::new();
             let mut obj = LinExpr::new();
             for &v in &vars {

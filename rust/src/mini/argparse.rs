@@ -148,11 +148,9 @@ impl Command {
                     Some((k, v)) => (k.to_string(), Some(v.to_string())),
                     None => (body.to_string(), None),
                 };
-                let spec = self
-                    .specs
-                    .iter()
-                    .find(|s| s.name == key)
-                    .ok_or_else(|| ParseError(format!("unknown option --{key}\n\n{}", self.help())))?;
+                let spec = self.specs.iter().find(|s| s.name == key).ok_or_else(|| {
+                    ParseError(format!("unknown option --{key}\n\n{}", self.help()))
+                })?;
                 if spec.is_flag {
                     if inline_val.is_some() {
                         return Err(ParseError(format!("flag --{key} takes no value")));

@@ -82,7 +82,8 @@ impl Doc {
             }
             let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
             if let Some(inner) = line.strip_prefix('[') {
-                let name = inner.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+                let name =
+                    inner.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
                 let name = name.trim();
                 if name.is_empty() {
                     return Err(err("empty section name"));

@@ -42,7 +42,10 @@ impl Engine {
             .map_err(to_anyhow)
             .with_context(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).map_err(to_anyhow).with_context(|| format!("compiling {}", path.display()))
+        self.client
+            .compile(&comp)
+            .map_err(to_anyhow)
+            .with_context(|| format!("compiling {}", path.display()))
     }
 }
 

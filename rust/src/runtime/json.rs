@@ -213,7 +213,9 @@ impl<'a> Parser<'a> {
                     while self.i < self.b.len() && (self.b[self.i] & 0xC0) == 0x80 {
                         self.i += 1;
                     }
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?);
+                    let chunk =
+                        std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+                    s.push_str(chunk);
                 }
             }
         }
@@ -226,7 +228,7 @@ impl<'a> Parser<'a> {
         }
         while self
             .peek()
-            .map_or(false, |c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
         {
             self.i += 1;
         }

@@ -57,7 +57,13 @@ pub fn live_curve(variant: &Variant, n_max: u32, virtual_step_s: f64) -> Scaling
 }
 
 /// Spec for a live trainer (total work expressed in samples).
-pub fn live_spec(variant: &Variant, name: &str, n_max: u32, total_steps_at_1: u64, opts: &LiveOpts) -> TrainerSpec {
+pub fn live_spec(
+    variant: &Variant,
+    name: &str,
+    n_max: u32,
+    total_steps_at_1: u64,
+    opts: &LiveOpts,
+) -> TrainerSpec {
     TrainerSpec {
         name: name.to_string(),
         n_min: 1,

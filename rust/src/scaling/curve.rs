@@ -117,13 +117,13 @@ impl ScalingCurve {
     /// node counts fall in [n_min, n_max], with interpolated endpoints
     /// inserted so the breakpoints exactly span the allowed range.
     pub fn discretize(&self, n_min: u32, n_max: u32) -> Vec<(u32, f64)> {
-        assert!(n_min >= 1 && n_min <= n_max);
+        assert!((1..=n_max).contains(&n_min));
         let mut out: Vec<(u32, f64)> = Vec::new();
         if self.points.iter().all(|&(n, _)| n != n_min) {
             out.push((n_min, self.throughput(n_min)));
         }
         for &(n, t) in &self.points {
-            if n >= n_min && n <= n_max {
+            if (n_min..=n_max).contains(&n) {
                 out.push((n, t));
             }
         }

@@ -6,7 +6,9 @@ pub mod replay;
 pub mod sweep;
 
 pub use metrics::{eq_nodes, resource_integral_node_hours, ReplayMetrics, RoiStats};
-pub use replay::{preemption_within_tfwd, replay, static_baseline_outcome, ReplayOpts, ReplayResult, Workload};
+pub use replay::{
+    preemption_within_tfwd, replay, static_baseline_outcome, ReplayOpts, ReplayResult, Workload,
+};
 pub use sweep::{comparison_table, run_sweep, SweepCase, SweepOutcome};
 
 use crate::coordinator::{allocator_by_name, Coordinator, Objective};
@@ -15,6 +17,7 @@ use crate::trace::Trace;
 /// Convenience wrapper used by the benches: replay `wl` on `trace` with a
 /// fresh coordinator, then compute the §4.1.2 baseline `A_s` on the
 /// equivalent static machine and return (result, U).
+#[allow(clippy::too_many_arguments)] // bench-facing flat parameter list
 pub fn run_with_baseline(
     policy: &str,
     objective: Objective,
@@ -25,8 +28,12 @@ pub fn run_with_baseline(
     wl: &Workload,
     opts: &ReplayOpts,
 ) -> (ReplayResult, f64) {
-    let mut coord =
-        Coordinator::new(allocator_by_name(policy).expect("policy"), objective.clone(), t_fwd, pj_max);
+    let mut coord = Coordinator::new(
+        allocator_by_name(policy).expect("policy"),
+        objective.clone(),
+        t_fwd,
+        pj_max,
+    );
     coord.rescale_cost_multiplier = rescale_multiplier;
     let res = replay(coord, trace, wl, opts);
     let baseline_coord =

@@ -119,7 +119,11 @@ pub fn replay(
         while now < seg_end {
             inner += 1;
             if inner % 100_000 == 0 && std::env::var("BFT_REPLAY_DEBUG").is_ok() {
-                eprintln!("[inner {inner}] now={now} seg_end={seg_end} admitted={} queue={}", coord.admitted.len(), coord.queue.len());
+                eprintln!(
+                    "[inner {inner}] now={now} seg_end={seg_end} admitted={} queue={}",
+                    coord.admitted.len(),
+                    coord.queue.len()
+                );
             }
             let dt = seg_end - now;
             let stop = match coord.finish_time_within(now, dt) {
@@ -168,7 +172,7 @@ pub fn replay(
             }
         }
         if let Some(ts) = t_sub {
-            if ts <= t_next && t_event.map_or(true, |te| ts <= te) {
+            if ts <= t_next && t_event.is_none_or(|te| ts <= te) {
                 let (t, spec) = subs[next_sub].clone();
                 let id = coord.submit(spec, t);
                 // reallocate only if the trainer was actually admitted
@@ -206,7 +210,13 @@ pub fn replay(
         fallbacks: coord.event_log.iter().filter(|e| e.fell_back).count(),
         n_events: coord.event_log.len(),
     };
-    ReplayResult { metrics, interval_samples, windowed_samples: windowed, coordinator: coord, horizon: now }
+    ReplayResult {
+        metrics,
+        interval_samples,
+        windowed_samples: windowed,
+        coordinator: coord,
+        horizon: now,
+    }
 }
 
 /// The §4.1.2 baseline `A_s`: run the same workload on `eq_nodes` static
@@ -232,7 +242,8 @@ pub fn static_baseline_outcome(
         leaves: (0..eq_nodes).collect(),
     });
     coord.rescale_cost_multiplier = 0.0;
-    let res = replay(coord, &trace, &wl, &ReplayOpts { horizon_s: duration_s, ..Default::default() });
+    let opts = ReplayOpts { horizon_s: duration_s, ..Default::default() };
+    let res = replay(coord, &trace, &wl, &opts);
     res.metrics.samples_processed
 }
 

@@ -108,12 +108,10 @@ impl Trace {
                     live.remove(&n);
                 }
             } else if ev.t < t1 {
-                if !boot.is_empty() || !live.is_empty() {
-                    if boot.joins.is_empty() && !live.is_empty() {
-                        boot.joins = live.iter().copied().collect();
-                        out.push(std::mem::take(&mut boot));
-                        live.clear();
-                    }
+                if boot.joins.is_empty() && !live.is_empty() {
+                    boot.joins = live.iter().copied().collect();
+                    out.push(std::mem::take(&mut boot));
+                    live.clear();
                 }
                 out.push(ev.clone());
             }
@@ -159,8 +157,9 @@ impl Trace {
                 continue;
             }
             let mut parts = line.split(',');
-            let parse_err =
-                |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}: {m}", i + 1));
+            let parse_err = |m: &str| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {}: {m}", i + 1))
+            };
             let t: f64 = parts
                 .next()
                 .ok_or_else(|| parse_err("missing t"))?
@@ -172,7 +171,7 @@ impl Trace {
                 .ok_or_else(|| parse_err("missing node"))?
                 .parse()
                 .map_err(|_| parse_err("bad node"))?;
-            let flush = cur.as_ref().map_or(false, |c: &PoolEvent| (c.t - t).abs() > 1e-9);
+            let flush = cur.as_ref().is_some_and(|c: &PoolEvent| (c.t - t).abs() > 1e-9);
             if flush {
                 trace.push(cur.take().unwrap());
             }

@@ -1,12 +1,19 @@
-//! Idle-node trace substrate: event/trace types, the FCFS + EASY-backfill
-//! cluster simulator that generates them, machine presets, and the
-//! fragment-level characterization of §2.1 (Fig 1 / Tab 1).
+//! Idle-node trace substrate: event/trace types, the reusable
+//! FCFS + EASY-backfill scheduler engine, the two job-stream producers
+//! that feed it — a synthetic workload generator and a Standard Workload
+//! Format (SWF) log ingester with node-slice × time-window slicing —
+//! machine presets, and the fragment-level characterization of §2.1
+//! (Fig 1 / Tab 1).
 
 pub mod event;
 pub mod fragments;
 pub mod machines;
+pub mod scheduler;
+pub mod swf;
 pub mod synth;
 
 pub use event::{NodeId, PoolEvent, Trace};
 pub use fragments::{characterize, extract, fragment_cdf, Fragment, IdleStats};
-pub use synth::{generate, SynthParams};
+pub use scheduler::{replay_jobs, BackfillOutcome, BackfillParams, SchedJob};
+pub use swf::{SliceOutcome, SliceSpec, SwfJob, SwfLog};
+pub use synth::{generate, generate_jobs, SynthParams};

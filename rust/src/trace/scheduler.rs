@@ -1,0 +1,413 @@
+//! Reusable FCFS + EASY-backfill scheduler engine.
+//!
+//! The paper derives its idle-node event stream from batch-scheduler
+//! activity. Two producers feed this engine: the synthetic workload
+//! generator ([`super::synth`]) and real Standard Workload Format logs
+//! ([`super::swf`]). Both reduce to the same substrate — a stream of
+//! rigid batch jobs — which is replayed through an FCFS + EASY scheduler
+//! to recover the idle-pool [`Trace`] BFTrainer consumes:
+//!
+//! * FCFS with EASY backfill: the queue head gets a reservation at the
+//!   earliest time enough nodes free up (using *requested* walltimes, as
+//!   real schedulers must); later jobs may start now if they fit in the
+//!   free nodes without delaying the reservation;
+//! * every allocation change emits the inverse change to the idle pool;
+//! * nodes that free and are immediately re-allocated in the same
+//!   scheduling pass never become idle from BFTrainer's perspective
+//!   (the paper removes these, §2.1).
+//!
+//! Conservation invariant: with `warmup_s == 0` and `debounce_s == 0`,
+//! idle node-time in the produced trace plus [`BackfillOutcome`]'s busy
+//! node-time exactly tile `total_nodes × duration_s` — property-tested
+//! in `tests/swf_ingest.rs`.
+
+use super::event::{NodeId, PoolEvent, Trace};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One rigid batch job as the scheduler sees it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedJob {
+    /// Stable identifier (SWF job number or synthetic index).
+    pub id: u64,
+    /// Submission time (seconds from stream start).
+    pub submit: f64,
+    /// Node count (rigid: allocated == requested).
+    pub nodes: u32,
+    /// Requested walltime (seconds) — what EASY reservations trust.
+    pub req_walltime: f64,
+    /// Actual runtime (seconds) — when the job really completes.
+    pub runtime: f64,
+}
+
+/// Machine/windowing parameters for a backfill replay.
+#[derive(Clone, Debug)]
+pub struct BackfillParams {
+    pub total_nodes: u32,
+    /// Drop idle fragments shorter than this (the paper's 10 s `bslots`
+    /// sampling makes sub-10 s fragments invisible).
+    pub debounce_s: f64,
+    /// Trace duration after warmup (seconds). Events beyond are cut.
+    pub duration_s: f64,
+    /// Warmup discarded from the front (machine fills from empty).
+    pub warmup_s: f64,
+}
+
+/// What a backfill replay produced beyond the trace itself.
+#[derive(Clone, Debug)]
+pub struct BackfillOutcome {
+    /// Debounced, warmup-trimmed idle-pool trace rebased to t = 0.
+    pub trace: Trace,
+    /// Jobs that started before the horizon.
+    pub started: usize,
+    /// Jobs skipped because they can never fit the machine (wider than
+    /// `total_nodes`, or zero nodes). Left in place they would wedge the
+    /// FCFS queue head forever.
+    pub dropped_too_large: usize,
+    /// Busy node-seconds inside `[0, warmup + duration]`, pre-debounce.
+    pub busy_node_seconds: f64,
+}
+
+/// One change to the idle pool in the raw (pre-debounce) change log.
+#[derive(Clone, Debug, Default)]
+struct PoolChange {
+    t: f64,
+    /// Nodes freed by completions (and not immediately re-allocated).
+    to_idle: Vec<NodeId>,
+    /// Nodes consumed by job starts (that were not freed this instant).
+    from_idle: Vec<NodeId>,
+}
+
+#[derive(Clone, Debug)]
+struct Running {
+    end_actual: f64,
+    end_requested: f64,
+    nodes: Vec<NodeId>,
+}
+
+/// Replay a job stream through the FCFS + EASY scheduler. Jobs need not
+/// be sorted; ties and out-of-order submissions are handled.
+pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> BackfillOutcome {
+    jobs.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+    let horizon = params.warmup_s + params.duration_s;
+    let total = params.total_nodes;
+    let n_before = jobs.len();
+    jobs.retain(|j| j.nodes > 0 && j.nodes <= total);
+    let dropped_too_large = n_before - jobs.len();
+
+    let mut free: BTreeSet<NodeId> = (0..total).collect();
+    let mut queue: Vec<SchedJob> = Vec::new(); // FCFS order
+    let mut running: Vec<Running> = Vec::new();
+    let mut next_arrival = 0usize;
+    let mut changes: Vec<PoolChange> = Vec::new();
+    let mut started = 0usize;
+    let mut busy_node_seconds = 0.0f64;
+
+    loop {
+        // Next event time: arrival or completion.
+        let t_arr = jobs.get(next_arrival).map(|j| j.submit);
+        let t_done = running
+            .iter()
+            .map(|r| r.end_actual)
+            .min_by(|a, b| a.partial_cmp(b).unwrap());
+        let now = match (t_arr, t_done) {
+            (Some(a), Some(d)) => a.min(d),
+            (Some(a), None) => a,
+            (None, Some(d)) => d,
+            (None, None) => break,
+        };
+        if now > horizon {
+            break;
+        }
+        // Process completions at `now`.
+        let mut freed: Vec<NodeId> = Vec::new();
+        running.retain(|r| {
+            if r.end_actual <= now + 1e-9 {
+                freed.extend(r.nodes.iter().copied());
+                false
+            } else {
+                true
+            }
+        });
+        for &n in &freed {
+            free.insert(n);
+        }
+        let mut to_idle = freed;
+        // Process arrivals at `now`.
+        while next_arrival < jobs.len() && jobs[next_arrival].submit <= now + 1e-9 {
+            queue.push(jobs[next_arrival].clone());
+            next_arrival += 1;
+        }
+        // Schedule: FCFS + EASY backfill.
+        let mut from_idle: Vec<NodeId> = Vec::new();
+        let running_before = running.len();
+        schedule(&mut queue, &mut running, &mut free, now, &mut from_idle);
+        for r in &running[running_before..] {
+            started += 1;
+            busy_node_seconds += r.nodes.len() as f64 * (r.end_actual.min(horizon) - now);
+        }
+        // Nodes that freed and were immediately re-allocated never became
+        // idle from BFTrainer's perspective (the paper removes these).
+        let reused: BTreeSet<NodeId> = to_idle
+            .iter()
+            .copied()
+            .filter(|n| from_idle.contains(n))
+            .collect();
+        to_idle.retain(|n| !reused.contains(n));
+        from_idle.retain(|n| !reused.contains(n));
+        if !to_idle.is_empty() || !from_idle.is_empty() {
+            changes.push(PoolChange { t: now, to_idle, from_idle });
+        }
+    }
+
+    BackfillOutcome {
+        trace: build_trace(params, changes),
+        started,
+        dropped_too_large,
+        busy_node_seconds,
+    }
+}
+
+/// FCFS + EASY backfill over the current queue; appends allocated nodes
+/// to `allocated_out`.
+fn schedule(
+    queue: &mut Vec<SchedJob>,
+    running: &mut Vec<Running>,
+    free: &mut BTreeSet<NodeId>,
+    now: f64,
+    allocated_out: &mut Vec<NodeId>,
+) {
+    // Start queue-head jobs while they fit.
+    while let Some(head) = queue.first() {
+        if head.nodes as usize <= free.len() {
+            let job = queue.remove(0);
+            start(job, running, free, now, allocated_out);
+        } else {
+            break;
+        }
+    }
+    let Some(head) = queue.first().cloned() else {
+        return;
+    };
+    // EASY: compute shadow time for the head using *requested* end times.
+    let mut ends: Vec<(f64, u32)> =
+        running.iter().map(|r| (r.end_requested, r.nodes.len() as u32)).collect();
+    ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut avail = free.len() as u32;
+    let mut shadow = f64::INFINITY;
+    let mut extra_at_shadow = 0u32;
+    for (t_end, n) in ends {
+        avail += n;
+        if avail >= head.nodes {
+            shadow = t_end;
+            extra_at_shadow = avail - head.nodes;
+            break;
+        }
+    }
+    // Backfill later jobs: may start now iff they fit in free nodes and
+    // either finish (by requested walltime) before the shadow time or use
+    // no more than the nodes spare at the shadow time.
+    let mut i = 1;
+    while i < queue.len() {
+        let job = &queue[i];
+        let fits_now = job.nodes as usize <= free.len();
+        let ok = fits_now
+            && (now + job.req_walltime <= shadow + 1e-9 || job.nodes <= extra_at_shadow);
+        if ok {
+            if job.nodes <= extra_at_shadow {
+                extra_at_shadow -= job.nodes;
+            }
+            let job = queue.remove(i);
+            start(job, running, free, now, allocated_out);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn start(
+    job: SchedJob,
+    running: &mut Vec<Running>,
+    free: &mut BTreeSet<NodeId>,
+    now: f64,
+    allocated_out: &mut Vec<NodeId>,
+) {
+    let nodes: Vec<NodeId> = free.iter().take(job.nodes as usize).copied().collect();
+    for n in &nodes {
+        free.remove(n);
+    }
+    allocated_out.extend(nodes.iter().copied());
+    running.push(Running {
+        end_actual: now + job.runtime,
+        end_requested: now + job.req_walltime,
+        nodes,
+    });
+}
+
+/// Convert the raw change log into a debounced, warmup-trimmed [`Trace`].
+/// Every node starts idle at t = 0 (the machine fills from empty), so the
+/// trace's idle intervals are the exact complement of job occupancy.
+fn build_trace(params: &BackfillParams, changes: Vec<PoolChange>) -> Trace {
+    // Per-node idle intervals; all nodes open (idle) at t = 0.
+    let mut open: BTreeMap<NodeId, f64> = (0..params.total_nodes).map(|n| (n, 0.0)).collect();
+    let mut intervals: Vec<(NodeId, f64, f64)> = Vec::new();
+    let horizon = params.warmup_s + params.duration_s;
+    for ch in &changes {
+        for &n in &ch.from_idle {
+            if let Some(t0) = open.remove(&n) {
+                intervals.push((n, t0, ch.t));
+            }
+        }
+        for &n in &ch.to_idle {
+            open.insert(n, ch.t);
+        }
+    }
+    for (n, t0) in open {
+        intervals.push((n, t0, horizon));
+    }
+    // Debounce: drop fragments shorter than debounce_s; trim to the
+    // [warmup, horizon] window and rebase to t=0.
+    let t0 = params.warmup_s;
+    let mut evs: BTreeMap<i64, PoolEvent> = Default::default();
+    let quant = |t: f64| (t * 1000.0).round() as i64; // 1 ms resolution keys
+    for (n, a, b) in intervals {
+        let (a, b) = (a.max(t0), b.min(horizon));
+        if b - a < params.debounce_s {
+            continue;
+        }
+        let (ra, rb) = (a - t0, b - t0);
+        // Intervals that vanish at the 1 ms quantization (zero-length
+        // start-of-trace fragments, sub-ms gaps) would put the same node
+        // in joins and leaves of one event; drop them.
+        if quant(ra) == quant(rb) && rb < params.duration_s - 1e-9 {
+            continue;
+        }
+        evs.entry(quant(ra))
+            .or_insert_with(|| PoolEvent { t: ra, ..Default::default() })
+            .joins
+            .push(n);
+        if rb < params.duration_s - 1e-9 {
+            evs.entry(quant(rb))
+                .or_insert_with(|| PoolEvent { t: rb, ..Default::default() })
+                .leaves
+                .push(n);
+        }
+    }
+    let mut trace = Trace::new(params.total_nodes);
+    for (_, mut ev) in evs {
+        ev.joins.sort_unstable();
+        ev.leaves.sort_unstable();
+        trace.push(ev);
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::fragments;
+
+    fn params(total_nodes: u32, duration_s: f64) -> BackfillParams {
+        BackfillParams { total_nodes, debounce_s: 0.0, duration_s, warmup_s: 0.0 }
+    }
+
+    fn job(id: u64, submit: f64, nodes: u32, req: f64, run: f64) -> SchedJob {
+        SchedJob { id, submit, nodes, req_walltime: req, runtime: run }
+    }
+
+    /// Pool size just after the last event at or before `t`.
+    fn pool_at(trace: &Trace, t: f64) -> usize {
+        trace
+            .pool_sizes()
+            .into_iter()
+            .take_while(|&(et, _)| et <= t)
+            .last()
+            .map(|(_, s)| s)
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn empty_stream_is_fully_idle() {
+        let out = replay_jobs(&params(8, 1000.0), vec![]);
+        assert_eq!(out.busy_node_seconds, 0.0);
+        assert_eq!(out.started, 0);
+        assert_eq!(out.trace.events.len(), 1, "one all-join boot event");
+        assert_eq!(pool_at(&out.trace, 0.0), 8);
+        let idle: f64 = fragments::extract(&out.trace, 1000.0)
+            .iter()
+            .map(fragments::Fragment::len)
+            .sum();
+        assert!((idle - 8000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unsorted_input_is_sorted_before_replay() {
+        let a = replay_jobs(
+            &params(4, 500.0),
+            vec![job(1, 100.0, 2, 50.0, 50.0), job(2, 0.0, 2, 50.0, 50.0)],
+        );
+        let b = replay_jobs(
+            &params(4, 500.0),
+            vec![job(2, 0.0, 2, 50.0, 50.0), job(1, 100.0, 2, 50.0, 50.0)],
+        );
+        assert_eq!(a.trace.events, b.trace.events);
+        assert_eq!(a.busy_node_seconds, b.busy_node_seconds);
+    }
+
+    #[test]
+    fn oversized_jobs_are_dropped_not_wedged() {
+        // A 9-node job on an 8-node machine must not block the queue head.
+        let out = replay_jobs(
+            &params(8, 1000.0),
+            vec![job(1, 0.0, 9, 100.0, 100.0), job(2, 10.0, 4, 100.0, 100.0)],
+        );
+        assert_eq!(out.dropped_too_large, 1);
+        assert_eq!(out.started, 1);
+        assert!((out.busy_node_seconds - 400.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn easy_backfill_respects_shadow_time() {
+        // A(2n,[0,100]) runs; B(4n) waits with a reservation at t=100.
+        // C(2n, req 80) fits before the shadow and backfills at t=20;
+        // with req 90 it would delay B and must wait.
+        let mk = |c_req: f64| {
+            replay_jobs(
+                &params(4, 1000.0),
+                vec![
+                    job(1, 0.0, 2, 100.0, 100.0),
+                    job(2, 10.0, 4, 100.0, 100.0),
+                    job(3, 20.0, 2, c_req, 30.0),
+                ],
+            )
+        };
+        let backfilled = mk(80.0);
+        let blocked = mk(90.0);
+        // Backfilled: C occupies nodes 2,3 during [20,50] -> pool 0 at 30.
+        assert_eq!(pool_at(&backfilled.trace, 30.0), 0);
+        // Blocked: nodes 2,3 stay idle until B starts at t=100.
+        assert_eq!(pool_at(&blocked.trace, 30.0), 2);
+        // Either way every job eventually runs: same busy node-time.
+        assert!((backfilled.busy_node_seconds - blocked.busy_node_seconds).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_for_same_input() {
+        let jobs: Vec<SchedJob> =
+            (0..20).map(|i| job(i, 37.0 * i as f64, 1 + (i as u32 % 4), 200.0, 150.0)).collect();
+        let a = replay_jobs(&params(8, 2000.0), jobs.clone());
+        let b = replay_jobs(&params(8, 2000.0), jobs);
+        assert_eq!(a.trace.events, b.trace.events);
+    }
+
+    #[test]
+    fn warmup_trims_and_rebases() {
+        let p =
+            BackfillParams { total_nodes: 4, debounce_s: 0.0, duration_s: 500.0, warmup_s: 100.0 };
+        let out = replay_jobs(&p, vec![job(1, 0.0, 4, 150.0, 150.0)]);
+        // Job occupies [0,150]; window is [100,600] rebased to [0,500]:
+        // all 4 nodes join at rebased t=50.
+        assert_eq!(out.trace.events.len(), 1);
+        assert!((out.trace.events[0].t - 50.0).abs() < 1e-9);
+        assert_eq!(out.trace.events[0].joins.len(), 4);
+    }
+}

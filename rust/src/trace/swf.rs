@@ -1,0 +1,426 @@
+//! Standard Workload Format (SWF) scheduler-log ingestion.
+//!
+//! SWF is the interchange format of the Parallel Workloads Archive: `;`
+//! header comments followed by one job per line with 18 whitespace-
+//! separated numeric fields (missing values are `-1`). This module
+//! parses the subset BFTrainer needs, filters anomalies, recovers from
+//! malformed lines, and slices a parsed log into node-slice ×
+//! time-window idle-pool [`Trace`]s by replaying the jobs through the
+//! [`scheduler`](super::scheduler) backfill engine — the same engine the
+//! synthetic generator uses, so log-derived and synthetic traces are
+//! directly comparable.
+//!
+//! Field mapping (1-based SWF columns → [`SwfJob`]):
+//!
+//! | SWF field                  | use                                     |
+//! |----------------------------|-----------------------------------------|
+//! | 1  job number              | `id`                                    |
+//! | 2  submit time (s)         | `submit`                                |
+//! | 4  run time (s)            | `runtime`                               |
+//! | 5  allocated processors    | `procs` (falls back to field 8)         |
+//! | 8  requested processors    | fallback for `procs`                    |
+//! | 9  requested time (s)      | `req_time` (defaults to `runtime`)      |
+//! | 11 status                  | `status` (surfaced; see filtering)      |
+//!
+//! All other fields (wait time, CPU/memory usage, user/group/executable
+//! ids, queue/partition, dependencies) are irrelevant to idle-pool
+//! reconstruction and are ignored.
+//!
+//! Filtering: jobs with no processors, non-positive runtime, or a
+//! negative submit time are dropped and counted in
+//! [`SwfLog::filtered_jobs`] — node occupancy is what matters to
+//! idle-pool reconstruction, so failed (status 0) and
+//! cancelled-while-running (status 5, positive runtime) jobs are kept:
+//! they held nodes just like completed ones, while cancelled-in-queue
+//! jobs fall to the runtime rule. Data lines whose needed fields do not
+//! parse (or with fewer than five fields) are dropped and counted in
+//! [`SwfLog::malformed_lines`]. Fields beyond a truncated line's end
+//! take the SWF default `-1`.
+
+use super::event::Trace;
+use super::scheduler::{self, BackfillParams, SchedJob};
+use std::path::Path;
+
+/// One job record surviving the parse + filter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwfJob {
+    /// SWF job number (field 1).
+    pub id: u64,
+    /// Submission time in seconds from log start (field 2).
+    pub submit: f64,
+    /// Actual runtime in seconds (field 4).
+    pub runtime: f64,
+    /// Allocated processors (field 5), falling back to requested (8).
+    pub procs: u32,
+    /// Requested time in seconds (field 9), defaulting to `runtime`.
+    pub req_time: f64,
+    /// Completion status (field 11; `-1` when the log omits it).
+    pub status: i32,
+}
+
+/// A parsed SWF log: filtered jobs sorted by submit time, the header
+/// directives BFTrainer cares about, and parse/filter diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct SwfLog {
+    /// Jobs surviving the anomaly/status filter, sorted by submit time.
+    pub jobs: Vec<SwfJob>,
+    /// `; MaxNodes:` header directive, when present.
+    pub max_nodes: Option<u32>,
+    /// `; MaxProcs:` header directive, when present.
+    pub max_procs: Option<u32>,
+    /// `; UnixStartTime:` header directive, when present.
+    pub unix_start_time: Option<i64>,
+    /// Data lines dropped because a needed field would not parse.
+    pub malformed_lines: usize,
+    /// Parsed jobs dropped by the anomaly/status filter.
+    pub filtered_jobs: usize,
+}
+
+impl SwfLog {
+    /// Submit-time span of the log in seconds (0 when empty).
+    pub fn span_s(&self) -> f64 {
+        match (self.jobs.first(), self.jobs.last()) {
+            (Some(a), Some(b)) => b.submit - a.submit,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Parse an SWF document from text. Never fails: malformed lines are
+/// skipped and counted instead.
+pub fn parse_str(text: &str) -> SwfLog {
+    let mut log = SwfLog::default();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(';') {
+            parse_header(rest, &mut log);
+            continue;
+        }
+        match parse_job(line) {
+            Some(job) if keep(&job) => log.jobs.push(job),
+            Some(_) => log.filtered_jobs += 1,
+            None => log.malformed_lines += 1,
+        }
+    }
+    log.jobs.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+    log
+}
+
+/// Load and parse an SWF file.
+pub fn load(path: &Path) -> std::io::Result<SwfLog> {
+    Ok(parse_str(&std::fs::read_to_string(path)?))
+}
+
+/// Header comment directives look like `; MaxNodes: 4392`.
+fn parse_header(rest: &str, log: &mut SwfLog) {
+    let Some((key, val)) = rest.split_once(':') else {
+        return;
+    };
+    let val = val.trim();
+    match key.trim() {
+        "MaxNodes" => log.max_nodes = val.parse().ok(),
+        "MaxProcs" => log.max_procs = val.parse().ok(),
+        "UnixStartTime" => log.unix_start_time = val.parse().ok(),
+        _ => {}
+    }
+}
+
+fn parse_job(line: &str) -> Option<SwfJob> {
+    let f: Vec<&str> = line.split_whitespace().collect();
+    // Anything shorter than the first five fields carries no usable job;
+    // beyond that, missing trailing fields default to -1 (SWF convention).
+    if f.len() < 5 {
+        return None;
+    }
+    let get = |i: usize| -> Option<f64> {
+        match f.get(i) {
+            Some(s) => s.parse::<f64>().ok(),
+            None => Some(-1.0),
+        }
+    };
+    let id = f[0].parse::<u64>().ok()?;
+    let submit = get(1)?;
+    let runtime = get(3)?;
+    let alloc_procs = get(4)?;
+    let req_procs = get(7)?;
+    let req_time = get(8)?;
+    let status = get(10)? as i32;
+    let procs_f = if alloc_procs > 0.0 { alloc_procs } else { req_procs };
+    Some(SwfJob {
+        id,
+        submit,
+        runtime,
+        procs: if procs_f >= 1.0 { procs_f as u32 } else { 0 },
+        req_time: if req_time > 0.0 { req_time } else { runtime },
+        status,
+    })
+}
+
+/// Anomaly filter (see module docs): only jobs that actually occupied
+/// processors matter; status is surfaced on [`SwfJob`] for consumers.
+fn keep(job: &SwfJob) -> bool {
+    job.procs > 0 && job.runtime > 0.0 && job.submit >= 0.0
+}
+
+/// Serialize jobs as a minimal SWF document (18 columns, `-1` for the
+/// fields BFTrainer does not model). Used by tests and the
+/// `fig1_tab1_fragments` bench to push synthetic job streams through the
+/// full ingest path; times round to whole seconds per SWF convention.
+pub fn to_swf_text(jobs: &[SwfJob], max_nodes: u32) -> String {
+    let mut out = String::new();
+    out.push_str("; SWF written by bftrainer (synthetic job stream)\n");
+    out.push_str(&format!("; MaxJobs: {}\n", jobs.len()));
+    out.push_str(&format!("; MaxNodes: {max_nodes}\n; MaxProcs: {max_nodes}\n"));
+    for j in jobs {
+        out.push_str(&format!(
+            "{} {:.0} -1 {:.0} {} -1 -1 {} {:.0} -1 {} -1 -1 -1 -1 -1 -1 -1\n",
+            j.id, j.submit, j.runtime, j.procs, j.procs, j.req_time, j.status
+        ));
+    }
+    out
+}
+
+/// A node-slice × time-window cut of a parsed log.
+#[derive(Clone, Debug)]
+pub struct SliceSpec {
+    /// Slice size in nodes — the machine the backfill replay sees (the
+    /// paper's experiments use "1024 arbitrary nodes", §4.3).
+    pub nodes: u32,
+    /// Processors per node: SWF counts processors, BFTrainer counts
+    /// nodes; job sizes become `ceil(procs / procs_per_node)`.
+    pub procs_per_node: u32,
+    /// Window start/end in seconds from log start.
+    pub t0: f64,
+    pub t1: f64,
+    /// Lead-in replayed before `t0` so the machine is already full when
+    /// the window opens (clamped to `t0`; the warmup is trimmed from the
+    /// produced trace).
+    pub warmup_s: f64,
+    /// Fragment debounce, as in [`BackfillParams`].
+    pub debounce_s: f64,
+}
+
+impl SliceSpec {
+    /// Week-`week` window of a `nodes`-node slice with a day of warmup —
+    /// the shape used throughout the paper's §4/§5 experiments.
+    pub fn week(nodes: u32, week: u32) -> SliceSpec {
+        let t0 = week as f64 * super::machines::WEEK_S;
+        SliceSpec {
+            nodes,
+            procs_per_node: 1,
+            t0,
+            t1: t0 + super::machines::WEEK_S,
+            warmup_s: 24.0 * 3600.0,
+            debounce_s: 10.0,
+        }
+    }
+}
+
+/// What a slice replay produced.
+#[derive(Clone, Debug)]
+pub struct SliceOutcome {
+    /// Idle-pool trace over the window, rebased to t = 0.
+    pub trace: Trace,
+    /// Jobs whose submit time fell inside the (warmup-extended) window.
+    pub jobs_in_window: usize,
+    /// Jobs skipped: wider than the slice even after the procs → nodes
+    /// conversion.
+    pub dropped_too_large: usize,
+    /// Jobs that actually started before the window closed.
+    pub started: usize,
+    /// Busy node-seconds inside the warmup-extended window.
+    pub busy_node_seconds: f64,
+}
+
+/// Cut `log` to `spec`'s window and replay it through the backfill
+/// engine, producing an idle-pool trace compatible with everything
+/// downstream (replay, sweep, characterization).
+pub fn slice(log: &SwfLog, spec: &SliceSpec) -> SliceOutcome {
+    let ppn = spec.procs_per_node.max(1);
+    let lead = spec.warmup_s.clamp(0.0, spec.t0);
+    let w0 = spec.t0 - lead;
+    let jobs: Vec<SchedJob> = log
+        .jobs
+        .iter()
+        .filter(|j| j.submit >= w0 && j.submit < spec.t1)
+        .map(|j| SchedJob {
+            id: j.id,
+            submit: j.submit - w0,
+            nodes: j.procs.div_ceil(ppn),
+            req_walltime: j.req_time,
+            runtime: j.runtime,
+        })
+        .collect();
+    let jobs_in_window = jobs.len();
+    let params = BackfillParams {
+        total_nodes: spec.nodes,
+        debounce_s: spec.debounce_s,
+        duration_s: spec.t1 - spec.t0,
+        warmup_s: lead,
+    };
+    let out = scheduler::replay_jobs(&params, jobs);
+    SliceOutcome {
+        trace: out.trace,
+        jobs_in_window,
+        dropped_too_large: out.dropped_too_large,
+        started: out.started,
+        busy_node_seconds: out.busy_node_seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(id: u64, submit: f64, run: f64, procs: i64, req: f64, status: i64) -> String {
+        format!(
+            "{id} {submit} -1 {run} {procs} -1 -1 {procs} {req} -1 {status} -1 -1 -1 -1 -1 -1 -1"
+        )
+    }
+
+    #[test]
+    fn header_directives_parse() {
+        let log = parse_str(
+            "; Version: 2.2\n; Computer: Test\n; MaxNodes: 64\n; MaxProcs: 128\n\
+             ; UnixStartTime: 1072911600\n; Note: colon: in: note\n",
+        );
+        assert_eq!(log.max_nodes, Some(64));
+        assert_eq!(log.max_procs, Some(128));
+        assert_eq!(log.unix_start_time, Some(1072911600));
+        assert!(log.jobs.is_empty());
+        assert_eq!(log.malformed_lines, 0);
+    }
+
+    #[test]
+    fn malformed_and_truncated_lines_recover() {
+        let text = format!(
+            "{}\n1 abc -1 600 4\n2 10 -1\n{}\n",
+            line(3, 0.0, 300.0, 2, 400.0, 1),
+            line(4, 20.0, 300.0, 2, 400.0, 1)
+        );
+        let log = parse_str(&text);
+        assert_eq!(log.jobs.len(), 2, "{log:?}");
+        assert_eq!(log.malformed_lines, 2);
+    }
+
+    #[test]
+    fn short_but_parseable_line_defaults_missing_fields() {
+        // Nine fields: status and requested time present, rest defaulted.
+        let log = parse_str("7 100 -1 2400 24 -1 -1 24 3600\n");
+        assert_eq!(log.jobs.len(), 1);
+        let j = &log.jobs[0];
+        assert_eq!(j.status, -1);
+        assert_eq!(j.procs, 24);
+        assert!((j.req_time - 3600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn status_and_anomaly_filtering() {
+        let text = [
+            line(1, 0.0, 600.0, 4, 900.0, 1),   // kept
+            line(2, 10.0, 600.0, 4, 900.0, 5),  // cancelled mid-run: kept
+            line(3, 20.0, 0.0, 4, 900.0, 5),    // cancelled in queue
+            line(4, 30.0, 600.0, -1, 900.0, 1), // no processors at all
+            line(5, -5.0, 600.0, 4, 900.0, 1),  // negative submit
+            line(6, 40.0, 600.0, 4, 900.0, 0),  // failed but ran: kept
+        ]
+        .join("\n");
+        let log = parse_str(&text);
+        let ids: Vec<u64> = log.jobs.iter().map(|j| j.id).collect();
+        // Occupancy is what counts: cancelled/failed jobs that held
+        // nodes stay; the queue-cancelled and anomalous ones go.
+        assert_eq!(ids, vec![1, 2, 6]);
+        assert_eq!(log.jobs.iter().find(|j| j.id == 2).unwrap().status, 5);
+        assert_eq!(log.filtered_jobs, 3);
+        assert_eq!(log.malformed_lines, 0);
+    }
+
+    #[test]
+    fn field_defaulting_procs_and_req_time() {
+        // Allocated procs missing -> requested used; req_time missing ->
+        // runtime used.
+        let log = parse_str("6 0 -1 450 -1 -1 -1 8 -1 -1 1 -1 -1 -1 -1 -1 -1 -1\n");
+        assert_eq!(log.jobs.len(), 1);
+        assert_eq!(log.jobs[0].procs, 8);
+        assert!((log.jobs[0].req_time - 450.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jobs_sorted_by_submit() {
+        let text =
+            [line(2, 500.0, 60.0, 1, 60.0, 1), line(1, 100.0, 60.0, 1, 60.0, 1)].join("\n");
+        let log = parse_str(&text);
+        assert_eq!(log.jobs[0].id, 1);
+        assert_eq!(log.jobs[1].id, 2);
+        assert!((log.span_s() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn swf_text_round_trips() {
+        let jobs = vec![
+            SwfJob { id: 1, submit: 0.0, runtime: 600.0, procs: 4, req_time: 900.0, status: 1 },
+            SwfJob { id: 2, submit: 120.0, runtime: 60.0, procs: 16, req_time: 60.0, status: 1 },
+        ];
+        let log = parse_str(&to_swf_text(&jobs, 64));
+        assert_eq!(log.jobs, jobs);
+        assert_eq!(log.max_nodes, Some(64));
+    }
+
+    #[test]
+    fn slice_windows_converts_and_drops() {
+        let text = [
+            line(1, 0.0, 600.0, 8, 900.0, 1),     // before window
+            line(2, 1000.0, 600.0, 8, 900.0, 1),  // in window
+            line(3, 1500.0, 600.0, 64, 900.0, 1), // in window, too wide
+            line(4, 9999.0, 600.0, 8, 900.0, 1),  // after window
+        ]
+        .join("\n");
+        let log = parse_str(&text);
+        let spec = SliceSpec {
+            nodes: 16,
+            procs_per_node: 2, // 8 procs -> 4 nodes; 64 procs -> 32 nodes
+            t0: 500.0,
+            t1: 2000.0,
+            warmup_s: 0.0,
+            debounce_s: 0.0,
+        };
+        let out = slice(&log, &spec);
+        assert_eq!(out.jobs_in_window, 2);
+        assert_eq!(out.dropped_too_large, 1);
+        assert_eq!(out.started, 1);
+        // Job 2: 4 nodes × 600 s of busy time inside the window.
+        assert!((out.busy_node_seconds - 2400.0).abs() < 1e-6);
+        assert_eq!(out.trace.machine_nodes, 16);
+        assert!(!out.trace.is_empty());
+    }
+
+    #[test]
+    fn slice_warmup_fills_before_window() {
+        // One job spans the window start; with warmup the replay knows
+        // about it and the window opens with the node busy.
+        let text = line(1, 100.0, 1000.0, 4, 1000.0, 1);
+        let log = parse_str(&text);
+        let mut spec = SliceSpec {
+            nodes: 4,
+            procs_per_node: 1,
+            t0: 500.0,
+            t1: 1500.0,
+            warmup_s: 500.0,
+            debounce_s: 0.0,
+        };
+        let with_warmup = slice(&log, &spec);
+        spec.warmup_s = 0.0;
+        let without = slice(&log, &spec);
+        // With warmup: machine busy until t=600 (rebased 100), idle after.
+        assert_eq!(with_warmup.jobs_in_window, 1);
+        let first = with_warmup.trace.events.first().expect("events");
+        assert!((first.t - 600.0).abs() < 1e-6, "got {}", first.t);
+        // Without warmup the job is invisible: fully idle window.
+        assert_eq!(without.jobs_in_window, 0);
+        assert_eq!(without.trace.events[0].t, 0.0);
+        assert_eq!(without.trace.events[0].joins.len(), 4);
+    }
+}

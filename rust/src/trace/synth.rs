@@ -1,31 +1,30 @@
-//! Synthetic idle-node trace generation: an FCFS + EASY-backfill cluster
-//! simulator.
+//! Synthetic batch-workload generation for the backfill engine.
 //!
 //! The paper derives its idle-node event stream from two months of Summit
-//! LSF logs. Those logs are not available here, so we build the substrate
-//! that *produces* such a stream: a batch scheduler simulator running a
-//! capability-computing job mix. Only the statistics of the resulting
-//! event stream matter to BFTrainer (idle fraction ≈ 9–12%, tens of pool
+//! LSF logs. Those logs are not available here, so this module builds the
+//! substrate that *produces* such a stream: a capability-computing job
+//! mix replayed through the FCFS + EASY scheduler in
+//! [`super::scheduler`]. Only the statistics of the resulting event
+//! stream matter to BFTrainer (idle fraction ≈ 9–12%, tens of pool
 //! changes per hour, most fragments short — §2.1); the presets in
 //! [`super::machines`] are calibrated to land in the paper's reported
 //! ranges and validated by tests + the `fig1_tab1_fragments` bench.
+//! Real scheduler logs enter through [`super::swf`] instead and meet the
+//! same engine.
 //!
-//! Scheduling model:
+//! Workload model:
 //! * jobs arrive by a Poisson process; sizes are log-uniform between the
 //!   machine's minimum job size and a fraction of the machine; requested
 //!   walltimes are log-normal; actual runtime is a random fraction of the
 //!   request (users overestimate — §2.1);
-//! * FCFS with EASY backfill: the queue head gets a reservation at the
-//!   earliest time enough nodes free up (using *requested* walltimes, as
-//!   real schedulers must); later jobs may start now if they fit in the
-//!   free nodes without delaying the reservation;
-//! * every allocation change emits the inverse change to the idle pool.
+//! * a configurable fraction of arrivals are *small* jobs (the
+//!   debug/dev/DL churn real systems see alongside capability jobs).
 
-use super::event::{NodeId, PoolEvent, Trace};
+use super::event::Trace;
+use super::scheduler::{self, BackfillParams, SchedJob};
 use crate::util::rng::Rng;
-use std::collections::BTreeSet;
 
-/// Workload / machine parameters for the simulator.
+/// Workload / machine parameters for the synthesizer.
 #[derive(Clone, Debug)]
 pub struct SynthParams {
     pub total_nodes: u32,
@@ -43,8 +42,7 @@ pub struct SynthParams {
     /// requested walltime.
     pub runtime_frac_lo: f64,
     pub runtime_frac_hi: f64,
-    /// Fraction of arrivals that are *small* jobs (the debug/dev/DL churn
-    /// real systems see alongside capability jobs). Small jobs drive the
+    /// Fraction of arrivals that are *small* jobs. Small jobs drive the
     /// short-fragment population of Fig 1.
     pub small_job_frac: f64,
     /// Small-job size cap (nodes) and walltime log-normal parameters.
@@ -66,28 +64,24 @@ impl Default for SynthParams {
     }
 }
 
-#[derive(Clone, Debug)]
-struct Job {
-    arrive: f64,
-    size: u32,
-    req_walltime: f64,
-    runtime: f64,
+impl SynthParams {
+    /// The engine-facing subset of the parameters.
+    pub fn backfill(&self) -> BackfillParams {
+        BackfillParams {
+            total_nodes: self.total_nodes,
+            debounce_s: self.debounce_s,
+            duration_s: self.duration_s,
+            warmup_s: self.warmup_s,
+        }
+    }
 }
 
-#[derive(Clone, Debug)]
-struct Running {
-    end_actual: f64,
-    end_requested: f64,
-    nodes: Vec<NodeId>,
-}
-
-/// Generate an idle-node event trace by simulating the batch scheduler.
-pub fn generate(params: &SynthParams, seed: u64) -> Trace {
+/// Pre-generate the Poisson arrival stream for `params`, covering the
+/// whole `[0, warmup + duration]` horizon.
+pub fn generate_jobs(params: &SynthParams, seed: u64) -> Vec<SchedJob> {
     let mut rng = Rng::new(seed);
     let horizon = params.warmup_s + params.duration_s;
-
-    // Pre-generate the arrival stream.
-    let mut jobs: Vec<Job> = Vec::new();
+    let mut jobs: Vec<SchedJob> = Vec::new();
     let mut t = 0.0;
     while t < horizon {
         t += rng.exponential(1.0 / params.mean_interarrival_s);
@@ -97,7 +91,7 @@ pub fn generate(params: &SynthParams, seed: u64) -> Trace {
         } else {
             ((params.total_nodes as f64 * params.max_job_frac) as u32).max(params.min_job_nodes)
         };
-        let size = rng
+        let nodes = rng
             .log_uniform(params.min_job_nodes as f64, max_nodes as f64 + 0.999)
             .floor()
             .clamp(params.min_job_nodes as f64, max_nodes as f64) as u32;
@@ -108,204 +102,27 @@ pub fn generate(params: &SynthParams, seed: u64) -> Trace {
         };
         let req_walltime = rng.log_normal(mu, sigma).clamp(60.0, 48.0 * 3600.0);
         let frac = rng.range_f64(params.runtime_frac_lo, params.runtime_frac_hi);
-        jobs.push(Job { arrive: t, size, req_walltime, runtime: (req_walltime * frac).max(30.0) });
-    }
-
-    // Discrete-event scheduler simulation.
-    let mut free: BTreeSet<NodeId> = (0..params.total_nodes).collect();
-    let mut queue: Vec<Job> = Vec::new(); // FCFS order
-    let mut running: Vec<Running> = Vec::new();
-    let mut next_arrival = 0usize;
-    let mut now = 0.0f64;
-    // Raw (time, idle-set snapshot) change log, converted to events later.
-    let mut changes: Vec<(f64, Vec<NodeId>, Vec<NodeId>)> = Vec::new(); // (t, to_idle, from_idle)
-
-    loop {
-        // Next event time: arrival or completion.
-        let t_arr = jobs.get(next_arrival).map(|j| j.arrive);
-        let t_done = running
-            .iter()
-            .map(|r| r.end_actual)
-            .min_by(|a, b| a.partial_cmp(b).unwrap());
-        now = match (t_arr, t_done) {
-            (Some(a), Some(d)) => a.min(d),
-            (Some(a), None) => a,
-            (None, Some(d)) => d,
-            (None, None) => break,
-        };
-        if now > horizon {
-            break;
-        }
-        // Process completions at `now`.
-        let mut freed: Vec<NodeId> = Vec::new();
-        running.retain(|r| {
-            if r.end_actual <= now + 1e-9 {
-                freed.extend(r.nodes.iter().copied());
-                false
-            } else {
-                true
-            }
+        jobs.push(SchedJob {
+            id: jobs.len() as u64,
+            submit: t,
+            nodes,
+            req_walltime,
+            runtime: (req_walltime * frac).max(30.0),
         });
-        for &n in &freed {
-            free.insert(n);
-        }
-        let mut to_idle = freed;
-        // Process arrivals at `now`.
-        while next_arrival < jobs.len() && jobs[next_arrival].arrive <= now + 1e-9 {
-            queue.push(jobs[next_arrival].clone());
-            next_arrival += 1;
-        }
-        // Schedule: FCFS + EASY backfill.
-        let mut from_idle: Vec<NodeId> = Vec::new();
-        schedule(&mut queue, &mut running, &mut free, now, &mut from_idle);
-        // Nodes that freed and were immediately re-allocated never became
-        // idle from BFTrainer's perspective (the paper removes these).
-        let reused: BTreeSet<NodeId> = to_idle
-            .iter()
-            .copied()
-            .filter(|n| from_idle.contains(n))
-            .collect();
-        to_idle.retain(|n| !reused.contains(n));
-        from_idle.retain(|n| !reused.contains(n));
-        if !to_idle.is_empty() || !from_idle.is_empty() {
-            changes.push((now, to_idle, from_idle));
-        }
-        let _ = now;
     }
-
-    build_trace(params, changes)
+    jobs
 }
 
-/// FCFS + EASY backfill over the current queue; appends allocated nodes to
-/// `allocated_out`.
-fn schedule(
-    queue: &mut Vec<Job>,
-    running: &mut Vec<Running>,
-    free: &mut BTreeSet<NodeId>,
-    now: f64,
-    allocated_out: &mut Vec<NodeId>,
-) {
-    // Start queue-head jobs while they fit.
-    while let Some(head) = queue.first() {
-        if head.size as usize <= free.len() {
-            let job = queue.remove(0);
-            start(job, running, free, now, allocated_out);
-        } else {
-            break;
-        }
-    }
-    let Some(head) = queue.first().cloned() else {
-        return;
-    };
-    // EASY: compute shadow time for the head using *requested* end times.
-    let mut ends: Vec<(f64, u32)> =
-        running.iter().map(|r| (r.end_requested, r.nodes.len() as u32)).collect();
-    ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let mut avail = free.len() as u32;
-    let mut shadow = f64::INFINITY;
-    let mut extra_at_shadow = 0u32;
-    for (t_end, n) in ends {
-        avail += n;
-        if avail >= head.size {
-            shadow = t_end;
-            extra_at_shadow = avail - head.size;
-            break;
-        }
-    }
-    // Backfill later jobs: may start now iff they fit in free nodes and
-    // either finish (by requested walltime) before the shadow time or use
-    // no more than the nodes spare at the shadow time.
-    let mut i = 1;
-    while i < queue.len() {
-        let job = &queue[i];
-        let fits_now = job.size as usize <= free.len();
-        let ok = fits_now
-            && (now + job.req_walltime <= shadow + 1e-9 || job.size <= extra_at_shadow);
-        if ok {
-            if job.size <= extra_at_shadow {
-                extra_at_shadow -= job.size;
-            }
-            let job = queue.remove(i);
-            start(job, running, free, now, allocated_out);
-        } else {
-            i += 1;
-        }
-    }
-}
-
-fn start(
-    job: Job,
-    running: &mut Vec<Running>,
-    free: &mut BTreeSet<NodeId>,
-    now: f64,
-    allocated_out: &mut Vec<NodeId>,
-) {
-    let nodes: Vec<NodeId> = free.iter().take(job.size as usize).copied().collect();
-    for n in &nodes {
-        free.remove(n);
-    }
-    allocated_out.extend(nodes.iter().copied());
-    running.push(Running {
-        end_actual: now + job.runtime,
-        end_requested: now + job.req_walltime,
-        nodes,
-    });
-}
-
-/// Convert the raw change log into a debounced, warmup-trimmed [`Trace`].
-fn build_trace(params: &SynthParams, changes: Vec<(f64, Vec<NodeId>, Vec<NodeId>)>) -> Trace {
-    // Per-node idle intervals.
-    let mut open: std::collections::BTreeMap<NodeId, f64> = Default::default();
-    let mut intervals: Vec<(NodeId, f64, f64)> = Vec::new();
-    let horizon = params.warmup_s + params.duration_s;
-    for (t, joins, leaves) in &changes {
-        for &n in leaves {
-            if let Some(t0) = open.remove(&n) {
-                intervals.push((n, t0, *t));
-            }
-        }
-        for &n in joins {
-            open.insert(n, *t);
-        }
-    }
-    for (n, t0) in open {
-        intervals.push((n, t0, horizon));
-    }
-    // Debounce: drop fragments shorter than debounce_s; trim to the
-    // [warmup, horizon] window and rebase to t=0.
-    let t0 = params.warmup_s;
-    let mut evs: std::collections::BTreeMap<i64, PoolEvent> = Default::default();
-    let quant = |t: f64| (t * 1000.0).round() as i64; // 1 ms resolution keys
-    for (n, a, b) in intervals {
-        let (a, b) = (a.max(t0), b.min(horizon));
-        if b - a < params.debounce_s {
-            continue;
-        }
-        let (ra, rb) = (a - t0, b - t0);
-        evs.entry(quant(ra))
-            .or_insert_with(|| PoolEvent { t: ra, ..Default::default() })
-            .joins
-            .push(n);
-        if rb < params.duration_s - 1e-9 {
-            evs.entry(quant(rb))
-                .or_insert_with(|| PoolEvent { t: rb, ..Default::default() })
-                .leaves
-                .push(n);
-        }
-    }
-    let mut trace = Trace::new(params.total_nodes);
-    for (_, mut ev) in evs {
-        ev.joins.sort_unstable();
-        ev.leaves.sort_unstable();
-        trace.push(ev);
-    }
-    trace
+/// Generate an idle-node event trace by simulating the batch scheduler.
+pub fn generate(params: &SynthParams, seed: u64) -> Trace {
+    scheduler::replay_jobs(&params.backfill(), generate_jobs(params, seed)).trace
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::trace::machines;
+    use crate::trace::NodeId;
 
     fn short_params() -> SynthParams {
         SynthParams {
@@ -394,5 +211,14 @@ mod tests {
             rate_big < rate_small,
             "event rate small-min {rate_small} vs big-min {rate_big}"
         );
+    }
+
+    #[test]
+    fn job_stream_matches_engine_replay() {
+        // generate() is exactly generate_jobs() fed through the engine.
+        let p = short_params();
+        let jobs = generate_jobs(&p, 23);
+        let via_engine = scheduler::replay_jobs(&p.backfill(), jobs).trace;
+        assert_eq!(generate(&p, 23).events, via_engine.events);
     }
 }

@@ -115,7 +115,7 @@ mod tests {
         let lines: Vec<&str> = s.lines().collect();
         assert_eq!(lines.len(), 4);
         assert!(lines[0].starts_with("name"));
-        assert!(lines[2].starts_with("a"));
+        assert!(lines[2].starts_with('a'));
         assert!(lines[3].starts_with("longer  22"));
     }
 

@@ -20,7 +20,12 @@ fn coord(policy: &str, objective: Objective, t_fwd: f64, pj: usize) -> Coordinat
 }
 
 fn efficiency(policy: &str, t_fwd: f64, trace: &Trace, wl: &sim::Workload) -> f64 {
-    let res = sim::replay(coord(policy, Objective::Throughput, t_fwd, 10), trace, wl, &ReplayOpts::default());
+    let res = sim::replay(
+        coord(policy, Objective::Throughput, t_fwd, 10),
+        trace,
+        wl,
+        &ReplayOpts::default(),
+    );
     let a_s = sim::static_baseline_outcome(
         coord(policy, Objective::Throughput, t_fwd, 10),
         res.metrics.eq_nodes.round().max(1.0) as u32,

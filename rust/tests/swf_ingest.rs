@@ -1,0 +1,130 @@
+//! End-to-end SWF ingestion: the checked-in fixture log is parsed,
+//! sliced, replayed through the backfill engine, characterized, and fed
+//! to the coordinator replay — plus the node-hour conservation property
+//! of the scheduler engine on random job streams.
+
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective, TrainerSpec};
+use bftrainer::scaling::ScalingCurve;
+use bftrainer::sim::{replay, ReplayOpts, Workload};
+use bftrainer::trace::scheduler::{replay_jobs, BackfillParams, SchedJob};
+use bftrainer::trace::{self, swf, SliceSpec};
+use bftrainer::util::rng::Rng;
+use std::path::PathBuf;
+
+fn fixture() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/mini.swf")
+}
+
+const FIXTURE_SPAN_S: f64 = 21600.0; // jobs submit within [0, 6 h)
+
+fn fixture_slice(nodes: u32) -> SliceSpec {
+    SliceSpec {
+        nodes,
+        procs_per_node: 1,
+        t0: 0.0,
+        t1: FIXTURE_SPAN_S,
+        warmup_s: 0.0,
+        debounce_s: 0.0,
+    }
+}
+
+#[test]
+fn fixture_parses_with_recovery() {
+    let log = swf::load(&fixture()).expect("fixture readable");
+    assert_eq!(log.jobs.len(), 16, "{log:?}");
+    assert_eq!(log.filtered_jobs, 2, "cancelled-in-queue + no-processors");
+    assert_eq!(log.malformed_lines, 2, "bad submit field + 3-field line");
+    // Cancelled mid-run (job 13) occupied nodes and is kept.
+    assert_eq!(log.jobs.iter().find(|j| j.id == 13).unwrap().status, 5);
+    assert_eq!(log.max_nodes, Some(64));
+    assert_eq!(log.max_procs, Some(64));
+    assert_eq!(log.unix_start_time, Some(1072911600));
+    // Truncated-but-parseable line (job 14) defaulted its status.
+    let j14 = log.jobs.iter().find(|j| j.id == 14).expect("job 14 kept");
+    assert_eq!(j14.status, -1);
+    // Allocated-processors fallback (job 6) and req-time default (job 7).
+    assert_eq!(log.jobs.iter().find(|j| j.id == 6).unwrap().procs, 8);
+    let j7 = log.jobs.iter().find(|j| j.id == 7).unwrap();
+    assert!((j7.req_time - j7.runtime).abs() < 1e-9);
+}
+
+#[test]
+fn fixture_slice_conserves_node_hours() {
+    let log = swf::load(&fixture()).unwrap();
+    let out = swf::slice(&log, &fixture_slice(32));
+    // Jobs 10 (48 procs) and 12 (128 procs) cannot fit a 32-node slice.
+    assert_eq!(out.dropped_too_large, 2);
+    assert_eq!(out.started, 14);
+    let idle: f64 = trace::extract(&out.trace, FIXTURE_SPAN_S)
+        .iter()
+        .map(trace::Fragment::len)
+        .sum();
+    let total = 32.0 * FIXTURE_SPAN_S;
+    assert!(
+        (idle + out.busy_node_seconds - total).abs() < 1e-6,
+        "idle {idle} + busy {} != {total}",
+        out.busy_node_seconds
+    );
+}
+
+#[test]
+fn fixture_full_pipeline_replays_against_coordinator() {
+    let log = swf::load(&fixture()).unwrap();
+    let out = swf::slice(&log, &fixture_slice(32));
+    assert!(!out.trace.is_empty());
+    let s = trace::characterize(&out.trace, FIXTURE_SPAN_S);
+    assert!(s.idle_ratio > 0.0 && s.idle_ratio < 1.0, "idle ratio {}", s.idle_ratio);
+
+    let spec = |name: &str| TrainerSpec {
+        name: name.into(),
+        n_min: 1,
+        n_max: 8,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+        total_samples: 1e9,
+    };
+    let alloc = allocator_by_name("dp").unwrap();
+    let coord = Coordinator::new(alloc, Objective::Throughput, 120.0, 4);
+    let wl = Workload::all_at_zero(vec![spec("a"), spec("b")]);
+    let res = replay(coord, &out.trace, &wl, &ReplayOpts::default());
+    assert!(res.metrics.samples_processed > 0.0, "trainers must harvest idle nodes");
+    assert!(res.metrics.n_events > 0);
+}
+
+#[test]
+fn scheduler_replay_conserves_node_hours_property() {
+    // For any job stream, busy node-time (jobs) + idle node-time (trace)
+    // tiles the machine exactly when nothing is debounced or trimmed.
+    // Integer-second times keep every idle fragment representable at the
+    // trace's 1 ms quantization, so conservation is exact.
+    const MACHINE: u32 = 16;
+    const T: f64 = 5000.0;
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let n_jobs = rng.range_usize(1, 40);
+        let jobs: Vec<SchedJob> = (0..n_jobs)
+            .map(|i| {
+                let req = rng.range_u64(10, 2000) as f64;
+                let frac = rng.range_f64(0.3, 1.0);
+                SchedJob {
+                    id: i as u64,
+                    submit: rng.range_u64(0, T as u64) as f64,
+                    nodes: rng.range_u64(1, u64::from(MACHINE)) as u32,
+                    req_walltime: req,
+                    runtime: (req * frac).ceil().max(1.0),
+                }
+            })
+            .collect();
+        let params =
+            BackfillParams { total_nodes: MACHINE, debounce_s: 0.0, duration_s: T, warmup_s: 0.0 };
+        let out = replay_jobs(&params, jobs);
+        let idle: f64 = trace::extract(&out.trace, T).iter().map(trace::Fragment::len).sum();
+        let total = f64::from(MACHINE) * T;
+        assert!(
+            (idle + out.busy_node_seconds - total).abs() < 1e-6,
+            "seed {seed}: idle {idle} + busy {} != {total}",
+            out.busy_node_seconds
+        );
+    }
+}
