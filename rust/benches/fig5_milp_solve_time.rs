@@ -24,18 +24,20 @@ fn main() {
 
     println!("== Fig 5: optimization time vs jobs and nodes ==\n");
     let mut tab = Table::new(vec![
-        "jobs", "nodes", "milp mean(ms)", "milp max(ms)", "dp mean(ms)", "agreement",
+        "jobs", "nodes", "milp mean(ms)", "milp max(ms)", "LP iters", "dp mean(ms)", "agreement",
     ]);
     for &jobs in &[5usize, 10, 20, 30] {
         for &nodes in &[50u32, 100, 200, 400, 800] {
             let mut t_milp = Vec::new();
             let mut t_dp = Vec::new();
+            let mut iters = 0usize;
             let mut agree = true;
             for _ in 0..reps {
                 let req = random_alloc_request(&mut rng, jobs, nodes);
                 let t0 = Instant::now();
                 let m = AggregateMilpAllocator::default().allocate(&req);
                 t_milp.push(t0.elapsed().as_secs_f64() * 1e3);
+                iters += m.stats.lp_iterations;
                 let t0 = Instant::now();
                 let d = DpAllocator.allocate(&req);
                 t_dp.push(t0.elapsed().as_secs_f64() * 1e3);
@@ -48,6 +50,7 @@ fn main() {
                 nodes.to_string(),
                 f(stats::mean(&t_milp), 2),
                 f(t_milp.iter().cloned().fold(0.0, f64::max), 2),
+                (iters / reps).to_string(),
                 f(stats::mean(&t_dp), 3),
                 if agree { "yes".into() } else { "NO".to_string() },
             ]);
@@ -87,7 +90,8 @@ fn main() {
     // "agreement" checks every warm objective against the exact DP.
     let events = 12usize;
     let mut tab3 = Table::new(vec![
-        "jobs", "nodes", "events", "cold mean(ms)", "warm mean(ms)", "speedup", "agreement",
+        "jobs", "nodes", "events", "cold mean(ms)", "warm mean(ms)", "speedup",
+        "LP iters (cold/warm)", "agreement",
     ]);
     for &(jobs, nodes) in &[(5usize, 100u32), (10, 200), (20, 400)] {
         let mut req = random_alloc_request(&mut rng, jobs, nodes);
@@ -98,13 +102,19 @@ fn main() {
             advance_request(&mut rng, &mut req, &dp.targets, 4);
         }
         let mut cold_ms = Vec::new();
-        for q in &seq {
+        let mut cold_iters = 0usize;
+        for (i, q) in seq.iter().enumerate() {
             let t0 = Instant::now();
-            let _ = AggregateMilpAllocator::cold().allocate(q);
+            let plan = AggregateMilpAllocator::cold().allocate(q);
             cold_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            if i > 0 {
+                // match the warm accounting: event 0 is excluded there too
+                cold_iters += plan.stats.lp_iterations;
+            }
         }
         let mut warm = AggregateMilpAllocator::incremental_only();
         let mut warm_ms = Vec::new();
+        let mut warm_iters = 0usize;
         let mut agree = true;
         for (i, q) in seq.iter().enumerate() {
             let t0 = Instant::now();
@@ -113,6 +123,7 @@ fn main() {
             if i > 0 {
                 // event 0 has no previous solution: it is itself cold
                 warm_ms.push(ms);
+                warm_iters += plan.stats.lp_iterations;
             }
             let dp = DpAllocator.allocate(q);
             if (plan.objective - dp.objective).abs() > 1e-5 * dp.objective.abs().max(1.0) {
@@ -128,6 +139,7 @@ fn main() {
             f(cold_mean, 2),
             f(warm_mean, 2),
             format!("{:.1}x", cold_mean / warm_mean.max(1e-9)),
+            format!("{cold_iters}/{warm_iters}"),
             if agree { "yes".to_string() } else { "NO".to_string() },
         ]);
     }

@@ -54,6 +54,19 @@ fn main() {
             black_box(warm.allocate(q));
         }
     });
+    // Solver-effort counters for the same sequence (the Fig 5 metric):
+    // warm starts should pay visibly fewer simplex iterations than cold.
+    {
+        let cold_iters: usize = seq
+            .iter()
+            .map(|q| AggregateMilpAllocator::cold().allocate(q).stats.lp_iterations)
+            .sum();
+        let mut warm = AggregateMilpAllocator::incremental_only();
+        let warm_iters: usize = seq.iter().map(|q| warm.allocate(q).stats.lp_iterations).sum();
+        eprintln!(
+            "alloc/milp-aggregate event-seq LP iterations: cold={cold_iters} warm={warm_iters}"
+        );
+    }
 
     // Trace synthesis (day of Summit-1024).
     let mut day = machines::summit_1024();

@@ -153,6 +153,11 @@ pub struct SolverStats {
     /// True when warm-start state carried over from the previous event
     /// (incumbent and/or simplex basis) entered this solve.
     pub warm_started: bool,
+    /// Simplex iterations across every LP relaxation of this solve
+    /// (0 for non-LP allocators).
+    pub lp_iterations: usize,
+    /// Basis refactorizations across every LP relaxation of this solve.
+    pub lp_refactorizations: usize,
 }
 
 /// The plan an [`Allocator`] answers an [`AllocRequest`] with: target

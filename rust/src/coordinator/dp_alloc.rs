@@ -91,9 +91,8 @@ impl Allocator for DpAllocator {
             stats: SolverStats {
                 solve_time: t0.elapsed(),
                 nodes_explored: nj * (cap + 1),
-                fell_back: false,
                 optimal: true,
-                warm_started: false,
+                ..Default::default()
             },
         }
     }

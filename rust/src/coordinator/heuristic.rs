@@ -64,13 +64,7 @@ impl Allocator for EqualShareAllocator {
         AllocPlan {
             targets,
             objective,
-            stats: SolverStats {
-                solve_time: t0.elapsed(),
-                nodes_explored: 0,
-                fell_back: false,
-                optimal: false,
-                warm_started: false,
-            },
+            stats: SolverStats { solve_time: t0.elapsed(), ..Default::default() },
         }
     }
 }

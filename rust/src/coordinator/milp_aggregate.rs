@@ -118,6 +118,13 @@ pub fn adapt_targets(
 }
 
 /// Build the aggregate MILP for a request. Returns (model, n-var ids).
+///
+/// Built against the bounded-variable LP core: the per-trainer count box
+/// `n_j ∈ [0, min(N_max_j, |N|)]`, the SOS2 weight boxes `w ∈ [0, 1]` and
+/// every binary's `[0, 1]` are plain variable bounds the simplex enforces
+/// natively — the solved model has **zero bound-derived constraint rows**
+/// (asserted by the solver-microbench and the differential suite), and
+/// branch-and-bound tightening them never reshapes the model.
 pub fn build_model(req: &AllocRequest) -> (Model, Vec<milp::VarId>) {
     let mut m = Model::new(Direction::Maximize);
     let pool = req.pool_size as f64;
@@ -300,6 +307,8 @@ impl Allocator for AggregateMilpAllocator {
                         fell_back: false,
                         optimal: true,
                         warm_started,
+                        lp_iterations: root.iterations,
+                        lp_refactorizations: root.refactorizations,
                     },
                 };
             }
@@ -339,6 +348,7 @@ impl Allocator for AggregateMilpAllocator {
         };
         debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
         let objective = req.objective_of(&targets);
+        let root_effort = root.as_ref().map_or((0, 0), |r| (r.iterations, r.refactorizations));
         self.prev = Some(PrevSolve { targets: targets.clone(), root_basis: res.root_basis });
         AllocPlan {
             targets,
@@ -349,6 +359,8 @@ impl Allocator for AggregateMilpAllocator {
                 fell_back,
                 optimal,
                 warm_started,
+                lp_iterations: root_effort.0 + res.lp_iterations,
+                lp_refactorizations: root_effort.1 + res.lp_refactorizations,
             },
         }
     }

@@ -11,10 +11,12 @@
 //! * Eqn 14–15 — rescale-cost indicators `z_j^u`, `z_j^d`
 //! * Eqn 16  — objective `Σ T_fwd·O_j(N_j) − Σ O_j(C_j)·R_j`
 //!
-//! This model has `O(J·|N|)` binaries, so it is exercised at the scales a
-//! dense-tableau B&B handles (tests & small Fig 5 points); the equivalent
-//! aggregate model ([`super::milp_aggregate`]) is the production path.
-//! Equivalence between the two is property-tested.
+//! This model has `O(J·|N|)` binaries. Under the bounded-variable LP core
+//! their `[0, 1]` boxes are native bounds instead of `O(J·|N|)` extra
+//! tableau rows, which is what makes the paper-literal formulation
+//! tractable beyond toy sizes; the equivalent aggregate model
+//! ([`super::milp_aggregate`]) remains the production path. Equivalence
+//! between the two is property-tested.
 
 use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
 use crate::milp::{self, Direction, LinExpr, Model, Sense};
@@ -271,6 +273,8 @@ impl Allocator for PerNodeMilpAllocator {
                 fell_back,
                 optimal,
                 warm_started: false,
+                lp_iterations: res.lp_iterations,
+                lp_refactorizations: res.lp_refactorizations,
             },
         }
     }

@@ -70,6 +70,9 @@ pub struct EventRecord {
     pub warm_started: bool,
     /// Pool size after the event.
     pub pool_size: usize,
+    /// Simplex iterations spent on this event's solve (0 for non-LP
+    /// allocators).
+    pub lp_iterations: usize,
 }
 
 /// The coordinator: owns the idle-node pool, the trainer queue, the
@@ -318,6 +321,7 @@ impl Coordinator {
             fell_back: plan.stats.fell_back,
             warm_started: plan.stats.warm_started,
             pool_size: self.pool.len(),
+            lp_iterations: plan.stats.lp_iterations,
         });
     }
 }

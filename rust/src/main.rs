@@ -376,6 +376,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
         .opt("swf-nodes", "1024", "node-slice size for the SWF scenario")
         .opt("swf-week", "0", "week index of the SWF window")
         .opt("swf-procs-per-node", "1", "SWF processors per node")
+        .opt("json", "", "write per-case metrics (samples, U, solve times, LP iterations) as JSON")
         .flag("run-to-completion", "continue each replay past trace end");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
 
@@ -513,6 +514,14 @@ fn cmd_sweep(args: &[String]) -> i32 {
     let outcomes = sim::run_sweep(&cases, m.get_usize("threads").unwrap());
     println!("{}", sim::comparison_table(&outcomes).render());
     println!("(* = best U within its scenario)");
+    let json_path = m.get_str("json").unwrap();
+    if !json_path.is_empty() {
+        if let Err(e) = std::fs::write(&json_path, sim::outcomes_json(&outcomes)) {
+            eprintln!("writing {json_path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {} case records to {json_path}", outcomes.len());
+    }
     0
 }
 

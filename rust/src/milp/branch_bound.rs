@@ -11,6 +11,7 @@
 use super::model::{Model, VarKind};
 use super::simplex::{solve_lp_warm, LpBasis, LpStatus};
 use std::collections::BinaryHeap;
+use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 const INT_TOL: f64 = 1e-6;
@@ -58,6 +59,10 @@ pub struct MilpResult {
     /// [`MilpWarmStart::basis`] to warm-start the next solve of a
     /// structurally identical model (the incremental-resolve hot path).
     pub root_basis: LpBasis,
+    /// Simplex iterations summed over every LP relaxation solved.
+    pub lp_iterations: usize,
+    /// Basis refactorizations summed over every LP relaxation solved.
+    pub lp_refactorizations: usize,
 }
 
 /// Warm-start inputs for [`solve_warm`]. Both pieces are optional and
@@ -74,13 +79,17 @@ pub struct MilpWarmStart<'a> {
     pub basis: Option<&'a LpBasis>,
 }
 
-/// One open node: bound overrides + SOS2 forced-zero masks.
+/// One open node: bound overrides (branching never reshapes the model —
+/// integer and SOS2 branches only tighten boxes in place) plus the basis
+/// of the parent's LP relaxation, which hot-starts this node's own solve.
 #[derive(Clone, Debug)]
 struct Node {
     bounds: Vec<(f64, f64)>,
     /// relaxation objective (in maximize space) — the node's potential
     relax_obj: f64,
     depth: usize,
+    /// Parent relaxation basis (shared between both children).
+    basis: Rc<LpBasis>,
 }
 
 /// Heap ordering: best relaxation bound first (max-heap).
@@ -136,6 +145,8 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
 
     let root_bounds: Vec<(f64, f64)> = model.vars.iter().map(|v| (v.lo, v.hi)).collect();
     let root_lp = solve_lp_warm(model, &root_bounds, warm.basis);
+    let mut lp_iterations = root_lp.iterations;
+    let mut lp_refactorizations = root_lp.refactorizations;
     match root_lp.status {
         LpStatus::Infeasible => {
             return MilpResult {
@@ -146,6 +157,8 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 nodes_explored: 1,
                 solve_time: t0.elapsed(),
                 root_basis: LpBasis::default(),
+                lp_iterations,
+                lp_refactorizations,
             };
         }
         LpStatus::Unbounded => {
@@ -157,12 +170,14 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 nodes_explored: 1,
                 solve_time: t0.elapsed(),
                 root_basis: LpBasis::default(),
+                lp_iterations,
+                lp_refactorizations,
             };
         }
         LpStatus::Stalled => {
             // Treat as no information: fall through with +inf bound only if
             // we have an incumbent; otherwise report NoSolution.
-            return stalled_result(incumbent, max_sign, t0, 1);
+            return stalled_result(incumbent, max_sign, t0, 1, lp_iterations, lp_refactorizations);
         }
         LpStatus::Optimal => {}
     }
@@ -173,15 +188,26 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
         bounds: root_bounds,
         relax_obj: to_max(root_lp.objective),
         depth: 0,
+        basis: Rc::new(root_lp.basis),
     }));
 
     let mut nodes = 0usize;
     let mut best_bound = to_max(root_lp.objective);
     let mut exhausted = true;
+    // A child whose relaxation stalled (or went numerically unbounded) was
+    // dropped without bound information: its subtree is *unknown*, not
+    // proven empty. Its inherited relaxation bound is retained in
+    // `dropped_bound` so the reported bound/gap still covers it, and the
+    // search may only claim optimality when the incumbent closes the gap
+    // against that bound too.
+    let mut pruned_unknown = false;
+    let mut dropped_bound = f64::NEG_INFINITY;
 
     while let Some(HeapNode(node)) = heap.pop() {
         nodes += 1;
-        best_bound = node.relax_obj; // best-first: top of heap is global UB
+        // Best-first: top of heap (plus any abandoned subtree) is the
+        // global upper bound.
+        best_bound = node.relax_obj.max(dropped_bound);
         if let Some((_, inc_obj)) = &incumbent {
             let gap = (best_bound - inc_obj) / inc_obj.abs().max(1.0);
             if gap <= limits.rel_gap {
@@ -194,6 +220,8 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                     nodes_explored: nodes,
                     solve_time: t0.elapsed(),
                     root_basis,
+                    lp_iterations,
+                    lp_refactorizations,
                 };
             }
         }
@@ -202,13 +230,26 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
             break;
         }
 
-        // Child relaxations reuse the root basis: when branching did not
-        // change the tableau shape (signature check inside) the simplex
-        // hot-starts near the root optimum instead of running phase 1.
-        let lp = solve_lp_warm(model, &node.bounds, Some(&root_basis));
-        let (x, relax_obj) = match lp.status {
-            LpStatus::Optimal => (lp.x, to_max(lp.objective)),
-            _ => continue, // infeasible/stalled child: prune
+        // Child relaxations reuse the *parent's* basis: branching only
+        // tightened a box, so when the presolve layout is unchanged
+        // (signature check inside) the simplex adopts the parent basis and
+        // phase 1 merely repairs the branched variable — basic just
+        // outside its tightened bound — in a few pivots; a branch that
+        // fixed a variable changes the layout and falls back to a cold
+        // solve.
+        let lp = solve_lp_warm(model, &node.bounds, Some(node.basis.as_ref()));
+        lp_iterations += lp.iterations;
+        lp_refactorizations += lp.refactorizations;
+        let (x, relax_obj, node_basis) = match lp.status {
+            LpStatus::Optimal => (lp.x, to_max(lp.objective), Rc::new(lp.basis)),
+            LpStatus::Infeasible => continue, // proven-empty subtree: prune
+            LpStatus::Unbounded | LpStatus::Stalled => {
+                // Numerical failure: prune, but remember the proof is gone
+                // and keep the subtree's inherited bound alive.
+                pruned_unknown = true;
+                dropped_bound = dropped_bound.max(node.relax_obj);
+                continue;
+            }
         };
         if let Some((_, inc_obj)) = &incumbent {
             if relax_obj <= inc_obj + inc_obj.abs().max(1.0) * limits.rel_gap {
@@ -236,7 +277,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 }
             }
             (Some((vi, xval)), _) => {
-                // Branch on floor/ceil.
+                // Branch on floor/ceil — a pure bound tightening.
                 let mut lo_child = node.bounds.clone();
                 lo_child[vi].1 = lo_child[vi].1.min(xval.floor());
                 let mut hi_child = node.bounds.clone();
@@ -247,6 +288,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                             bounds: b,
                             relax_obj,
                             depth: node.depth + 1,
+                            basis: node_basis.clone(),
                         }));
                     }
                 }
@@ -268,6 +310,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                         bounds: child,
                         relax_obj,
                         depth: node.depth + 1,
+                        basis: node_basis.clone(),
                     }));
                 }
             }
@@ -275,7 +318,9 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
     }
 
     let solve_time = t0.elapsed();
-    let complete = exhausted && heap.is_empty();
+    // Cover subtrees abandoned after the last pop updated best_bound.
+    best_bound = best_bound.max(dropped_bound);
+    let complete = exhausted && heap.is_empty() && !pruned_unknown;
     match incumbent {
         Some((x, obj)) => {
             let status = if complete { MilpStatus::Optimal } else { MilpStatus::Feasible };
@@ -289,6 +334,8 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 nodes_explored: nodes,
                 solve_time,
                 root_basis,
+                lp_iterations,
+                lp_refactorizations,
             }
         }
         None => MilpResult {
@@ -299,6 +346,8 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
             nodes_explored: nodes,
             solve_time,
             root_basis,
+            lp_iterations,
+            lp_refactorizations,
         },
     }
 }
@@ -308,6 +357,8 @@ fn stalled_result(
     max_sign: f64,
     t0: Instant,
     nodes: usize,
+    lp_iterations: usize,
+    lp_refactorizations: usize,
 ) -> MilpResult {
     match incumbent {
         Some((x, obj)) => MilpResult {
@@ -318,6 +369,8 @@ fn stalled_result(
             nodes_explored: nodes,
             solve_time: t0.elapsed(),
             root_basis: LpBasis::default(),
+            lp_iterations,
+            lp_refactorizations,
         },
         None => MilpResult {
             status: MilpStatus::NoSolution,
@@ -327,6 +380,8 @@ fn stalled_result(
             nodes_explored: nodes,
             solve_time: t0.elapsed(),
             root_basis: LpBasis::default(),
+            lp_iterations,
+            lp_refactorizations,
         },
     }
 }
@@ -421,6 +476,7 @@ mod tests {
         assert_eq!(r.status, MilpStatus::Optimal);
         assert!((r.objective - 16.0).abs() < 1e-6, "{}", r.objective);
         assert!((r.x[0] - 1.0).abs() < 1e-6 && (r.x[1] - 1.0).abs() < 1e-6);
+        assert!(r.lp_iterations > 0, "LP effort counters must accumulate");
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! The original two-phase dense-tableau simplex, retained as a
+//! **differential oracle** for the production revised simplex.
+//!
+//! This is the solver the LP core shipped with before the bounded-variable
+//! rewrite: variables are shifted by their lower bound, every finite upper
+//! bound becomes an explicit constraint row, phase 1 minimizes artificial
+//! infeasibility and phase 2 optimizes the true objective (Dantzig pricing
+//! with a Bland's-rule fallback). It is deliberately simple and slow —
+//! `O(rows·cols)` per pivot on an inflated tableau — which makes it a good
+//! independent check: `rust/tests/lp_differential.rs` asserts the revised
+//! simplex agrees with it on status and objective across hundreds of
+//! random models.
+//!
+//! Compiled behind the `dense-lp` feature (on by default so the
+//! differential suite runs under plain `cargo test`; production builds can
+//! drop it with `--no-default-features`). Not part of any hot path.
+
+use super::model::{Direction, Model, Sense};
+use super::simplex::LpStatus;
+
+const EPS: f64 = 1e-9;
+
+/// Dense-oracle result: status, primal point, objective (with offset).
+#[derive(Clone, Debug)]
+pub struct DenseSolution {
+    pub status: LpStatus,
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+/// One raw constraint row before sense/rhs normalization.
+struct Row {
+    coeffs: Vec<(usize, f64)>,
+    sense: Sense,
+    rhs: f64,
+}
+
+/// A normalized row (rhs >= 0) with its slack/artificial column layout.
+struct Norm {
+    coeffs: Vec<(usize, f64)>,
+    rhs: f64,
+    slack: Option<(usize, f64)>, // (col, +1/-1)
+    artificial: Option<usize>,
+}
+
+/// Solve the LP relaxation of `model` with per-variable bounds overridden
+/// by `bounds`. Integrality and SOS2 conditions are ignored.
+pub fn solve_lp_dense(model: &Model, bounds: &[(f64, f64)]) -> DenseSolution {
+    assert_eq!(bounds.len(), model.vars.len());
+    let n = model.vars.len();
+
+    for &(lo, hi) in bounds {
+        if lo > hi + EPS {
+            return failure(LpStatus::Infeasible);
+        }
+        assert!(lo.is_finite(), "lower bounds must be finite");
+    }
+
+    // Internally minimize. min_c = -c for Maximize.
+    let sign = match model.direction {
+        Direction::Maximize => -1.0,
+        Direction::Minimize => 1.0,
+    };
+    let mut c = vec![0.0; n];
+    for &(v, coef) in &model.objective.terms {
+        c[v.0] += sign * coef;
+    }
+
+    // Shift x = y + lo, y >= 0. Constraint rows plus one upper-bound row
+    // per finite-upper-bound variable (the pre-rewrite lowering).
+    let mut rows: Vec<Row> = Vec::with_capacity(model.constraints.len() + n);
+    for con in &model.constraints {
+        let mut rhs = con.rhs;
+        let mut coeffs = Vec::with_capacity(con.expr.terms.len());
+        for &(v, coef) in &con.expr.terms {
+            rhs -= coef * bounds[v.0].0;
+            coeffs.push((v.0, coef));
+        }
+        rows.push(Row { coeffs, sense: con.sense, rhs });
+    }
+    for (i, &(lo, hi)) in bounds.iter().enumerate() {
+        if hi.is_finite() {
+            if hi - lo > EPS {
+                rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Le, rhs: hi - lo });
+            } else {
+                rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Eq, rhs: 0.0 });
+            }
+        }
+    }
+
+    let m = rows.len();
+    // Normalize senses to rhs >= 0 and assign slack/artificial columns.
+    let mut norms: Vec<Norm> = Vec::with_capacity(m);
+    let mut slack_idx = 0usize;
+    let mut needs_artificial = Vec::with_capacity(m);
+    for r in rows.iter() {
+        let mut coeffs = r.coeffs.clone();
+        let mut rhs = r.rhs;
+        let mut sense = r.sense;
+        if rhs < 0.0 {
+            for t in coeffs.iter_mut() {
+                t.1 = -t.1;
+            }
+            rhs = -rhs;
+            sense = match sense {
+                Sense::Le => Sense::Ge,
+                Sense::Ge => Sense::Le,
+                Sense::Eq => Sense::Eq,
+            };
+        }
+        let (slack, art) = match sense {
+            Sense::Le => {
+                let s = Some((n + slack_idx, 1.0));
+                slack_idx += 1;
+                (s, false)
+            }
+            Sense::Ge => {
+                let s = Some((n + slack_idx, -1.0));
+                slack_idx += 1;
+                (s, true)
+            }
+            Sense::Eq => (None, true),
+        };
+        needs_artificial.push(art);
+        norms.push(Norm { coeffs, rhs, slack, artificial: None });
+    }
+    let n_slack = slack_idx;
+    let mut n_art = 0usize;
+    for (i, norm) in norms.iter_mut().enumerate() {
+        if needs_artificial[i] {
+            norm.artificial = Some(n + n_slack + n_art);
+            n_art += 1;
+        }
+    }
+    let ncols = n + n_slack + n_art;
+
+    // Dense tableau: m rows × (ncols + 1), last column = rhs.
+    let mut basis = vec![usize::MAX; m];
+    let mut t = vec![vec![0.0f64; ncols + 1]; m];
+    for (i, norm) in norms.iter().enumerate() {
+        for &(j, v) in &norm.coeffs {
+            t[i][j] += v;
+        }
+        if let Some((j, v)) = norm.slack {
+            t[i][j] = v;
+            if v > 0.0 && norm.artificial.is_none() {
+                basis[i] = j;
+            }
+        }
+        if let Some(j) = norm.artificial {
+            t[i][j] = 1.0;
+            basis[i] = j;
+        }
+        t[i][ncols] = norm.rhs;
+        debug_assert!(basis[i] != usize::MAX);
+    }
+
+    let max_iter = 200 * (m + ncols) + 1000;
+
+    // Phase 1: minimize sum of artificials.
+    if n_art > 0 {
+        let mut obj1 = vec![0.0f64; ncols + 1];
+        for j in (n + n_slack)..ncols {
+            obj1[j] = 1.0;
+        }
+        for i in 0..m {
+            if basis[i] >= n + n_slack {
+                for j in 0..=ncols {
+                    obj1[j] -= t[i][j];
+                }
+            }
+        }
+        match run_simplex(&mut t, &mut obj1, &mut basis, max_iter) {
+            SimplexOutcome::Optimal => {}
+            SimplexOutcome::Unbounded | SimplexOutcome::IterLimit => {
+                return failure(LpStatus::Stalled);
+            }
+        }
+        let phase1_val = -obj1[ncols];
+        if phase1_val > 1e-7 {
+            return failure(LpStatus::Infeasible);
+        }
+        // Pivot remaining basic artificials out where possible.
+        for i in 0..m {
+            if basis[i] >= n + n_slack {
+                if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > 1e-7) {
+                    pivot(&mut t, &mut vec![0.0; ncols + 1], &mut basis, i, j);
+                }
+            }
+        }
+    }
+
+    // Phase 2: true objective over structural columns.
+    let mut obj2 = vec![0.0f64; ncols + 1];
+    for (j, &cj) in c.iter().enumerate() {
+        obj2[j] = cj;
+    }
+    for i in 0..m {
+        let b = basis[i];
+        if obj2[b].abs() > 0.0 {
+            let f = obj2[b];
+            for j in 0..=ncols {
+                obj2[j] -= f * t[i][j];
+            }
+        }
+    }
+    // Forbid nonbasic artificials from re-entering.
+    for j in (n + n_slack)..ncols {
+        if !basis.contains(&j) {
+            obj2[j] = 1e30;
+        }
+    }
+
+    match run_simplex(&mut t, &mut obj2, &mut basis, max_iter) {
+        SimplexOutcome::Optimal => {}
+        SimplexOutcome::Unbounded => return failure(LpStatus::Unbounded),
+        SimplexOutcome::IterLimit => return failure(LpStatus::Stalled),
+    }
+
+    // Extract structural solution, unshift.
+    let mut y = vec![0.0f64; ncols];
+    for i in 0..m {
+        y[basis[i]] = t[i][ncols];
+    }
+    let x: Vec<f64> = (0..n).map(|i| y[i] + bounds[i].0).collect();
+    let objective = model.objective.eval(&x) + model.obj_offset;
+    DenseSolution { status: LpStatus::Optimal, x, objective }
+}
+
+fn failure(status: LpStatus) -> DenseSolution {
+    DenseSolution { status, x: vec![], objective: 0.0 }
+}
+
+enum SimplexOutcome {
+    Optimal,
+    Unbounded,
+    IterLimit,
+}
+
+/// Run primal simplex to optimality on a canonical tableau. `obj` is the
+/// reduced-cost row (minimization).
+fn run_simplex(
+    t: &mut [Vec<f64>],
+    obj: &mut Vec<f64>,
+    basis: &mut [usize],
+    max_iter: usize,
+) -> SimplexOutcome {
+    let m = t.len();
+    let ncols = obj.len() - 1;
+    let bland_after = max_iter / 2;
+    for iter in 0..max_iter {
+        let entering = if iter < bland_after {
+            // Dantzig: most negative reduced cost.
+            let mut best = None;
+            let mut best_val = -1e-9;
+            for j in 0..ncols {
+                if obj[j] < best_val {
+                    best_val = obj[j];
+                    best = Some(j);
+                }
+            }
+            best
+        } else {
+            // Bland: smallest index with negative reduced cost.
+            (0..ncols).find(|&j| obj[j] < -1e-9)
+        };
+        let Some(e) = entering else {
+            return SimplexOutcome::Optimal;
+        };
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            let a = t[i][e];
+            if a > 1e-9 {
+                let ratio = t[i][ncols] / a;
+                if ratio < best_ratio - 1e-12
+                    || (ratio < best_ratio + 1e-12 && leave.is_none_or(|l| basis[i] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return SimplexOutcome::Unbounded;
+        };
+        pivot(t, obj, basis, l, e);
+    }
+    SimplexOutcome::IterLimit
+}
+
+/// Gauss-Jordan pivot on (row, col); updates tableau, objective row, basis.
+fn pivot(t: &mut [Vec<f64>], obj: &mut Vec<f64>, basis: &mut [usize], row: usize, col: usize) {
+    let ncols = t[0].len() - 1;
+    let p = t[row][col];
+    debug_assert!(p.abs() > 1e-12, "pivot on ~zero element");
+    let inv = 1.0 / p;
+    for j in 0..=ncols {
+        t[row][j] *= inv;
+    }
+    t[row][col] = 1.0; // exact
+    for i in 0..t.len() {
+        if i != row {
+            let f = t[i][col];
+            if f.abs() > 1e-12 {
+                // Manual split to satisfy the borrow checker.
+                let (pr, tr) = if i < row {
+                    let (a, b) = t.split_at_mut(row);
+                    (&b[0], &mut a[i])
+                } else {
+                    let (a, b) = t.split_at_mut(i);
+                    (&a[row], &mut b[0])
+                };
+                for j in 0..=ncols {
+                    tr[j] -= f * pr[j];
+                }
+                tr[col] = 0.0;
+            }
+        }
+    }
+    let f = obj[col];
+    if f.abs() > 1e-12 {
+        for j in 0..=ncols {
+            obj[j] -= f * t[row][j];
+        }
+        obj[col] = 0.0;
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::milp::model::{LinExpr, Model};
+
+    fn lp(m: &Model) -> DenseSolution {
+        let bounds: Vec<(f64, f64)> = m.vars.iter().map(|v| (v.lo, v.hi)).collect();
+        solve_lp_dense(m, &bounds)
+    }
+
+    #[test]
+    fn textbook_max() {
+        // max 3x + 5y s.t. x <= 4, 2y <= 12, 3x + 2y <= 18 -> (2, 6), z = 36
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, f64::INFINITY, "x");
+        let y = m.continuous(0.0, f64::INFINITY, "y");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Le, 4.0, "c1");
+        m.constrain(LinExpr::new().term(y, 2.0), Sense::Le, 12.0, "c2");
+        m.constrain(LinExpr::new().term(x, 3.0).term(y, 2.0), Sense::Le, 18.0, "c3");
+        m.set_objective(LinExpr::new().term(x, 3.0).term(y, 5.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 36.0).abs() < 1e-6, "{}", s.objective);
+    }
+
+    #[test]
+    fn equality_and_ge_constraints() {
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(0.0, f64::INFINITY, "x");
+        let y = m.continuous(0.0, f64::INFINITY, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Ge, 10.0, "sum");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Ge, 2.0, "xmin");
+        m.set_objective(LinExpr::new().term(x, 2.0).term(y, 3.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 20.0).abs() < 1e-6, "{}", s.objective);
+    }
+
+    #[test]
+    fn detects_infeasible_and_unbounded() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 1.0, "x");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Ge, 2.0, "imposs");
+        m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        assert_eq!(lp(&m).status, LpStatus::Infeasible);
+
+        let mut u = Model::new(Direction::Maximize);
+        let x = u.continuous(0.0, f64::INFINITY, "x");
+        u.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        assert_eq!(lp(&u).status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn respects_boxes_and_negative_rhs() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, -1.0), Sense::Le, -2.0, "c");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 1.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 18.0).abs() < 1e-6, "{}", s.objective);
+    }
+}

@@ -1,19 +1,34 @@
 //! From-scratch MILP stack (the paper uses Gurobi; this image has no
 //! external solver).
 //!
-//! * [`model`] — variables / linear constraints / SOS2 sets / objective
-//! * [`simplex`] — two-phase dense simplex for LP relaxations, with
-//!   basis re-use across structurally identical solves
-//! * [`branch_bound`] — best-first B&B with integer and SOS2 branching,
-//!   incumbent/basis warm starts, and the paper's timeout semantics
+//! * [`model`] — variables / linear constraints / SOS2 sets / objective,
+//!   with first-class `[lb, ub]` variable boxes
+//! * [`sparse`] — CSC storage the LP core works from
+//! * [`presolve`] — fixed/empty-column and singleton-row reduction with
+//!   solution restore and the warm-start layout signature
+//! * [`simplex`] — bounded-variable revised simplex (Devex pricing,
+//!   product-form basis inverse with periodic refactorization), with
+//!   basis-snapshot re-use across structurally identical solves
+//! * [`branch_bound`] — best-first B&B that branches by tightening
+//!   variable bounds in place, reusing each parent's basis per child,
+//!   with incumbent warm starts and the paper's timeout semantics
+//! * `dense` — the pre-rewrite dense tableau solver, retained behind the
+//!   `dense-lp` feature as the differential-test oracle
 //!
 //! The allocation formulations built on top live in [`crate::coordinator`];
 //! the warm-start contract is documented in `DESIGN.md` §7.
 
 pub mod branch_bound;
+#[cfg(feature = "dense-lp")]
+pub mod dense;
 pub mod model;
+pub mod presolve;
 pub mod simplex;
+pub mod sparse;
 
 pub use branch_bound::{solve, solve_warm, Limits, MilpResult, MilpStatus, MilpWarmStart};
 pub use model::{Direction, LinExpr, Model, Sense, Sos2, Var, VarId, VarKind};
-pub use simplex::{model_bounds, solve_lp, solve_lp_warm, LpBasis, LpSolution, LpStatus};
+pub use simplex::{
+    model_bounds, solve_lp, solve_lp_warm, LpBasis, LpSolution, LpStatus, VarState,
+};
+pub use sparse::CscMatrix;

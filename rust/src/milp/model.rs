@@ -2,9 +2,16 @@
 //!
 //! The paper solves its allocation problem with Gurobi; this image has no
 //! external solver, so `milp` implements the whole stack from scratch:
-//! a model builder (this file), a two-phase dense simplex for the LP
-//! relaxation ([`super::simplex`]) and a best-first branch-and-bound with
+//! a model builder (this file), a bounded-variable revised simplex over
+//! the sparse columnar form for the LP relaxation ([`super::simplex`],
+//! fed by [`super::presolve`]) and a best-first branch-and-bound with
 //! integer and SOS2 branching ([`super::branch_bound`]).
+//!
+//! Variable boxes `[lo, hi]` are first-class attributes of [`Var`] and are
+//! enforced natively by the simplex — they are never lowered to
+//! constraint rows, so tightening a bound (the B&B branching move, the
+//! incremental-resolve bound repair) changes only *values*, never the
+//! model's shape.
 
 /// Variable identifier (index into the model's variable table).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -236,6 +243,25 @@ impl Model {
     pub fn objective_value(&self, x: &[f64]) -> f64 {
         self.objective.eval(x) + self.obj_offset
     }
+
+    /// The constraint matrix in CSC form (rows = constraints in insertion
+    /// order, columns = variables). Constraint expressions are normalized
+    /// at [`Model::constrain`] time, so no `(row, col)` duplicates exist.
+    pub fn csc(&self) -> crate::milp::sparse::CscMatrix {
+        let rows: Vec<Vec<(usize, f64)>> = self
+            .constraints
+            .iter()
+            .map(|c| c.expr.terms.iter().map(|&(v, coef)| (v.0, coef)).collect())
+            .collect();
+        crate::milp::sparse::CscMatrix::from_rows(self.vars.len(), &rows)
+    }
+
+    /// `(constraint rows, variables, nonzeros)` — the size the LP core
+    /// actually works on (bounds add no rows).
+    pub fn dims(&self) -> (usize, usize, usize) {
+        let nnz = self.constraints.iter().map(|c| c.expr.terms.len()).sum();
+        (self.constraints.len(), self.vars.len(), nnz)
+    }
 }
 
 #[cfg(test)]
@@ -296,6 +322,21 @@ mod tests {
         assert!(v.contains("half"), "{v}");
         let v = m.feasibility_violation(&[2.0], 1e-9).unwrap();
         assert!(v.contains("alpha"), "{v}");
+    }
+
+    #[test]
+    fn csc_and_dims_reflect_constraints() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 2.0), Sense::Le, 8.0, "c0");
+        m.constrain(LinExpr::new().term(y, -1.0), Sense::Ge, -3.0, "c1");
+        assert_eq!(m.dims(), (2, 2, 3));
+        let a = m.csc();
+        assert_eq!(a.nrows, 2);
+        assert_eq!(a.ncols, 2);
+        assert_eq!(a.col(0).collect::<Vec<_>>(), vec![(0, 1.0)]);
+        assert_eq!(a.col(1).collect::<Vec<_>>(), vec![(0, 2.0), (1, -1.0)]);
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! LP presolve: bound-driven model reduction ahead of the revised simplex.
+//!
+//! Three reductions run to a fixpoint, each standard and individually
+//! solution-preserving:
+//!
+//! * **fixed columns** (`hi - lo ≤ ε`, e.g. a branch-and-bound child that
+//!   pinned a binary) are substituted into every row's rhs and removed;
+//! * **empty columns** (no live constraint entry) are set to their
+//!   cost-favored bound — or flag an unbounded ray when that bound is
+//!   infinite — and removed;
+//! * **singleton rows** (one live entry `a·x ⋈ b`) become a bound
+//!   tightening on `x` and the row is dropped; empty rows are checked for
+//!   `0 ⋈ b` consistency and dropped.
+//!
+//! The result is a [`CscMatrix`] over the kept rows × kept columns plus
+//! the `[lo, hi]` boxes the simplex enforces *natively* — no upper bound
+//! ever becomes a constraint row. [`Presolved::restore`] maps a reduced
+//! solution back to the full variable space, and [`Presolved::sig`]
+//! fingerprints the reduced *layout* (which rows/columns survived, and
+//! each row's sense) for the warm-start signature check: bound and rhs
+//! values may differ between two solves that share a signature, the
+//! row/column layout may not.
+
+use super::model::{Model, Sense};
+use super::sparse::CscMatrix;
+
+/// Boxes this far apart are an empty feasible region.
+const BOUND_EPS: f64 = 1e-9;
+/// Residual tolerance for empty-row consistency (`0 ⋈ b`).
+const ROW_EPS: f64 = 1e-7;
+/// Objective coefficients below this are treated as zero when choosing an
+/// empty column's resting bound.
+const COST_EPS: f64 = 1e-12;
+
+#[inline]
+fn fnv(h: &mut u64, v: u64) {
+    *h ^= v;
+    *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+}
+
+/// A presolved LP in kept-row × kept-column space.
+#[derive(Clone, Debug)]
+pub struct Presolved {
+    /// Constraint matrix over kept rows × kept columns.
+    pub a: CscMatrix,
+    /// Sense per kept row.
+    pub sense: Vec<Sense>,
+    /// Rhs per kept row (adjusted for substituted fixed columns).
+    pub rhs: Vec<f64>,
+    /// Bounds per kept column (possibly tightened by singleton rows).
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+    /// Minimize-space objective per kept column.
+    pub cost: Vec<f64>,
+    /// Kept column -> original variable index.
+    pub col_map: Vec<usize>,
+    /// Full-length assignment of eliminated variables (kept entries are
+    /// overwritten by [`Presolved::restore`]).
+    fixed: Vec<f64>,
+    /// Layout fingerprint (see module docs).
+    pub sig: u64,
+    /// Presolve proved the feasible region empty.
+    pub infeasible: bool,
+    /// An eliminated empty column improves the objective without bound;
+    /// if the rest of the model is feasible the LP is unbounded.
+    pub unbounded_ray: bool,
+}
+
+impl Presolved {
+    pub fn n_rows(&self) -> usize {
+        self.sense.len()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.col_map.len()
+    }
+
+    /// Lift a kept-column assignment back to the full variable space.
+    pub fn restore(&self, x_kept: &[f64]) -> Vec<f64> {
+        assert_eq!(x_kept.len(), self.col_map.len());
+        let mut x = self.fixed.clone();
+        for (k, &c) in self.col_map.iter().enumerate() {
+            x[c] = x_kept[k];
+        }
+        x
+    }
+}
+
+/// Run the presolve over `model`'s constraints with per-variable `bounds`
+/// and the minimize-space objective `cost` (both full-length).
+pub fn presolve(model: &Model, bounds: &[(f64, f64)], cost: &[f64]) -> Presolved {
+    let n = model.vars.len();
+    let nc = model.constraints.len();
+    assert_eq!(bounds.len(), n);
+    assert_eq!(cost.len(), n);
+
+    let mut lo: Vec<f64> = bounds.iter().map(|&(l, _)| l).collect();
+    let mut hi: Vec<f64> = bounds.iter().map(|&(_, h)| h).collect();
+    let mut rhs: Vec<f64> = model.constraints.iter().map(|c| c.rhs).collect();
+    let mut col_alive = vec![true; n];
+    let mut row_alive = vec![true; nc];
+    let mut fixed = vec![0.0f64; n];
+    let mut infeasible = false;
+    let mut unbounded_ray = false;
+
+    // Column -> (row, coef) index of the original constraints, so fixing a
+    // column can substitute into every row it touches in O(nnz(column)).
+    let mut by_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for (i, con) in model.constraints.iter().enumerate() {
+        for &(v, coef) in &con.expr.terms {
+            by_col[v.0].push((i, coef));
+        }
+    }
+    // Live entries per row/column, maintained incrementally.
+    let mut row_live: Vec<usize> =
+        model.constraints.iter().map(|c| c.expr.terms.len()).collect();
+    let mut col_live: Vec<usize> = by_col.iter().map(|c| c.len()).collect();
+
+    let mut changed = true;
+    let mut passes = 0usize;
+    while changed && passes < 32 && !infeasible {
+        changed = false;
+        passes += 1;
+
+        // Fixed and empty columns.
+        for c in 0..n {
+            if !col_alive[c] {
+                continue;
+            }
+            if lo[c] > hi[c] + BOUND_EPS {
+                infeasible = true;
+                break;
+            }
+            let width = hi[c] - lo[c];
+            let value = if width <= BOUND_EPS {
+                Some(lo[c].min(hi[c]))
+            } else if col_live[c] == 0 {
+                // Empty column: rest at the cost-favored bound.
+                if cost[c] < -COST_EPS {
+                    if hi[c].is_finite() {
+                        Some(hi[c])
+                    } else {
+                        unbounded_ray = true;
+                        Some(lo[c])
+                    }
+                } else {
+                    debug_assert!(lo[c].is_finite(), "lower bounds must be finite");
+                    Some(lo[c])
+                }
+            } else {
+                None
+            };
+            if let Some(v) = value {
+                col_alive[c] = false;
+                fixed[c] = v;
+                for &(r, coef) in &by_col[c] {
+                    if row_alive[r] {
+                        rhs[r] -= coef * v;
+                        row_live[r] -= 1;
+                    }
+                }
+                changed = true;
+            }
+        }
+
+        // Empty and singleton rows.
+        for (i, con) in model.constraints.iter().enumerate() {
+            if infeasible || !row_alive[i] {
+                continue;
+            }
+            match row_live[i] {
+                0 => {
+                    let ok = match con.sense {
+                        Sense::Le => rhs[i] >= -ROW_EPS,
+                        Sense::Ge => rhs[i] <= ROW_EPS,
+                        Sense::Eq => rhs[i].abs() <= ROW_EPS,
+                    };
+                    if !ok {
+                        infeasible = true;
+                    }
+                    row_alive[i] = false;
+                    changed = true;
+                }
+                1 => {
+                    let &(vid, a) =
+                        con.expr.terms.iter().find(|&&(v, _)| col_alive[v.0]).expect("live term");
+                    let c = vid.0;
+                    let v = rhs[i] / a;
+                    match (con.sense, a > 0.0) {
+                        (Sense::Le, true) | (Sense::Ge, false) => hi[c] = hi[c].min(v),
+                        (Sense::Ge, true) | (Sense::Le, false) => lo[c] = lo[c].max(v),
+                        (Sense::Eq, _) => {
+                            lo[c] = lo[c].max(v);
+                            hi[c] = hi[c].min(v);
+                        }
+                    }
+                    row_alive[i] = false;
+                    col_live[c] -= 1;
+                    changed = true;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // Defensive: a tightening in the very last allowed pass could leave a
+    // crossed box behind; kept columns sit nonbasic in the simplex where
+    // only basic values are feasibility-checked, so catch it here.
+    if !infeasible {
+        for c in 0..n {
+            if col_alive[c] && lo[c] > hi[c] + BOUND_EPS {
+                infeasible = true;
+                break;
+            }
+        }
+    }
+
+    // Compact the survivors.
+    let col_map: Vec<usize> = (0..n).filter(|&c| col_alive[c]).collect();
+    let mut col_new = vec![usize::MAX; n];
+    for (k, &c) in col_map.iter().enumerate() {
+        col_new[c] = k;
+    }
+    let mut out_rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut sense_out = Vec::new();
+    let mut rhs_out = Vec::new();
+    let mut sig = 0xCBF2_9CE4_8422_2325u64;
+    fnv(&mut sig, n as u64);
+    fnv(&mut sig, col_map.len() as u64);
+    for &c in &col_map {
+        fnv(&mut sig, c as u64);
+    }
+    for (i, con) in model.constraints.iter().enumerate() {
+        if !row_alive[i] {
+            continue;
+        }
+        out_rows.push(
+            con.expr
+                .terms
+                .iter()
+                .filter(|&&(v, _)| col_alive[v.0])
+                .map(|&(v, coef)| (col_new[v.0], coef))
+                .collect(),
+        );
+        sense_out.push(con.sense);
+        rhs_out.push(rhs[i]);
+        fnv(&mut sig, i as u64);
+        fnv(&mut sig, match con.sense {
+            Sense::Le => 1,
+            Sense::Ge => 2,
+            Sense::Eq => 3,
+        });
+    }
+    fnv(&mut sig, sense_out.len() as u64);
+
+    let a = CscMatrix::from_rows(col_map.len(), &out_rows);
+    Presolved {
+        a,
+        sense: sense_out,
+        rhs: rhs_out,
+        lo: col_map.iter().map(|&c| lo[c]).collect(),
+        hi: col_map.iter().map(|&c| hi[c]).collect(),
+        cost: col_map.iter().map(|&c| cost[c]).collect(),
+        col_map,
+        fixed,
+        sig,
+        infeasible,
+        unbounded_ray,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::milp::model::{Direction, LinExpr, Model, Sense};
+
+    fn bounds_of(m: &Model) -> Vec<(f64, f64)> {
+        m.vars.iter().map(|v| (v.lo, v.hi)).collect()
+    }
+
+    #[test]
+    fn fixed_column_is_substituted() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(3.0, 3.0, "x"); // fixed at 3
+        let y = m.continuous(0.0, 10.0, "y");
+        let z = m.continuous(0.0, 10.0, "z");
+        m.constrain(LinExpr::new().term(x, 2.0).term(y, 1.0).term(z, 1.0), Sense::Le, 10.0, "c");
+        let p = presolve(&m, &bounds_of(&m), &[0.0, -1.0, -1.0]);
+        assert!(!p.infeasible);
+        assert_eq!(p.n_cols(), 2, "x eliminated, y/z kept");
+        assert_eq!(p.n_rows(), 1);
+        assert!((p.rhs[0] - 4.0).abs() < 1e-12, "rhs adjusted by 2*3");
+        let x_full = p.restore(&[4.0, 0.0]);
+        assert_eq!(x_full, vec![3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_column_rests_at_cost_favored_bound() {
+        let mut m = Model::new(Direction::Maximize);
+        let _x = m.continuous(1.0, 5.0, "x"); // appears in no row
+        let p_min = presolve(&m, &bounds_of(&m), &[1.0]); // minimize +x -> lo
+        assert_eq!(p_min.restore(&[]), vec![1.0]);
+        let p_max = presolve(&m, &bounds_of(&m), &[-1.0]); // minimize -x -> hi
+        assert_eq!(p_max.restore(&[]), vec![5.0]);
+        assert!(!p_max.unbounded_ray);
+    }
+
+    #[test]
+    fn empty_improving_column_with_open_bound_flags_ray() {
+        let mut m = Model::new(Direction::Maximize);
+        let _x = m.continuous(0.0, f64::INFINITY, "x");
+        let p = presolve(&m, &bounds_of(&m), &[-1.0]);
+        assert!(p.unbounded_ray);
+    }
+
+    #[test]
+    fn singleton_row_tightens_and_cascades() {
+        // 2x <= 8 tightens hi(x) to 4; -x <= -4 tightens lo(x) to 4 -> x
+        // fixed -> the wide row becomes a singleton on y (hi(y) <- 5) and
+        // drops too -> y is an empty min-cost column resting at lo = 0.
+        // The whole model presolves away.
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 2.0), Sense::Le, 8.0, "s1");
+        m.constrain(LinExpr::new().term(x, -1.0), Sense::Le, -4.0, "s2");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 9.0, "wide");
+        let p = presolve(&m, &bounds_of(&m), &[0.0, 1.0]);
+        assert!(!p.infeasible);
+        assert_eq!(p.n_rows(), 0, "all rows reduced away");
+        assert_eq!(p.n_cols(), 0);
+        assert_eq!(p.restore(&[]), vec![4.0, 0.0]);
+    }
+
+    #[test]
+    fn contradictory_singletons_detected() {
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(0.0, 10.0, "x");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Ge, 7.0, "ge");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Le, 3.0, "le");
+        let p = presolve(&m, &bounds_of(&m), &[0.0]);
+        assert!(p.infeasible);
+    }
+
+    #[test]
+    fn empty_row_consistency_checked() {
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(2.0, 2.0, "x");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Eq, 5.0, "bad"); // 2 != 5
+        let p = presolve(&m, &bounds_of(&m), &[0.0]);
+        assert!(p.infeasible);
+        let mut ok = Model::new(Direction::Minimize);
+        let x = ok.continuous(2.0, 2.0, "x");
+        ok.constrain(LinExpr::new().term(x, 1.0), Sense::Eq, 2.0, "good");
+        assert!(!presolve(&ok, &bounds_of(&ok), &[0.0]).infeasible);
+    }
+
+    #[test]
+    fn sig_stable_under_value_changes_only() {
+        let build = |cap: f64| {
+            let mut m = Model::new(Direction::Maximize);
+            let x = m.continuous(0.0, 10.0, "x");
+            let y = m.continuous(0.0, 10.0, "y");
+            m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, cap, "c");
+            m
+        };
+        let m1 = build(6.0);
+        let m2 = build(9.0);
+        let p1 = presolve(&m1, &bounds_of(&m1), &[0.0, 0.0]);
+        let p2 = presolve(&m2, &bounds_of(&m2), &[0.0, 0.0]);
+        assert_eq!(p1.sig, p2.sig, "rhs value change keeps layout");
+        // Fixing x removes a column: layout (and sig) must change.
+        let p3 = presolve(&m1, &[(4.0, 4.0), (0.0, 10.0)], &[0.0, 0.0]);
+        assert_ne!(p1.sig, p3.sig);
+    }
+}

@@ -1,16 +1,52 @@
-//! Two-phase dense (tableau) simplex for the LP relaxation.
+//! Bounded-variable revised simplex over a sparse columnar model.
 //!
-//! Scope: the models BFTrainer builds are small-to-medium (hundreds of
-//! variables/constraints for the aggregate formulation; the per-node,
-//! paper-faithful formulation is only solved at sizes where a dense
-//! tableau is still comfortable). Variables are shifted by their lower
-//! bound; finite upper bounds become explicit rows. Phase 1 minimizes
-//! artificial infeasibility; phase 2 optimizes the true objective.
-//! Dantzig pricing with a Bland's-rule fallback guards against cycling.
+//! The LP core behind every relaxation the branch-and-bound solves.
+//! Variable boxes `[lo, hi]` are enforced *natively* — a nonbasic variable
+//! rests at one of its bounds ([`VarState`]) and may "bound-flip" to the
+//! other without a basis change — so no upper bound ever becomes a
+//! constraint row. Combined with the [`super::presolve`] pass (fixed and
+//! empty columns out, singleton rows folded into bounds) the working
+//! basis is `rows × rows` over the *structural* constraints only, where
+//! the old dense tableau carried one extra row per bounded variable.
+//!
+//! Mechanics: the constraint matrix is CSC ([`super::sparse::CscMatrix`]);
+//! the basis inverse is dense and maintained by product-form eta updates
+//! with a full refactorization every `REFACTOR_EVERY` pivots (and on
+//! numerical trouble). Pricing is Devex — the practical approximation of
+//! steepest edge — degrading to Dantzig under fresh reference weights and
+//! to Bland's rule after an iteration threshold to break cycling. Phase 1
+//! runs the same machinery under composite infeasibility costs (basic
+//! variables outside their bounds price at ∓1), so no artificial columns
+//! exist at all.
+//!
+//! Warm starts: [`LpBasis`] snapshots the basic set plus every nonbasic
+//! variable's bound state, keyed by the presolve layout signature. A later
+//! [`solve_lp_warm`] adopts the snapshot when the signatures match and the
+//! basis refactorizes nonsingularly; phase 1 then terminates immediately
+//! if the implied point is primal feasible under the new bounds/rhs, and
+//! otherwise *repairs* the adopted basis with a few composite pivots —
+//! the branch-and-bound child case, where the branched variable sits
+//! basic just outside its tightened bound. Any structural mismatch
+//! silently falls back to the cold start.
 
-use super::model::{Direction, Model, Sense};
+use super::model::{Direction, Model};
+use super::presolve::{presolve, Presolved};
+use super::sparse::CscMatrix;
 
 const EPS: f64 = 1e-9;
+/// Reduced-cost tolerance for entering candidates.
+const DTOL: f64 = 1e-9;
+/// Per-variable bound violation below this is "feasible" inside phase 1.
+const VTOL: f64 = 1e-9;
+/// Total phase-1 infeasibility below this is primal feasible.
+const FEAS_TOTAL: f64 = 1e-7;
+/// Ratio-test rate and tie tolerances.
+const RTOL: f64 = 1e-9;
+const TIE: f64 = 1e-9;
+/// Pivot elements smaller than this trigger a refactorization.
+const PIVOT_MIN: f64 = 1e-10;
+/// Pivots between basis-inverse refactorizations.
+const REFACTOR_EVERY: usize = 64;
 
 /// LP outcome classification.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,9 +58,40 @@ pub enum LpStatus {
     Stalled,
 }
 
+/// Where a variable sits relative to the current basis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VarState {
+    Basic,
+    /// Nonbasic at its (finite) lower bound.
+    AtLower,
+    /// Nonbasic at its (finite) upper bound.
+    AtUpper,
+}
+
+/// A basis snapshot: the basic set and every nonbasic column's bound
+/// state (structural columns first, then one logical per row), plus the
+/// presolve layout signature of the model it came from. [`solve_lp_warm`]
+/// re-uses a snapshot only when the new solve's signature matches exactly
+/// — bound and rhs *values* may differ (the incremental-resolve case),
+/// the row/column *layout* may not.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LpBasis {
+    /// Per-column state over `cols + rows` presolved columns.
+    pub states: Vec<VarState>,
+    /// Fingerprint of the presolved layout the snapshot belongs to.
+    pub sig: u64,
+}
+
+impl LpBasis {
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+}
+
 /// LP result: status, primal point (original variable space), objective
-/// value in the model's direction (including offset), plus the final
-/// simplex basis for warm-starting a later, structurally identical solve.
+/// value in the model's direction (including offset), the final basis
+/// snapshot for warm-starting a later structurally identical solve, and
+/// solver effort counters.
 #[derive(Clone, Debug)]
 pub struct LpSolution {
     pub status: LpStatus,
@@ -32,101 +99,20 @@ pub struct LpSolution {
     pub objective: f64,
     /// Final basis; empty unless `status == Optimal`.
     pub basis: LpBasis,
+    /// Simplex iterations (pivots + bound flips) across both phases.
+    pub iterations: usize,
+    /// Basis-inverse refactorizations performed.
+    pub refactorizations: usize,
+    /// Constraint rows after presolve. Bounds never lower to rows, so this
+    /// is at most `model.constraints.len()`.
+    pub rows: usize,
+    /// Structural columns after presolve.
+    pub cols: usize,
 }
 
-/// A simplex basis snapshot: the basic column of each tableau row plus a
-/// shape signature of the tableau it came from. [`solve_lp_warm`] re-uses
-/// a basis only when the new tableau's signature matches exactly — bound
-/// and rhs *values* may differ (that is the incremental-resolve case),
-/// the row/column *layout* may not.
-#[derive(Clone, Debug, Default, PartialEq)]
-pub struct LpBasis {
-    /// Basic column index per tableau row.
-    pub cols: Vec<usize>,
-    /// Fingerprint of the tableau shape the basis belongs to.
-    pub sig: u64,
-}
-
-impl LpBasis {
-    pub fn is_empty(&self) -> bool {
-        self.cols.is_empty()
-    }
-}
-
-/// One raw constraint row before sense/rhs normalization.
-struct Row {
-    coeffs: Vec<(usize, f64)>,
-    sense: Sense,
-    rhs: f64,
-}
-
-/// A normalized row (rhs >= 0) with its slack/artificial column layout.
-struct Norm {
-    coeffs: Vec<(usize, f64)>,
-    rhs: f64,
-    slack: Option<(usize, f64)>, // (col, +1/-1)
-    artificial: Option<usize>,
-}
-
-#[inline]
-fn fnv(h: &mut u64, v: u64) {
-    *h ^= v;
-    *h = h.wrapping_mul(0x0000_0100_0000_01B3);
-}
-
-/// Build the dense tableau + initial (slack/artificial) basis from `norms`.
-fn build_tableau(norms: &[Norm], ncols: usize, basis: &mut [usize]) -> Vec<Vec<f64>> {
-    let m = norms.len();
-    let mut t = vec![vec![0.0f64; ncols + 1]; m];
-    for (i, norm) in norms.iter().enumerate() {
-        basis[i] = usize::MAX;
-        for &(j, v) in &norm.coeffs {
-            t[i][j] += v;
-        }
-        if let Some((j, v)) = norm.slack {
-            t[i][j] = v;
-            if v > 0.0 && norm.artificial.is_none() {
-                basis[i] = j;
-            }
-        }
-        if let Some(j) = norm.artificial {
-            t[i][j] = 1.0;
-            basis[i] = j;
-        }
-        t[i][ncols] = norm.rhs;
-        debug_assert!(basis[i] != usize::MAX);
-    }
-    t
-}
-
-/// Pivot the tableau onto the given warm basis (one column per row, rows
-/// may be reordered). Returns false — leaving the tableau unusable, the
-/// caller must rebuild — when the basis is singular or not primal
-/// feasible under the current rhs.
-fn try_warm_basis(t: &mut [Vec<f64>], basis: &mut [usize], cols: &[usize]) -> bool {
-    let m = t.len();
-    let ncols = t[0].len() - 1;
-    let mut dummy_obj = vec![0.0f64; ncols + 1];
-    for (i, &c) in cols.iter().enumerate() {
-        // Partial pivoting among the not-yet-assigned rows.
-        let mut best = i;
-        let mut best_abs = t[i][c].abs();
-        for r in (i + 1)..m {
-            let a = t[r][c].abs();
-            if a > best_abs {
-                best_abs = a;
-                best = r;
-            }
-        }
-        if best_abs < 1e-8 {
-            return false; // singular basis for this tableau
-        }
-        t.swap(i, best);
-        basis.swap(i, best);
-        pivot(t, &mut dummy_obj, basis, i, c);
-    }
-    // Primal feasible under the new rhs?
-    (0..m).all(|i| t[i][ncols] >= -1e-7)
+/// Convenience: the model's own bounds as the override vector.
+pub fn model_bounds(model: &Model) -> Vec<(f64, f64)> {
+    model.vars.iter().map(|v| (v.lo, v.hi)).collect()
 }
 
 /// Solve the LP relaxation of `model` with per-variable bounds overridden
@@ -138,23 +124,15 @@ pub fn solve_lp(model: &Model, bounds: &[(f64, f64)]) -> LpSolution {
 }
 
 /// Like [`solve_lp`], but optionally warm-started from a previous solve's
-/// basis. When the basis matches the new tableau's shape signature, is
-/// nonsingular and primal feasible under the new bounds/rhs, phase 1 is
-/// skipped entirely and phase 2 starts at (or near) the previous optimum;
-/// otherwise the solver silently falls back to the cold two-phase path.
+/// basis snapshot (see [`LpBasis`]). An adopted basis skips phase 1 when
+/// it is still primal feasible and is repaired by a short phase-1 run
+/// when it is not; a snapshot that no longer fits structurally silently
+/// falls back to the cold slack-basis start.
 pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis>) -> LpSolution {
     assert_eq!(bounds.len(), model.vars.len());
-    let n = model.vars.len();
-
-    // Quick bound sanity: empty box -> infeasible.
     for &(lo, hi) in bounds {
         if lo > hi + EPS {
-            return LpSolution {
-                status: LpStatus::Infeasible,
-                x: vec![],
-                objective: 0.0,
-                basis: LpBasis::default(),
-            };
+            return lp_failure(LpStatus::Infeasible, 0, 0);
         }
         assert!(lo.is_finite(), "lower bounds must be finite");
     }
@@ -164,318 +142,682 @@ pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis
         Direction::Maximize => -1.0,
         Direction::Minimize => 1.0,
     };
-    let mut c = vec![0.0; n];
+    let mut cost = vec![0.0; model.vars.len()];
     for &(v, coef) in &model.objective.terms {
-        c[v.0] += sign * coef;
+        cost[v.0] += sign * coef;
     }
 
-    // Shift x = y + lo, y >= 0. Collect rows: constraints with adjusted
-    // rhs, plus upper-bound rows y_i <= hi - lo (when finite).
-    let mut rows: Vec<Row> = Vec::with_capacity(model.constraints.len() + n);
-    for con in &model.constraints {
-        let mut rhs = con.rhs;
-        let mut coeffs = Vec::with_capacity(con.expr.terms.len());
-        for &(v, coef) in &con.expr.terms {
-            rhs -= coef * bounds[v.0].0;
-            coeffs.push((v.0, coef));
+    let p = presolve(model, bounds, &cost);
+    if p.infeasible {
+        return lp_failure(LpStatus::Infeasible, 0, 0);
+    }
+
+    let mut s = Solver::new(&p);
+    let mut adopted = match warm {
+        Some(wb) if wb.sig == p.sig => s.try_warm(&wb.states),
+        _ => false,
+    };
+    if !adopted {
+        s.cold_start();
+    }
+
+    let max_iter = 200 * (s.n + 2 * s.m) + 1000;
+
+    // Two-phase run, with one retry from the cold slack basis if a
+    // warm-adopted start breaks down numerically — a stall on the adopted
+    // basis is a property of that starting point, not of the LP, and the
+    // module contract is that warm starts only ever accelerate.
+    // Infeasible/Unbounded verdicts are basis-independent proofs and are
+    // never retried.
+    let outcome = loop {
+        match s.two_phase(max_iter, p.unbounded_ray) {
+            TwoPhase::Broken if adopted => {
+                adopted = false;
+                s.cold_start();
+            }
+            other => break other,
         }
-        rows.push(Row { coeffs, sense: con.sense, rhs });
-    }
-    // One bound row per finite-upper-bound variable, in variable order:
-    // `y_i <= hi - lo` when the box has width, the equality `y_i = 0`
-    // pinning a collapsed (fixed) variable otherwise. Emitting both kinds
-    // from a single ordered pass keeps the row layout stable across
-    // re-solves, which the warm-start signature relies on.
-    for (i, &(lo, hi)) in bounds.iter().enumerate() {
-        if hi.is_finite() {
-            if hi - lo > EPS {
-                rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Le, rhs: hi - lo });
-            } else {
-                rows.push(Row { coeffs: vec![(i, 1.0)], sense: Sense::Eq, rhs: 0.0 });
-            }
+    };
+    match outcome {
+        TwoPhase::Done => {}
+        TwoPhase::Infeasible => {
+            return lp_failure(LpStatus::Infeasible, s.iterations, s.refactorizations);
         }
-    }
-
-    let m = rows.len();
-    // Column layout: [structural 0..n | slack/surplus | artificial].
-    // Artificials: Ge (after b>=0 normalization) and Eq rows get one; Le
-    // rows with negative rhs flip to Ge. Determined after normalization.
-    let mut norms: Vec<Norm> = Vec::with_capacity(m);
-    let mut slack_idx = 0usize;
-    // First pass: normalize senses to rhs >= 0 and assign slack columns.
-    let mut needs_artificial = Vec::with_capacity(m);
-    for r in rows.iter() {
-        let mut coeffs = r.coeffs.clone();
-        let mut rhs = r.rhs;
-        let mut sense = r.sense;
-        if rhs < 0.0 {
-            for t in coeffs.iter_mut() {
-                t.1 = -t.1;
-            }
-            rhs = -rhs;
-            sense = match sense {
-                Sense::Le => Sense::Ge,
-                Sense::Ge => Sense::Le,
-                Sense::Eq => Sense::Eq,
-            };
+        TwoPhase::Unbounded => {
+            return lp_failure(LpStatus::Unbounded, s.iterations, s.refactorizations);
         }
-        let (slack, art) = match sense {
-            Sense::Le => {
-                let s = Some((n + slack_idx, 1.0));
-                slack_idx += 1;
-                (s, false)
-            }
-            Sense::Ge => {
-                let s = Some((n + slack_idx, -1.0));
-                slack_idx += 1;
-                (s, true)
-            }
-            Sense::Eq => (None, true),
-        };
-        needs_artificial.push(art);
-        norms.push(Norm { coeffs, rhs, slack, artificial: None });
-    }
-    let n_slack = slack_idx;
-    let mut n_art = 0usize;
-    for (i, norm) in norms.iter_mut().enumerate() {
-        if needs_artificial[i] {
-            norm.artificial = Some(n + n_slack + n_art);
-            n_art += 1;
-        }
-    }
-    let ncols = n + n_slack + n_art;
-
-    // Tableau shape signature: dimensions plus each row's slack sign and
-    // artificial presence. Equal signatures <=> identical column layout.
-    let mut sig = 0xCBF2_9CE4_8422_2325u64;
-    fnv(&mut sig, m as u64);
-    fnv(&mut sig, n as u64);
-    fnv(&mut sig, ncols as u64);
-    for norm in &norms {
-        fnv(&mut sig, match norm.slack {
-            Some((_, s)) if s > 0.0 => 1,
-            Some(_) => 2,
-            None => 3,
-        });
-        fnv(&mut sig, norm.artificial.is_some() as u64);
-    }
-
-    // Dense tableau: m rows × (ncols + 1), last column = rhs.
-    let mut basis = vec![usize::MAX; m];
-    let mut t = build_tableau(&norms, ncols, &mut basis);
-
-    // Warm start: adopt the previous basis if it still fits. Artificial
-    // columns are never accepted back into a warm basis — a clean optimal
-    // basis only holds structural and slack columns.
-    let mut warmed = false;
-    if let Some(w) = warm {
-        if m > 0 && w.sig == sig && w.cols.len() == m && w.cols.iter().all(|&c| c < n + n_slack) {
-            if try_warm_basis(&mut t, &mut basis, &w.cols) {
-                warmed = true;
-            } else {
-                // Pivoting mutated the tableau: rebuild for the cold path.
-                t = build_tableau(&norms, ncols, &mut basis);
-            }
+        TwoPhase::Broken => {
+            return lp_failure(LpStatus::Stalled, s.iterations, s.refactorizations);
         }
     }
 
-    // Objective rows as reduced-cost vectors. obj[ncols] holds -z.
-    // Phase 1: minimize sum of artificials.
-    let max_iter = 200 * (m + ncols) + 1000;
-
-    if !warmed && n_art > 0 {
-        let mut obj1 = vec![0.0f64; ncols + 1];
-        for j in (n + n_slack)..ncols {
-            obj1[j] = 1.0;
-        }
-        // Make reduced costs of basic artificials zero.
-        for i in 0..m {
-            if basis[i] >= n + n_slack {
-                for j in 0..=ncols {
-                    obj1[j] -= t[i][j];
-                }
-            }
-        }
-        match run_simplex(&mut t, &mut obj1, &mut basis, max_iter) {
-            SimplexOutcome::Optimal => {}
-            SimplexOutcome::Unbounded => {
-                // Phase-1 objective is bounded below by 0; reaching here
-                // means numerical trouble.
-                return lp_failure(LpStatus::Stalled);
-            }
-            SimplexOutcome::IterLimit => {
-                return lp_failure(LpStatus::Stalled);
-            }
-        }
-        let phase1_val = -obj1[ncols];
-        if phase1_val > 1e-7 {
-            return lp_failure(LpStatus::Infeasible);
-        }
-        // Pivot remaining basic artificials out where possible.
-        for i in 0..m {
-            if basis[i] >= n + n_slack {
-                if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > 1e-7) {
-                    pivot(&mut t, &mut vec![0.0; ncols + 1], &mut basis, i, j);
-                }
-                // else: redundant row; leave artificial basic at 0.
-            }
-        }
-    }
-
-    // Phase 2: true objective over structural columns.
-    let mut obj2 = vec![0.0f64; ncols + 1];
-    for (j, &cj) in c.iter().enumerate() {
-        obj2[j] = cj;
-    }
-    // Canonicalize: zero out reduced costs of basic columns.
-    for i in 0..m {
-        let b = basis[i];
-        if obj2[b].abs() > 0.0 {
-            let f = obj2[b];
-            for j in 0..=ncols {
-                obj2[j] -= f * t[i][j];
-            }
-        }
-    }
-    // Forbid artificials from re-entering by giving them +inf cost
-    // (implemented: skip them in pricing inside run_simplex via a cutoff
-    // column index — encode by setting their reduced cost to +1e30).
-    for j in (n + n_slack)..ncols {
-        if !basis.contains(&j) {
-            obj2[j] = 1e30;
-        }
-    }
-
-    match run_simplex(&mut t, &mut obj2, &mut basis, max_iter) {
-        SimplexOutcome::Optimal => {}
-        SimplexOutcome::Unbounded => {
-            return lp_failure(LpStatus::Unbounded);
-        }
-        SimplexOutcome::IterLimit => {
-            return lp_failure(LpStatus::Stalled);
-        }
-    }
-
-    // Extract structural solution, unshift.
-    let mut y = vec![0.0f64; ncols];
-    for i in 0..m {
-        y[basis[i]] = t[i][ncols];
-    }
-    let x: Vec<f64> = (0..n).map(|i| y[i] + bounds[i].0).collect();
+    s.compute_basic_values();
+    let x = p.restore(&s.x[..s.n]);
     let objective = model.objective.eval(&x) + model.obj_offset;
-    LpSolution { status: LpStatus::Optimal, x, objective, basis: LpBasis { cols: basis, sig } }
+    LpSolution {
+        status: LpStatus::Optimal,
+        x,
+        objective,
+        basis: LpBasis { states: s.state.clone(), sig: p.sig },
+        iterations: s.iterations,
+        refactorizations: s.refactorizations,
+        rows: s.m,
+        cols: s.n,
+    }
 }
 
 /// A non-optimal outcome (no point, no basis).
-fn lp_failure(status: LpStatus) -> LpSolution {
-    LpSolution { status, x: vec![], objective: 0.0, basis: LpBasis::default() }
+fn lp_failure(status: LpStatus, iterations: usize, refactorizations: usize) -> LpSolution {
+    LpSolution {
+        status,
+        x: vec![],
+        objective: 0.0,
+        basis: LpBasis::default(),
+        iterations,
+        refactorizations,
+        rows: 0,
+        cols: 0,
+    }
 }
 
-/// Convenience: the model's own bounds as the override vector.
-pub fn model_bounds(model: &Model) -> Vec<(f64, f64)> {
-    model.vars.iter().map(|v| (v.lo, v.hi)).collect()
-}
-
-enum SimplexOutcome {
-    Optimal,
+enum RunEnd {
+    /// No entering candidate (phase 2: optimal; phase 1: infeasibility
+    /// minimized — the caller re-checks whether it reached zero).
+    Converged,
+    /// Improving direction with no blocking bound (phase 2 only).
     Unbounded,
-    IterLimit,
+    /// Iteration limit or numerical breakdown.
+    Stalled,
 }
 
-/// Run primal simplex to optimality on a canonical tableau.
-/// `obj` is the reduced-cost row (minimization); entering columns must
-/// have negative reduced cost.
-fn run_simplex(
-    t: &mut [Vec<f64>],
-    obj: &mut Vec<f64>,
-    basis: &mut [usize],
-    max_iter: usize,
-) -> SimplexOutcome {
-    let m = t.len();
-    let ncols = obj.len() - 1;
-    let bland_after = max_iter / 2;
-    for iter in 0..max_iter {
-        // Pricing.
-        let entering = if iter < bland_after {
-            // Dantzig: most negative reduced cost.
-            let mut best = None;
-            let mut best_val = -1e-9;
-            for j in 0..ncols {
-                if obj[j] < best_val {
-                    best_val = obj[j];
-                    best = Some(j);
+/// Outcome of one full two-phase run from the current starting basis.
+enum TwoPhase {
+    /// Phase 2 reached optimality; extract the solution.
+    Done,
+    /// Proven infeasible on a fresh factorization (basis-independent).
+    Infeasible,
+    /// Proven unbounded from a feasible point (basis-independent).
+    Unbounded,
+    /// Numerical breakdown — worth retrying from a different start.
+    Broken,
+}
+
+/// Working state of one solve, in presolved space. Columns `0..n` are
+/// structural, `n..n+m` are the logical (slack) columns — one per row,
+/// bounds by sense: `Le → [0, ∞)`, `Ge → (-∞, 0]`, `Eq → [0, 0]`.
+/// Borrows the presolved matrix and rhs — they outlive the solve, and the
+/// hot path runs one of these per branch-and-bound node.
+struct Solver<'a> {
+    n: usize,
+    m: usize,
+    a: &'a CscMatrix,
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    cost: Vec<f64>,
+    rhs: &'a [f64],
+    /// Per-column state; exactly `m` entries are `Basic`.
+    state: Vec<VarState>,
+    /// Basic column per row.
+    basis: Vec<usize>,
+    /// Value of every column (nonbasic pinned to a bound).
+    x: Vec<f64>,
+    /// Dense basis inverse, row-major `m × m`.
+    binv: Vec<f64>,
+    /// Devex reference weights (nonbasic entries meaningful).
+    devex: Vec<f64>,
+    iterations: usize,
+    refactorizations: usize,
+    pivots_since_refactor: usize,
+}
+
+impl<'a> Solver<'a> {
+    fn new(p: &'a Presolved) -> Solver<'a> {
+        use super::model::Sense;
+        let n = p.n_cols();
+        let m = p.n_rows();
+        let ncols = n + m;
+        let mut lo = Vec::with_capacity(ncols);
+        let mut hi = Vec::with_capacity(ncols);
+        let mut cost = Vec::with_capacity(ncols);
+        lo.extend_from_slice(&p.lo);
+        hi.extend_from_slice(&p.hi);
+        cost.extend_from_slice(&p.cost);
+        for &sense in &p.sense {
+            let (l, h) = match sense {
+                Sense::Le => (0.0, f64::INFINITY),
+                Sense::Ge => (f64::NEG_INFINITY, 0.0),
+                Sense::Eq => (0.0, 0.0),
+            };
+            lo.push(l);
+            hi.push(h);
+            cost.push(0.0);
+        }
+        Solver {
+            n,
+            m,
+            a: &p.a,
+            lo,
+            hi,
+            cost,
+            rhs: &p.rhs,
+            state: vec![VarState::AtLower; ncols],
+            basis: vec![0; m],
+            x: vec![0.0; ncols],
+            binv: vec![0.0; m * m],
+            devex: vec![1.0; ncols],
+            iterations: 0,
+            refactorizations: 0,
+            pivots_since_refactor: 0,
+        }
+    }
+
+    /// `w = B⁻¹ a_j` (FTRAN) straight off the CSC slices — logical
+    /// columns are unit vectors, so they just copy a `binv` column.
+    fn ftran_col(&self, j: usize) -> Vec<f64> {
+        let m = self.m;
+        let mut w = vec![0.0f64; m];
+        if j < self.n {
+            let (rows, vals) = self.a.col_slices(j);
+            for (&r, &v) in rows.iter().zip(vals) {
+                for i in 0..m {
+                    w[i] += self.binv[i * m + r] * v;
                 }
             }
-            best
         } else {
-            // Bland: smallest index with negative reduced cost.
-            (0..ncols).find(|&j| obj[j] < -1e-9)
-        };
-        let Some(e) = entering else {
-            return SimplexOutcome::Optimal;
-        };
-        // Ratio test.
-        let mut leave: Option<usize> = None;
-        let mut best_ratio = f64::INFINITY;
-        for i in 0..m {
-            let a = t[i][e];
-            if a > 1e-9 {
-                let ratio = t[i][ncols] / a;
-                // Tie-break by smaller basis index (anti-cycling aid).
-                if ratio < best_ratio - 1e-12
-                    || (ratio < best_ratio + 1e-12
-                        && leave.is_none_or(|l| basis[i] < basis[l]))
-                {
-                    best_ratio = ratio;
-                    leave = Some(i);
-                }
+            let r = j - self.n;
+            for i in 0..m {
+                w[i] = self.binv[i * m + r];
             }
         }
-        let Some(l) = leave else {
-            return SimplexOutcome::Unbounded;
-        };
-        pivot(t, obj, basis, l, e);
+        w
     }
-    SimplexOutcome::IterLimit
-}
 
-/// Gauss-Jordan pivot on (row, col); updates tableau, objective row, basis.
-fn pivot(t: &mut [Vec<f64>], obj: &mut Vec<f64>, basis: &mut [usize], row: usize, col: usize) {
-    let ncols = t[0].len() - 1;
-    let p = t[row][col];
-    debug_assert!(p.abs() > 1e-12, "pivot on ~zero element");
-    let inv = 1.0 / p;
-    for j in 0..=ncols {
-        t[row][j] *= inv;
+    /// All-logical start: slack basis (`binv = I`), structural columns at
+    /// their lower bound.
+    fn cold_start(&mut self) {
+        for j in 0..self.n {
+            self.state[j] = VarState::AtLower;
+            self.x[j] = self.lo[j];
+        }
+        for i in 0..self.m {
+            let j = self.n + i;
+            self.state[j] = VarState::Basic;
+            self.basis[i] = j;
+        }
+        self.set_identity();
+        self.devex.fill(1.0);
+        self.compute_basic_values();
     }
-    t[row][col] = 1.0; // exact
-    for i in 0..t.len() {
-        if i != row {
-            let f = t[i][col];
-            if f.abs() > 1e-12 {
-                // Manual split to satisfy the borrow checker.
-                let (pr, tr) = if i < row {
-                    let (a, b) = t.split_at_mut(row);
-                    (&b[0], &mut a[i])
-                } else {
-                    let (a, b) = t.split_at_mut(i);
-                    (&a[row], &mut b[0])
-                };
-                for j in 0..=ncols {
-                    tr[j] -= f * pr[j];
+
+    fn set_identity(&mut self) {
+        self.binv.fill(0.0);
+        for i in 0..self.m {
+            self.binv[i * self.m + i] = 1.0;
+        }
+        self.pivots_since_refactor = 0;
+    }
+
+    /// Adopt a previous basis snapshot. Returns false (leaving the solver
+    /// in need of [`Self::cold_start`]) when the snapshot does not fit:
+    /// wrong length, wrong basic count, a nonbasic state pointing at an
+    /// infinite bound, or a singular basis. Primal infeasibility under the
+    /// new bounds/rhs is *not* a rejection: the artificial-free phase 1
+    /// repairs an adopted basis in a few composite pivots (the
+    /// branch-and-bound child case — the branched variable sits basic just
+    /// outside its tightened bound), where a cold restart would pay the
+    /// full two-phase solve.
+    fn try_warm(&mut self, states: &[VarState]) -> bool {
+        let ncols = self.n + self.m;
+        if states.len() != ncols {
+            return false;
+        }
+        let mut bs = Vec::with_capacity(self.m);
+        for (j, &st) in states.iter().enumerate() {
+            match st {
+                VarState::Basic => bs.push(j),
+                VarState::AtLower => {
+                    if !self.lo[j].is_finite() {
+                        return false;
+                    }
                 }
-                tr[col] = 0.0;
+                VarState::AtUpper => {
+                    if !self.hi[j].is_finite() {
+                        return false;
+                    }
+                }
             }
         }
-    }
-    let f = obj[col];
-    if f.abs() > 1e-12 {
-        for j in 0..=ncols {
-            obj[j] -= f * t[row][j];
+        if bs.len() != self.m {
+            return false;
         }
-        obj[col] = 0.0;
+        self.state.copy_from_slice(states);
+        self.basis = bs;
+        for j in 0..ncols {
+            match self.state[j] {
+                VarState::AtLower => self.x[j] = self.lo[j],
+                VarState::AtUpper => self.x[j] = self.hi[j],
+                VarState::Basic => {}
+            }
+        }
+        if !self.refactor() {
+            return false;
+        }
+        self.compute_basic_values();
+        self.devex.fill(1.0);
+        true
     }
-    basis[row] = col;
+
+    /// Rebuild `binv` from scratch (Gauss-Jordan with partial pivoting).
+    /// Returns false when the basis is singular.
+    fn refactor(&mut self) -> bool {
+        let m = self.m;
+        let mut mat = vec![0.0f64; m * m];
+        for (i, &bj) in self.basis.iter().enumerate() {
+            if bj < self.n {
+                let (rows, vals) = self.a.col_slices(bj);
+                for (&r, &v) in rows.iter().zip(vals) {
+                    mat[r * m + i] = v;
+                }
+            } else {
+                mat[(bj - self.n) * m + i] = 1.0;
+            }
+        }
+        let mut inv = vec![0.0f64; m * m];
+        for i in 0..m {
+            inv[i * m + i] = 1.0;
+        }
+        for col in 0..m {
+            let mut best = col;
+            let mut best_abs = mat[col * m + col].abs();
+            for r in (col + 1)..m {
+                let a = mat[r * m + col].abs();
+                if a > best_abs {
+                    best_abs = a;
+                    best = r;
+                }
+            }
+            if best_abs < PIVOT_MIN {
+                return false;
+            }
+            if best != col {
+                for k in 0..m {
+                    mat.swap(col * m + k, best * m + k);
+                    inv.swap(col * m + k, best * m + k);
+                }
+            }
+            let piv_inv = 1.0 / mat[col * m + col];
+            for k in 0..m {
+                mat[col * m + k] *= piv_inv;
+                inv[col * m + k] *= piv_inv;
+            }
+            for r in 0..m {
+                if r == col {
+                    continue;
+                }
+                let f = mat[r * m + col];
+                if f != 0.0 {
+                    for k in 0..m {
+                        let sub_m = f * mat[col * m + k];
+                        let sub_i = f * inv[col * m + k];
+                        mat[r * m + k] -= sub_m;
+                        inv[r * m + k] -= sub_i;
+                    }
+                }
+            }
+        }
+        self.binv = inv;
+        self.refactorizations += 1;
+        self.pivots_since_refactor = 0;
+        true
+    }
+
+    /// Recompute basic values exactly: `x_B = B⁻¹ (b − N x_N)`.
+    fn compute_basic_values(&mut self) {
+        let m = self.m;
+        let mut r = self.rhs.to_vec();
+        for j in 0..(self.n + m) {
+            if self.state[j] != VarState::Basic && self.x[j] != 0.0 {
+                let xj = self.x[j];
+                if j < self.n {
+                    let (rows, vals) = self.a.col_slices(j);
+                    for (&row, &v) in rows.iter().zip(vals) {
+                        r[row] -= v * xj;
+                    }
+                } else {
+                    r[j - self.n] -= xj;
+                }
+            }
+        }
+        for i in 0..m {
+            let mut acc = 0.0;
+            for k in 0..m {
+                acc += self.binv[i * m + k] * r[k];
+            }
+            self.x[self.basis[i]] = acc;
+        }
+    }
+
+    /// Phase-1 composite costs: basic variables below their lower bound
+    /// price at −1, above their upper at +1. Returns the cost vector over
+    /// basis rows and the total infeasibility.
+    fn infeasibility_costs(&self) -> (Vec<f64>, f64) {
+        let mut cb = vec![0.0f64; self.m];
+        let mut total = 0.0;
+        for i in 0..self.m {
+            let bj = self.basis[i];
+            let xb = self.x[bj];
+            if xb < self.lo[bj] - VTOL {
+                cb[i] = -1.0;
+                total += self.lo[bj] - xb;
+            } else if xb > self.hi[bj] + VTOL {
+                cb[i] = 1.0;
+                total += xb - self.hi[bj];
+            }
+        }
+        (cb, total)
+    }
+
+    /// `y = c_Bᵀ B⁻¹` (BTRAN).
+    fn btran(&self, cb: &[f64]) -> Vec<f64> {
+        let m = self.m;
+        let mut y = vec![0.0f64; m];
+        for (i, &ci) in cb.iter().enumerate() {
+            if ci != 0.0 {
+                for k in 0..m {
+                    y[k] += ci * self.binv[i * m + k];
+                }
+            }
+        }
+        y
+    }
+
+    /// Devex weight maintenance after a pivot on row `r` with pivot
+    /// element `piv` (entering column already marked basic, leaving column
+    /// `lv` already nonbasic). Uses the pre-update row `r` of `binv`, so
+    /// it must run before [`Self::eta_update`].
+    fn update_devex(&mut self, q: usize, lv: usize, r: usize, piv: f64) {
+        let m = self.m;
+        let rho = &self.binv[r * m..(r + 1) * m];
+        let wq = self.devex[q].max(1.0);
+        for j in 0..(self.n + m) {
+            if self.state[j] == VarState::Basic || j == q {
+                continue;
+            }
+            let alpha = if j < self.n {
+                self.a.dot_col(j, rho)
+            } else {
+                rho[j - self.n]
+            };
+            if alpha != 0.0 {
+                let cand = (alpha / piv) * (alpha / piv) * wq;
+                if cand > self.devex[j] {
+                    self.devex[j] = cand;
+                }
+            }
+        }
+        self.devex[lv] = (wq / (piv * piv)).max(1.0);
+    }
+
+    /// Product-form update of `binv` after replacing basis row `r` with a
+    /// column whose FTRAN image is `w`.
+    fn eta_update(&mut self, r: usize, w: &[f64]) {
+        let m = self.m;
+        let inv = 1.0 / w[r];
+        let rho: Vec<f64> = self.binv[r * m..(r + 1) * m].to_vec();
+        for k in 0..m {
+            self.binv[r * m + k] = rho[k] * inv;
+        }
+        for i in 0..m {
+            if i == r {
+                continue;
+            }
+            let f = w[i] * inv;
+            if f != 0.0 {
+                let base = i * m;
+                for k in 0..m {
+                    self.binv[base + k] -= f * rho[k];
+                }
+            }
+        }
+        self.pivots_since_refactor += 1;
+    }
+
+    /// One full two-phase solve from the current starting basis.
+    ///
+    /// Phase 1 drives the total bound infeasibility of the basis to zero.
+    /// An Infeasible verdict is only trusted when measured on a freshly
+    /// refactorized basis: residual infeasibility on a drifted
+    /// product-form inverse triggers refactor + resumed runs until the
+    /// verdict is drift-free, and a basis that cannot be refactorized is
+    /// breakdown, not a proof.
+    /// `unbounded_ray` is the presolve's pending unbounded certificate,
+    /// confirmed once feasibility is established.
+    fn two_phase(&mut self, max_iter: usize, unbounded_ray: bool) -> TwoPhase {
+        match self.iterate(true, max_iter) {
+            RunEnd::Converged => {
+                // Residual infeasibility is only a proof when measured on
+                // a zero-drift factorization: refactor + recompute + let
+                // phase 1 resume, until the verdict holds at
+                // `pivots_since_refactor == 0` (bounded rounds; anything
+                // still unsettled is numerical breakdown, not a proof).
+                let mut total_inf = self.infeasibility_costs().1;
+                let mut rounds = 0usize;
+                while total_inf > FEAS_TOTAL && self.pivots_since_refactor > 0 {
+                    if rounds >= 4 {
+                        return TwoPhase::Broken;
+                    }
+                    rounds += 1;
+                    if !self.refactor() {
+                        return TwoPhase::Broken;
+                    }
+                    self.compute_basic_values();
+                    total_inf = self.infeasibility_costs().1;
+                    if total_inf > FEAS_TOTAL {
+                        match self.iterate(true, max_iter) {
+                            RunEnd::Converged => total_inf = self.infeasibility_costs().1,
+                            RunEnd::Unbounded | RunEnd::Stalled => return TwoPhase::Broken,
+                        }
+                    }
+                }
+                if total_inf > FEAS_TOTAL {
+                    return TwoPhase::Infeasible;
+                }
+            }
+            // Phase-1 objective is bounded below by 0; a "no blocking
+            // bound" outcome means numerical trouble.
+            RunEnd::Unbounded | RunEnd::Stalled => return TwoPhase::Broken,
+        }
+        if unbounded_ray {
+            // A presolved-away column improves without bound and the rest
+            // of the model just proved feasible.
+            return TwoPhase::Unbounded;
+        }
+        match self.iterate(false, max_iter) {
+            RunEnd::Converged => TwoPhase::Done,
+            RunEnd::Unbounded => TwoPhase::Unbounded,
+            RunEnd::Stalled => TwoPhase::Broken,
+        }
+    }
+
+    /// Run the simplex loop for one phase. `max_iter` bounds this phase's
+    /// iterations; Bland's rule takes over after half of them.
+    fn iterate(&mut self, phase1: bool, max_iter: usize) -> RunEnd {
+        let ncols = self.n + self.m;
+        let bland_after = max_iter / 2;
+        for local in 0..max_iter {
+            let bland = local >= bland_after;
+            let cb: Vec<f64> = if phase1 {
+                let (cb, total) = self.infeasibility_costs();
+                if total <= FEAS_TOTAL {
+                    return RunEnd::Converged;
+                }
+                cb
+            } else {
+                self.basis.iter().map(|&b| self.cost[b]).collect()
+            };
+            let y = self.btran(&cb);
+
+            // Pricing: Devex score d²/w among violating nonbasics.
+            let mut enter: Option<usize> = None;
+            let mut best_score = 0.0f64;
+            for j in 0..ncols {
+                if self.state[j] == VarState::Basic || self.hi[j] - self.lo[j] <= 0.0 {
+                    continue;
+                }
+                let cj = if phase1 { 0.0 } else { self.cost[j] };
+                let aj_y = if j < self.n { self.a.dot_col(j, &y) } else { y[j - self.n] };
+                let d = cj - aj_y;
+                let violating = match self.state[j] {
+                    VarState::AtLower => d < -DTOL,
+                    VarState::AtUpper => d > DTOL,
+                    VarState::Basic => unreachable!(),
+                };
+                if !violating {
+                    continue;
+                }
+                if bland {
+                    enter = Some(j);
+                    break;
+                }
+                let score = d * d / self.devex[j];
+                if score > best_score {
+                    best_score = score;
+                    enter = Some(j);
+                }
+            }
+            let Some(q) = enter else {
+                return RunEnd::Converged;
+            };
+            let sigma = if self.state[q] == VarState::AtLower { 1.0 } else { -1.0 };
+            let w = self.ftran_col(q);
+
+            // Ratio test: basic variables block at the first bound they
+            // would cross; in phase 1 an already-infeasible basic blocks
+            // only where it re-enters its box.
+            let mut t_leave = f64::INFINITY;
+            let mut leave: Option<(usize, VarState)> = None;
+            for i in 0..self.m {
+                let rate = -sigma * w[i]; // d x_Bi / dt
+                if rate.abs() <= RTOL {
+                    continue;
+                }
+                let bj = self.basis[i];
+                let xb = self.x[bj];
+                let (blo, bhi) = (self.lo[bj], self.hi[bj]);
+                let cand: Option<(f64, VarState)> = if phase1 && xb < blo - VTOL {
+                    if rate > 0.0 {
+                        Some((((blo - xb) / rate).max(0.0), VarState::AtLower))
+                    } else {
+                        None
+                    }
+                } else if phase1 && xb > bhi + VTOL {
+                    if rate < 0.0 {
+                        Some((((xb - bhi) / -rate).max(0.0), VarState::AtUpper))
+                    } else {
+                        None
+                    }
+                } else if rate < 0.0 {
+                    if blo.is_finite() {
+                        Some((((xb - blo) / -rate).max(0.0), VarState::AtLower))
+                    } else {
+                        None
+                    }
+                } else if bhi.is_finite() {
+                    Some((((bhi - xb) / rate).max(0.0), VarState::AtUpper))
+                } else {
+                    None
+                };
+                let Some((lim, target)) = cand else { continue };
+                let better = match leave {
+                    None => lim < t_leave,
+                    Some((lr, _)) => {
+                        if lim < t_leave - TIE {
+                            true
+                        } else if lim < t_leave + TIE {
+                            // Near-tie: Bland by smaller basic index (anti-
+                            // cycling), otherwise the larger pivot wins
+                            // (numerical stability).
+                            if bland {
+                                self.basis[i] < self.basis[lr]
+                            } else {
+                                w[i].abs() > w[lr].abs()
+                            }
+                        } else {
+                            false
+                        }
+                    }
+                };
+                if better {
+                    t_leave = t_leave.min(lim);
+                    leave = Some((i, target));
+                }
+            }
+
+            let t_flip = self.hi[q] - self.lo[q];
+            if t_flip <= t_leave {
+                if t_flip.is_infinite() {
+                    // Phase 1 is bounded below by zero infeasibility, so an
+                    // unblocked ray there is numerical breakdown.
+                    return if phase1 { RunEnd::Stalled } else { RunEnd::Unbounded };
+                }
+                self.iterations += 1;
+                for i in 0..self.m {
+                    self.x[self.basis[i]] -= sigma * t_flip * w[i];
+                }
+                self.state[q] = if self.state[q] == VarState::AtLower {
+                    self.x[q] = self.hi[q];
+                    VarState::AtUpper
+                } else {
+                    self.x[q] = self.lo[q];
+                    VarState::AtLower
+                };
+                continue;
+            }
+
+            let (r, target) = leave.expect("finite t_leave has a row");
+            let piv = w[r];
+            if piv.abs() < PIVOT_MIN {
+                // Too small to pivot on: refresh the factorization and try
+                // again; if it is already fresh the basis is numerically
+                // done for.
+                if self.pivots_since_refactor == 0 || !self.refactor() {
+                    return RunEnd::Stalled;
+                }
+                self.compute_basic_values();
+                self.iterations += 1;
+                continue;
+            }
+
+            self.iterations += 1;
+            for i in 0..self.m {
+                self.x[self.basis[i]] -= sigma * t_leave * w[i];
+            }
+            let lv = self.basis[r];
+            self.x[q] += sigma * t_leave;
+            self.x[lv] = match target {
+                VarState::AtLower => self.lo[lv],
+                VarState::AtUpper => self.hi[lv],
+                VarState::Basic => unreachable!(),
+            };
+            self.state[lv] = target;
+            self.state[q] = VarState::Basic;
+            self.basis[r] = q;
+            if !bland {
+                // Bland-mode pricing never reads the scores: skip the
+                // O(nnz) weight maintenance pass.
+                self.update_devex(q, lv, r, piv);
+            }
+            self.eta_update(r, &w);
+            if self.pivots_since_refactor >= REFACTOR_EVERY {
+                if !self.refactor() {
+                    return RunEnd::Stalled;
+                }
+                self.compute_basic_values();
+                self.devex.fill(1.0);
+            }
+        }
+        RunEnd::Stalled
+    }
 }
 
 #[cfg(test)]
@@ -505,8 +847,7 @@ mod tests {
 
     #[test]
     fn minimize_with_ge() {
-        // min 2x + 3y s.t. x + y >= 10, x >= 2: put everything in the
-        // cheaper x -> x=10, y=0, cost 20
+        // min 2x + 3y s.t. x + y >= 10, x >= 2 -> x=10, y=0, cost 20
         let mut m = Model::new(Direction::Minimize);
         let x = m.continuous(0.0, f64::INFINITY, "x");
         let y = m.continuous(0.0, f64::INFINITY, "y");
@@ -542,10 +883,33 @@ mod tests {
     }
 
     #[test]
+    fn detects_infeasible_beyond_presolve() {
+        // Infeasibility that needs phase 1, not just bound logic: two wide
+        // rows that cannot hold at once inside the boxes.
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 1.0, "x");
+        let y = m.continuous(0.0, 1.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Ge, 3.0, "over");
+        m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        assert_eq!(lp(&m).status, LpStatus::Infeasible);
+    }
+
+    #[test]
     fn detects_unbounded() {
         let mut m = Model::new(Direction::Maximize);
         let x = m.continuous(0.0, f64::INFINITY, "x");
         m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
+        assert_eq!(lp(&m).status, LpStatus::Unbounded);
+    }
+
+    #[test]
+    fn detects_unbounded_through_rows() {
+        // x - y <= 1 with both unbounded above: max x + y has a ray.
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, f64::INFINITY, "x");
+        let y = m.continuous(0.0, f64::INFINITY, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, -1.0), Sense::Le, 1.0, "c");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 1.0), 0.0);
         assert_eq!(lp(&m).status, LpStatus::Unbounded);
     }
 
@@ -561,7 +925,7 @@ mod tests {
 
     #[test]
     fn respects_nonzero_lower_bounds() {
-        // min x + y with x in [3, 10], y in [2, 10], x + y >= 7 -> 7 (e.g. 5,2 or 3,4)
+        // min x + y with x in [3, 10], y in [2, 10], x + y >= 7 -> 7
         let mut m = Model::new(Direction::Minimize);
         let x = m.continuous(3.0, 10.0, "x");
         let y = m.continuous(2.0, 10.0, "y");
@@ -574,13 +938,27 @@ mod tests {
     }
 
     #[test]
+    fn negative_lower_bounds() {
+        // min x + 2y over x in [-5, 5], y in [-1, 4], x + y >= -3 -> the
+        // corner x=-2, y=-1 (cost -4) or x=-5,y=2 (cost -1)? -2 + -2 = -4.
+        let mut m = Model::new(Direction::Minimize);
+        let x = m.continuous(-5.0, 5.0, "x");
+        let y = m.continuous(-1.0, 4.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Ge, -3.0, "c");
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 2.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - (-4.0)).abs() < 1e-6, "{}", s.objective);
+        assert!((s.x[1] - (-1.0)).abs() < 1e-6, "y at its lower bound");
+    }
+
+    #[test]
     fn fixed_variable_via_bounds_override() {
         let mut m = Model::new(Direction::Maximize);
         let x = m.continuous(0.0, 10.0, "x");
         let y = m.continuous(0.0, 10.0, "y");
         m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 10.0, "cap");
         m.set_objective(LinExpr::new().term(x, 1.0).term(y, 2.0), 0.0);
-        // Fix x = 4 via override.
         let s = solve_lp(&m, &[(4.0, 4.0), (0.0, 10.0)]);
         assert_eq!(s.status, LpStatus::Optimal);
         assert!((s.x[0] - 4.0).abs() < 1e-6);
@@ -597,8 +975,8 @@ mod tests {
     }
 
     #[test]
-    fn negative_rhs_normalization() {
-        // x - y <= -2 with x,y in [0,10]: i.e. y >= x + 2. max x + y -> x=8,y=10
+    fn negative_rhs_rows() {
+        // x - y <= -2 with x,y in [0,10]: y >= x + 2. max x + y -> x=8,y=10
         let mut m = Model::new(Direction::Maximize);
         let x = m.continuous(0.0, 10.0, "x");
         let y = m.continuous(0.0, 10.0, "y");
@@ -611,11 +989,12 @@ mod tests {
 
     #[test]
     fn degenerate_redundant_constraints() {
-        // Duplicate equalities should not break phase-1 cleanup.
+        // Duplicate equalities must not break phase 1.
         let mut m = Model::new(Direction::Maximize);
         let x = m.continuous(0.0, 10.0, "x");
-        m.constrain(LinExpr::new().term(x, 1.0), Sense::Eq, 3.0, "e1");
-        m.constrain(LinExpr::new().term(x, 2.0), Sense::Eq, 6.0, "e2");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Eq, 3.0, "e1");
+        m.constrain(LinExpr::new().term(x, 2.0).term(y, 2.0), Sense::Eq, 6.0, "e2");
         m.set_objective(LinExpr::new().term(x, 1.0), 0.0);
         let s = lp(&m);
         assert_eq!(s.status, LpStatus::Optimal);
@@ -629,6 +1008,43 @@ mod tests {
         m.set_objective(LinExpr::new().term(b, 7.0), 0.0);
         let s = lp(&m);
         assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bound_flip_reaches_optimum() {
+        // max x + y s.t. x + y <= 1.5 over two unit boxes: one variable
+        // must rest at its *upper* bound — exercises the bound-flip move.
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 1.0, "x");
+        let y = m.continuous(0.0, 1.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 1.5, "cap");
+        m.set_objective(LinExpr::new().term(x, 2.0).term(y, 1.0), 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert!((s.objective - 2.5).abs() < 1e-6, "{}", s.objective);
+        assert!((s.x[0] - 1.0).abs() < 1e-6, "x flips to its upper bound");
+    }
+
+    #[test]
+    fn no_bound_derived_rows() {
+        // Every variable bounded: the presolved row count must equal the
+        // constraint count — bounds never lower to rows.
+        let mut m = Model::new(Direction::Maximize);
+        let vars: Vec<_> = (0..6).map(|i| m.continuous(0.0, 3.0, format!("v{i}"))).collect();
+        let mut cap = LinExpr::new();
+        let mut obj = LinExpr::new();
+        for &v in &vars {
+            cap.add(v, 1.0);
+            obj.add(v, 1.0);
+        }
+        m.constrain(cap, Sense::Le, 7.0, "cap");
+        m.set_objective(obj, 0.0);
+        let s = lp(&m);
+        assert_eq!(s.status, LpStatus::Optimal);
+        assert_eq!(s.rows, 1, "one structural row, zero bound rows");
+        assert_eq!(s.cols, 6);
+        assert!(s.iterations > 0);
         assert!((s.objective - 7.0).abs() < 1e-6);
     }
 
@@ -661,8 +1077,37 @@ mod tests {
     }
 
     #[test]
+    fn warm_basis_repaired_when_tightened_bound_cuts_optimum() {
+        // The branch-and-bound child case: the previous optimum has x
+        // basic at 6, then the child tightens x <= 4 — the adopted basis
+        // is primal infeasible and phase 1 must repair it, not corrupt
+        // the solve. Warm and cold must agree.
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 6.0, "cap");
+        m.set_objective(LinExpr::new().term(x, 2.0).term(y, 1.0), 0.0);
+        let s1 = solve_lp(&m, &model_bounds(&m));
+        assert_eq!(s1.status, LpStatus::Optimal);
+        assert!((s1.x[0] - 6.0).abs() < 1e-6, "x basic at 6");
+        let child = [(0.0, 4.0), (0.0, 10.0)];
+        let cold = solve_lp(&m, &child);
+        let warm = solve_lp_warm(&m, &child, Some(&s1.basis));
+        assert_eq!(cold.status, LpStatus::Optimal);
+        assert_eq!(warm.status, LpStatus::Optimal);
+        assert!((cold.objective - 10.0).abs() < 1e-6, "{}", cold.objective); // 2*4 + 2
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-9,
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+        assert!(warm.x[0] <= 4.0 + 1e-9, "tightened bound respected after repair");
+    }
+
+    #[test]
     fn warm_basis_shape_mismatch_falls_back() {
-        // A basis from an unrelated tableau must be rejected by the
+        // A basis from an unrelated model must be rejected by the
         // signature check, not corrupt the solve.
         let mut m1 = Model::new(Direction::Maximize);
         let a = m1.continuous(0.0, 5.0, "a");
@@ -682,8 +1127,8 @@ mod tests {
 
     #[test]
     fn warm_basis_with_fixed_variable_falls_back() {
-        // Fixing a variable turns its bound row from Le into Eq, changing
-        // the tableau shape: the stale basis must be ignored safely.
+        // Fixing a variable changes the presolve layout (the column is
+        // eliminated), so the stale basis must be ignored safely.
         let mut m = Model::new(Direction::Maximize);
         let x = m.continuous(0.0, 10.0, "x");
         let y = m.continuous(0.0, 10.0, "y");
@@ -724,7 +1169,7 @@ mod tests {
             let warm = solve_lp_warm(&m, &model_bounds(&m), Some(&cold.basis));
             assert_eq!(warm.status, LpStatus::Optimal, "case {_case}");
             assert!((warm.objective - cold.objective).abs() < 1e-7, "case {_case}");
-            // shrunk boxes (keeps every bound row a Le row)
+            // shrunk boxes (same layout: widths stay positive)
             let shrunk: Vec<(f64, f64)> =
                 model_bounds(&m).iter().map(|&(lo, hi)| (lo, lo + 0.7 * (hi - lo))).collect();
             let wcold = solve_lp(&m, &shrunk);
@@ -742,9 +1187,9 @@ mod tests {
 
     #[test]
     fn random_lps_feasible_and_bounded() {
-        // Property-ish: random small LPs with box bounds and <= rows are
-        // always feasible (x = lo) and bounded (box), so Optimal expected,
-        // and the returned point must satisfy the model.
+        // Random small LPs with box bounds and <= rows are always feasible
+        // (x = lo) and bounded (box), so Optimal expected, and the
+        // returned point must satisfy the model.
         use crate::util::rng::Rng;
         let mut rng = Rng::new(0xF00D);
         for _case in 0..60 {

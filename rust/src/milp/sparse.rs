@@ -1,0 +1,133 @@
+//! Compressed sparse column (CSC) storage for LP constraint matrices.
+//!
+//! The revised simplex ([`super::simplex`]) touches the constraint matrix
+//! only through column views (pricing dots a dual vector against single
+//! columns; FTRAN expands single columns against the basis inverse), so
+//! CSC is the natural layout: each column's `(row, value)` pairs are
+//! contiguous and the per-column cost is `O(nnz(column))` instead of the
+//! dense tableau's `O(rows)`.
+
+/// A sparse matrix in compressed sparse column form. Row indices within a
+/// column are strictly increasing; duplicate `(row, col)` entries are not
+/// merged, so builders must pre-normalize rows (the model builder's
+/// [`super::model::LinExpr::normalized`] guarantees this).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CscMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Column start offsets into `row_idx`/`vals`; length `ncols + 1`.
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from row-major sparse rows: `rows[i]` lists the `(col, val)`
+    /// entries of row `i` (columns need not be sorted; values must be
+    /// merged per `(row, col)` already).
+    pub fn from_rows(ncols: usize, rows: &[Vec<(usize, f64)>]) -> CscMatrix {
+        let nrows = rows.len();
+        let mut count = vec![0usize; ncols];
+        for row in rows {
+            for &(c, _) in row {
+                debug_assert!(c < ncols, "column {c} out of range {ncols}");
+                count[c] += 1;
+            }
+        }
+        let mut col_ptr = vec![0usize; ncols + 1];
+        for j in 0..ncols {
+            col_ptr[j + 1] = col_ptr[j] + count[j];
+        }
+        let nnz = col_ptr[ncols];
+        let mut row_idx = vec![0usize; nnz];
+        let mut vals = vec![0.0f64; nnz];
+        let mut next = col_ptr.clone();
+        // Scattering rows in index order keeps each column's rows sorted.
+        for (i, row) in rows.iter().enumerate() {
+            for &(c, v) in row {
+                row_idx[next[c]] = i;
+                vals[next[c]] = v;
+                next[c] += 1;
+            }
+        }
+        CscMatrix { nrows, ncols, col_ptr, row_idx, vals }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Iterate one column's `(row, value)` pairs.
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        self.row_idx[s..e].iter().copied().zip(self.vals[s..e].iter().copied())
+    }
+
+    /// One column as borrowed `(row indices, values)` slices — the
+    /// allocation-free view the simplex hot path iterates.
+    pub fn col_slices(&self, j: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Sparse dot of column `j` against a dense vector: `Σ_r y[r]·a[r,j]`.
+    pub fn dot_col(&self, j: usize, y: &[f64]) -> f64 {
+        self.col(j).map(|(r, v)| y[r] * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_rows() {
+        // rows: [ (0: 1.0), (2: 3.0) ], [ (1: -2.0) ], [] over 4 columns
+        let rows = vec![vec![(0usize, 1.0), (2, 3.0)], vec![(1, -2.0)], vec![]];
+        let m = CscMatrix::from_rows(4, &rows);
+        assert_eq!(m.nrows, 3);
+        assert_eq!(m.ncols, 4);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.col(0).collect::<Vec<_>>(), vec![(0, 1.0)]);
+        assert_eq!(m.col(1).collect::<Vec<_>>(), vec![(1, -2.0)]);
+        assert_eq!(m.col(2).collect::<Vec<_>>(), vec![(0, 3.0)]);
+        assert_eq!(m.col(3).count(), 0);
+    }
+
+    #[test]
+    fn rows_sorted_within_columns() {
+        let rows = vec![vec![(0usize, 1.0)], vec![(0, 2.0)], vec![(0, 3.0)]];
+        let m = CscMatrix::from_rows(1, &rows);
+        let col: Vec<_> = m.col(0).collect();
+        assert_eq!(col, vec![(0, 1.0), (1, 2.0), (2, 3.0)]);
+    }
+
+    #[test]
+    fn col_slices_match_col_iter() {
+        let rows = vec![vec![(0usize, 1.0), (2, 3.0)], vec![(1, -2.0), (2, 4.0)]];
+        let m = CscMatrix::from_rows(3, &rows);
+        for j in 0..3 {
+            let (ri, vs) = m.col_slices(j);
+            let pairs: Vec<(usize, f64)> =
+                ri.iter().copied().zip(vs.iter().copied()).collect();
+            assert_eq!(pairs, m.col(j).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn dot_col_matches_dense() {
+        let rows = vec![vec![(0usize, 2.0), (1, 1.0)], vec![(1, 4.0)]];
+        let m = CscMatrix::from_rows(2, &rows);
+        let y = [3.0, -1.0];
+        assert!((m.dot_col(0, &y) - 6.0).abs() < 1e-12);
+        assert!((m.dot_col(1, &y) - (3.0 - 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CscMatrix::from_rows(0, &[]);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.col_ptr, vec![0]);
+    }
+}

@@ -51,6 +51,9 @@ pub struct ReplayMetrics {
     pub fallbacks: usize,
     /// Number of allocation events processed.
     pub n_events: usize,
+    /// Total simplex iterations across every event's solve (0 for non-LP
+    /// policies) — the solver-effort metric the Fig 5 benches track.
+    pub lp_iterations: u64,
 }
 
 /// Per-window efficiency series (Fig 10): (window start, U).

@@ -9,7 +9,7 @@ pub use metrics::{eq_nodes, resource_integral_node_hours, ReplayMetrics, RoiStat
 pub use replay::{
     preemption_within_tfwd, replay, static_baseline_outcome, ReplayOpts, ReplayResult, Workload,
 };
-pub use sweep::{comparison_table, run_sweep, SweepCase, SweepOutcome};
+pub use sweep::{comparison_table, outcomes_json, run_sweep, SweepCase, SweepOutcome};
 
 use crate::coordinator::{allocator_by_name, Coordinator, Objective};
 use crate::trace::Trace;

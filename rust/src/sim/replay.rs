@@ -91,6 +91,9 @@ pub fn replay(
 
     let trace_end = trace.events.last().map(|e| e.t).unwrap_or(0.0);
     let horizon = if opts.horizon_s > 0.0 { opts.horizon_s } else { trace_end };
+    // Resolved once per replay: the env lookup is too slow for a loop that
+    // runs hundreds of millions of iterations on long traces.
+    let debug_inner = std::env::var("BFT_REPLAY_DEBUG").is_ok();
 
     // Unified timeline: pool events + submissions, processed in order;
     // completions subdivide intervals.
@@ -118,7 +121,7 @@ pub fn replay(
         let mut inner = 0u64;
         while now < seg_end {
             inner += 1;
-            if inner % 100_000 == 0 && std::env::var("BFT_REPLAY_DEBUG").is_ok() {
+            if inner % 100_000 == 0 && debug_inner {
                 eprintln!(
                     "[inner {inner}] now={now} seg_end={seg_end} admitted={} queue={}",
                     coord.admitted.len(),
@@ -156,9 +159,11 @@ pub fn replay(
             // deadlock guard (e.g. pool empty forever)
             break;
         }
-        if !samples_this_interval.is_nan() {
-            interval_samples.push(samples_this_interval);
-        }
+        debug_assert!(
+            samples_this_interval.is_finite(),
+            "non-finite interval outcome: {samples_this_interval}"
+        );
+        interval_samples.push(samples_this_interval);
         if now >= horizon && t_event.is_none() && t_sub.is_none() {
             break;
         }
@@ -209,6 +214,7 @@ pub fn replay(
         max_solve_s: solve_times.iter().cloned().fold(0.0, f64::max),
         fallbacks: coord.event_log.iter().filter(|e| e.fell_back).count(),
         n_events: coord.event_log.len(),
+        lp_iterations: coord.event_log.iter().map(|e| e.lp_iterations as u64).sum(),
     };
     ReplayResult {
         metrics,

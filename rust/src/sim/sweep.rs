@@ -53,6 +53,9 @@ pub struct SweepOutcome {
     pub utilization: f64,
     pub mean_solve_ms: f64,
     pub max_solve_ms: f64,
+    /// Total simplex iterations across the replay's solves (0 for non-LP
+    /// policies).
+    pub lp_iterations: u64,
     /// §3.6 fallbacks taken.
     pub fallbacks: usize,
     /// Solves that warm-started from the previous event.
@@ -130,6 +133,7 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
         utilization: if baseline > 0.0 { m.samples_processed / baseline } else { 0.0 },
         mean_solve_ms: 1e3 * m.mean_solve_s,
         max_solve_ms: 1e3 * m.max_solve_s,
+        lp_iterations: m.lp_iterations,
         fallbacks: m.fallbacks,
         warm_started: res.coordinator.event_log.iter().filter(|e| e.warm_started).count(),
         preemptions: m.preemptions,
@@ -142,8 +146,8 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
 /// trailing `best U` marker row per scenario label.
 pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
     let mut tab = Table::new(vec![
-        "scenario", "policy", "objective", "events", "A_e", "U", "solve ms (mean/max)", "warm",
-        "fallbacks", "preempt", "done", "wall s",
+        "scenario", "policy", "objective", "events", "A_e", "U", "solve ms (mean/max)",
+        "LP iters", "warm", "fallbacks", "preempt", "done", "wall s",
     ]);
     for o in outcomes {
         let best = outcomes
@@ -158,6 +162,7 @@ pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
             format!("{:.3e}", o.samples),
             format!("{:.1}%", 100.0 * o.utilization),
             format!("{}/{}", f(o.mean_solve_ms, 2), f(o.max_solve_ms, 2)),
+            o.lp_iterations.to_string(),
             o.warm_started.to_string(),
             o.fallbacks.to_string(),
             o.preemptions.to_string(),
@@ -166,6 +171,66 @@ pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
         ]);
     }
     tab
+}
+
+/// Render the outcomes as a machine-readable JSON array (one object per
+/// case, in case order) so `bftrainer sweep --json <path>` can record
+/// per-PR BENCH trajectories. Hand-rolled like the rest of the zero-dep
+/// stack; round-trips through [`crate::runtime::json::parse`].
+pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+    // JSON numbers cannot be NaN/inf; clamp defensively.
+    fn num(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        }
+    }
+    let mut s = String::from("[\n");
+    for (i, o) in outcomes.iter().enumerate() {
+        s.push_str(&format!(
+            concat!(
+                "  {{\"scenario\": \"{}\", \"policy\": \"{}\", \"objective\": \"{}\", ",
+                "\"events\": {}, \"samples\": {}, \"baseline\": {}, \"utilization\": {}, ",
+                "\"mean_solve_ms\": {}, \"max_solve_ms\": {}, \"lp_iterations\": {}, ",
+                "\"warm_started\": {}, \"fallbacks\": {}, \"preemptions\": {}, ",
+                "\"completed\": {}, \"wall_s\": {}}}"
+            ),
+            esc(&o.label),
+            esc(&o.policy),
+            esc(o.objective),
+            o.events,
+            num(o.samples),
+            num(o.baseline),
+            num(o.utilization),
+            num(o.mean_solve_ms),
+            num(o.max_solve_ms),
+            o.lp_iterations,
+            o.warm_started,
+            o.fallbacks,
+            o.preemptions,
+            o.completed,
+            num(o.wall_s),
+        ));
+        s.push_str(if i + 1 == outcomes.len() { "\n" } else { ",\n" });
+    }
+    s.push_str("]\n");
+    s
 }
 
 #[cfg(test)]
@@ -268,5 +333,26 @@ mod tests {
     #[test]
     fn empty_sweep_is_fine() {
         assert!(run_sweep(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn outcomes_json_round_trips() {
+        let outs = run_sweep(&cases(), 2);
+        let text = outcomes_json(&outs);
+        let parsed = crate::runtime::json::parse(&text).expect("valid JSON");
+        let arr = parsed.as_arr().expect("array");
+        assert_eq!(arr.len(), outs.len());
+        for (v, o) in arr.iter().zip(&outs) {
+            assert_eq!(v.get("scenario").and_then(|j| j.as_str()), Some(o.label.as_str()));
+            assert_eq!(v.get("policy").and_then(|j| j.as_str()), Some(o.policy.as_str()));
+            assert_eq!(v.get("events").and_then(|j| j.as_usize()), Some(o.events));
+            let u = v.get("utilization").and_then(|j| j.as_f64()).unwrap();
+            assert!((u - o.utilization).abs() < 1e-9);
+            assert_eq!(
+                v.get("lp_iterations").and_then(|j| j.as_usize()),
+                Some(o.lp_iterations as usize)
+            );
+        }
+        assert!(outcomes_json(&[]).contains("[\n]"), "empty array still valid");
     }
 }

@@ -1,0 +1,226 @@
+//! Differential LP suite: the bounded-variable revised simplex
+//! (`milp::simplex`) against the retained dense-tableau oracle
+//! (`milp::dense`) on randomized models — mixed senses, mixed boxes
+//! (fixed, finite, half-open), duplicated rows for degeneracy.
+//!
+//! Every case is built around a known feasible point `x*`, so the true
+//! status is Optimal or Unbounded and the two solvers must agree on it —
+//! and on the objective to 1e-6 — while the revised solver's point must
+//! satisfy the model. A separate batch plants a guaranteed-impossible row
+//! and both solvers must prove infeasibility. A third batch re-solves
+//! perturbed instances warm from the previous basis snapshot and checks
+//! warm == cold objectives on the new basis type.
+
+#![cfg(feature = "dense-lp")]
+
+use bftrainer::milp::dense::solve_lp_dense;
+use bftrainer::milp::{
+    model_bounds, solve_lp, solve_lp_warm, Direction, LinExpr, LpStatus, Model, Sense, VarId,
+};
+use bftrainer::util::rng::Rng;
+
+const REL_TOL: f64 = 1e-6;
+
+/// A random model with a feasible witness point baked in.
+fn random_feasible_model(rng: &mut Rng) -> Model {
+    let nv = rng.range_usize(1, 7);
+    let direction = if rng.chance(0.5) { Direction::Maximize } else { Direction::Minimize };
+    let mut m = Model::new(direction);
+    let mut xstar: Vec<f64> = Vec::with_capacity(nv);
+    let mut vars: Vec<VarId> = Vec::with_capacity(nv);
+    for i in 0..nv {
+        let lo = rng.range_f64(-3.0, 3.0);
+        let (hi, xs) = if rng.chance(0.1) {
+            (lo, lo) // fixed variable
+        } else if rng.chance(0.15) {
+            (f64::INFINITY, lo + rng.range_f64(0.0, 4.0)) // half-open box
+        } else {
+            let hi = lo + rng.range_f64(0.5, 6.0);
+            let xs = rng.range_f64(lo, hi);
+            (hi, xs)
+        };
+        vars.push(m.continuous(lo, hi, format!("v{i}")));
+        xstar.push(xs);
+    }
+    let nc = rng.range_usize(0, 6);
+    for ci in 0..nc {
+        let mut e = LinExpr::new();
+        let mut val = 0.0;
+        let mut nterms = 0usize;
+        for (i, &v) in vars.iter().enumerate() {
+            if rng.chance(0.6) {
+                let c = rng.range_f64(-2.0, 2.0);
+                if c.abs() < 0.1 {
+                    continue; // keep coefficients well-scaled
+                }
+                e.add(v, c);
+                val += c * xstar[i];
+                nterms += 1;
+            }
+        }
+        if nterms == 0 {
+            e.add(vars[0], 1.0);
+            val += xstar[0];
+        }
+        let (sense, rhs) = match rng.range_usize(0, 2) {
+            0 => {
+                let slack = if rng.chance(0.3) { 0.0 } else { rng.range_f64(0.0, 2.0) };
+                (Sense::Le, val + slack)
+            }
+            1 => {
+                let slack = if rng.chance(0.3) { 0.0 } else { rng.range_f64(0.0, 2.0) };
+                (Sense::Ge, val - slack)
+            }
+            _ => (Sense::Eq, val), // x* satisfies it exactly
+        };
+        m.constrain(e.clone(), sense, rhs, format!("c{ci}"));
+        if rng.chance(0.15) {
+            // Duplicate row: redundant constraint, degenerate vertices.
+            m.constrain(e, sense, rhs, format!("c{ci}dup"));
+        }
+    }
+    let mut obj = LinExpr::new();
+    for &v in &vars {
+        obj.add(v, rng.range_f64(-2.0, 2.0));
+    }
+    m.set_objective(obj, rng.range_f64(-1.0, 1.0));
+    m
+}
+
+#[test]
+fn revised_simplex_matches_dense_oracle() {
+    let mut rng = Rng::new(0xD1FF);
+    let mut optimal = 0usize;
+    let mut unbounded = 0usize;
+    let mut stalled = 0usize;
+    const CASES: usize = 220;
+    for case in 0..CASES {
+        let m = random_feasible_model(&mut rng);
+        let bounds = model_bounds(&m);
+        let new = solve_lp(&m, &bounds);
+        let old = solve_lp_dense(&m, &bounds);
+        if new.status == LpStatus::Stalled || old.status == LpStatus::Stalled {
+            stalled += 1;
+            continue;
+        }
+        assert_eq!(
+            new.status, old.status,
+            "case {case}: revised {:?} vs dense {:?}\nmodel: {m:?}",
+            new.status, old.status
+        );
+        // Bounds never become rows in the revised core.
+        assert!(new.rows <= m.constraints.len(), "case {case}: bound-derived rows");
+        match new.status {
+            LpStatus::Optimal => {
+                optimal += 1;
+                let tol = REL_TOL * old.objective.abs().max(1.0);
+                assert!(
+                    (new.objective - old.objective).abs() <= tol,
+                    "case {case}: revised {} vs dense {}\nmodel: {m:?}",
+                    new.objective,
+                    old.objective
+                );
+                assert!(
+                    m.feasibility_violation(&new.x, 1e-6).is_none(),
+                    "case {case}: {:?}",
+                    m.feasibility_violation(&new.x, 1e-6)
+                );
+            }
+            LpStatus::Unbounded => unbounded += 1,
+            LpStatus::Infeasible => {
+                panic!("case {case}: x* is feasible by construction\nmodel: {m:?}")
+            }
+            LpStatus::Stalled => unreachable!(),
+        }
+    }
+    assert!(optimal >= CASES / 2, "suite too vacuous: only {optimal} optimal cases");
+    assert!(stalled <= CASES / 20, "{stalled} stalled cases out of {CASES}");
+    // Not an assertion target, but both branches should be visited.
+    eprintln!("differential: {optimal} optimal, {unbounded} unbounded, {stalled} stalled");
+}
+
+#[test]
+fn statuses_agree_on_infeasible_models() {
+    let mut rng = Rng::new(0xBAD0);
+    let mut stalled = 0usize;
+    for case in 0..40 {
+        let mut m = random_feasible_model(&mut rng);
+        // Plant an impossible row: positive coefficients with an rhs below
+        // the minimum the boxes allow (all lower bounds are finite).
+        let mut e = LinExpr::new();
+        let mut at_lo = 0.0;
+        for i in 0..m.n_vars() {
+            let c = rng.range_f64(0.5, 2.0);
+            at_lo += c * m.vars[i].lo;
+            e.add(VarId(i), c);
+        }
+        m.constrain(e, Sense::Le, at_lo - rng.range_f64(0.5, 2.0), "impossible");
+        let bounds = model_bounds(&m);
+        let new = solve_lp(&m, &bounds);
+        let old = solve_lp_dense(&m, &bounds);
+        if new.status == LpStatus::Stalled || old.status == LpStatus::Stalled {
+            stalled += 1;
+            continue;
+        }
+        assert_eq!(new.status, LpStatus::Infeasible, "case {case}: revised\nmodel: {m:?}");
+        assert_eq!(old.status, LpStatus::Infeasible, "case {case}: dense\nmodel: {m:?}");
+    }
+    assert!(stalled <= 2, "{stalled} stalled infeasibility proofs");
+}
+
+#[test]
+fn warm_restart_equals_cold_on_new_basis_type() {
+    // Bounded, guaranteed-feasible instances (nonnegative rows anchored at
+    // x = lo), re-solved after rhs growth + box shrink: the warm solve
+    // from the previous snapshot must match a cold solve exactly.
+    let mut rng = Rng::new(0x5AFE);
+    for case in 0..60 {
+        let nv = rng.range_usize(2, 7);
+        let mut m = Model::new(Direction::Maximize);
+        let mut vars = Vec::with_capacity(nv);
+        for i in 0..nv {
+            let lo = rng.range_f64(-1.0, 2.0);
+            vars.push(m.continuous(lo, lo + rng.range_f64(1.0, 5.0), format!("v{i}")));
+        }
+        let nc = rng.range_usize(1, 4);
+        let mut rhs0 = Vec::with_capacity(nc);
+        for ci in 0..nc {
+            let mut e = LinExpr::new();
+            let mut at_lo = 0.0;
+            for &v in &vars {
+                let c = rng.range_f64(0.1, 1.5);
+                at_lo += c * m.vars[v.0].lo;
+                e.add(v, c);
+            }
+            let rhs = at_lo + rng.range_f64(0.5, 3.0);
+            rhs0.push(rhs);
+            m.constrain(e, Sense::Le, rhs, format!("c{ci}"));
+        }
+        let mut obj = LinExpr::new();
+        for &v in &vars {
+            obj.add(v, rng.range_f64(-1.0, 2.0));
+        }
+        m.set_objective(obj, 0.0);
+
+        let first = solve_lp(&m, &model_bounds(&m));
+        assert_eq!(first.status, LpStatus::Optimal, "case {case}");
+        assert!(!first.basis.is_empty(), "case {case}: snapshot expected");
+
+        // Perturb: grow every rhs (stays feasible at x = lo), shrink boxes.
+        for (ci, con) in m.constraints.iter_mut().enumerate() {
+            con.rhs = rhs0[ci] + rng.range_f64(0.0, 1.0);
+        }
+        let shrunk: Vec<(f64, f64)> =
+            model_bounds(&m).iter().map(|&(lo, hi)| (lo, lo + 0.8 * (hi - lo))).collect();
+        let cold = solve_lp(&m, &shrunk);
+        let warm = solve_lp_warm(&m, &shrunk, Some(&first.basis));
+        assert_eq!(cold.status, LpStatus::Optimal, "case {case}");
+        assert_eq!(warm.status, LpStatus::Optimal, "case {case}");
+        assert!(
+            (warm.objective - cold.objective).abs() <= REL_TOL * cold.objective.abs().max(1.0),
+            "case {case}: warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+    }
+}
