@@ -1,94 +1,12 @@
-//! Regenerates **Fig 10** (HPO resource-utilization efficiency per 6-hour
-//! window over a week, MILP vs heuristic) and **Fig 11** (preemption and
-//! rescaling costs over the week).
+//! Shim for Figs 10-11 (weekly efficiency and costs).
 //!
-//! Paper anchors: MILP averages ~80%, peaks ~90%, beats the heuristic by
-//! up to 32%; preemption cost is policy-independent while MILP's
-//! rescaling cost is far below the heuristic's.
-
-use bftrainer::coordinator::Objective;
-use bftrainer::scaling::Dnn;
-use bftrainer::sim::{self, ReplayOpts};
-use bftrainer::trace::{self, machines};
-use bftrainer::util::table::{f, Table};
-use bftrainer::workload;
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig10_11_weekly_efficiency`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let params = machines::summit_1024();
-    let trace = trace::generate(&params, 42);
-    let window = 6.0 * 3600.0;
-    let n_windows = (params.duration_s / window) as usize;
-    let wl = workload::hpo_campaign(Dnn::ShuffleNet, 1000, 100.0);
-
-    println!("== Fig 10 + Fig 11: per-6h-window efficiency and costs ==");
-    let mut tab = Table::new(vec![
-        "window",
-        "U (MILP)",
-        "U (heuristic)",
-        "preempt cost (samples)",
-        "rescale MILP",
-        "rescale heuristic",
-    ]);
-    let mut u_m_acc = Vec::new();
-    let mut u_h_acc = Vec::new();
-    for wi in 0..n_windows {
-        let (t0, t1) = (wi as f64 * window, (wi + 1) as f64 * window);
-        let wtrace = trace.window(t0, t1);
-        if wtrace.is_empty() {
-            continue;
-        }
-        let opts = ReplayOpts { horizon_s: t1, ..Default::default() };
-        let (rm, um) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            120.0,
-            10,
-            1.0,
-            &wtrace,
-            &wl,
-            &opts,
-        );
-        let (rh, uh) = sim::run_with_baseline(
-            "heuristic",
-            Objective::Throughput,
-            120.0,
-            10,
-            1.0,
-            &wtrace,
-            &wl,
-            &opts,
-        );
-        // Preemption cost: samples lost to forced downscales — approximated
-        // by each preempted trainer's stall at its post-event scale.
-        let preempt_cost: f64 = rm
-            .coordinator
-            .trainers
-            .iter()
-            .map(|t| t.preemptions as f64 * t.spec.r_dw * 1000.0)
-            .sum();
-        u_m_acc.push(um);
-        u_h_acc.push(uh);
-        tab.row(vec![
-            format!("{:>2} ({:.0}h)", wi, t0 / 3600.0),
-            format!("{:.1}%", 100.0 * um),
-            format!("{:.1}%", 100.0 * uh),
-            format!("{:.2e}", preempt_cost),
-            format!("{:.2e}", rm.metrics.rescale_cost_samples),
-            format!("{:.2e}", rh.metrics.rescale_cost_samples),
-        ]);
-    }
-    println!("{}", tab.render());
-    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
-    let best_gain = u_m_acc
-        .iter()
-        .zip(&u_h_acc)
-        .map(|(m, h)| m - h)
-        .fold(f64::NEG_INFINITY, f64::max);
-    println!(
-        "mean U: MILP {:.1}%  heuristic {:.1}%  | best window gain {:+.1}pp",
-        100.0 * mean(&u_m_acc),
-        100.0 * mean(&u_h_acc),
-        100.0 * best_gain
-    );
-    println!("paper anchors: MILP mean ~80%, up to ~90%; up to +32% over heuristic");
+    std::process::exit(bftrainer::bench::run_bench_target("fig10_11"));
 }

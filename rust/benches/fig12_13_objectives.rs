@@ -1,105 +1,12 @@
-//! Regenerates **Fig 12** (average DNN runtime under the two objective
-//! metrics) and **Fig 13** (efficiency vs objective metric × T_fwd).
+//! Shim for Figs 12-13 (objective-metric contrast).
 //!
-//! Scenario: §5.2 — diverse Trainers (Tab 2 zoo cycled, Poisson arrivals,
-//! Pj_max = 10). Paper anchors: raw throughput starves DenseNet (>40×
-//! AlexNet's runtime on average despite only ~7× throughput gap), while
-//! scaling-efficiency equalizes runtimes; U is consistently higher under
-//! the normalized objective.
-
-use bftrainer::coordinator::Objective;
-use bftrainer::scaling::Dnn;
-use bftrainer::sim::{self, ReplayOpts};
-use bftrainer::trace::{self, machines};
-use bftrainer::util::table::{f, Table};
-use bftrainer::workload;
-use std::collections::BTreeMap;
-
-fn mean_runtimes(res: &sim::ReplayResult) -> BTreeMap<String, f64> {
-    let mut acc: BTreeMap<String, (f64, usize)> = BTreeMap::new();
-    for t in &res.coordinator.trainers {
-        if let (Some(d), Some(a)) = (t.done_t, t.admit_t) {
-            let dnn = t.spec.name.split('-').next().unwrap().to_string();
-            let e = acc.entry(dnn).or_insert((0.0, 0));
-            e.0 += (d - a) / 3600.0;
-            e.1 += 1;
-        }
-    }
-    acc.into_iter().map(|(k, (s, n))| (k, s / n.max(1) as f64)).collect()
-}
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig12_13_objectives`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut params = machines::summit_1024();
-    params.duration_s = 72.0 * 3600.0;
-    let trace = trace::generate(&params, 42);
-    // 140 trainers (20 per DNN), work scaled down so the bench finishes
-    // in minutes while preserving the Fig 12 contrast, Poisson gap 2 min.
-    let wl = workload::diverse_poisson(140, 30.0, 120.0, 7);
-    let opts = ReplayOpts { run_to_completion: true, ..Default::default() };
-
-    println!("== Fig 12: average DNN runtime (hours) under two objectives ==");
-    let mut runtimes: BTreeMap<&str, BTreeMap<String, f64>> = BTreeMap::new();
-    for (name, obj) in [
-        ("throughput", Objective::Throughput),
-        ("efficiency", Objective::ScalingEfficiency),
-    ] {
-        let (res, _) =
-            sim::run_with_baseline("dp", obj, 120.0, 10, 1.0, &trace, &wl, &opts);
-        runtimes.insert(name, mean_runtimes(&res));
-    }
-    let mut tab = Table::new(vec!["DNN", "throughput obj (h)", "efficiency obj (h)"]);
-    for d in Dnn::ALL {
-        let g = |o: &str| {
-            runtimes[o]
-                .get(d.name())
-                .map(|v| f(*v, 2))
-                .unwrap_or_else(|| "-".into())
-        };
-        tab.row(vec![d.name().to_string(), g("throughput"), g("efficiency")]);
-    }
-    println!("{}", tab.render());
-    let ratio = |o: &str| {
-        let m = &runtimes[o];
-        match (m.get("DenseNet"), m.get("AlexNet")) {
-            (Some(d), Some(a)) if *a > 0.0 => d / a,
-            _ => f64::NAN,
-        }
-    };
-    println!(
-        "DenseNet/AlexNet runtime ratio: throughput {:.1}x vs efficiency {:.1}x",
-        ratio("throughput"),
-        ratio("efficiency")
-    );
-    println!("paper anchor: >40x under throughput; near-equal under efficiency\n");
-
-    println!("== Fig 13: utilization efficiency vs objective x T_fwd ==");
-    let mut tab = Table::new(vec!["T_fwd (s)", "U (throughput obj)", "U (efficiency obj)"]);
-    // U sweep uses a non-completing workload (the paper's U assumes work
-    // never runs out).
-    let wl_u = workload::diverse_poisson(1000, 100.0, 600.0, 7);
-    for &tf in &[10.0, 60.0, 120.0, 300.0, 600.0] {
-        let (_, u_t) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            tf,
-            10,
-            1.0,
-            &trace,
-            &wl_u,
-            &ReplayOpts::default(),
-        );
-        let (_, u_e) = sim::run_with_baseline(
-            "dp",
-            Objective::ScalingEfficiency,
-            tf,
-            10,
-            1.0,
-            &trace,
-            &wl_u,
-            &ReplayOpts::default(),
-        );
-        tab.row(vec![f(tf, 0), format!("{:.1}%", 100.0 * u_t), format!("{:.1}%", 100.0 * u_e)]);
-    }
-    println!("{}", tab.render());
-    println!("paper anchor: U consistently better under the scaling-efficiency objective");
+    std::process::exit(bftrainer::bench::run_bench_target("fig12_13"));
 }

@@ -1,133 +1,12 @@
-//! Regenerates **Fig 14a/b/c** (resource integral, average runtime and
-//! efficiency vs the maximum number of parallel Trainers) and
-//! **Tab 3 / Tab 4** (per-DNN average runtime vs Pj_max under the raw
-//! throughput / scaling-efficiency objectives).
+//! Shim for Fig 14 + Tabs 3-4 (max parallel trainers).
 //!
-//! Paper anchors (Pj_max 5 → 35): resource integral shrinks (~-28%),
-//! mean runtime grows (~+442%); under throughput AlexNet's runtime is
-//! flat while DenseNet's explodes; under efficiency AlexNet (worst
-//! scaler) starves ~10× while VGG-16 only ~2.6×.
-
-use bftrainer::coordinator::Objective;
-use bftrainer::scaling::Dnn;
-use bftrainer::sim::{self, ReplayOpts};
-use bftrainer::trace::{self, machines};
-use bftrainer::util::table::{f, Table};
-use bftrainer::workload;
-use std::collections::BTreeMap;
-
-fn per_dnn_runtimes(res: &sim::ReplayResult) -> BTreeMap<String, f64> {
-    let mut acc: BTreeMap<String, (f64, usize)> = BTreeMap::new();
-    for t in &res.coordinator.trainers {
-        if let (Some(d), Some(a)) = (t.done_t, t.admit_t) {
-            let dnn = t.spec.name.split('-').next().unwrap().to_string();
-            let e = acc.entry(dnn).or_insert((0.0, 0));
-            e.0 += (d - a) / 3600.0;
-            e.1 += 1;
-        }
-    }
-    acc.into_iter().map(|(k, (s, n))| (k, s / n.max(1) as f64)).collect()
-}
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig14_tab3_tab4_pjmax`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut params = machines::summit_1024();
-    params.duration_s = 72.0 * 3600.0;
-    let trace = trace::generate(&params, 42);
-    let wl = workload::diverse_poisson(105, 40.0, 120.0, 7);
-    let pj_sweep = [5usize, 10, 15, 20, 25, 30, 35];
-    let opts = ReplayOpts { run_to_completion: true, ..Default::default() };
-
-    let mut fig14 = Table::new(vec![
-        "Pj_max",
-        "resource integral (node-h)",
-        "mean runtime (h)",
-        "U",
-    ]);
-    let mut tab3: BTreeMap<usize, BTreeMap<String, f64>> = BTreeMap::new();
-    let mut tab4: BTreeMap<usize, BTreeMap<String, f64>> = BTreeMap::new();
-    for &pj in &pj_sweep {
-        // Fig 14 + Tab 3: throughput objective.
-        let (res, _) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            120.0,
-            pj,
-            1.0,
-            &trace,
-            &wl,
-            &opts,
-        );
-        let runtimes = per_dnn_runtimes(&res);
-        let done: Vec<f64> = res
-            .coordinator
-            .trainers
-            .iter()
-            .filter_map(|t| Some((t.done_t? - t.admit_t?) / 3600.0))
-            .collect();
-        let mean_rt = done.iter().sum::<f64>() / done.len().max(1) as f64;
-        // resource integral consumed until the last completion
-        let integral = res.metrics.resource_node_hours;
-        // U on the non-completing variant for comparability
-        let wl_u = workload::diverse_poisson(1000, 100.0, 400.0, 7);
-        let (_, u) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            120.0,
-            pj,
-            1.0,
-            &trace,
-            &wl_u,
-            &ReplayOpts::default(),
-        );
-        fig14.row(vec![
-            pj.to_string(),
-            f(integral, 0),
-            f(mean_rt, 2),
-            format!("{:.1}%", 100.0 * u),
-        ]);
-        tab3.insert(pj, runtimes);
-
-        // Tab 4: scaling-efficiency objective.
-        let (res_e, _) = sim::run_with_baseline(
-            "dp",
-            Objective::ScalingEfficiency,
-            120.0,
-            pj,
-            1.0,
-            &trace,
-            &wl,
-            &opts,
-        );
-        tab4.insert(pj, per_dnn_runtimes(&res_e));
-    }
-    println!("== Fig 14: effect of the maximum parallel Trainers ==");
-    println!("{}", fig14.render());
-    println!("paper anchors: integral down ~28%, runtime up ~442% from Pj=5 to 35\n");
-
-    for (label, data, order) in [
-        ("Tab 3 (throughput objective)", &tab3, Dnn::ALL.to_vec()),
-        (
-            "Tab 4 (scaling-efficiency objective)",
-            &tab4,
-            bftrainer::scaling::zoo::by_scaling_efficiency().into_iter().rev().collect(),
-        ),
-    ] {
-        println!("== {label}: avg runtime (h) per DNN vs Pj_max ==");
-        let mut header = vec!["DNN".to_string()];
-        header.extend(pj_sweep.iter().map(|p| p.to_string()));
-        let mut tab = Table::new(header);
-        for d in order {
-            let mut row = vec![d.name().to_string()];
-            for &pj in &pj_sweep {
-                row.push(
-                    data[&pj]
-                        .get(d.name())
-                        .map(|v| f(*v, 2))
-                        .unwrap_or_else(|| "-".into()),
-                );
-            }
-            tab.row(row);
-        }
-        println!("{}", tab.render());
-    }
+    std::process::exit(bftrainer::bench::run_bench_target("fig14_tab3_tab4"));
 }

@@ -1,41 +1,12 @@
-//! Regenerates **Fig 15**: HPO resource-utilization efficiency per DNN,
-//! ordered by scaling efficiency (ascending, as in the paper).
+//! Shim for Fig 15 (HPO efficiency per DNN).
 //!
-//! Paper anchors: every DNN achieves > 75%; U rises mildly with
-//! scalability, from ~75% (AlexNet) to ~83% (DenseNet).
-
-use bftrainer::coordinator::Objective;
-use bftrainer::scaling::zoo;
-use bftrainer::sim::{self, ReplayOpts};
-use bftrainer::trace::{self, machines};
-use bftrainer::util::table::Table;
-use bftrainer::workload;
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig15_scalability`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut params = machines::summit_1024();
-    params.duration_s = 60.0 * 3600.0; // the paper compares the first 60 h
-    let trace = trace::generate(&params, 42);
-
-    println!("== Fig 15: HPO efficiency per DNN (first 60 h) ==");
-    let mut tab = Table::new(vec!["DNN", "scaling eff@64", "U"]);
-    for d in zoo::by_scaling_efficiency() {
-        let wl = workload::hpo_campaign(d, 2000, 100.0); // never completes
-        let (_, u) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            120.0,
-            10,
-            1.0,
-            &trace,
-            &wl,
-            &ReplayOpts::default(),
-        );
-        tab.row(vec![
-            d.name().to_string(),
-            format!("{:.0}%", 100.0 * zoo::efficiency_at_64(d)),
-            format!("{:.1}%", 100.0 * u),
-        ]);
-    }
-    println!("{}", tab.render());
-    println!("paper anchors: all >= 75%; rises with DNN scalability (75% -> 83%)");
+    std::process::exit(bftrainer::bench::run_bench_target("fig15"));
 }

@@ -1,50 +1,12 @@
-//! Regenerates **Fig 16**: utilization efficiency under artificially
-//! inflated rescaling costs (×1 … ×10, §5.4.2).
+//! Shim for Fig 16 (artificial rescale-cost multipliers).
 //!
-//! Paper anchor: U decreases with the multiplier, but much sublinearly.
-
-use bftrainer::coordinator::Objective;
-use bftrainer::scaling::Dnn;
-use bftrainer::sim::{self, ReplayOpts};
-use bftrainer::trace::{self, machines};
-use bftrainer::util::table::{f, Table};
-use bftrainer::workload;
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig16_rescale_cost`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut params = machines::summit_1024();
-    params.duration_s = 48.0 * 3600.0;
-    let trace = trace::generate(&params, 42);
-    let wl = workload::hpo_campaign(Dnn::ShuffleNet, 1000, 100.0);
-
-    println!("== Fig 16: efficiency vs artificial rescale-cost multiplier ==");
-    let mut tab = Table::new(vec!["multiplier", "U (MILP)", "U (heuristic)"]);
-    for &mult in &[1.0, 2.0, 4.0, 6.0, 8.0, 10.0] {
-        let (_, u_m) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            120.0,
-            10,
-            mult,
-            &trace,
-            &wl,
-            &ReplayOpts::default(),
-        );
-        let (_, u_h) = sim::run_with_baseline(
-            "heuristic",
-            Objective::Throughput,
-            120.0,
-            10,
-            mult,
-            &trace,
-            &wl,
-            &ReplayOpts::default(),
-        );
-        tab.row(vec![
-            format!("x{}", f(mult, 0)),
-            format!("{:.1}%", 100.0 * u_m),
-            format!("{:.1}%", 100.0 * u_h),
-        ]);
-    }
-    println!("{}", tab.render());
-    println!("paper anchor: decrease is clearly sublinear in the multiplier");
+    std::process::exit(bftrainer::bench::run_bench_target("fig16"));
 }

@@ -1,124 +1,12 @@
-//! Regenerates **Fig 1** (CDF of fragment length) and **Tab 1**
-//! (idle-resource characteristics of Summit / Theta / Mira).
+//! Shim for Fig 1 + Tab 1 (idle-fragment characterization + SWF round trip).
 //!
-//! Paper reference values — Tab 1: Summit 41.7/28.6 INC/DEC per hour,
-//! 11.1% idle; Theta 6.3/6.2, 12.5%; Mira 2.8/2.4, 10.3%. Fig 1: ~58% of
-//! fragments are <10 min yet carry only ~10% of idle node×time.
-
-use bftrainer::mini::benchkit::BenchRunner;
-use bftrainer::trace::{self, machines, swf};
-use bftrainer::util::table::{f, Table};
-use std::time::Instant;
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig1_tab1_fragments`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut runner = BenchRunner::new("fig1 + tab1: idle-node characterization");
-
-    let mut tab1 = Table::new(vec![
-        "System", "Nodes", "INC/h", "DEC/h", "Ratio", "eq-Nodes", "paper INC/h", "paper ratio",
-    ]);
-    let paper: [(&str, f64, f64); 3] =
-        [("Summit", 41.7, 0.111), ("Theta", 6.3, 0.125), ("Mira", 2.8, 0.103)];
-    let mut cdf_rows: Vec<(String, Vec<(f64, f64, f64)>)> = Vec::new();
-
-    for (name, params) in [
-        ("Summit", machines::summit_1024()),
-        ("Theta", machines::theta()),
-        ("Mira", machines::mira()),
-    ] {
-        let t0 = Instant::now();
-        let t = trace::generate(&params, 42);
-        let gen_s = t0.elapsed().as_secs_f64();
-        runner.record(&format!("synthesize:{name}"), vec![gen_s], Some(t.len() as f64));
-        let s = trace::characterize(&t, params.duration_s);
-        let pref = paper.iter().find(|p| p.0 == name).unwrap();
-        tab1.row(vec![
-            name.to_string(),
-            params.total_nodes.to_string(),
-            f(s.inc_per_hour, 1),
-            f(s.dec_per_hour, 1),
-            format!("{:.1}%", 100.0 * s.idle_ratio),
-            f(s.eq_nodes, 0),
-            f(pref.1, 1),
-            format!("{:.1}%", 100.0 * pref.2),
-        ]);
-        let frags = trace::extract(&t, params.duration_s);
-        let cdf = trace::fragment_cdf(&frags);
-        let pts: Vec<(f64, f64, f64)> =
-            [60.0, 300.0, 600.0, 1800.0, 3600.0, 4.0 * 3600.0, 24.0 * 3600.0]
-                .iter()
-                .map(|&len| (len, cdf.frac_shorter(len), cdf.nodetime_frac_shorter(len)))
-                .collect();
-        cdf_rows.push((name.to_string(), pts));
-    }
-
-    // SWF ingestion path: serialize the Theta job stream to Standard
-    // Workload Format text, parse it back, slice the full machine over
-    // the full window, and characterize the log-derived trace next to
-    // the synthetic presets (times round to whole seconds in SWF, so
-    // the row lands near — not exactly on — the Theta row above).
-    {
-        let params = machines::theta();
-        let jobs = trace::generate_jobs(&params, 42);
-        let swf_jobs: Vec<swf::SwfJob> = jobs
-            .iter()
-            .map(|j| swf::SwfJob {
-                id: j.id,
-                submit: j.submit,
-                runtime: j.runtime,
-                procs: j.nodes,
-                req_time: j.req_walltime,
-                status: 1,
-            })
-            .collect();
-        let text = swf::to_swf_text(&swf_jobs, params.total_nodes);
-        let t0 = Instant::now();
-        let log = swf::parse_str(&text);
-        runner.record("swf:parse", vec![t0.elapsed().as_secs_f64()], Some(log.jobs.len() as f64));
-        let spec = swf::SliceSpec {
-            nodes: params.total_nodes,
-            procs_per_node: 1,
-            t0: params.warmup_s,
-            t1: params.warmup_s + params.duration_s,
-            warmup_s: params.warmup_s,
-            debounce_s: params.debounce_s,
-        };
-        let t0 = Instant::now();
-        let sliced = swf::slice(&log, &spec);
-        runner.record(
-            "swf:slice+replay",
-            vec![t0.elapsed().as_secs_f64()],
-            Some(sliced.trace.len() as f64),
-        );
-        let s = trace::characterize(&sliced.trace, params.duration_s);
-        let pref = paper.iter().find(|p| p.0 == "Theta").unwrap();
-        tab1.row(vec![
-            "Theta (SWF)".to_string(),
-            params.total_nodes.to_string(),
-            f(s.inc_per_hour, 1),
-            f(s.dec_per_hour, 1),
-            format!("{:.1}%", 100.0 * s.idle_ratio),
-            f(s.eq_nodes, 0),
-            f(pref.1, 1),
-            format!("{:.1}%", 100.0 * pref.2),
-        ]);
-    }
-
-    println!("\n== Tab 1: idle resources that cannot be backfilled ==");
-    println!("{}", tab1.render());
-
-    println!("== Fig 1: cumulative distribution of fragment length ==");
-    let mut fig1 = Table::new(vec!["system", "length", "CDF (count)", "CDF (node-time)"]);
-    for (name, pts) in &cdf_rows {
-        for &(len, by_count, by_nt) in pts {
-            fig1.row(vec![
-                name.clone(),
-                bftrainer::util::table::hms(len),
-                format!("{:.0}%", 100.0 * by_count),
-                format!("{:.0}%", 100.0 * by_nt),
-            ]);
-        }
-    }
-    println!("{}", fig1.render());
-    println!("paper anchor: Summit 58% of fragments <10 min carrying ~10% of node-time");
-    runner.finish();
+    std::process::exit(bftrainer::bench::run_bench_target("fig1_tab1"));
 }

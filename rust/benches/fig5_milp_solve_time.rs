@@ -1,149 +1,12 @@
-//! Regenerates **Fig 5**: MILP solution time vs number of jobs and nodes.
+//! Shim for Fig 5 (MILP solve effort, cold vs warm incremental resolve).
 //!
-//! The paper (Gurobi, 2.3 GHz i9): typically < 1 s up to 30 jobs × 800
-//! nodes. We report three solvers on the same random instances:
-//!   * `milp`    — aggregate formulation + our B&B (production path)
-//!   * `dp`      — exact DP fast path (identical optimum)
-//!   * `pernode` — the paper's literal x_jn formulation (small sizes only;
-//!     a dense-tableau B&B does not reach 800-node per-node models)
-//!
-//! plus the **incremental** variant (DESIGN.md §7): consecutive pool
-//! events solved cold vs warm-started from the previous event's solution
-//! and root basis, reporting the measured speedup.
-
-use bftrainer::coordinator::{AggregateMilpAllocator, Allocator, DpAllocator, PerNodeMilpAllocator};
-use bftrainer::util::rng::Rng;
-use bftrainer::util::stats;
-use bftrainer::util::table::{f, Table};
-use bftrainer::workload::{advance_request, random_alloc_request};
-use std::time::Instant;
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig5_milp_solve_time`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let reps = 5usize;
-    let mut rng = Rng::new(7);
-
-    println!("== Fig 5: optimization time vs jobs and nodes ==\n");
-    let mut tab = Table::new(vec![
-        "jobs", "nodes", "milp mean(ms)", "milp max(ms)", "LP iters", "dp mean(ms)", "agreement",
-    ]);
-    for &jobs in &[5usize, 10, 20, 30] {
-        for &nodes in &[50u32, 100, 200, 400, 800] {
-            let mut t_milp = Vec::new();
-            let mut t_dp = Vec::new();
-            let mut iters = 0usize;
-            let mut agree = true;
-            for _ in 0..reps {
-                let req = random_alloc_request(&mut rng, jobs, nodes);
-                let t0 = Instant::now();
-                let m = AggregateMilpAllocator::default().allocate(&req);
-                t_milp.push(t0.elapsed().as_secs_f64() * 1e3);
-                iters += m.stats.lp_iterations;
-                let t0 = Instant::now();
-                let d = DpAllocator.allocate(&req);
-                t_dp.push(t0.elapsed().as_secs_f64() * 1e3);
-                if (m.objective - d.objective).abs() > 1e-5 * d.objective.abs().max(1.0) {
-                    agree = false;
-                }
-            }
-            tab.row(vec![
-                jobs.to_string(),
-                nodes.to_string(),
-                f(stats::mean(&t_milp), 2),
-                f(t_milp.iter().cloned().fold(0.0, f64::max), 2),
-                (iters / reps).to_string(),
-                f(stats::mean(&t_dp), 3),
-                if agree { "yes".into() } else { "NO".to_string() },
-            ]);
-        }
-    }
-    println!("{}", tab.render());
-    println!("paper anchor: Gurobi typically < 1 s at every point up to 30 jobs x 800 nodes\n");
-
-    // Per-node (paper-literal) formulation at tableau-feasible sizes.
-    let mut tab2 = Table::new(vec!["jobs", "nodes", "pernode mean(ms)", "dp mean(ms)"]);
-    for &(jobs, nodes) in &[(3usize, 10u32), (5, 15), (5, 25), (8, 30)] {
-        let mut t_pn = Vec::new();
-        let mut t_dp = Vec::new();
-        for _ in 0..3 {
-            let req = random_alloc_request(&mut rng, jobs, nodes);
-            let t0 = Instant::now();
-            let _ = PerNodeMilpAllocator::default().allocate(&req);
-            t_pn.push(t0.elapsed().as_secs_f64() * 1e3);
-            let t0 = Instant::now();
-            let _ = DpAllocator.allocate(&req);
-            t_dp.push(t0.elapsed().as_secs_f64() * 1e3);
-        }
-        tab2.row(vec![
-            jobs.to_string(),
-            nodes.to_string(),
-            f(stats::mean(&t_pn), 2),
-            f(stats::mean(&t_dp), 3),
-        ]);
-    }
-    println!("== Fig 5 (paper-literal per-node formulation, small sizes) ==");
-    println!("{}", tab2.render());
-
-    // Cold vs warm on consecutive-event workloads: the same sequence of
-    // pool-delta events solved (a) from scratch each time and (b) by one
-    // stateful allocator carrying the previous solution + basis. Both
-    // run without the DP incumbent so the incremental lever is isolated;
-    // "agreement" checks every warm objective against the exact DP.
-    let events = 12usize;
-    let mut tab3 = Table::new(vec![
-        "jobs", "nodes", "events", "cold mean(ms)", "warm mean(ms)", "speedup",
-        "LP iters (cold/warm)", "agreement",
-    ]);
-    for &(jobs, nodes) in &[(5usize, 100u32), (10, 200), (20, 400)] {
-        let mut req = random_alloc_request(&mut rng, jobs, nodes);
-        let mut seq = Vec::with_capacity(events);
-        for _ in 0..events {
-            seq.push(req.clone());
-            let dp = DpAllocator.allocate(&req);
-            advance_request(&mut rng, &mut req, &dp.targets, 4);
-        }
-        let mut cold_ms = Vec::new();
-        let mut cold_iters = 0usize;
-        for (i, q) in seq.iter().enumerate() {
-            let t0 = Instant::now();
-            let plan = AggregateMilpAllocator::cold().allocate(q);
-            cold_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-            if i > 0 {
-                // match the warm accounting: event 0 is excluded there too
-                cold_iters += plan.stats.lp_iterations;
-            }
-        }
-        let mut warm = AggregateMilpAllocator::incremental_only();
-        let mut warm_ms = Vec::new();
-        let mut warm_iters = 0usize;
-        let mut agree = true;
-        for (i, q) in seq.iter().enumerate() {
-            let t0 = Instant::now();
-            let plan = warm.allocate(q);
-            let ms = t0.elapsed().as_secs_f64() * 1e3;
-            if i > 0 {
-                // event 0 has no previous solution: it is itself cold
-                warm_ms.push(ms);
-                warm_iters += plan.stats.lp_iterations;
-            }
-            let dp = DpAllocator.allocate(q);
-            if (plan.objective - dp.objective).abs() > 1e-5 * dp.objective.abs().max(1.0) {
-                agree = false;
-            }
-        }
-        let cold_mean = stats::mean(&cold_ms[1..]);
-        let warm_mean = stats::mean(&warm_ms);
-        tab3.row(vec![
-            jobs.to_string(),
-            nodes.to_string(),
-            events.to_string(),
-            f(cold_mean, 2),
-            f(warm_mean, 2),
-            format!("{:.1}x", cold_mean / warm_mean.max(1e-9)),
-            format!("{cold_iters}/{warm_iters}"),
-            if agree { "yes".to_string() } else { "NO".to_string() },
-        ]);
-    }
-    println!("== Fig 5 (incremental): cold vs warm-started consecutive events ==");
-    println!("{}", tab3.render());
-    println!("warm = previous-event solution as incumbent + previous root basis (DESIGN.md §7)\n");
+    std::process::exit(bftrainer::bench::run_bench_target("fig5"));
 }

@@ -1,38 +1,12 @@
-//! Regenerates **Fig 6**: characteristics of the idle pool `N` over a
-//! week on the 1024-node Summit slice — daily % idle and event counts.
-
-use bftrainer::trace::{self, machines};
-use bftrainer::util::table::{f, Table};
+//! Shim for Fig 6 (weekly idle-node supply).
+//!
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig6_weekly_idle`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let params = machines::summit_1024();
-    let t = trace::generate(&params, 42);
-    println!(
-        "== Fig 6: idle nodes over one week ({} events, {} nodes) ==",
-        t.len(),
-        t.machine_nodes
-    );
-    let mut tab = Table::new(vec![
-        "day", "mean |N|", "% idle", "max |N|", "join events", "leave events",
-    ]);
-    let day = 24.0 * 3600.0;
-    for d in 0..7 {
-        let (t0, t1) = (d as f64 * day, (d + 1) as f64 * day);
-        let w = t.window(t0, t1);
-        let sizes = w.pool_sizes();
-        let mean = w.mean_pool_size();
-        let max = sizes.iter().map(|&(_, s)| s).max().unwrap_or(0);
-        let joins = w.events.iter().filter(|e| !e.joins.is_empty()).count();
-        let leaves = w.events.iter().filter(|e| !e.leaves.is_empty()).count();
-        tab.row(vec![
-            format!("{}", d + 1),
-            f(mean, 1),
-            format!("{:.1}%", 100.0 * mean / t.machine_nodes as f64),
-            max.to_string(),
-            joins.to_string(),
-            leaves.to_string(),
-        ]);
-    }
-    println!("{}", tab.render());
-    println!("paper anchor: ~9% of the slice idle on average, tens of events per hour");
+    std::process::exit(bftrainer::bench::run_bench_target("fig6"));
 }

@@ -1,79 +1,12 @@
-//! Regenerates **Fig 7a/7b** (preemption probability and rescaling cost
-//! vs forward-looking time), **Fig 8** (rescale investment/return, ROI)
-//! and **Fig 9** (HPO utilization efficiency vs T_fwd).
+//! Shim for Figs 7-9 (forward-looking time sensitivity).
 //!
-//! Scenario: §5.1 — ShuffleNet HPO trials on the Summit-1024 slice.
-//! Paper anchors: preemption-within-T_fwd reaches 90% at T_fwd >= 170 s;
-//! ROI decreases with T_fwd; U saturates near T_fwd = 120 s with the
-//! heuristic at ~75% and MILP ~80%+.
-
-use bftrainer::coordinator::Objective;
-use bftrainer::scaling::Dnn;
-use bftrainer::sim::{self, ReplayOpts};
-use bftrainer::trace::{self, machines};
-use bftrainer::util::table::{f, Table};
-use bftrainer::workload;
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig7_8_9_forward_looking`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut params = machines::summit_1024();
-    params.duration_s = 48.0 * 3600.0; // 2 days keeps the sweep < minutes
-    let trace = trace::generate(&params, 42);
-    // Oversized campaign: work never runs out (paper: 1000 trials/200 h).
-    let wl = workload::hpo_campaign(Dnn::ShuffleNet, 1000, 100.0);
-    let t_fwds = [10.0, 30.0, 60.0, 120.0, 170.0, 300.0, 600.0];
-
-    println!("== Fig 7a: preemption within forward-looking time ==");
-    let mut tab = Table::new(vec!["T_fwd (s)", "P(preempt within T_fwd)"]);
-    for &tf in &t_fwds {
-        tab.row(vec![f(tf, 0), format!("{:.0}%", 100.0 * sim::preemption_within_tfwd(&trace, tf))]);
-    }
-    println!("{}", tab.render());
-    println!("paper anchor: reaches 90% at T_fwd >= 170 s\n");
-
-    println!("== Fig 7b + Fig 8 + Fig 9: rescale cost, ROI and efficiency vs T_fwd ==");
-    let mut tab = Table::new(vec![
-        "T_fwd (s)",
-        "rescale cost/event (samples)",
-        "mean return/event",
-        "ROI",
-        "U (MILP)",
-        "U (heuristic)",
-    ]);
-    for &tf in &t_fwds {
-        let (res, u_milp) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            tf,
-            10,
-            1.0,
-            &trace,
-            &wl,
-            &ReplayOpts::default(),
-        );
-        let (_, u_heur) = sim::run_with_baseline(
-            "heuristic",
-            Objective::Throughput,
-            tf,
-            10,
-            1.0,
-            &trace,
-            &wl,
-            &ReplayOpts::default(),
-        );
-        let roi = res.roi();
-        tab.row(vec![
-            f(tf, 0),
-            format!("{:.2e}", roi.mean_investment),
-            format!("{:.2e}", roi.mean_return),
-            f(roi.roi, 1),
-            format!("{:.1}%", 100.0 * u_milp),
-            format!("{:.1}%", 100.0 * u_heur),
-        ]);
-    }
-    println!("{}", tab.render());
-    println!(
-        "paper anchors: cost grows with T_fwd (heuristic pays ~76x more than\n\
-         MILP at T_fwd = 10 s); ROI decreases with T_fwd; U saturates ~120 s\n\
-         with heuristic ~75%."
-    );
+    std::process::exit(bftrainer::bench::run_bench_target("fig7_8_9"));
 }

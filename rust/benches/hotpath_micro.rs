@@ -1,123 +1,12 @@
-//! Hot-path micro benchmarks (the §Perf instrumented paths):
-//! allocator solves, trace synthesis, full replay throughput, and — when
-//! artifacts are built — real AOT training-step latency at several
-//! simulated scales.
-
-use bftrainer::coordinator::{
-    AggregateMilpAllocator, Allocator, DpAllocator, EqualShareAllocator, Objective,
-};
-use bftrainer::mini::benchkit::{black_box, BenchRunner};
-use bftrainer::scaling::Dnn;
-use bftrainer::sim::{self, ReplayOpts};
-use bftrainer::trace::{self, machines};
-use bftrainer::util::rng::Rng;
-use bftrainer::workload::{self, random_alloc_request};
+//! Shim for hot-path micro benchmarks (plus deterministic solver/replay counters).
+//!
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench hotpath_micro`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut r = BenchRunner::new("hot-path micro benchmarks").with_samples(5).with_warmup_ms(50);
-    let mut rng = Rng::new(3);
-
-    // Allocator solves at the production operating point (10 jobs, 400 nodes).
-    let req = random_alloc_request(&mut rng, 10, 400);
-    r.bench("alloc/dp 10x400", || {
-        black_box(DpAllocator.allocate(&req));
-    });
-    r.bench("alloc/milp-aggregate 10x400", || {
-        black_box(AggregateMilpAllocator::default().allocate(&req));
-    });
-    r.bench("alloc/heuristic 10x400", || {
-        black_box(EqualShareAllocator.allocate(&req));
-    });
-    let big = random_alloc_request(&mut rng, 30, 800);
-    r.bench("alloc/dp 30x800", || {
-        black_box(DpAllocator.allocate(&big));
-    });
-
-    // Incremental resolve (DESIGN.md §7): one consecutive-event sequence
-    // solved cold each event vs by a stateful warm-started allocator.
-    let mut seq_rng = Rng::new(11);
-    let mut q = random_alloc_request(&mut seq_rng, 10, 400);
-    let mut seq = Vec::new();
-    for _ in 0..8 {
-        seq.push(q.clone());
-        let dp = DpAllocator.allocate(&q);
-        workload::advance_request(&mut seq_rng, &mut q, &dp.targets, 4);
-    }
-    r.bench("alloc/milp-aggregate cold event-seq 10x400 (8 events)", || {
-        for q in &seq {
-            black_box(AggregateMilpAllocator::cold().allocate(q));
-        }
-    });
-    r.bench("alloc/milp-aggregate warm event-seq 10x400 (8 events)", || {
-        let mut warm = AggregateMilpAllocator::incremental_only();
-        for q in &seq {
-            black_box(warm.allocate(q));
-        }
-    });
-    // Solver-effort counters for the same sequence (the Fig 5 metric):
-    // warm starts should pay visibly fewer simplex iterations than cold.
-    {
-        let cold_iters: usize = seq
-            .iter()
-            .map(|q| AggregateMilpAllocator::cold().allocate(q).stats.lp_iterations)
-            .sum();
-        let mut warm = AggregateMilpAllocator::incremental_only();
-        let warm_iters: usize = seq.iter().map(|q| warm.allocate(q).stats.lp_iterations).sum();
-        eprintln!(
-            "alloc/milp-aggregate event-seq LP iterations: cold={cold_iters} warm={warm_iters}"
-        );
-    }
-
-    // Trace synthesis (day of Summit-1024).
-    let mut day = machines::summit_1024();
-    day.duration_s = 24.0 * 3600.0;
-    r.bench("trace/synthesize summit-1024 day", || {
-        black_box(trace::generate(&day, 1));
-    });
-
-    // Full replay throughput: events/s on a day trace with 50 trainers.
-    let t = trace::generate(&day, 42);
-    let wl = workload::hpo_campaign(Dnn::ShuffleNet, 50, 100.0);
-    let n_events = t.len() as f64;
-    r.bench_items("replay/day 50 trainers (events)", n_events, || {
-        let (res, _) = sim::run_with_baseline(
-            "dp",
-            Objective::Throughput,
-            120.0,
-            10,
-            1.0,
-            &t,
-            &wl,
-            &ReplayOpts::default(),
-        );
-        black_box(res.metrics.n_events);
-    });
-
-    // Real AOT step latency (requires artifacts).
-    let dir = bftrainer::runtime::default_dir();
-    if dir.join("manifest.json").exists() {
-        let man = bftrainer::runtime::Manifest::load(&dir).unwrap();
-        let engine = bftrainer::runtime::Engine::cpu().unwrap();
-        for vname in ["tiny", "small"] {
-            if let Ok(v) = man.variant(vname) {
-                let mut exec = bftrainer::runtime::TrainerExec::new(&engine, v, 0.01, 5).unwrap();
-                let mut r2 = std::mem::replace(&mut r, BenchRunner::new("x"));
-                for n in [1u32, 4] {
-                    let samples_per_iter = (n as usize * v.batch) as f64;
-                    r2.bench_items(
-                        &format!("runtime/step {vname} n={n} (samples)"),
-                        samples_per_iter,
-                        || {
-                            black_box(exec.step(n).unwrap());
-                        },
-                    );
-                }
-                r = r2;
-            }
-        }
-    } else {
-        eprintln!("runtime benches skipped: run `make artifacts`");
-    }
-
-    r.finish();
+    std::process::exit(bftrainer::bench::run_bench_target("hotpath"));
 }

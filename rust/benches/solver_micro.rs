@@ -1,62 +1,12 @@
-//! LP-core microbench: the bounded-variable revised simplex on the
-//! aggregate allocation model, cold vs warm-started, with the solver
-//! effort counters (iterations, refactorizations) and the model shape it
-//! actually solves — demonstrating zero bound-derived constraint rows.
-
-use bftrainer::coordinator::milp_aggregate::build_model;
-use bftrainer::milp::{model_bounds, solve_lp, solve_lp_warm, LpStatus};
-use bftrainer::mini::benchkit::{black_box, BenchRunner};
-use bftrainer::util::rng::Rng;
-use bftrainer::util::table::Table;
-use bftrainer::workload::random_alloc_request;
+//! Shim for LP-core micro benchmarks (bounded-variable revised simplex).
+//!
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench solver_micro`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    let mut r = BenchRunner::new("LP core micro benchmarks").with_samples(7).with_warmup_ms(50);
-    let mut rng = Rng::new(21);
-
-    let mut tab = Table::new(vec![
-        "jobs", "nodes", "rows", "cols", "nnz", "bound rows", "iters", "refactors",
-    ]);
-    for &(jobs, nodes) in &[(5usize, 100u32), (10, 400), (30, 800)] {
-        let req = random_alloc_request(&mut rng, jobs, nodes);
-        let (model, _) = build_model(&req);
-        let bounds = model_bounds(&model);
-        let (m_rows, _, _) = model.dims();
-        let nnz = model.csc().nnz();
-
-        let cold = solve_lp(&model, &bounds);
-        assert_eq!(cold.status, LpStatus::Optimal, "{jobs}x{nodes} relaxation must solve");
-        // The whole point of the bounded-variable core: the solved row
-        // count never exceeds the structural constraint count.
-        assert!(cold.rows <= m_rows, "bound-derived rows crept in: {} > {m_rows}", cold.rows);
-        tab.row(vec![
-            jobs.to_string(),
-            nodes.to_string(),
-            cold.rows.to_string(),
-            cold.cols.to_string(),
-            nnz.to_string(),
-            (cold.rows.saturating_sub(m_rows)).to_string(),
-            cold.iterations.to_string(),
-            cold.refactorizations.to_string(),
-        ]);
-
-        let name = format!("lp/aggregate-relaxation cold {jobs}x{nodes}");
-        r.bench(&name, || {
-            black_box(solve_lp(&model, &bounds));
-        });
-        let name = format!("lp/aggregate-relaxation warm {jobs}x{nodes}");
-        let basis = cold.basis.clone();
-        r.bench(&name, || {
-            black_box(solve_lp_warm(&model, &bounds, Some(&basis)));
-        });
-        let warm = solve_lp_warm(&model, &bounds, Some(&cold.basis));
-        eprintln!(
-            "lp {jobs}x{nodes}: cold {} iters / {} refactors, warm {} iters",
-            cold.iterations, cold.refactorizations, warm.iterations
-        );
-    }
-    println!("== LP relaxation shape and effort (aggregate model) ==");
-    println!("{}", tab.render());
-
-    r.finish();
+    std::process::exit(bftrainer::bench::run_bench_target("solver"));
 }

@@ -1,68 +1,12 @@
-//! Regenerates **Tab 2**: DNN throughput vs node count.
+//! Shim for Tab 2 (DNN zoo scaling curves, plus the measured AOT table).
 //!
-//! Two parts: the paper's published Summit numbers (the curve zoo every
-//! experiment consumes), and — when artifacts are built — a *measured*
-//! weak-scaling table from this repo's own runtime: real steps of the
-//! AOT transformer at 1..8 simulated ranks.
-
-use bftrainer::scaling::zoo::{self, Dnn, TAB2_NODES};
-use bftrainer::util::table::{f, Table};
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench tab2_scaling_table`, `bftrainer bench` and CI all run the exact
+//! same code. Full-length by default; `BFT_BENCH_QUICK=1` (or a
+//! `--quick` arg) selects the CI preset. Exits nonzero when a paper
+//! anchor is violated.
 
 fn main() {
-    println!("== Tab 2 (paper, samples/s x1000, minibatch 32/GPU on Summit) ==");
-    let mut header = vec!["DNN".to_string()];
-    header.extend(TAB2_NODES.iter().map(|n| n.to_string()));
-    let mut tab = Table::new(header);
-    for d in Dnn::ALL {
-        let c = zoo::curve(d);
-        let mut row = vec![d.name().to_string()];
-        row.extend(TAB2_NODES.iter().map(|&n| f(c.throughput(n) / 1000.0, 1)));
-        tab.row(row);
-    }
-    println!("{}", tab.render());
-
-    // Measured counterpart on this repo's runtime.
-    let dir = bftrainer::runtime::default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("(measured table skipped: run `make artifacts` first)");
-        return;
-    }
-    let man = bftrainer::runtime::Manifest::load(&dir).expect("manifest");
-    let engine = bftrainer::runtime::Engine::cpu().expect("pjrt");
-    println!("== Tab 2 (measured on this runtime: real AOT steps, samples/s) ==");
-    let ranks = [1u32, 2, 4, 8];
-    let mut header = vec!["variant".to_string()];
-    header.extend(ranks.iter().map(|n| format!("{n} ranks")));
-    header.push("weak-scaling eff@8".to_string());
-    let mut tab = Table::new(header);
-    for vname in ["tiny", "small"] {
-        let Ok(variant) = man.variant(vname) else { continue };
-        let mut exec =
-            bftrainer::runtime::TrainerExec::new(&engine, variant, 0.01, 5).expect("exec");
-        let mut row = vec![vname.to_string()];
-        let mut rates = Vec::new();
-        for &n in &ranks {
-            // warmup + 3 timed steps
-            exec.step(n).unwrap();
-            let t0 = std::time::Instant::now();
-            let reps = 3;
-            for _ in 0..reps {
-                exec.step(n).unwrap();
-            }
-            let dt = t0.elapsed().as_secs_f64() / reps as f64;
-            let rate = (n as usize * variant.batch) as f64 / dt;
-            rates.push(rate);
-            row.push(f(rate, 1));
-        }
-        // CPU "ranks" share one socket, so this measures the all-reduce +
-        // step overhead curve rather than true multi-node scaling.
-        let eff = rates[3] / (8.0 * rates[0]);
-        row.push(format!("{:.0}%", 100.0 * eff));
-        tab.row(row);
-    }
-    println!("{}", tab.render());
-    println!(
-        "note: simulated ranks share one CPU socket; the measured table\n\
-         validates the elastic step machinery, not multi-node bandwidth."
-    );
+    std::process::exit(bftrainer::bench::run_bench_target("tab2"));
 }

@@ -1,0 +1,414 @@
+//! The deterministic figure pipeline (DESIGN.md §12): a registry of the
+//! paper's figures/tables, each producing stdout tables plus a
+//! machine-checkable [`FigureReport`], and the trajectory comparison that
+//! gates CI on metric regressions.
+//!
+//! Three consumers share this module:
+//!
+//! * `bftrainer bench` — runs any subset (`--all`, `--filter`, `--quick`),
+//!   writes `BENCH_<figure>.json` per figure plus an aggregated
+//!   `BENCH_summary.json`, and asserts every paper anchor;
+//! * `bftrainer bench --compare old.json new.json` — diffs two
+//!   trajectories and exits nonzero on regressions beyond each metric's
+//!   declared tolerance;
+//! * the 12 `rust/benches/*` targets — thin shims over
+//!   [`run_bench_target`], so `cargo bench` keeps working unchanged.
+//!
+//! Determinism contract: reports contain counter-based metrics only —
+//! fixed seeds, no wall-clock values — so two runs of the same figure at
+//! the same preset are byte-identical (`rust/tests/bench_json.rs` pins
+//! this).
+
+pub mod figures;
+
+use crate::mini::benchkit::{Better, FigureReport, Scenario};
+use crate::runtime::json::{self, Json};
+use crate::util::table::{f, Table};
+
+/// One registered figure: a stable name (also the `BENCH_<name>.json`
+/// stem), the paper artifact it reproduces, and the implementation.
+pub struct Figure {
+    pub name: &'static str,
+    pub title: &'static str,
+    pub run: fn(&mut crate::mini::benchkit::FigureCtx),
+}
+
+/// Every figure, in paper order.
+pub fn registry() -> Vec<Figure> {
+    vec![
+        Figure {
+            name: "fig1_tab1",
+            title: "Fig 1 + Tab 1: idle-fragment characterization",
+            run: figures::fig1_tab1,
+        },
+        Figure {
+            name: "tab2",
+            title: "Tab 2: DNN zoo scaling curves",
+            run: figures::tab2,
+        },
+        Figure {
+            name: "fig5",
+            title: "Fig 5: MILP solve effort vs jobs and nodes",
+            run: figures::fig5,
+        },
+        Figure {
+            name: "fig6",
+            title: "Fig 6: weekly idle-node supply",
+            run: figures::fig6,
+        },
+        Figure {
+            name: "fig7_8_9",
+            title: "Figs 7-9: forward-looking time sensitivity",
+            run: figures::fig7_8_9,
+        },
+        Figure {
+            name: "fig10_11",
+            title: "Figs 10-11: weekly efficiency and costs",
+            run: figures::fig10_11,
+        },
+        Figure {
+            name: "fig12_13",
+            title: "Figs 12-13: objective-metric contrast",
+            run: figures::fig12_13,
+        },
+        Figure {
+            name: "fig14_tab3_tab4",
+            title: "Fig 14 + Tabs 3-4: max parallel trainers",
+            run: figures::fig14_tab3_tab4,
+        },
+        Figure {
+            name: "fig15",
+            title: "Fig 15: HPO efficiency per DNN",
+            run: figures::fig15,
+        },
+        Figure {
+            name: "fig16",
+            title: "Fig 16: rescale-cost multipliers",
+            run: figures::fig16,
+        },
+        Figure {
+            name: "hotpath",
+            title: "hot-path micro benchmarks",
+            run: figures::hotpath,
+        },
+        Figure {
+            name: "solver",
+            title: "LP-core micro benchmarks",
+            run: figures::solver,
+        },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<Figure> {
+    registry().into_iter().find(|f| f.name == name)
+}
+
+/// Run one figure under a scenario and collect its report.
+pub fn run_figure(fig: &Figure, scenario: Scenario) -> FigureReport {
+    println!(
+        "\n===== {} — {} ({} preset) =====",
+        fig.name,
+        fig.title,
+        if scenario.quick { "quick" } else { "full" }
+    );
+    let mut ctx = crate::mini::benchkit::FigureCtx::new(scenario);
+    (fig.run)(&mut ctx);
+    ctx.into_report(fig.name, fig.title)
+}
+
+/// Render the anchor verdicts of several reports as one table.
+pub fn anchor_table(reports: &[FigureReport]) -> Table {
+    let mut t = Table::new(vec![
+        "figure", "anchor metric", "kind", "paper", "tol", "measured", "status",
+    ]);
+    for r in reports {
+        for a in &r.anchors {
+            t.row(vec![
+                r.name.clone(),
+                a.anchor.metric.clone(),
+                a.anchor.kind.as_str().to_string(),
+                f(a.anchor.paper, 4),
+                f(a.anchor.tol, 4),
+                f(a.measured, 4),
+                if a.pass { "ok".to_string() } else { "FAIL".to_string() },
+            ]);
+        }
+    }
+    t
+}
+
+/// Entry point shared by the `rust/benches/*` shims: run one figure
+/// full-length (or quick with `BFT_BENCH_QUICK=1` / a `--quick` arg),
+/// print its anchor verdicts, and fail the process on anchor violations.
+pub fn run_bench_target(name: &str) -> i32 {
+    let quick = std::env::var("BFT_BENCH_QUICK").is_ok_and(|v| v != "0")
+        || std::env::args().any(|a| a == "--quick");
+    let fig = by_name(name).unwrap_or_else(|| panic!("figure {name:?} not registered"));
+    let scenario = if quick { Scenario::quick() } else { Scenario::full() };
+    let report = run_figure(&fig, scenario);
+    if report.anchors.is_empty() {
+        return 0;
+    }
+    println!("\n== paper anchors ==\n{}", anchor_table(std::slice::from_ref(&report)).render());
+    if report.anchors_pass() {
+        0
+    } else {
+        eprintln!("{name}: paper anchor violated");
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trajectory comparison (`bench --compare old.json new.json`)
+// ---------------------------------------------------------------------------
+
+/// A metric parsed back from a `BENCH_*.json` trajectory.
+#[derive(Clone, Debug)]
+pub struct ParsedMetric {
+    pub name: String,
+    pub value: f64,
+    pub tol: f64,
+    pub better: Better,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParsedFigure {
+    pub name: String,
+    pub metrics: Vec<ParsedMetric>,
+}
+
+/// A parsed trajectory: either an aggregated summary or one per-figure
+/// file (treated as a single-figure summary).
+#[derive(Clone, Debug)]
+pub struct ParsedSummary {
+    pub quick: bool,
+    pub figures: Vec<ParsedFigure>,
+}
+
+/// Parse `BENCH_summary.json` (or a per-figure `BENCH_<name>.json`).
+pub fn parse_summary(text: &str) -> Result<ParsedSummary, String> {
+    let v = json::parse(text)?;
+    let quick = v.get("quick").and_then(Json::as_bool).ok_or("missing \"quick\" flag")?;
+    let raw_figs: Vec<&Json> = match v.get("figures").and_then(Json::as_arr) {
+        Some(arr) => arr.iter().collect(),
+        None if v.get("figure").is_some() => vec![&v],
+        None => return Err("neither \"figures\" nor \"figure\" present".into()),
+    };
+    let mut figures = Vec::with_capacity(raw_figs.len());
+    for fv in raw_figs {
+        let name = fv
+            .get("figure")
+            .and_then(Json::as_str)
+            .ok_or("figure entry missing \"figure\" name")?
+            .to_string();
+        let mut metrics = Vec::new();
+        for mv in fv.get("metrics").and_then(Json::as_arr).unwrap_or(&[]) {
+            let get_num = |k: &str| {
+                mv.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("{name}: metric missing {k:?}"))
+            };
+            metrics.push(ParsedMetric {
+                name: mv
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("{name}: metric missing \"name\""))?
+                    .to_string(),
+                value: get_num("value")?,
+                tol: get_num("tol")?,
+                better: mv
+                    .get("better")
+                    .and_then(Json::as_str)
+                    .and_then(Better::parse)
+                    .ok_or_else(|| format!("{name}: metric missing/invalid \"better\""))?,
+            });
+        }
+        figures.push(ParsedFigure { name, metrics });
+    }
+    Ok(ParsedSummary { quick, figures })
+}
+
+/// One matched metric in a comparison.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub figure: String,
+    pub metric: String,
+    pub old: f64,
+    pub new: f64,
+    pub tol: f64,
+    pub better: Better,
+    pub regressed: bool,
+}
+
+/// Outcome of comparing two trajectories.
+#[derive(Clone, Debug, Default)]
+pub struct CompareOutcome {
+    pub rows: Vec<DiffRow>,
+    /// `figure/metric` keys present in the old trajectory but gone from
+    /// the new one — a coverage regression.
+    pub missing: Vec<String>,
+    /// Keys only the new trajectory has (informational).
+    pub added: Vec<String>,
+}
+
+impl CompareOutcome {
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regressed).count() + self.missing.len()
+    }
+
+    pub fn exit_code(&self) -> i32 {
+        if self.regressions() > 0 {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+/// Diff two parsed trajectories. A metric regresses when it drifts
+/// beyond `max(old.tol, new.tol)` in its declared `better` direction;
+/// disappearing figures/metrics count as regressions, new ones do not.
+pub fn compare_summaries(old: &ParsedSummary, new: &ParsedSummary) -> CompareOutcome {
+    let mut out = CompareOutcome::default();
+    for of in &old.figures {
+        let Some(nf) = new.figures.iter().find(|nf| nf.name == of.name) else {
+            for m in &of.metrics {
+                out.missing.push(format!("{}/{}", of.name, m.name));
+            }
+            continue;
+        };
+        for om in &of.metrics {
+            match nf.metrics.iter().find(|nm| nm.name == om.name) {
+                Some(nm) => {
+                    let tol = om.tol.max(nm.tol);
+                    out.rows.push(DiffRow {
+                        figure: of.name.clone(),
+                        metric: om.name.clone(),
+                        old: om.value,
+                        new: nm.value,
+                        tol,
+                        better: nm.better,
+                        regressed: nm.better.regressed(om.value, nm.value, tol),
+                    });
+                }
+                None => out.missing.push(format!("{}/{}", of.name, om.name)),
+            }
+        }
+        for nm in &nf.metrics {
+            if !of.metrics.iter().any(|om| om.name == nm.name) {
+                out.added.push(format!("{}/{}", of.name, nm.name));
+            }
+        }
+    }
+    for nf in &new.figures {
+        if !old.figures.iter().any(|of| of.name == nf.name) {
+            for m in &nf.metrics {
+                out.added.push(format!("{}/{}", nf.name, m.name));
+            }
+        }
+    }
+    out
+}
+
+/// Render a comparison as a table (regressions and real drift first;
+/// unchanged metrics are summarized, not listed).
+pub fn compare_table(out: &CompareOutcome) -> Table {
+    let mut t =
+        Table::new(vec!["figure", "metric", "old", "new", "drift", "tol", "dir", "verdict"]);
+    for r in out.rows.iter().filter(|r| r.regressed || (r.new - r.old).abs() > r.tol * 0.5) {
+        t.row(vec![
+            r.figure.clone(),
+            r.metric.clone(),
+            f(r.old, 4),
+            f(r.new, 4),
+            format!("{:+.4}", r.new - r.old),
+            f(r.tol, 4),
+            r.better.as_str().to_string(),
+            if r.regressed { "REGRESSED".to_string() } else { "drift ok".to_string() },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(u: f64, iters: f64) -> ParsedSummary {
+        ParsedSummary {
+            quick: true,
+            figures: vec![ParsedFigure {
+                name: "figx".into(),
+                metrics: vec![
+                    ParsedMetric { name: "u".into(), value: u, tol: 0.1, better: Better::Higher },
+                    ParsedMetric {
+                        name: "iters".into(),
+                        value: iters,
+                        tol: 50.0,
+                        better: Better::Lower,
+                    },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn registry_names_unique_and_complete() {
+        let figs = registry();
+        assert_eq!(figs.len(), 12);
+        for (i, a) in figs.iter().enumerate() {
+            assert!(figs.iter().skip(i + 1).all(|b| b.name != a.name), "dup {}", a.name);
+            assert!(by_name(a.name).is_some());
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn compare_flags_regressions_only_beyond_tol() {
+        let base = summary(0.8, 100.0);
+        assert_eq!(compare_summaries(&base, &summary(0.75, 120.0)).regressions(), 0);
+        let worse = compare_summaries(&base, &summary(0.6, 100.0));
+        assert_eq!(worse.regressions(), 1);
+        assert_eq!(worse.exit_code(), 1);
+        // improvements never regress
+        assert_eq!(compare_summaries(&base, &summary(0.95, 10.0)).exit_code(), 0);
+        // lower-is-better metric rising beyond tol regresses
+        assert_eq!(compare_summaries(&base, &summary(0.8, 200.0)).regressions(), 1);
+    }
+
+    #[test]
+    fn compare_missing_metric_is_a_regression() {
+        let base = summary(0.8, 100.0);
+        let mut new = summary(0.8, 100.0);
+        new.figures[0].metrics.pop();
+        let out = compare_summaries(&base, &new);
+        assert_eq!(out.missing, vec!["figx/iters".to_string()]);
+        assert_eq!(out.exit_code(), 1);
+        // the reverse direction (metric added) is fine
+        let out = compare_summaries(&new, &base);
+        assert_eq!(out.exit_code(), 0);
+        assert_eq!(out.added, vec!["figx/iters".to_string()]);
+    }
+
+    #[test]
+    fn parse_summary_round_trip_and_single_figure() {
+        let report = {
+            use crate::mini::benchkit::{FigureCtx, Scenario};
+            let mut ctx = FigureCtx::new(Scenario::quick());
+            ctx.metric("u", 0.8, 0.1, Better::Higher);
+            ctx.into_report("figx", "t")
+        };
+        let summary_text = crate::mini::benchkit::summary_to_json(true, &[report.clone()]).pretty();
+        let parsed = parse_summary(&summary_text).unwrap();
+        assert!(parsed.quick);
+        assert_eq!(parsed.figures.len(), 1);
+        assert_eq!(parsed.figures[0].metrics[0].name, "u");
+        assert_eq!(parsed.figures[0].metrics[0].better, Better::Higher);
+        // a per-figure file parses as a single-figure summary
+        let single = parse_summary(&report.to_json().pretty()).unwrap();
+        assert_eq!(single.figures.len(), 1);
+        assert_eq!(single.figures[0].name, "figx");
+        assert!(parse_summary("{}").is_err());
+        assert!(parse_summary("not json").is_err());
+    }
+}

@@ -73,6 +73,9 @@ pub struct EventRecord {
     /// Simplex iterations spent on this event's solve (0 for non-LP
     /// allocators).
     pub lp_iterations: usize,
+    /// Basis refactorizations spent on this event's solve (0 for non-LP
+    /// allocators).
+    pub lp_refactorizations: usize,
 }
 
 /// The coordinator: owns the idle-node pool, the trainer queue, the
@@ -322,6 +325,7 @@ impl Coordinator {
             warm_started: plan.stats.warm_started,
             pool_size: self.pool.len(),
             lp_iterations: plan.stats.lp_iterations,
+            lp_refactorizations: plan.stats.lp_refactorizations,
         });
     }
 }

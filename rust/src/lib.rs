@@ -12,6 +12,7 @@
 //!
 //! Layering (see DESIGN.md §2):
 //! * **L3 (this crate)** — coordinator: idle-node pool, event handling,
+//!   the deterministic figure pipeline ([`bench`], DESIGN.md §12),
 //!   a from-scratch MILP solver with warm-start incremental resolve
 //!   ([`milp`], DESIGN.md §7), the paper's per-node and aggregate
 //!   formulations plus an exact DP fast path behind one `Allocator`
@@ -24,6 +25,7 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the hot spots,
 //!   lowered into the same HLO.
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod milp;

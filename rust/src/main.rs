@@ -12,6 +12,10 @@
 //!                     scenario next to the synthetic presets
 //! * `milp-bench`    — MILP solve-time scaling (Fig 5)
 //! * `scaling-table` — the Tab 2 model zoo
+//! * `bench`         — the deterministic figure pipeline: run any subset
+//!                     of the registered figures, write `BENCH_*.json`,
+//!                     assert paper anchors; `--compare` diffs two
+//!                     trajectories and gates on regressions
 //! * `train`         — live mode: real AOT Trainers on a replayed trace
 //!
 //! Run `bftrainer <cmd> --help` for per-command options.
@@ -37,6 +41,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("milp-bench") => cmd_milp_bench(&args[1..]),
         Some("scaling-table") => cmd_scaling_table(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -63,6 +68,7 @@ fn print_usage() {
          sweep          parallel multi-scenario sweep (trace × policy × objective)\n  \
          milp-bench     MILP solve-time scaling (Fig 5)\n  \
          scaling-table  print the Tab 2 DNN zoo\n  \
+         bench          deterministic figure pipeline (BENCH_*.json, anchors, --compare)\n  \
          train          live mode — real AOT-compiled Trainers (needs `make artifacts`)"
     );
 }
@@ -585,6 +591,134 @@ fn cmd_scaling_table(args: &[String]) -> i32 {
     }
     println!("{}", tab.render());
     0
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    use bftrainer::bench;
+    use bftrainer::mini::benchkit::{summary_to_json, Scenario};
+    let cmd = Command::new("bench", "deterministic figure pipeline (DESIGN.md §12)")
+        .flag("all", "run every registered figure")
+        .opt("filter", "", "substring filter on figure names")
+        .flag("quick", "CI-sized presets (short traces, small grids; same seeds)")
+        .opt("out-dir", ".", "directory for the BENCH_*.json artifacts")
+        .flag("list", "list the registered figures and exit")
+        .flag("compare", "compare two trajectories: bench --compare old.json new.json")
+        .positional("files", "with --compare: the old and new BENCH_summary.json");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+
+    if m.flag("compare") {
+        let [old_path, new_path] = m.positionals.as_slice() else {
+            eprintln!("--compare needs exactly two files: old.json new.json");
+            return 2;
+        };
+        let read = |p: &String| {
+            std::fs::read_to_string(p)
+                .map_err(|e| format!("reading {p}: {e}"))
+                .and_then(|text| bench::parse_summary(&text).map_err(|e| format!("{p}: {e}")))
+        };
+        let (old, new) = match (read(old_path), read(new_path)) {
+            (Ok(o), Ok(n)) => (o, n),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        if old.quick != new.quick {
+            eprintln!(
+                "cannot compare a {} trajectory against a {} one",
+                if old.quick { "quick" } else { "full" },
+                if new.quick { "quick" } else { "full" }
+            );
+            return 2;
+        }
+        let out = bench::compare_summaries(&old, &new);
+        let tab = bench::compare_table(&out);
+        if tab.n_rows() > 0 {
+            println!("{}", tab.render());
+        }
+        for key in &out.missing {
+            println!("MISSING: {key} (present in {old_path}, absent in {new_path})");
+        }
+        for key in &out.added {
+            println!("new metric: {key}");
+        }
+        println!(
+            "compared {} metrics: {} regression(s), {} missing, {} added",
+            out.rows.len(),
+            out.rows.iter().filter(|r| r.regressed).count(),
+            out.missing.len(),
+            out.added.len()
+        );
+        return out.exit_code();
+    }
+
+    let registry = bench::registry();
+    if m.flag("list") {
+        let mut tab = Table::new(vec!["figure", "reproduces"]);
+        for fig in &registry {
+            tab.row(vec![fig.name.to_string(), fig.title.to_string()]);
+        }
+        println!("{}", tab.render());
+        return 0;
+    }
+    let filter = m.get_str("filter").unwrap();
+    let selected: Vec<_> = if !filter.is_empty() {
+        registry.into_iter().filter(|f| f.name.contains(&filter)).collect()
+    } else if m.flag("all") {
+        registry
+    } else {
+        eprintln!("nothing selected: pass --all, --filter <substr>, or --list");
+        return 2;
+    };
+    if selected.is_empty() {
+        eprintln!("no figure matches filter {filter:?}");
+        return 2;
+    }
+
+    let quick = m.flag("quick");
+    let scenario = if quick { Scenario::quick() } else { Scenario::full() };
+    let out_dir = std::path::PathBuf::from(m.get_str("out-dir").unwrap());
+    if let Err(e) = std::fs::create_dir_all(&out_dir) {
+        eprintln!("creating {}: {e}", out_dir.display());
+        return 1;
+    }
+    let mut reports = Vec::with_capacity(selected.len());
+    for fig in &selected {
+        let report = bench::run_figure(fig, scenario);
+        let path = out_dir.join(format!("BENCH_{}.json", report.name));
+        if let Err(e) = std::fs::write(&path, report.to_json().pretty()) {
+            eprintln!("writing {}: {e}", path.display());
+            return 1;
+        }
+        reports.push(report);
+    }
+    let summary_path = out_dir.join("BENCH_summary.json");
+    if let Err(e) = std::fs::write(&summary_path, summary_to_json(quick, &reports).pretty()) {
+        eprintln!("writing {}: {e}", summary_path.display());
+        return 1;
+    }
+
+    println!("\n== paper anchors ({} figure(s)) ==", reports.len());
+    println!("{}", bench::anchor_table(&reports).render());
+    let failed: Vec<&str> = reports
+        .iter()
+        .filter(|r| !r.anchors_pass())
+        .map(|r| r.name.as_str())
+        .collect();
+    let n_metrics: usize = reports.iter().map(|r| r.metrics.len()).sum();
+    println!(
+        "wrote {} + {} per-figure file(s): {} metrics, {} anchors",
+        summary_path.display(),
+        reports.len(),
+        n_metrics,
+        reports.iter().map(|r| r.anchors.len()).sum::<usize>()
+    );
+    if failed.is_empty() {
+        0
+    } else {
+        eprintln!("paper anchors violated in: {}", failed.join(", "));
+        1
+    }
 }
 
 fn cmd_train(args: &[String]) -> i32 {

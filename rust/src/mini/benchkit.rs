@@ -1,15 +1,329 @@
-//! Criterion-style micro-benchmark harness (the vendor set has no criterion).
+//! Criterion-style micro-benchmark harness (the vendor set has no
+//! criterion) plus the deterministic figure harness the paper pipeline is
+//! built on (DESIGN.md §12).
 //!
-//! Each bench target is a `harness = false` binary that builds a
-//! [`BenchRunner`], registers closures, and calls [`BenchRunner::finish`].
-//! Per benchmark we run a warmup phase, then collect `samples` timed
-//! iterations and report mean / p50 / p95 / min plus optional throughput.
+//! Two layers:
 //!
-//! `cargo bench -- <filter>` filters by substring, matching criterion's CLI.
+//! * [`BenchRunner`] — wall-clock micro benchmarks. Each bench target is
+//!   a `harness = false` binary that registers closures and calls
+//!   [`BenchRunner::finish`]; per benchmark we run a warmup phase, then
+//!   collect `samples` timed iterations and report mean / p50 / p95 / min
+//!   plus optional throughput. `cargo bench -- <filter>` filters by
+//!   substring, matching criterion's CLI.
+//! * [`FigureCtx`] / [`FigureReport`] — the structured-record side.
+//!   A figure (registered in `crate::bench`) renders its tables to
+//!   stdout and emits counter-based [`Metric`]s with per-metric
+//!   regression tolerances, plus paper [`Anchor`] assertions. Reports
+//!   serialize to `BENCH_*.json` through [`crate::runtime::json`];
+//!   determinism is the contract — no wall-clock value ever enters a
+//!   report (timings stay on stdout), so two runs of one figure produce
+//!   byte-identical JSON.
 
+use crate::runtime::json::Json;
+use crate::trace::{self, SynthParams, Trace};
 use crate::util::stats;
 use crate::util::table::Table;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+/// Direction in which a gated metric may drift without being a
+/// regression when two trajectories are compared.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    /// Larger is better (efficiency, utilization): regression when the
+    /// new value falls more than `tol` below the old.
+    Higher,
+    /// Smaller is better (iterations, costs): regression when the new
+    /// value rises more than `tol` above the old.
+    Lower,
+    /// The value is a structural invariant: any drift beyond `tol`
+    /// (either direction) is a regression.
+    Equal,
+}
+
+impl Better {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Better::Higher => "higher",
+            Better::Lower => "lower",
+            Better::Equal => "equal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Better> {
+        match s {
+            "higher" => Some(Better::Higher),
+            "lower" => Some(Better::Lower),
+            "equal" => Some(Better::Equal),
+            _ => None,
+        }
+    }
+
+    /// Is `new` a regression relative to `old` under tolerance `tol`?
+    pub fn regressed(self, old: f64, new: f64, tol: f64) -> bool {
+        match self {
+            Better::Higher => new < old - tol,
+            Better::Lower => new > old + tol,
+            Better::Equal => (new - old).abs() > tol,
+        }
+    }
+}
+
+/// One deterministic (counter-based) metric emitted by a figure. `tol`
+/// is the absolute drift `bench --compare` allows before flagging a
+/// regression in the `better` direction.
+#[derive(Clone, Debug)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub tol: f64,
+    pub better: Better,
+}
+
+/// How a paper anchor constrains the measured metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnchorKind {
+    /// `|measured − paper| ≤ tol`.
+    Near,
+    /// `measured ≥ paper − tol` (one-sided claims like "all DNNs ≥ 75%").
+    AtLeast,
+    /// `measured ≤ paper + tol`.
+    AtMost,
+}
+
+impl AnchorKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AnchorKind::Near => "near",
+            AnchorKind::AtLeast => "at-least",
+            AnchorKind::AtMost => "at-most",
+        }
+    }
+}
+
+/// A declared paper anchor: the named metric must land within `tol` of
+/// the paper's `value` in the `kind` direction. Tolerances are regime
+/// gates, deliberately wide (see DESIGN.md §12.2): they catch the
+/// reproduction leaving the paper's qualitative regime, while the
+/// baseline comparison catches finer drift.
+#[derive(Clone, Debug)]
+pub struct Anchor {
+    pub metric: String,
+    pub kind: AnchorKind,
+    pub paper: f64,
+    pub tol: f64,
+}
+
+/// An anchor resolved against the metric actually measured this run.
+#[derive(Clone, Debug)]
+pub struct AnchorResult {
+    pub anchor: Anchor,
+    pub measured: f64,
+    pub pass: bool,
+}
+
+/// Scenario preset shared by every figure: full-length (the paper's
+/// windows) or quick (CI-sized), plus the one trace seed used
+/// everywhere. This is the single place the per-figure quick-mode /
+/// seed boilerplate lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Scenario {
+    pub const DEFAULT_SEED: u64 = 42;
+
+    pub fn full() -> Scenario {
+        Scenario { quick: false, seed: Scenario::DEFAULT_SEED }
+    }
+
+    pub fn quick() -> Scenario {
+        Scenario { quick: true, seed: Scenario::DEFAULT_SEED }
+    }
+
+    /// Pick the full- or quick-mode value.
+    pub fn pick<T>(&self, full: T, quick: T) -> T {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+
+    /// Machine preset with its duration overridden per mode (hours).
+    pub fn machine_hours(&self, mut p: SynthParams, full_h: f64, quick_h: f64) -> SynthParams {
+        p.duration_s = 3600.0 * self.pick(full_h, quick_h);
+        p
+    }
+
+    /// Synthesize the scenario trace for a preset at the scenario seed.
+    pub fn trace(&self, params: &SynthParams) -> Trace {
+        trace::generate(params, self.seed)
+    }
+
+    /// Timed-sample count for embedded [`BenchRunner`]s.
+    pub fn samples(&self) -> usize {
+        self.pick(7, 3)
+    }
+
+    /// Warmup budget for embedded [`BenchRunner`]s.
+    pub fn warmup_ms(&self) -> u64 {
+        self.pick(100, 20)
+    }
+}
+
+/// Collector handed to each figure: tables/timings go straight to
+/// stdout, metrics and anchors accumulate for the JSON report.
+pub struct FigureCtx {
+    scenario: Scenario,
+    metrics: Vec<Metric>,
+    anchors: Vec<Anchor>,
+}
+
+impl FigureCtx {
+    pub fn new(scenario: Scenario) -> FigureCtx {
+        FigureCtx { scenario, metrics: Vec::new(), anchors: Vec::new() }
+    }
+
+    pub fn sc(&self) -> Scenario {
+        self.scenario
+    }
+
+    /// Emit one gated metric. Names must be unique within a figure.
+    pub fn metric(&mut self, name: &str, value: f64, tol: f64, better: Better) {
+        assert!(
+            self.metrics.iter().all(|m| m.name != name),
+            "duplicate metric {name:?} in one figure"
+        );
+        assert!(value.is_finite(), "metric {name:?} must be finite, got {value}");
+        self.metrics.push(Metric { name: name.into(), value, tol, better });
+    }
+
+    /// Declare `|metric − paper| ≤ tol`.
+    pub fn anchor_near(&mut self, metric: &str, paper: f64, tol: f64) {
+        self.anchors.push(Anchor { metric: metric.into(), kind: AnchorKind::Near, paper, tol });
+    }
+
+    /// Declare `metric ≥ paper − slack`.
+    pub fn anchor_at_least(&mut self, metric: &str, paper: f64, slack: f64) {
+        self.anchors.push(Anchor {
+            metric: metric.into(),
+            kind: AnchorKind::AtLeast,
+            paper,
+            tol: slack,
+        });
+    }
+
+    /// Declare `metric ≤ paper + slack`.
+    pub fn anchor_at_most(&mut self, metric: &str, paper: f64, slack: f64) {
+        self.anchors.push(Anchor {
+            metric: metric.into(),
+            kind: AnchorKind::AtMost,
+            paper,
+            tol: slack,
+        });
+    }
+
+    /// Resolve anchors against the emitted metrics and close the report.
+    pub fn into_report(self, name: &str, title: &str) -> FigureReport {
+        let anchors = self
+            .anchors
+            .into_iter()
+            .map(|a| {
+                let measured =
+                    self.metrics.iter().find(|m| m.name == a.metric).map(|m| m.value);
+                let pass = match (measured, a.kind) {
+                    (None, _) => false,
+                    (Some(v), AnchorKind::Near) => (v - a.paper).abs() <= a.tol,
+                    (Some(v), AnchorKind::AtLeast) => v >= a.paper - a.tol,
+                    (Some(v), AnchorKind::AtMost) => v <= a.paper + a.tol,
+                };
+                AnchorResult { measured: measured.unwrap_or(f64::NAN), pass, anchor: a }
+            })
+            .collect();
+        FigureReport {
+            name: name.into(),
+            title: title.into(),
+            quick: self.scenario.quick,
+            metrics: self.metrics,
+            anchors,
+        }
+    }
+}
+
+/// Everything one figure run produced for the machine-readable side.
+#[derive(Clone, Debug)]
+pub struct FigureReport {
+    pub name: String,
+    pub title: String,
+    pub quick: bool,
+    pub metrics: Vec<Metric>,
+    pub anchors: Vec<AnchorResult>,
+}
+
+impl FigureReport {
+    pub fn anchors_pass(&self) -> bool {
+        self.anchors.iter().all(|a| a.pass)
+    }
+
+    /// The figure as a JSON object (the per-figure `BENCH_<name>.json`).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("schema".into(), Json::Num(SCHEMA_VERSION as f64));
+        o.insert("figure".into(), Json::Str(self.name.clone()));
+        o.insert("title".into(), Json::Str(self.title.clone()));
+        o.insert("quick".into(), Json::Bool(self.quick));
+        o.insert(
+            "metrics".into(),
+            Json::Arr(
+                self.metrics
+                    .iter()
+                    .map(|m| {
+                        let mut mm = BTreeMap::new();
+                        mm.insert("name".into(), Json::Str(m.name.clone()));
+                        mm.insert("value".into(), Json::Num(m.value));
+                        mm.insert("tol".into(), Json::Num(m.tol));
+                        mm.insert("better".into(), Json::Str(m.better.as_str().into()));
+                        Json::Obj(mm)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "anchors".into(),
+            Json::Arr(
+                self.anchors
+                    .iter()
+                    .map(|a| {
+                        let mut am = BTreeMap::new();
+                        am.insert("metric".into(), Json::Str(a.anchor.metric.clone()));
+                        am.insert("kind".into(), Json::Str(a.anchor.kind.as_str().into()));
+                        am.insert("paper".into(), Json::Num(a.anchor.paper));
+                        am.insert("tol".into(), Json::Num(a.anchor.tol));
+                        am.insert("measured".into(), Json::Num(a.measured));
+                        am.insert("pass".into(), Json::Bool(a.pass));
+                        Json::Obj(am)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Schema version stamped into every report.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Aggregate several figure reports into the `BENCH_summary.json` value.
+pub fn summary_to_json(quick: bool, reports: &[FigureReport]) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("schema".into(), Json::Num(SCHEMA_VERSION as f64));
+    o.insert("quick".into(), Json::Bool(quick));
+    o.insert("figures".into(), Json::Arr(reports.iter().map(FigureReport::to_json).collect()));
+    Json::Obj(o)
+}
 
 /// One benchmark's collected result.
 #[derive(Clone, Debug)]
@@ -46,6 +360,19 @@ impl BenchRunner {
             warmup: Duration::from_millis(200),
             samples: 20,
             filter,
+            results: Vec::new(),
+        }
+    }
+
+    /// Runner for embedding inside another driver (`bftrainer bench`,
+    /// the figure registry): ignores the process CLI entirely — no
+    /// substring filter — and sizes itself from the scenario.
+    pub fn embedded(title: &str, scenario: &Scenario) -> Self {
+        BenchRunner {
+            title: title.to_string(),
+            warmup: Duration::from_millis(scenario.warmup_ms()),
+            samples: scenario.samples(),
+            filter: None,
             results: Vec::new(),
         }
     }
@@ -214,5 +541,83 @@ mod tests {
         r.record("one_shot", vec![1.5, 1.6], Some(10.0));
         assert_eq!(r.results().len(), 1);
         assert!((r.results()[0].mean_s() - 1.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scenario_pick_and_machine_hours() {
+        let q = Scenario::quick();
+        let f = Scenario::full();
+        assert_eq!(q.pick(168.0, 24.0), 24.0);
+        assert_eq!(f.pick(168.0, 24.0), 168.0);
+        let p = q.machine_hours(crate::trace::machines::summit_1024(), 168.0, 24.0);
+        assert_eq!(p.duration_s, 24.0 * 3600.0);
+        assert!(q.samples() < f.samples());
+    }
+
+    #[test]
+    fn anchors_resolve_against_metrics() {
+        let mut ctx = FigureCtx::new(Scenario::quick());
+        ctx.metric("u", 0.8, 0.1, Better::Higher);
+        ctx.metric("iters", 120.0, 50.0, Better::Lower);
+        ctx.anchor_at_least("u", 0.75, 0.1); // 0.8 >= 0.65
+        ctx.anchor_near("u", 0.9, 0.05); // |0.8-0.9| > 0.05
+        ctx.anchor_at_most("iters", 100.0, 30.0); // 120 <= 130
+        ctx.anchor_near("missing", 1.0, 1.0); // no such metric
+        let r = ctx.into_report("t", "title");
+        assert_eq!(r.anchors.len(), 4);
+        assert!(r.anchors[0].pass);
+        assert!(!r.anchors[1].pass);
+        assert!(r.anchors[2].pass);
+        assert!(!r.anchors[3].pass && r.anchors[3].measured.is_nan());
+        assert!(!r.anchors_pass());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_metric_panics() {
+        let mut ctx = FigureCtx::new(Scenario::quick());
+        ctx.metric("x", 1.0, 0.0, Better::Equal);
+        ctx.metric("x", 2.0, 0.0, Better::Equal);
+    }
+
+    #[test]
+    fn better_regression_directions() {
+        assert!(Better::Higher.regressed(0.8, 0.6, 0.1));
+        assert!(!Better::Higher.regressed(0.8, 0.75, 0.1));
+        assert!(!Better::Higher.regressed(0.8, 2.0, 0.1)); // improvements pass
+        assert!(Better::Lower.regressed(100.0, 160.0, 50.0));
+        assert!(!Better::Lower.regressed(100.0, 10.0, 50.0));
+        assert!(Better::Equal.regressed(5.0, 4.0, 0.5));
+        assert!(Better::Equal.regressed(5.0, 6.0, 0.5));
+        assert!(!Better::Equal.regressed(5.0, 5.2, 0.5));
+        assert_eq!(Better::parse("higher"), Some(Better::Higher));
+        assert_eq!(Better::parse("bogus"), None);
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_parses() {
+        let build = || {
+            let mut ctx = FigureCtx::new(Scenario::quick());
+            ctx.metric("a", 0.125, 0.01, Better::Equal);
+            ctx.metric("b", 3.0, 1.0, Better::Lower);
+            ctx.anchor_near("a", 0.125, 0.05);
+            ctx.into_report("figx", "demo figure")
+        };
+        let j1 = build().to_json().pretty();
+        let j2 = build().to_json().pretty();
+        assert_eq!(j1, j2, "figure reports must be byte-identical");
+        let parsed = crate::runtime::json::parse(&j1).unwrap();
+        assert_eq!(parsed.get("figure").and_then(|v| v.as_str()), Some("figx"));
+        assert_eq!(parsed.get("quick").and_then(|v| v.as_bool()), Some(true));
+        let ms = parsed.get("metrics").unwrap().as_arr().unwrap();
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[0].get("better").and_then(|v| v.as_str()), Some("equal"));
+        let anchors = parsed.get("anchors").unwrap().as_arr().unwrap();
+        assert_eq!(anchors[0].get("pass").and_then(|v| v.as_bool()), Some(true));
+        // summary wraps figures and stamps the mode
+        let summary = summary_to_json(true, &[build()]).pretty();
+        let sp = crate::runtime::json::parse(&summary).unwrap();
+        assert_eq!(sp.get("figures").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(sp.get("quick").and_then(|v| v.as_bool()), Some(true));
     }
 }

@@ -1,8 +1,12 @@
-//! Minimal JSON parser (no serde in the vendor set) — reads the artifact
-//! manifest written by `python/compile/aot.py`.
+//! Minimal JSON parser and serializer (no serde in the vendor set) —
+//! reads the artifact manifest written by `python/compile/aot.py` and
+//! writes the `BENCH_*.json` figure trajectories.
 //!
 //! Supports the full JSON value grammar (objects, arrays, strings with
 //! escapes, numbers, booleans, null). Not streaming; fine for manifests.
+//! Serialization is deterministic: object keys are stored in a `BTreeMap`
+//! (sorted), and numbers use Rust's shortest-roundtrip `f64` display —
+//! the byte-identical-output contract the bench pipeline relies on.
 
 use std::collections::BTreeMap;
 
@@ -56,6 +60,92 @@ impl Json {
             _ => None,
         }
     }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Serialize with 2-space indentation and a trailing newline.
+    /// Deterministic: sorted keys, shortest-roundtrip numbers. Non-finite
+    /// numbers (which JSON cannot represent) serialize as `null`.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    push_indent(out, indent + 1);
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    push_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse a JSON document.
@@ -285,5 +375,29 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn pretty_round_trips() {
+        let v = parse(r#"{"b": [1, 2.5, {"x": "q\"t"}], "a": null, "c": true, "d": {}}"#).unwrap();
+        let text = v.pretty();
+        assert_eq!(parse(&text).unwrap(), v);
+        // keys come out sorted (BTreeMap), so serialization is canonical
+        assert!(text.find("\"a\"").unwrap() < text.find("\"b\"").unwrap());
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn pretty_is_deterministic() {
+        let v = parse(r#"{"m": [0.1, 3, 1e30], "s": "héllo"}"#).unwrap();
+        assert_eq!(v.pretty(), v.pretty());
+        // shortest-roundtrip float display: 0.1 stays "0.1"
+        assert!(v.pretty().contains("0.1"));
+    }
+
+    #[test]
+    fn pretty_nonfinite_is_null() {
+        assert_eq!(Json::Num(f64::NAN).pretty(), "null\n");
+        assert_eq!(Json::Num(f64::INFINITY).pretty(), "null\n");
     }
 }

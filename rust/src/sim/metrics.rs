@@ -54,6 +54,11 @@ pub struct ReplayMetrics {
     /// Total simplex iterations across every event's solve (0 for non-LP
     /// policies) — the solver-effort metric the Fig 5 benches track.
     pub lp_iterations: u64,
+    /// Total basis refactorizations across every event's solve — together
+    /// with `lp_iterations` the deterministic solver-effort pair the
+    /// figure pipeline gates on (wall-clock solve times are recorded but
+    /// never compared).
+    pub lp_refactorizations: u64,
 }
 
 /// Per-window efficiency series (Fig 10): (window start, U).

@@ -14,36 +14,103 @@ pub use sweep::{comparison_table, outcomes_json, run_sweep, SweepCase, SweepOutc
 use crate::coordinator::{allocator_by_name, Coordinator, Objective};
 use crate::trace::Trace;
 
-/// Convenience wrapper used by the benches: replay `wl` on `trace` with a
-/// fresh coordinator, then compute the §4.1.2 baseline `A_s` on the
-/// equivalent static machine and return (result, U).
-#[allow(clippy::too_many_arguments)] // bench-facing flat parameter list
-pub fn run_with_baseline(
-    policy: &str,
-    objective: Objective,
-    t_fwd: f64,
-    pj_max: usize,
-    rescale_multiplier: f64,
-    trace: &Trace,
-    wl: &Workload,
-    opts: &ReplayOpts,
-) -> (ReplayResult, f64) {
-    let mut coord = Coordinator::new(
-        allocator_by_name(policy).expect("policy"),
-        objective.clone(),
-        t_fwd,
-        pj_max,
-    );
-    coord.rescale_cost_multiplier = rescale_multiplier;
-    let res = replay(coord, trace, wl, opts);
-    let baseline_coord =
-        Coordinator::new(allocator_by_name(policy).expect("policy"), objective, t_fwd, pj_max);
-    let a_s = static_baseline_outcome(
-        baseline_coord,
-        res.metrics.eq_nodes.round().max(1.0) as u32,
-        res.metrics.duration_s,
-        wl,
-    );
-    let u = if a_s > 0.0 { res.metrics.samples_processed / a_s } else { 0.0 };
-    (res, u)
+/// Options for one replay-plus-baseline evaluation: replay a workload on
+/// a trace with a fresh coordinator, then compute the §4.1.2 baseline
+/// `A_s` on the equivalent static machine and report `U = A_e / A_s`.
+///
+/// Construct with struct-update syntax over [`BaselineRun::default`]
+/// (policy `dp`, throughput objective, `T_fwd` 120 s, `Pj_max` 10, paper
+/// rescale costs):
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries don't inherit the xla rpath flags)
+/// use bftrainer::sim::BaselineRun;
+/// let eval = BaselineRun { t_fwd: 300.0, ..BaselineRun::default() };
+/// assert_eq!(eval.policy, "dp");
+/// ```
+#[derive(Clone, Debug)]
+pub struct BaselineRun {
+    /// Allocator name for [`allocator_by_name`].
+    pub policy: String,
+    pub objective: Objective,
+    /// Forward-looking horizon T_fwd (seconds).
+    pub t_fwd: f64,
+    /// Max parallel trainers (Pj_max).
+    pub pj_max: usize,
+    /// Global rescale-cost multiplier (1.0 = paper costs).
+    pub rescale_multiplier: f64,
+    pub opts: ReplayOpts,
+}
+
+impl Default for BaselineRun {
+    fn default() -> Self {
+        BaselineRun {
+            policy: "dp".into(),
+            objective: Objective::Throughput,
+            t_fwd: 120.0,
+            pj_max: 10,
+            rescale_multiplier: 1.0,
+            opts: ReplayOpts::default(),
+        }
+    }
+}
+
+impl BaselineRun {
+    fn coordinator(&self) -> Coordinator {
+        let mut c = Coordinator::new(
+            allocator_by_name(&self.policy).expect("caller validated the policy name"),
+            self.objective.clone(),
+            self.t_fwd,
+            self.pj_max,
+        );
+        c.rescale_cost_multiplier = self.rescale_multiplier;
+        c
+    }
+
+    /// Replay `wl` on `trace`, then the static baseline; returns
+    /// `(result, U)`.
+    pub fn run(&self, trace: &Trace, wl: &Workload) -> (ReplayResult, f64) {
+        let res = replay(self.coordinator(), trace, wl, &self.opts);
+        let a_s = static_baseline_outcome(
+            self.coordinator(),
+            res.metrics.eq_nodes.round().max(1.0) as u32,
+            res.metrics.duration_s,
+            wl,
+        );
+        let u = if a_s > 0.0 { res.metrics.samples_processed / a_s } else { 0.0 };
+        (res, u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TrainerSpec;
+    use crate::scaling::ScalingCurve;
+    use crate::trace::PoolEvent;
+
+    #[test]
+    fn baseline_run_defaults_and_runs() {
+        let mut t = Trace::new(8);
+        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        t.push(PoolEvent { t: 2000.0, joins: vec![], leaves: (0..4).collect() });
+        let wl = Workload::all_at_zero(vec![TrainerSpec {
+            name: "t".into(),
+            n_min: 1,
+            n_max: 4,
+            r_up: 20.0,
+            r_dw: 5.0,
+            curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0)]),
+            total_samples: 1e9,
+        }]);
+        let eval = BaselineRun::default();
+        assert_eq!(eval.policy, "dp");
+        let (res, u) = eval.run(&t, &wl);
+        assert!(res.metrics.samples_processed > 0.0);
+        assert!(u > 0.0 && u <= 1.05, "U = {u}");
+        // same inputs, same outputs: the evaluation is deterministic
+        let (res2, u2) = eval.run(&t, &wl);
+        assert_eq!(res.metrics.samples_processed, res2.metrics.samples_processed);
+        assert_eq!(u, u2);
+    }
 }

@@ -215,6 +215,11 @@ pub fn replay(
         fallbacks: coord.event_log.iter().filter(|e| e.fell_back).count(),
         n_events: coord.event_log.len(),
         lp_iterations: coord.event_log.iter().map(|e| e.lp_iterations as u64).sum(),
+        lp_refactorizations: coord
+            .event_log
+            .iter()
+            .map(|e| e.lp_refactorizations as u64)
+            .sum(),
     };
     ReplayResult {
         metrics,

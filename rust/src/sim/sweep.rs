@@ -56,6 +56,8 @@ pub struct SweepOutcome {
     /// Total simplex iterations across the replay's solves (0 for non-LP
     /// policies).
     pub lp_iterations: u64,
+    /// Total basis refactorizations across the replay's solves.
+    pub lp_refactorizations: u64,
     /// §3.6 fallbacks taken.
     pub fallbacks: usize,
     /// Solves that warm-started from the previous event.
@@ -134,6 +136,7 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
         mean_solve_ms: 1e3 * m.mean_solve_s,
         max_solve_ms: 1e3 * m.max_solve_s,
         lp_iterations: m.lp_iterations,
+        lp_refactorizations: m.lp_refactorizations,
         fallbacks: m.fallbacks,
         warm_started: res.coordinator.event_log.iter().filter(|e| e.warm_started).count(),
         preemptions: m.preemptions,
@@ -147,7 +150,7 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
 pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
     let mut tab = Table::new(vec![
         "scenario", "policy", "objective", "events", "A_e", "U", "solve ms (mean/max)",
-        "LP iters", "warm", "fallbacks", "preempt", "done", "wall s",
+        "LP iters/refac", "warm", "fallbacks", "preempt", "done", "wall s",
     ]);
     for o in outcomes {
         let best = outcomes
@@ -162,7 +165,7 @@ pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
             format!("{:.3e}", o.samples),
             format!("{:.1}%", 100.0 * o.utilization),
             format!("{}/{}", f(o.mean_solve_ms, 2), f(o.max_solve_ms, 2)),
-            o.lp_iterations.to_string(),
+            format!("{}/{}", o.lp_iterations, o.lp_refactorizations),
             o.warm_started.to_string(),
             o.fallbacks.to_string(),
             o.preemptions.to_string(),
@@ -208,6 +211,7 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
                 "  {{\"scenario\": \"{}\", \"policy\": \"{}\", \"objective\": \"{}\", ",
                 "\"events\": {}, \"samples\": {}, \"baseline\": {}, \"utilization\": {}, ",
                 "\"mean_solve_ms\": {}, \"max_solve_ms\": {}, \"lp_iterations\": {}, ",
+                "\"lp_refactorizations\": {}, ",
                 "\"warm_started\": {}, \"fallbacks\": {}, \"preemptions\": {}, ",
                 "\"completed\": {}, \"wall_s\": {}}}"
             ),
@@ -221,6 +225,7 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
             num(o.mean_solve_ms),
             num(o.max_solve_ms),
             o.lp_iterations,
+            o.lp_refactorizations,
             o.warm_started,
             o.fallbacks,
             o.preemptions,
@@ -351,6 +356,10 @@ mod tests {
             assert_eq!(
                 v.get("lp_iterations").and_then(|j| j.as_usize()),
                 Some(o.lp_iterations as usize)
+            );
+            assert_eq!(
+                v.get("lp_refactorizations").and_then(|j| j.as_usize()),
+                Some(o.lp_refactorizations as usize)
             );
         }
         assert!(outcomes_json(&[]).contains("[\n]"), "empty array still valid");

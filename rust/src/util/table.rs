@@ -62,7 +62,7 @@ impl Table {
         };
         out.push_str(&fmt_row(&self.header, &widths));
         out.push('\n');
-        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncol.saturating_sub(1);
         out.push_str(&"-".repeat(total));
         out.push('\n');
         for row in &self.rows {
@@ -117,6 +117,12 @@ mod tests {
         assert!(lines[0].starts_with("name"));
         assert!(lines[2].starts_with('a'));
         assert!(lines[3].starts_with("longer  22"));
+    }
+
+    #[test]
+    fn empty_header_renders_without_underflow() {
+        let t = Table::new(Vec::<String>::new());
+        assert!(t.render().ends_with('\n'));
     }
 
     #[test]

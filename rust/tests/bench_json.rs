@@ -1,0 +1,137 @@
+//! The figure pipeline's machine-readable contract (DESIGN.md §12):
+//! schema round-trip of `BENCH_summary.json` through `runtime::json`,
+//! byte-identical determinism of a quick figure run, and the
+//! regression/no-regression exit codes of `bench --compare` — both the
+//! library comparison and the real CLI.
+
+use bftrainer::bench::{self, compare_summaries, parse_summary};
+use bftrainer::mini::benchkit::{summary_to_json, Better, FigureCtx, FigureReport, Scenario};
+use bftrainer::runtime::json;
+use std::path::PathBuf;
+use std::process::Command;
+
+/// Build a summary with one figure and a single higher-is-better metric.
+fn one_metric_summary(quick: bool, value: f64) -> String {
+    let mut ctx = FigureCtx::new(if quick { Scenario::quick() } else { Scenario::full() });
+    ctx.metric("u_milp", value, 0.05, Better::Higher);
+    ctx.anchor_at_least("u_milp", 0.5, 0.3);
+    let report = ctx.into_report("figx", "synthetic figure");
+    summary_to_json(quick, &[report]).pretty()
+}
+
+fn run_quick_figure(name: &str) -> FigureReport {
+    let fig = bench::by_name(name).expect("registered");
+    bench::run_figure(&fig, Scenario::quick())
+}
+
+#[test]
+fn quick_figure_runs_are_byte_identical() {
+    // tab2 is pure table math — the cheapest full figure; two runs must
+    // serialize to the same bytes (the determinism contract).
+    let a = run_quick_figure("tab2").to_json().pretty();
+    let b = run_quick_figure("tab2").to_json().pretty();
+    assert_eq!(a, b, "two quick runs of one figure must be byte-identical");
+    assert!(!a.is_empty());
+}
+
+#[test]
+fn summary_schema_round_trips_through_runtime_json() {
+    let report = run_quick_figure("tab2");
+    assert!(report.anchors_pass(), "tab2 anchors are zoo constants and must hold");
+    let text = summary_to_json(true, &[report.clone()]).pretty();
+    let v = json::parse(&text).expect("valid JSON");
+    assert_eq!(v.get("schema").and_then(|j| j.as_usize()), Some(1));
+    assert_eq!(v.get("quick").and_then(|j| j.as_bool()), Some(true));
+    let figs = v.get("figures").unwrap().as_arr().unwrap();
+    assert_eq!(figs.len(), 1);
+    let fig = &figs[0];
+    assert_eq!(fig.get("figure").and_then(|j| j.as_str()), Some("tab2"));
+    let metrics = fig.get("metrics").unwrap().as_arr().unwrap();
+    assert_eq!(metrics.len(), report.metrics.len());
+    for (mv, m) in metrics.iter().zip(&report.metrics) {
+        assert_eq!(mv.get("name").and_then(|j| j.as_str()), Some(m.name.as_str()));
+        let value = mv.get("value").and_then(|j| j.as_f64()).unwrap();
+        assert!((value - m.value).abs() < 1e-12);
+        assert_eq!(mv.get("better").and_then(|j| j.as_str()), Some(m.better.as_str()));
+        assert!(mv.get("tol").and_then(|j| j.as_f64()).is_some());
+    }
+    let anchors = fig.get("anchors").unwrap().as_arr().unwrap();
+    assert_eq!(anchors.len(), report.anchors.len());
+    for av in anchors {
+        assert_eq!(av.get("pass").and_then(|j| j.as_bool()), Some(true));
+        assert!(av.get("measured").and_then(|j| j.as_f64()).is_some());
+    }
+    // and back through the comparison-side parser
+    let parsed = parse_summary(&text).unwrap();
+    assert!(parsed.quick);
+    assert_eq!(parsed.figures[0].metrics.len(), report.metrics.len());
+}
+
+#[test]
+fn library_compare_regression_and_exit_codes() {
+    let base = parse_summary(&one_metric_summary(true, 0.80)).unwrap();
+    // within tolerance: no regression
+    let ok = compare_summaries(&base, &parse_summary(&one_metric_summary(true, 0.78)).unwrap());
+    assert_eq!(ok.regressions(), 0);
+    assert_eq!(ok.exit_code(), 0);
+    // beyond tolerance in the bad direction: regression, exit 1
+    let bad = compare_summaries(&base, &parse_summary(&one_metric_summary(true, 0.60)).unwrap());
+    assert_eq!(bad.regressions(), 1);
+    assert_eq!(bad.exit_code(), 1);
+    // improvements never regress
+    let up = compare_summaries(&base, &parse_summary(&one_metric_summary(true, 0.99)).unwrap());
+    assert_eq!(up.exit_code(), 0);
+}
+
+fn tmp_file(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bftrainer_bench_{}_{tag}.json", std::process::id()))
+}
+
+#[test]
+fn cli_compare_exit_codes() {
+    let old = tmp_file("old");
+    let new_ok = tmp_file("new_ok");
+    let new_bad = tmp_file("new_bad");
+    let new_full = tmp_file("new_full");
+    std::fs::write(&old, one_metric_summary(true, 0.80)).unwrap();
+    std::fs::write(&new_ok, one_metric_summary(true, 0.79)).unwrap();
+    std::fs::write(&new_bad, one_metric_summary(true, 0.50)).unwrap();
+    std::fs::write(&new_full, one_metric_summary(false, 0.80)).unwrap();
+
+    let run = |a: &PathBuf, b: &PathBuf| {
+        Command::new(env!("CARGO_BIN_EXE_bftrainer"))
+            .args(["bench", "--compare"])
+            .arg(a)
+            .arg(b)
+            .output()
+            .expect("spawn bftrainer")
+    };
+    let ok = run(&old, &new_ok);
+    assert_eq!(ok.status.code(), Some(0), "stdout: {}", String::from_utf8_lossy(&ok.stdout));
+    let bad = run(&old, &new_bad);
+    assert_eq!(bad.status.code(), Some(1), "stdout: {}", String::from_utf8_lossy(&bad.stdout));
+    assert!(String::from_utf8_lossy(&bad.stdout).contains("REGRESSED"));
+    // quick vs full trajectories must refuse to compare
+    let mixed = run(&old, &new_full);
+    assert_eq!(mixed.status.code(), Some(2));
+    // unreadable file is a usage error, not a crash
+    let missing = tmp_file("does_not_exist");
+    let err = run(&old, &missing);
+    assert_eq!(err.status.code(), Some(2));
+
+    for p in [old, new_ok, new_bad, new_full] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn registry_covers_all_twelve_figures() {
+    let names: Vec<&str> = bench::registry().iter().map(|f| f.name).collect();
+    assert_eq!(names.len(), 12);
+    for expect in [
+        "fig1_tab1", "tab2", "fig5", "fig6", "fig7_8_9", "fig10_11", "fig12_13",
+        "fig14_tab3_tab4", "fig15", "fig16", "hotpath", "solver",
+    ] {
+        assert!(names.contains(&expect), "missing figure {expect}");
+    }
+}
