@@ -16,11 +16,16 @@ use bftrainer::trace::{PoolEvent, Trace};
 fn main() {
     // 1. An idle-node trace: nodes come and go without warning.
     let mut trace = Trace::new(64);
-    trace.push(PoolEvent { t: 0.0, joins: (0..16).collect(), leaves: vec![] });
-    trace.push(PoolEvent { t: 600.0, joins: (16..40).collect(), leaves: vec![] });
-    trace.push(PoolEvent { t: 1800.0, joins: vec![], leaves: (0..8).collect() });
-    trace.push(PoolEvent { t: 3000.0, joins: (40..56).collect(), leaves: (8..12).collect() });
-    trace.push(PoolEvent { t: 7200.0, joins: vec![], leaves: vec![12] });
+    trace.push(PoolEvent { t: 0.0, joins: (0..16).collect(), ..Default::default() });
+    trace.push(PoolEvent { t: 600.0, joins: (16..40).collect(), ..Default::default() });
+    trace.push(PoolEvent { t: 1800.0, leaves: (0..8).collect(), ..Default::default() });
+    trace.push(PoolEvent {
+        t: 3000.0,
+        joins: (40..56).collect(),
+        leaves: (8..12).collect(),
+        ..Default::default()
+    });
+    trace.push(PoolEvent { t: 7200.0, joins: vec![], leaves: vec![12], ..Default::default() });
 
     // 2. Trainers: malleable jobs with min/max scale, rescale costs and a
     //    scalability curve (here: two Tab 2 models + a custom curve).

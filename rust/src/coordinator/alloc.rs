@@ -2,14 +2,135 @@
 //! the equal-share heuristic.
 //!
 //! Every allocator answers the same question at every event (paper §3):
-//! given the admitted Trainers (with current scales `C_j`), the pool size
-//! `|N|` and the forward-looking horizon `T_fwd`, choose target scales
-//! `n_j ∈ {0} ∪ [N_min_j, N_max_j]` with `Σ n_j ≤ |N|` maximizing
-//! `Σ_j T_fwd·O_j(n_j) − Σ_j O_j(C_j)·R_j(n_j)`  (Eqn 16).
+//! given the admitted Trainers (with current scales `C_j`), the idle pool
+//! described as a remaining-**lifetime profile** and the forward-looking
+//! horizon `T_fwd`, choose target scales `n_j ∈ {0} ∪ [N_min_j, N_max_j]`
+//! with `Σ n_j ≤ |N|` maximizing the lifetime-capped Eqn 16
+//! (DESIGN.md §13):
+//!
+//! ```text
+//!   Σ_j Σ_{k=1..n_j} (O_j(n_j)/n_j)·min(T_fwd, life_k) − Σ_j O_j(C_j)·R_j(n_j)
+//! ```
+//!
+//! where `life_k` walks the pool's lifetime classes longest-first — the
+//! same order [`super::Pool::apply_allocation`] places nodes. When every
+//! node outlives `T_fwd` (or nothing is known about lifetimes, the
+//! [`LifetimeProfile::flat`] / Blind case) this reduces exactly to the
+//! paper's `Σ_j T_fwd·O_j(n_j) − Σ_j O_j(C_j)·R_j(n_j)` (Eqn 16).
 
 use super::trainer::TrainerId;
 use std::collections::BTreeMap;
 use std::time::Duration;
+
+/// Remaining-lifetime profile of the idle pool at one event: node counts
+/// aggregated into lifetime classes, sorted by strictly descending
+/// remaining life. `f64::INFINITY` marks nodes with no scheduled reclaim
+/// — either genuinely outliving the window or the Blind knowledge mode.
+/// Nodes within a class are interchangeable, which is what keeps the
+/// DESIGN.md §6.2 count-aggregation argument intact: the objective reads
+/// only `(n_j, C_j)` and this shared profile, never node identities.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LifetimeProfile {
+    /// `(conservative remaining life in seconds, node count)` per class,
+    /// descending by life.
+    pub classes: Vec<(f64, u32)>,
+}
+
+impl LifetimeProfile {
+    /// Single-class profile with unknown (infinite) lifetimes — the
+    /// pre-lifetime contract's bare `pool_size`, and what a Blind trace
+    /// produces.
+    pub fn flat(pool_size: u32) -> LifetimeProfile {
+        let classes = if pool_size == 0 { vec![] } else { vec![(f64::INFINITY, pool_size)] };
+        LifetimeProfile { classes }
+    }
+
+    /// Bucket raw per-node remaining lives into classes relative to
+    /// `t_fwd`. Everything at or above `t_fwd` is equivalent under the
+    /// `min(t_fwd, life)` cap and lands in one top class (kept at
+    /// INFINITY so an all-long profile is identical to [`Self::flat`]);
+    /// below, halving edges at `t_fwd/2`, `t_fwd/4`, `t_fwd/8` keep the
+    /// profile small and deterministic. Each class is valued at its lower
+    /// edge — a conservative (≤ 2×) understatement of sub-horizon life.
+    pub fn from_lives(lives: impl IntoIterator<Item = f64>, t_fwd: f64) -> LifetimeProfile {
+        let edges = [t_fwd, t_fwd / 2.0, t_fwd / 4.0, t_fwd / 8.0, 0.0];
+        let mut counts = [0u32; 5];
+        for life in lives {
+            let c = edges.iter().position(|&e| life >= e).unwrap_or(edges.len() - 1);
+            counts[c] += 1;
+        }
+        let classes = edges
+            .iter()
+            .zip(counts)
+            .filter(|&(_, c)| c > 0)
+            .map(|(&e, c)| (if e >= t_fwd { f64::INFINITY } else { e }, c))
+            .collect();
+        LifetimeProfile { classes }
+    }
+
+    /// |N| — total node count across classes.
+    pub fn size(&self) -> u32 {
+        self.classes.iter().map(|&(_, c)| c).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.size() == 0
+    }
+
+    /// True when every node's remaining life is unknown or beyond the
+    /// horizon — the single-class INFINITY profile where the
+    /// `min(t_fwd, life)` cap never binds (every Blind pool, and informed
+    /// pools whose holes all outlive `t_fwd`).
+    pub fn is_flat(&self) -> bool {
+        self.classes.len() <= 1
+            && self.classes.first().is_none_or(|&(life, _)| life == f64::INFINITY)
+    }
+
+    /// `Σ_{k=1..n} min(t_fwd, life_k)` over the `n` longest-lived nodes
+    /// (longest-first, matching [`super::Pool::apply_allocation`]
+    /// placement). A query past the pool size pads with `t_fwd` — such
+    /// scales are unreachable under the capacity constraint, but SOS2
+    /// breakpoints beyond the pool still need a defined value and the
+    /// uncapped pad keeps the flat profile exactly Eqn 16.
+    pub fn capped_node_seconds(&self, n: u32, t_fwd: f64) -> f64 {
+        let mut left = n;
+        let mut acc = 0.0;
+        for &(life, count) in &self.classes {
+            if left == 0 {
+                break;
+            }
+            let take = left.min(count);
+            acc += take as f64 * life.min(t_fwd);
+            left -= take;
+        }
+        acc + left as f64 * t_fwd
+    }
+
+    /// Random profile for property tests and benches: half the time flat
+    /// (blind), otherwise per-node lives drawn around `t_fwd` with a 30%
+    /// chance of unknown. The single shared generator, so every suite
+    /// (allocator equivalence, warm-start churn, the Fig 5 event
+    /// sequences) stresses the same class structure.
+    pub fn random(
+        rng: &mut crate::util::rng::Rng,
+        pool_size: u32,
+        t_fwd: f64,
+    ) -> LifetimeProfile {
+        if rng.chance(0.5) {
+            return LifetimeProfile::flat(pool_size);
+        }
+        let lives: Vec<f64> = (0..pool_size)
+            .map(|_| {
+                if rng.chance(0.3) {
+                    f64::INFINITY
+                } else {
+                    rng.range_f64(0.0, 2.0 * t_fwd)
+                }
+            })
+            .collect();
+        LifetimeProfile::from_lives(lives, t_fwd)
+    }
+}
 
 /// One trainer's view for the allocator.
 #[derive(Clone, Debug)]
@@ -59,9 +180,42 @@ impl AllocJob {
         }
     }
 
-    /// Net objective contribution of running at scale n for t_fwd seconds.
-    pub fn value(&self, n: u32, t_fwd: f64) -> f64 {
-        t_fwd * self.gain(n) - self.rescale_cost(n)
+    /// Net objective contribution of running at scale `n` against this
+    /// event's pool: per-node gain over the class-capped horizon
+    /// `min(t_fwd, remaining_life)` minus the rescale cost (Eqn 16′,
+    /// DESIGN.md §13). The gain-seconds term interpolates
+    /// `V_i = s_i · H(b_i)/b_i` piecewise-linearly through the
+    /// breakpoints — exactly what the SOS2 encoding computes, so the DP,
+    /// both MILPs and [`AllocRequest::objective_of`] agree to the bit.
+    /// `H(b) = Σ_{k≤b} min(t_fwd, life_k)`. Flat (blind) profiles take
+    /// the literal pre-lifetime arithmetic `t_fwd·gain(n) − cost` — not
+    /// just algebraically but **bit-identically** to the pre-refactor
+    /// Eqn-16 path, so blind allocations cannot drift by a ULP-level
+    /// reordering of the same math.
+    pub fn value(&self, n: u32, pool: &LifetimeProfile, t_fwd: f64) -> f64 {
+        if pool.is_flat() {
+            return t_fwd * self.gain(n) - self.rescale_cost(n);
+        }
+        if n == 0 {
+            return -self.rescale_cost(0);
+        }
+        let v_at = |b: u32, s: f64| s * pool.capped_node_seconds(b, t_fwd) / b as f64;
+        let pts = &self.points;
+        assert!(!pts.is_empty());
+        let nf = n as f64;
+        let mut prev = (0.0f64, 0.0f64); // (breakpoint, V)
+        for &(b, s) in pts {
+            let cur = (b as f64, v_at(b, s));
+            if nf <= cur.0 {
+                let span = cur.0 - prev.0;
+                let f = if span > 0.0 { (nf - prev.0) / span } else { 1.0 };
+                return (1.0 - f) * prev.1 + f * cur.1 - self.rescale_cost(n);
+            }
+            prev = cur;
+        }
+        // n beyond the last breakpoint cannot happen for admissible
+        // scales (n ≤ n_max = last breakpoint); clamp defensively.
+        prev.1 - self.rescale_cost(n)
     }
 
     /// Is scale n admissible for this job?
@@ -74,18 +228,41 @@ impl AllocJob {
 #[derive(Clone, Debug)]
 pub struct AllocRequest {
     pub jobs: Vec<AllocJob>,
-    /// |N| — idle pool size.
-    pub pool_size: u32,
+    /// The idle pool as a remaining-lifetime profile (replaces the old
+    /// bare `pool_size: u32`; `pool.size()` is |N|).
+    pub pool: LifetimeProfile,
     /// T_fwd — forward-looking horizon (seconds).
     pub t_fwd: f64,
 }
 
 impl AllocRequest {
-    /// Total Eqn-16 objective of a target map.
+    /// A request over a lifetime-blind pool of `pool_size` nodes — the
+    /// pre-lifetime contract, byte-equivalent to the old behavior.
+    pub fn flat(jobs: Vec<AllocJob>, pool_size: u32, t_fwd: f64) -> AllocRequest {
+        AllocRequest { jobs, pool: LifetimeProfile::flat(pool_size), t_fwd }
+    }
+
+    /// |N| — idle pool size.
+    pub fn pool_size(&self) -> u32 {
+        self.pool.size()
+    }
+
+    /// Gain-seconds available to the `n` longest-lived nodes:
+    /// `Σ_{k=1..n} min(t_fwd, life_k)` ([`LifetimeProfile::capped_node_seconds`]).
+    pub fn horizon_seconds(&self, n: u32) -> f64 {
+        self.pool.capped_node_seconds(n, self.t_fwd)
+    }
+
+    /// Eqn-16′ value of one job at scale `n` ([`AllocJob::value`]).
+    pub fn value_of(&self, job: &AllocJob, n: u32) -> f64 {
+        job.value(n, &self.pool, self.t_fwd)
+    }
+
+    /// Total Eqn-16′ objective of a target map.
     pub fn objective_of(&self, targets: &BTreeMap<TrainerId, u32>) -> f64 {
         self.jobs
             .iter()
-            .map(|j| j.value(targets.get(&j.id).copied().unwrap_or(0), self.t_fwd))
+            .map(|j| self.value_of(j, targets.get(&j.id).copied().unwrap_or(0)))
             .sum()
     }
 
@@ -107,8 +284,8 @@ impl AllocRequest {
                 return Err(format!("target for unknown job {id}"));
             }
         }
-        if total > self.pool_size {
-            return Err(format!("total {total} exceeds pool {}", self.pool_size));
+        if total > self.pool_size() {
+            return Err(format!("total {total} exceeds pool {}", self.pool_size()));
         }
         Ok(())
     }
@@ -128,7 +305,7 @@ impl AllocRequest {
     /// input), the map is left as-is for [`Self::check`] to reject.
     pub fn shed_to_capacity(&self, targets: &mut BTreeMap<TrainerId, u32>) {
         let mut total: u32 = targets.values().sum();
-        while total > self.pool_size {
+        while total > self.pool_size() {
             let (id, n) = match targets.iter().max_by_key(|&(_, &n)| n) {
                 Some((&id, &n)) if n > 0 => (id, n),
                 _ => return,
@@ -246,7 +423,9 @@ pub(crate) mod testutil {
         // Ensure current scales fit the pool: pool at least sum of currents.
         let cur_sum: u32 = jobs.iter().map(|j| j.current).sum();
         let pool_size = cur_sum + rng.range_u64(0, max_pool as u64) as u32;
-        AllocRequest { jobs, pool_size, t_fwd: rng.range_f64(5.0, 300.0) }
+        let t_fwd = rng.range_f64(5.0, 300.0);
+        let pool = LifetimeProfile::random(rng, pool_size, t_fwd);
+        AllocRequest { jobs, pool, t_fwd }
     }
 }
 
@@ -276,7 +455,7 @@ mod tests {
 
     #[test]
     fn check_catches_violations() {
-        let req = AllocRequest { jobs: vec![job(0, 0, 2, 4)], pool_size: 3, t_fwd: 60.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 2, 4)], 3, 60.0);
         let ok: BTreeMap<_, _> = [(0, 3u32)].into_iter().collect();
         assert!(req.check(&ok).is_ok());
         let below_min: BTreeMap<_, _> = [(0, 1u32)].into_iter().collect();
@@ -289,11 +468,7 @@ mod tests {
 
     #[test]
     fn shed_to_capacity_prefers_largest_and_respects_minimums() {
-        let req = AllocRequest {
-            jobs: vec![job(0, 0, 1, 8), job(1, 0, 3, 8)],
-            pool_size: 5,
-            t_fwd: 60.0,
-        };
+        let req = AllocRequest::flat(vec![job(0, 0, 1, 8), job(1, 0, 3, 8)], 5, 60.0);
         // 5 + 3 = 8 over a pool of 5: shed from the largest first. The
         // result fits the pool but may undershoot it when a job at its
         // minimum has to drop all the way to 0.
@@ -315,13 +490,74 @@ mod tests {
 
     #[test]
     fn objective_sums_values() {
-        let req = AllocRequest {
-            jobs: vec![job(0, 2, 1, 8), job(1, 0, 1, 8)],
-            pool_size: 10,
-            t_fwd: 100.0,
-        };
+        let req = AllocRequest::flat(vec![job(0, 2, 1, 8), job(1, 0, 1, 8)], 10, 100.0);
         let t: BTreeMap<_, _> = [(0, 2u32), (1, 4u32)].into_iter().collect();
-        let expect = req.jobs[0].value(2, 100.0) + req.jobs[1].value(4, 100.0);
+        let expect = req.value_of(&req.jobs[0], 2) + req.value_of(&req.jobs[1], 4);
         assert!((req.objective_of(&t) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_value_reduces_to_eqn16() {
+        // On a flat (blind) profile the lifetime-capped value is exactly
+        // the paper's t_fwd·gain(n) − rescale_cost(n) at every breakpoint
+        // and in between (gain is piecewise linear through breakpoints).
+        let req = AllocRequest::flat(vec![job(0, 4, 1, 8)], 16, 120.0);
+        let j = &req.jobs[0];
+        for n in 1..=8u32 {
+            let expect = 120.0 * j.gain(n) - j.rescale_cost(n);
+            let got = req.value_of(j, n);
+            let tol = 1e-9 * expect.abs().max(1.0);
+            assert!((got - expect).abs() < tol, "n={n}: {got} vs {expect}");
+        }
+        assert!((req.value_of(j, 0) - (-j.rescale_cost(0))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn short_lived_nodes_are_worth_less() {
+        // A profile where every node dies well inside t_fwd must value
+        // any positive scale strictly below the flat profile.
+        let jobs = vec![job(0, 0, 1, 8)];
+        let flat = AllocRequest::flat(jobs.clone(), 8, 600.0);
+        let short = AllocRequest {
+            jobs,
+            pool: LifetimeProfile::from_lives([100.0; 8], 600.0),
+            t_fwd: 600.0,
+        };
+        for n in 1..=8u32 {
+            let vf = flat.value_of(&flat.jobs[0], n);
+            let vs = short.value_of(&short.jobs[0], n);
+            assert!(vs < vf, "n={n}: short-lived {vs} not below flat {vf}");
+        }
+        // And the deficit grows with n: marginal short-lived nodes never
+        // look better than marginal long-lived ones.
+        assert!(
+            flat.value_of(&flat.jobs[0], 8) - short.value_of(&short.jobs[0], 8)
+                >= flat.value_of(&flat.jobs[0], 1) - short.value_of(&short.jobs[0], 1)
+        );
+    }
+
+    #[test]
+    fn profile_bucketing_is_conservative_and_counts_sum() {
+        let t_fwd = 400.0;
+        let lives = vec![f64::INFINITY, 900.0, 400.0, 399.0, 250.0, 180.0, 90.0, 10.0, 0.0];
+        let p = LifetimeProfile::from_lives(lives.clone(), t_fwd);
+        assert_eq!(p.size() as usize, lives.len());
+        // classes strictly descending, each valued at or below the lives
+        // it holds (conservative lower edge)
+        for w in p.classes.windows(2) {
+            assert!(w[0].0 > w[1].0);
+        }
+        // >= t_fwd lives land in the INFINITY class: 3 of them
+        assert_eq!(p.classes[0], (f64::INFINITY, 3));
+        // capped node-seconds: monotone in n, capped by n·t_fwd
+        let mut prev = 0.0;
+        for n in 1..=p.size() {
+            let h = p.capped_node_seconds(n, t_fwd);
+            assert!(h >= prev && h <= n as f64 * t_fwd + 1e-9);
+            prev = h;
+        }
+        // beyond the pool: pads at full t_fwd per node
+        let h9 = p.capped_node_seconds(p.size(), t_fwd);
+        assert!((p.capped_node_seconds(p.size() + 2, t_fwd) - (h9 + 2.0 * t_fwd)).abs() < 1e-9);
     }
 }

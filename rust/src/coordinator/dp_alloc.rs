@@ -1,16 +1,18 @@
 //! Exact dynamic-programming allocator — the performance fast path.
 //!
-//! Because nodes are interchangeable and migration is forbidden, the
-//! MILP's optimum depends only on the *counts* `n_j` (DESIGN.md §6.2):
-//! the problem is a multiple-choice knapsack
+//! Because nodes are interchangeable within a lifetime class and
+//! migration is forbidden, the MILP's optimum depends only on the
+//! *counts* `n_j` and the shared pool profile (DESIGN.md §6.2, §13): the
+//! problem is a multiple-choice knapsack
 //!
 //! ```text
 //!   max Σ_j v_j(n_j)   s.t.  Σ_j n_j ≤ |N|,  n_j ∈ {0} ∪ [min_j, max_j]
 //! ```
 //!
-//! with `v_j(n) = T_fwd·O_j(n) − O_j(C_j)·R_j(n)` (Eqn 16). DP over jobs ×
-//! pool capacity solves it exactly in `O(J · |N| · range)`. Property tests
-//! in `rust/tests/` verify it matches both MILP formulations.
+//! with `v_j(n)` the lifetime-capped Eqn 16′ value
+//! ([`AllocRequest::value_of`]). DP over jobs × pool capacity solves it
+//! exactly in `O(J · |N| · range)`. Property tests in `rust/tests/`
+//! verify it matches both MILP formulations.
 
 use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
 use std::collections::BTreeMap;
@@ -27,7 +29,7 @@ impl Allocator for DpAllocator {
 
     fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
         let t0 = Instant::now();
-        let cap = req.pool_size as usize;
+        let cap = req.pool_size() as usize;
         let nj = req.jobs.len();
         const NEG: f64 = f64::NEG_INFINITY;
 
@@ -38,11 +40,11 @@ impl Allocator for DpAllocator {
         for (ji, job) in req.jobs.iter().enumerate() {
             let mut next = vec![NEG; cap + 1];
             // Precompute v(n) for admissible n.
-            let v0 = job.value(0, req.t_fwd);
+            let v0 = req.value_of(job, 0);
             let lo = job.n_min as usize;
             let hi = (job.n_max as usize).min(cap);
             let vals: Vec<f64> = if hi >= lo {
-                (lo..=hi).map(|n| job.value(n as u32, req.t_fwd)).collect()
+                (lo..=hi).map(|n| req.value_of(job, n as u32)).collect()
             } else {
                 Vec::new()
             };
@@ -106,14 +108,14 @@ mod tests {
 
     #[test]
     fn empty_pool_all_zero() {
-        let req = AllocRequest { jobs: vec![job(0, 0, 1, 8)], pool_size: 0, t_fwd: 60.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 1, 8)], 0, 60.0);
         let out = DpAllocator.allocate(&req);
         assert_eq!(out.targets[&0], 0);
     }
 
     #[test]
     fn single_job_gets_max_useful() {
-        let req = AllocRequest { jobs: vec![job(0, 0, 1, 8)], pool_size: 20, t_fwd: 600.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 1, 8)], 20, 600.0);
         let out = DpAllocator.allocate(&req);
         // concave increasing gain, no downside: takes n_max
         assert_eq!(out.targets[&0], 8);
@@ -121,11 +123,11 @@ mod tests {
 
     #[test]
     fn capacity_shared_between_jobs() {
-        let req = AllocRequest {
-            jobs: vec![job(0, 0, 1, 8), job(1, 0, 1, 8)],
-            pool_size: 8,
-            t_fwd: 600.0,
-        };
+        let req = AllocRequest::flat(
+            vec![job(0, 0, 1, 8), job(1, 0, 1, 8)],
+            8,
+            600.0,
+        );
         let out = DpAllocator.allocate(&req);
         let total: u32 = out.targets.values().sum();
         assert!(total <= 8);
@@ -137,7 +139,7 @@ mod tests {
     #[test]
     fn respects_min_scale_or_zero() {
         // min 5 with pool 4: must sit at 0
-        let req = AllocRequest { jobs: vec![job(0, 0, 5, 8)], pool_size: 4, t_fwd: 600.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 5, 8)], 4, 600.0);
         let out = DpAllocator.allocate(&req);
         assert_eq!(out.targets[&0], 0);
     }
@@ -147,7 +149,7 @@ mod tests {
         // Current 4; t_fwd so small the up-cost dominates the extra gain.
         let mut j = job(0, 4, 1, 8);
         j.r_up = 1000.0;
-        let req = AllocRequest { jobs: vec![j], pool_size: 8, t_fwd: 1.0 };
+        let req = AllocRequest::flat(vec![j], 8, 1.0);
         let out = DpAllocator.allocate(&req);
         assert_eq!(out.targets[&0], 4, "should keep current scale");
     }
@@ -156,7 +158,7 @@ mod tests {
     fn long_horizon_encourages_upscale() {
         let mut j = job(0, 4, 1, 8);
         j.r_up = 1000.0;
-        let req = AllocRequest { jobs: vec![j], pool_size: 8, t_fwd: 1.0e6 };
+        let req = AllocRequest::flat(vec![j], 8, 1.0e6);
         let out = DpAllocator.allocate(&req);
         assert_eq!(out.targets[&0], 8);
     }
@@ -182,7 +184,7 @@ mod tests {
             let mut idx = vec![0usize; opts.len()];
             loop {
                 let combo: Vec<u32> = idx.iter().zip(&opts).map(|(&i, o)| o[i]).collect();
-                if combo.iter().sum::<u32>() <= req.pool_size {
+                if combo.iter().sum::<u32>() <= req.pool_size() {
                     let m: std::collections::BTreeMap<_, _> =
                         req.jobs.iter().map(|j| j.id).zip(combo.iter().copied()).collect();
                     best = best.max(req.objective_of(&m));

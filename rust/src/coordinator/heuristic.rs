@@ -32,7 +32,7 @@ impl Allocator for EqualShareAllocator {
                 stats: SolverStats { solve_time: t0.elapsed(), ..Default::default() },
             };
         }
-        let share = req.pool_size / nj;
+        let share = req.pool_size() / nj;
         let mut used = 0u32;
         for job in &req.jobs {
             let n = if share >= job.n_min { share.min(job.n_max) } else { 0 };
@@ -40,7 +40,7 @@ impl Allocator for EqualShareAllocator {
             used += n;
         }
         // Hand out the remainder one node at a time, FCFS order, repeatedly.
-        let mut leftover = req.pool_size - used;
+        let mut leftover = req.pool_size() - used;
         let mut progressed = true;
         while leftover > 0 && progressed {
             progressed = false;
@@ -76,11 +76,11 @@ mod tests {
 
     #[test]
     fn splits_equally() {
-        let req = AllocRequest {
-            jobs: vec![job(0, 0, 1, 10), job(1, 0, 1, 10)],
-            pool_size: 8,
-            t_fwd: 60.0,
-        };
+        let req = AllocRequest::flat(
+            vec![job(0, 0, 1, 10), job(1, 0, 1, 10)],
+            8,
+            60.0,
+        );
         let out = EqualShareAllocator.allocate(&req);
         assert_eq!(out.targets[&0], 4);
         assert_eq!(out.targets[&1], 4);
@@ -88,11 +88,11 @@ mod tests {
 
     #[test]
     fn remainder_goes_fcfs() {
-        let req = AllocRequest {
-            jobs: vec![job(0, 0, 1, 10), job(1, 0, 1, 10), job(2, 0, 1, 10)],
-            pool_size: 11,
-            t_fwd: 60.0,
-        };
+        let req = AllocRequest::flat(
+            vec![job(0, 0, 1, 10), job(1, 0, 1, 10), job(2, 0, 1, 10)],
+            11,
+            60.0,
+        );
         let out = EqualShareAllocator.allocate(&req);
         assert_eq!(out.targets[&0], 4);
         assert_eq!(out.targets[&1], 4);
@@ -101,11 +101,11 @@ mod tests {
 
     #[test]
     fn clamps_to_max_and_redistributes() {
-        let req = AllocRequest {
-            jobs: vec![job(0, 0, 1, 2), job(1, 0, 1, 16)],
-            pool_size: 12,
-            t_fwd: 60.0,
-        };
+        let req = AllocRequest::flat(
+            vec![job(0, 0, 1, 2), job(1, 0, 1, 16)],
+            12,
+            60.0,
+        );
         let out = EqualShareAllocator.allocate(&req);
         assert_eq!(out.targets[&0], 2);
         assert_eq!(out.targets[&1], 10);
@@ -113,11 +113,11 @@ mod tests {
 
     #[test]
     fn below_min_waits() {
-        let req = AllocRequest {
-            jobs: vec![job(0, 0, 8, 16), job(1, 0, 1, 16)],
-            pool_size: 6,
-            t_fwd: 60.0,
-        };
+        let req = AllocRequest::flat(
+            vec![job(0, 0, 8, 16), job(1, 0, 1, 16)],
+            6,
+            60.0,
+        );
         let out = EqualShareAllocator.allocate(&req);
         // share = 3 < 8: job0 waits; its nodes go to job1
         assert_eq!(out.targets[&0], 0);
@@ -126,7 +126,7 @@ mod tests {
 
     #[test]
     fn zero_jobs_ok() {
-        let req = AllocRequest { jobs: vec![], pool_size: 5, t_fwd: 60.0 };
+        let req = AllocRequest::flat(vec![], 5, 60.0);
         let out = EqualShareAllocator.allocate(&req);
         assert!(out.targets.is_empty());
     }
@@ -134,11 +134,11 @@ mod tests {
     #[test]
     fn never_exceeds_pool() {
         for pool in 0..20u32 {
-            let req = AllocRequest {
-                jobs: vec![job(0, 0, 2, 5), job(1, 0, 3, 9), job(2, 0, 1, 2)],
-                pool_size: pool,
-                t_fwd: 60.0,
-            };
+            let req = AllocRequest::flat(
+                vec![job(0, 0, 2, 5), job(1, 0, 3, 9), job(2, 0, 1, 2)],
+                pool,
+                60.0,
+            );
             let out = EqualShareAllocator.allocate(&req);
             assert!(req.check(&out.targets).is_ok(), "pool={pool}: {:?}", out.targets);
         }

@@ -27,6 +27,15 @@ use std::time::Instant;
 
 /// Warm-start state carried from one event's solve to the next: the
 /// applied target map and the root-LP basis of the model it solved.
+///
+/// The lifetime profile enters the model only through the objective
+/// coefficients (`V_i = s_i·H(b_i)/b_i`); rows, columns and bounds are
+/// profile-independent. A basis adopted across a profile change is
+/// therefore still structurally valid — the simplex re-prices under the
+/// new objective and re-optimizes, and the `LpBasis` presolve-layout
+/// signature still rejects genuinely reshaped models (job set changes).
+/// `incremental_warm_start_matches_dp_across_events` churns the profile
+/// between events to pin this down.
 #[derive(Clone, Debug)]
 struct PrevSolve {
     targets: BTreeMap<TrainerId, u32>,
@@ -106,7 +115,7 @@ pub fn adapt_targets(
 ) -> Option<BTreeMap<TrainerId, u32>> {
     let mut targets: BTreeMap<TrainerId, u32> = BTreeMap::new();
     for job in &req.jobs {
-        let hi = job.n_max.min(req.pool_size);
+        let hi = job.n_max.min(req.pool_size());
         let mut n = prev.get(&job.id).copied().unwrap_or(0).min(hi);
         if n < job.n_min {
             n = 0;
@@ -127,14 +136,14 @@ pub fn adapt_targets(
 /// branch-and-bound tightening them never reshapes the model.
 pub fn build_model(req: &AllocRequest) -> (Model, Vec<milp::VarId>) {
     let mut m = Model::new(Direction::Maximize);
-    let pool = req.pool_size as f64;
+    let pool = req.pool_size() as f64;
     let mut n_vars = Vec::with_capacity(req.jobs.len());
     let mut capacity = LinExpr::new();
     let mut objective = LinExpr::new();
 
     for job in &req.jobs {
         let jid = job.id;
-        let hi = (job.n_max.min(req.pool_size)) as f64;
+        let hi = (job.n_max.min(req.pool_size())) as f64;
         let n = m.integer(0.0, hi.max(0.0), format!("n[{jid}]"));
         n_vars.push(n);
         capacity.add(n, 1.0);
@@ -180,10 +189,23 @@ pub fn build_model(req: &AllocRequest) -> (Model, Vec<milp::VarId>) {
         if ws.len() >= 2 {
             m.add_sos2(ws.clone(), format!("sos2[{jid}]"));
         }
-        // gain contribution: T_fwd * Σ w·s
-        for (i, &(_, bv)) in bps.iter().enumerate() {
-            if bv != 0.0 {
-                objective.add(ws[i], req.t_fwd * bv);
+        // Gain contribution Σ w·V with V_i = s_i·H(b_i)/b_i — the
+        // lifetime-capped gain-seconds at each breakpoint (Eqn 16′,
+        // DESIGN.md §13). On a flat profile H(b)/b = T_fwd and this is
+        // the paper's T_fwd·Σ w·s. The SOS2 interpolation of V is the
+        // canonical valuation (`AllocJob::value`), so the relaxation and
+        // the DP agree exactly.
+        for (i, &(bn, bv)) in bps.iter().enumerate() {
+            if bv != 0.0 && bn > 0.0 {
+                // Flat profiles use the literal pre-lifetime coefficient
+                // (bit-identical to the old model, like `AllocJob::value`).
+                let coef = if req.pool.is_flat() {
+                    req.t_fwd * bv
+                } else {
+                    let b = bn.round() as u32;
+                    bv * req.horizon_seconds(b) / b as f64
+                };
+                objective.add(ws[i], coef);
             }
         }
 
@@ -421,11 +443,12 @@ mod tests {
     use super::*;
     use crate::coordinator::alloc::testutil::{job, random_request};
     use crate::coordinator::dp_alloc::DpAllocator;
+    use crate::coordinator::LifetimeProfile;
     use crate::util::rng::Rng;
 
     #[test]
     fn single_job_takes_max() {
-        let req = AllocRequest { jobs: vec![job(0, 0, 1, 8)], pool_size: 20, t_fwd: 600.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 1, 8)], 20, 600.0);
         let out = AggregateMilpAllocator::default().allocate(&req);
         assert_eq!(out.targets[&0], 8);
         assert!(out.stats.optimal);
@@ -469,7 +492,7 @@ mod tests {
 
     #[test]
     fn respects_min_or_zero() {
-        let req = AllocRequest { jobs: vec![job(0, 0, 5, 8)], pool_size: 4, t_fwd: 600.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 5, 8)], 4, 600.0);
         let out = AggregateMilpAllocator::default().allocate(&req);
         assert_eq!(out.targets[&0], 0);
     }
@@ -478,7 +501,7 @@ mod tests {
     fn keeps_current_when_upscale_too_expensive() {
         let mut j = job(0, 4, 1, 8);
         j.r_up = 1.0e4;
-        let req = AllocRequest { jobs: vec![j], pool_size: 8, t_fwd: 1.0 };
+        let req = AllocRequest::flat(vec![j], 8, 1.0);
         let out = AggregateMilpAllocator::default().allocate(&req);
         assert_eq!(out.targets[&0], 4);
     }
@@ -495,7 +518,7 @@ mod tests {
             },
             ..AggregateMilpAllocator::cold()
         };
-        let req = AllocRequest { jobs: vec![job(0, 3, 1, 8)], pool_size: 8, t_fwd: 60.0 };
+        let req = AllocRequest::flat(vec![job(0, 3, 1, 8)], 8, 60.0);
         let out = alloc.allocate(&req);
         assert!(out.stats.fell_back);
         assert_eq!(out.targets[&0], 3, "must keep the current map");
@@ -505,11 +528,11 @@ mod tests {
     fn adapt_repairs_previous_map_to_new_request() {
         // Previous solution 5 + 3 = 8; pool shrinks to 6: shed from the
         // largest assignment first.
-        let req = AllocRequest {
-            jobs: vec![job(0, 5, 1, 8), job(1, 3, 1, 8)],
-            pool_size: 6,
-            t_fwd: 60.0,
-        };
+        let req = AllocRequest::flat(
+            vec![job(0, 5, 1, 8), job(1, 3, 1, 8)],
+            6,
+            60.0,
+        );
         let prev: BTreeMap<usize, u32> = [(0, 5u32), (1, 3u32)].into_iter().collect();
         let t = adapt_targets(&req, &prev).unwrap();
         assert!(req.check(&t).is_ok());
@@ -521,7 +544,7 @@ mod tests {
         // below-minimum clamp goes to zero, not to an infeasible 1
         let mut j = job(0, 0, 4, 8);
         j.n_min = 4;
-        let req3 = AllocRequest { jobs: vec![j], pool_size: 2, t_fwd: 60.0 };
+        let req3 = AllocRequest::flat(vec![j], 2, 60.0);
         let prev3: BTreeMap<usize, u32> = [(0, 6u32)].into_iter().collect();
         assert_eq!(adapt_targets(&req3, &prev3).unwrap()[&0], 0);
     }
@@ -550,17 +573,19 @@ mod tests {
             }
             let grow = rng.chance(0.5);
             let delta = rng.range_u64(1, 3) as u32;
-            req.pool_size =
-                if grow { req.pool_size + delta } else { req.pool_size.saturating_sub(delta) };
+            let size =
+                if grow { req.pool_size() + delta } else { req.pool_size().saturating_sub(delta) };
             let cur: u32 = req.jobs.iter().map(|j| j.current).sum();
-            req.pool_size = req.pool_size.max(cur);
+            // Re-bucket with fresh random lifetimes: the warm start must
+            // survive profile churn between events, not just size churn.
+            req.pool = LifetimeProfile::random(&mut rng, size.max(cur), req.t_fwd);
         }
     }
 
     #[test]
     fn reset_clears_carry_over() {
         let mut a = AggregateMilpAllocator::default();
-        let req = AllocRequest { jobs: vec![job(0, 0, 1, 8)], pool_size: 8, t_fwd: 60.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 1, 8)], 8, 60.0);
         let _ = a.allocate(&req);
         assert!(a.prev.is_some());
         a.reset();

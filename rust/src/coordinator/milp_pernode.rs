@@ -39,7 +39,7 @@ impl Default for PerNodeMilpAllocator {
 /// Build the paper's model. `c` is the current assignment: `c[j][n]` over
 /// jobs × pool-node indices (dense 0..pool_size).
 pub fn build_model(req: &AllocRequest, c: &[Vec<bool>]) -> (Model, Vec<Vec<milp::VarId>>) {
-    let nn = req.pool_size as usize;
+    let nn = req.pool_size() as usize;
     let nj = req.jobs.len();
     assert_eq!(c.len(), nj);
     for row in c {
@@ -166,9 +166,21 @@ pub fn build_model(req: &AllocRequest, c: &[Vec<bool>]) -> (Model, Vec<Vec<milp:
         m.constrain(convex, Sense::Eq, 1.0, format!("e11a[{jid}]"));
         m.constrain(ndef, Sense::Eq, 0.0, format!("e11b[{jid}]"));
         m.add_sos2(ws.clone(), format!("sos2[{jid}]"));
-        for (i, &(_, bv)) in bps.iter().enumerate() {
-            if bv != 0.0 {
-                objective.add(ws[i], req.t_fwd * bv);
+        // Lifetime-capped gain coefficients V_i = s_i·H(b_i)/b_i, exactly
+        // as the aggregate model encodes them (DESIGN.md §13) — the
+        // objective stays a function of the count N_j and the shared
+        // profile, so per-node/aggregate equivalence (§6.2) is untouched.
+        for (i, &(bn, bv)) in bps.iter().enumerate() {
+            if bv != 0.0 && bn > 0.0 {
+                // Flat profiles use the literal pre-lifetime coefficient
+                // (bit-identical to the old model, like `AllocJob::value`).
+                let coef = if req.pool.is_flat() {
+                    req.t_fwd * bv
+                } else {
+                    let b = bn.round() as u32;
+                    bv * req.horizon_seconds(b) / b as f64
+                };
+                objective.add(ws[i], coef);
             }
         }
 
@@ -217,7 +229,7 @@ pub fn build_model(req: &AllocRequest, c: &[Vec<bool>]) -> (Model, Vec<Vec<milp:
 /// holds nodes [offset, offset + C_j) — concrete ids are irrelevant to the
 /// optimum (tested), only the counts matter.
 pub fn dense_assignment(req: &AllocRequest) -> Vec<Vec<bool>> {
-    let nn = req.pool_size as usize;
+    let nn = req.pool_size() as usize;
     let mut c = vec![vec![false; nn]; req.jobs.len()];
     let mut off = 0usize;
     for (j, job) in req.jobs.iter().enumerate() {
@@ -290,7 +302,7 @@ fn embed_targets(
     c: &[Vec<bool>],
     targets: &BTreeMap<usize, u32>,
 ) -> Option<Vec<f64>> {
-    let nn = req.pool_size as usize;
+    let nn = req.pool_size() as usize;
     let mut assign = vec![usize::MAX; nn]; // node -> job
     for (j, row) in c.iter().enumerate() {
         let want = targets.get(&req.jobs[j].id).copied().unwrap_or(0) as usize;
@@ -413,11 +425,18 @@ mod tests {
     use super::*;
     use crate::coordinator::alloc::testutil::{job, random_request};
     use crate::coordinator::dp_alloc::DpAllocator;
+    use crate::coordinator::LifetimeProfile;
     use crate::util::rng::Rng;
+
+    /// Shrink/grow a random request's pool to `size`, keeping (fresh)
+    /// random lifetime structure.
+    fn resize_pool(rng: &mut Rng, req: &mut AllocRequest, size: u32) {
+        req.pool = LifetimeProfile::random(rng, size, req.t_fwd);
+    }
 
     #[test]
     fn single_job_takes_max() {
-        let req = AllocRequest { jobs: vec![job(0, 0, 1, 4)], pool_size: 6, t_fwd: 600.0 };
+        let req = AllocRequest::flat(vec![job(0, 0, 1, 4)], 6, 600.0);
         let out = PerNodeMilpAllocator::default().allocate(&req);
         assert_eq!(out.targets[&0], 4);
     }
@@ -427,8 +446,9 @@ mod tests {
         let mut rng = Rng::new(5);
         for _ in 0..10 {
             let mut req = random_request(&mut rng, 3, 6);
-            req.pool_size = req.pool_size.min(10); // keep model small
-            let share = req.pool_size / req.jobs.len().max(1) as u32;
+            let size = req.pool_size().min(10); // keep model small
+            resize_pool(&mut rng, &mut req, size);
+            let share = req.pool_size() / req.jobs.len().max(1) as u32;
             for j in req.jobs.iter_mut() {
                 j.current = j.current.min(share);
                 if j.current > 0 && j.current < j.n_min {
@@ -436,7 +456,8 @@ mod tests {
                 }
             }
             let cur_sum: u32 = req.jobs.iter().map(|j| j.current).sum();
-            req.pool_size = req.pool_size.max(cur_sum);
+            let size = req.pool_size().max(cur_sum);
+            resize_pool(&mut rng, &mut req, size);
             let c = dense_assignment(&req);
             let (model, x) = build_model(&req, &c);
             let w = embed_targets(&req, &model, &x, &c, &req.current_map());
@@ -450,7 +471,8 @@ mod tests {
         let mut alloc = PerNodeMilpAllocator::default();
         for case in 0..10 {
             let mut req = random_request(&mut rng, 2, 5);
-            req.pool_size = req.pool_size.min(8);
+            let size = req.pool_size().min(8);
+            resize_pool(&mut rng, &mut req, size);
             for j in req.jobs.iter_mut() {
                 j.n_max = j.n_max.min(8);
                 j.current = j.current.min(j.n_max);
@@ -459,7 +481,8 @@ mod tests {
                 }
             }
             let cur_sum: u32 = req.jobs.iter().map(|j| j.current).sum();
-            req.pool_size = req.pool_size.max(cur_sum);
+            let size = req.pool_size().max(cur_sum);
+            resize_pool(&mut rng, &mut req, size);
             let dp = DpAllocator.allocate(&req);
             let pn = alloc.allocate(&req);
             assert!(
@@ -476,11 +499,11 @@ mod tests {
     fn node_identity_irrelevant() {
         // Permuting which concrete nodes a job currently holds must not
         // change the optimal objective.
-        let req = AllocRequest {
-            jobs: vec![job(0, 2, 1, 4), job(1, 1, 1, 4)],
-            pool_size: 6,
-            t_fwd: 120.0,
-        };
+        let req = AllocRequest::flat(
+            vec![job(0, 2, 1, 4), job(1, 1, 1, 4)],
+            6,
+            120.0,
+        );
         let mut c1 = vec![vec![false; 6]; 2];
         c1[0][0] = true;
         c1[0][1] = true;
@@ -502,7 +525,7 @@ mod tests {
     fn no_migration_enforced_in_model() {
         // One job holding nodes {0,1} of a 3-node pool; a solution keeping
         // scale 2 but moving to nodes {1,2} must be infeasible.
-        let req = AllocRequest { jobs: vec![job(0, 2, 1, 2)], pool_size: 3, t_fwd: 60.0 };
+        let req = AllocRequest::flat(vec![job(0, 2, 1, 2)], 3, 60.0);
         let mut c = vec![vec![false; 3]];
         c[0][0] = true;
         c[0][1] = true;

@@ -21,7 +21,9 @@ pub mod objective;
 pub mod pool;
 pub mod trainer;
 
-pub use alloc::{AllocJob, AllocOutcome, AllocPlan, AllocRequest, Allocator, SolverStats};
+pub use alloc::{
+    AllocJob, AllocOutcome, AllocPlan, AllocRequest, Allocator, LifetimeProfile, SolverStats,
+};
 pub use dp_alloc::DpAllocator;
 pub use heuristic::EqualShareAllocator;
 pub use milp_aggregate::AggregateMilpAllocator;
@@ -31,7 +33,7 @@ pub use pool::Pool;
 pub use trainer::{Phase, TrainerId, TrainerSpec, TrainerState};
 
 use crate::trace::PoolEvent;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Canonical CLI names of the built-in allocation strategies, in the
 /// order `DESIGN.md` §5 describes them.
@@ -70,6 +72,12 @@ pub struct EventRecord {
     pub warm_started: bool,
     /// Pool size after the event.
     pub pool_size: usize,
+    /// Node leaves whose scheduled reclaim time had arrived — the
+    /// coordinator saw them coming (predicted-vs-realized accounting).
+    pub leaves_anticipated: usize,
+    /// Node leaves that arrived with no (or a later) scheduled reclaim —
+    /// surprises the forward-looking strategy could not plan around.
+    pub leaves_surprise: usize,
     /// Simplex iterations spent on this event's solve (0 for non-LP
     /// allocators).
     pub lp_iterations: usize,
@@ -85,7 +93,7 @@ pub struct Coordinator {
     pub pool: Pool,
     pub trainers: Vec<TrainerState>,
     /// FCFS queue of not-yet-admitted trainers.
-    pub queue: Vec<TrainerId>,
+    pub queue: VecDeque<TrainerId>,
     /// Admitted (waiting or running) trainers.
     pub admitted: Vec<TrainerId>,
     /// Maximum parallel trainers (Pj_max, §5.3).
@@ -117,7 +125,7 @@ impl Coordinator {
         Coordinator {
             pool: Pool::new(),
             trainers: Vec::new(),
-            queue: Vec::new(),
+            queue: VecDeque::new(),
             admitted: Vec::new(),
             pj_max,
             objective,
@@ -140,15 +148,15 @@ impl Coordinator {
     pub fn submit(&mut self, spec: TrainerSpec, now: f64) -> TrainerId {
         let id = self.trainers.len();
         self.trainers.push(TrainerState::new(id, spec, now));
-        self.queue.push(id);
+        self.queue.push_back(id);
         self.admit(now);
         id
     }
 
     /// FCFS admission up to pj_max.
     fn admit(&mut self, now: f64) {
-        while self.admitted.len() < self.pj_max && !self.queue.is_empty() {
-            let id = self.queue.remove(0);
+        while self.admitted.len() < self.pj_max {
+            let Some(id) = self.queue.pop_front() else { break };
             let t = &mut self.trainers[id];
             t.phase = Phase::Waiting;
             t.admit_t = Some(now);
@@ -238,10 +246,29 @@ impl Coordinator {
         done
     }
 
+    /// Tolerance when matching a realized leave against its scheduled
+    /// reclaim time (the trace quantizes event times at 1 ms).
+    const RECLAIM_EPS: f64 = 0.01;
+
     /// Handle a pool event (nodes join/leave) at time `now` (seconds),
-    /// then reallocate via the active [`Allocator`].
+    /// then reallocate via the active [`Allocator`]. Joins carry their
+    /// scheduled reclaim annotations into the pool; leaves are classified
+    /// as anticipated (the schedule said so) or surprise before removal.
     pub fn handle_event(&mut self, now: f64, ev: &PoolEvent) {
-        self.pool.join(&ev.joins);
+        self.pool.join(&ev.joins, &ev.reclaim_at);
+        let mut leaves_anticipated = 0usize;
+        let mut leaves_surprise = 0usize;
+        for &n in &ev.leaves {
+            if !self.pool.contains(n) {
+                continue;
+            }
+            let p = self.pool.reclaim_of(n);
+            if p.is_finite() && now >= p - Self::RECLAIM_EPS {
+                leaves_anticipated += 1;
+            } else {
+                leaves_surprise += 1;
+            }
+        }
         let hit = self.pool.leave(&ev.leaves);
         let mut preempted = 0usize;
         for (&id, &lost) in &hit {
@@ -258,13 +285,14 @@ impl Coordinator {
                 self.trainers[id].apply_rescale(now, new, 0, true);
             }
         }
-        self.reallocate(now, preempted);
+        self.reallocate_with(now, preempted, leaves_anticipated, leaves_surprise);
     }
 
-    /// Build the [`AllocRequest`] for the currently admitted trainers:
-    /// their current scales, bounds, rescale costs (with the global
-    /// multiplier applied) and objective breakpoints.
-    pub fn request(&self) -> AllocRequest {
+    /// Build the [`AllocRequest`] for the currently admitted trainers at
+    /// time `now`: their current scales, bounds, rescale costs (with the
+    /// global multiplier applied), objective breakpoints, and the pool's
+    /// remaining-lifetime profile relative to `now`.
+    pub fn request(&self, now: f64) -> AllocRequest {
         let jobs: Vec<AllocJob> = self
             .admitted
             .iter()
@@ -284,7 +312,7 @@ impl Coordinator {
                 }
             })
             .collect();
-        AllocRequest { jobs, pool_size: self.pool.len() as u32, t_fwd: self.t_fwd }
+        AllocRequest { jobs, pool: self.pool.lifetime_profile(now, self.t_fwd), t_fwd: self.t_fwd }
     }
 
     /// Re-run the allocator at time `now` (seconds) and apply its
@@ -292,7 +320,17 @@ impl Coordinator {
     /// [`EventRecord`]. `preempted` is the number of trainers forced down
     /// by the triggering event (0 for completions/submissions).
     pub fn reallocate(&mut self, now: f64, preempted: usize) {
-        let req = self.request();
+        self.reallocate_with(now, preempted, 0, 0);
+    }
+
+    fn reallocate_with(
+        &mut self,
+        now: f64,
+        preempted: usize,
+        leaves_anticipated: usize,
+        leaves_surprise: usize,
+    ) {
+        let req = self.request(now);
         let plan = self.allocator.allocate(&req);
         let mut rescale_cost_samples = 0.0;
         for job in &req.jobs {
@@ -324,6 +362,8 @@ impl Coordinator {
             fell_back: plan.stats.fell_back,
             warm_started: plan.stats.warm_started,
             pool_size: self.pool.len(),
+            leaves_anticipated,
+            leaves_surprise,
             lp_iterations: plan.stats.lp_iterations,
             lp_refactorizations: plan.stats.lp_refactorizations,
         });
@@ -379,7 +419,7 @@ mod tests {
         let mut c = coord(4);
         c.submit(spec(1e9), 0.0);
         c.submit(spec(1e9), 0.0);
-        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..8).collect(), leaves: vec![] });
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..8).collect(), ..Default::default() });
         let total: u32 = (0..2).map(|id| c.scale_of(id)).sum();
         assert!(total > 0 && total <= 8);
         assert_eq!(c.trainers[0].phase, Phase::Running);
@@ -389,10 +429,14 @@ mod tests {
     fn node_leave_preempts_and_pays_cost() {
         let mut c = coord(4);
         c.submit(spec(1e9), 0.0);
-        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
         assert_eq!(c.scale_of(0), 4);
         let mine = c.pool.allocation()[&0].clone();
-        c.handle_event(100.0, &PoolEvent { t: 100.0, joins: vec![], leaves: mine[..2].to_vec() });
+        c.handle_event(100.0, &PoolEvent {
+            t: 100.0,
+            leaves: mine[..2].to_vec(),
+            ..Default::default()
+        });
         assert!(c.trainers[0].preemptions >= 1);
     }
 
@@ -402,10 +446,14 @@ mod tests {
         let mut s = spec(1e9);
         s.n_min = 4;
         c.submit(s, 0.0);
-        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
         assert_eq!(c.scale_of(0), 4);
         let mine = c.pool.allocation()[&0].clone();
-        c.handle_event(10.0, &PoolEvent { t: 10.0, joins: vec![], leaves: mine[..2].to_vec() });
+        c.handle_event(10.0, &PoolEvent {
+            t: 10.0,
+            leaves: mine[..2].to_vec(),
+            ..Default::default()
+        });
         assert_eq!(c.scale_of(0), 0);
         assert_eq!(c.trainers[0].phase, Phase::Waiting);
     }
@@ -416,7 +464,7 @@ mod tests {
         c.submit(spec(100.0), 0.0); // tiny job
         c.submit(spec(1e9), 0.0);
         assert_eq!(c.admitted, vec![0]);
-        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
         let ft = c.finish_time_within(0.0, 100.0).expect("finishes");
         assert!(ft > 0.0 && ft < 100.0);
         c.advance(0.0, ft);
@@ -432,7 +480,7 @@ mod tests {
     fn advance_totals_progress() {
         let mut c = coord(4);
         c.submit(spec(1e9), 0.0);
-        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
         // cold start 0 -> 4 pays r_up = 20 s of stall; progress only after
         let none = c.advance(0.0, 10.0);
         assert_eq!(none, 0.0);
@@ -445,7 +493,7 @@ mod tests {
     fn event_log_records_solver_stats() {
         let mut c = coord(4);
         c.submit(spec(1e9), 0.0);
-        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
         assert_eq!(c.event_log.len(), 1);
         assert_eq!(c.event_log[0].pool_size, 4);
     }
@@ -454,19 +502,90 @@ mod tests {
     fn rescale_multiplier_scales_cost() {
         let mut a = coord(4);
         a.submit(spec(1e9), 0.0);
-        a.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        a.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
         let mut b = coord(4);
         b.rescale_cost_multiplier = 2.0;
         b.submit(spec(1e9), 0.0);
-        b.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
+        b.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
         // first event scales 0 -> n (rate at 0 is 0, cost-free in Eqn 16):
         // compare the 4 -> 8 upscale, profitable under both multipliers.
-        a.handle_event(1e4, &PoolEvent { t: 1e4, joins: (100..104).collect(), leaves: vec![] });
-        b.handle_event(1e4, &PoolEvent { t: 1e4, joins: (100..104).collect(), leaves: vec![] });
+        a.handle_event(1e4, &PoolEvent {
+            t: 1e4,
+            joins: (100..104).collect(),
+            ..Default::default()
+        });
+        b.handle_event(1e4, &PoolEvent {
+            t: 1e4,
+            joins: (100..104).collect(),
+            ..Default::default()
+        });
         assert_eq!(a.scale_of(0), 8);
         assert_eq!(b.scale_of(0), 8);
         let ca = a.event_log.last().unwrap().rescale_cost_samples;
         let cb = b.event_log.last().unwrap().rescale_cost_samples;
         assert!((cb - 2.0 * ca).abs() < 1e-6, "multiplier not applied: {ca} vs {cb}");
+    }
+
+    #[test]
+    fn informed_placement_dodges_scheduled_reclaims() {
+        // Nodes 0,1 are scheduled to vanish at t=50; 2,3,4 are not. A
+        // 3-node trainer must land on the long-lived nodes, so the leave
+        // at t=50 hits only free nodes: no preemption, and the leaves are
+        // recorded as anticipated.
+        let mut c = coord(4);
+        let mut s = spec(1e9);
+        s.n_max = 3;
+        c.submit(s, 0.0);
+        c.handle_event(
+            0.0,
+            &PoolEvent {
+                t: 0.0,
+                joins: (0..5).collect(),
+                reclaim_at: vec![50.0, 50.0, f64::INFINITY, f64::INFINITY, f64::INFINITY],
+                ..Default::default()
+            },
+        );
+        assert_eq!(c.scale_of(0), 3);
+        assert_eq!(c.pool.allocation()[&0], vec![2, 3, 4]);
+        c.handle_event(50.0, &PoolEvent { t: 50.0, leaves: vec![0, 1], ..Default::default() });
+        assert_eq!(c.trainers[0].preemptions, 0, "informed placement must dodge the reclaim");
+        assert_eq!(c.scale_of(0), 3);
+        let rec = c.event_log.last().unwrap();
+        assert_eq!(rec.leaves_anticipated, 2);
+        assert_eq!(rec.leaves_surprise, 0);
+    }
+
+    #[test]
+    fn unannotated_leaves_count_as_surprises() {
+        let mut c = coord(4);
+        c.submit(spec(1e9), 0.0);
+        c.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
+        c.handle_event(10.0, &PoolEvent { t: 10.0, leaves: vec![0, 1], ..Default::default() });
+        let rec = c.event_log.last().unwrap();
+        assert_eq!(rec.leaves_anticipated, 0);
+        assert_eq!(rec.leaves_surprise, 2);
+    }
+
+    #[test]
+    fn request_profile_tracks_pool_lifetimes() {
+        let mut c = coord(4);
+        c.submit(spec(1e9), 0.0);
+        c.handle_event(
+            0.0,
+            &PoolEvent {
+                t: 0.0,
+                joins: (0..4).collect(),
+                reclaim_at: vec![30.0, 30.0, 1e9, 1e9],
+                ..Default::default()
+            },
+        );
+        let req = c.request(0.0);
+        assert_eq!(req.pool_size(), 4);
+        assert_eq!(req.pool.classes.len(), 2, "short + long class: {:?}", req.pool.classes);
+        // Blind joins collapse to the flat profile.
+        let mut b = coord(4);
+        b.submit(spec(1e9), 0.0);
+        b.handle_event(0.0, &PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
+        assert_eq!(b.request(0.0).pool, crate::coordinator::LifetimeProfile::flat(4));
     }
 }

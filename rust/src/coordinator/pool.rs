@@ -1,23 +1,42 @@
 //! Idle-node pool and the current nodes→Trainers map `c_jn` (paper §3.1).
 //!
-//! The pool tracks which nodes are currently in `N`, and which Trainer
-//! each is assigned to. The no-migration constraint means assignments
-//! only ever change by adding free nodes to a Trainer or releasing some
-//! of its nodes — [`Pool::apply_allocation`] enforces exactly that.
+//! The pool tracks which nodes are currently in `N`, which Trainer each
+//! is assigned to, and each node's scheduled reclaim time (INFINITY when
+//! unknown — the Blind knowledge mode). The no-migration constraint
+//! means assignments only ever change by adding free nodes to a Trainer
+//! or releasing some of its nodes — [`Pool::apply_allocation`] enforces
+//! exactly that, and is where lifetime awareness lands in placement:
+//! growth draws the **longest-remaining-life** free nodes first and
+//! shrinkage releases the **shortest-life** nodes first, so the nodes a
+//! Trainer keeps are the ones least likely to preempt it (paper §3.3;
+//! DESIGN.md §13). With no lifetime information every comparison ties
+//! and the order degrades to the original deterministic one (ascending
+//! node id on grow, descending on release).
+//!
+//! Per-trainer scale lookups (`count_of`) are served from a cached
+//! count map — they sit on the replay inner loop, which runs hundreds of
+//! millions of iterations on long traces.
 
 use crate::trace::NodeId;
 use std::collections::BTreeMap;
 use std::collections::BTreeSet;
 
+use super::alloc::LifetimeProfile;
 use super::trainer::TrainerId;
 
-/// Pool state: idle nodes and their assignment.
+/// Pool state: idle nodes, their assignment and scheduled reclaim times.
 #[derive(Clone, Debug, Default)]
 pub struct Pool {
     /// All nodes currently in N.
     nodes: BTreeSet<NodeId>,
     /// node -> trainer assignment (absent = free).
     assigned: BTreeMap<NodeId, TrainerId>,
+    /// node -> scheduled reclaim time (absolute trace seconds; INFINITY
+    /// when unknown). One entry per node in `nodes`.
+    reclaim_at: BTreeMap<NodeId, f64>,
+    /// Cached trainer -> node count, kept in sync by every mutator; the
+    /// O(log) fast path behind [`Pool::count_of`].
+    counts: BTreeMap<TrainerId, u32>,
 }
 
 impl Pool {
@@ -37,7 +56,7 @@ impl Pool {
         self.nodes.contains(&n)
     }
 
-    /// Nodes not assigned to any Trainer.
+    /// Nodes not assigned to any Trainer (ascending id).
     pub fn free_nodes(&self) -> Vec<NodeId> {
         self.nodes.iter().copied().filter(|n| !self.assigned.contains_key(n)).collect()
     }
@@ -46,9 +65,21 @@ impl Pool {
         self.nodes.len() - self.assigned.len()
     }
 
-    /// Current scale C_j of a trainer.
+    /// Current scale C_j of a trainer (cached; debug builds cross-check
+    /// against the assignment scan).
     pub fn count_of(&self, j: TrainerId) -> u32 {
-        self.assigned.values().filter(|&&t| t == j).count() as u32
+        let cached = self.counts.get(&j).copied().unwrap_or(0);
+        debug_assert_eq!(
+            cached,
+            self.assigned.values().filter(|&&t| t == j).count() as u32,
+            "count cache out of sync for trainer {j}"
+        );
+        cached
+    }
+
+    /// Scheduled reclaim time of a node (INFINITY when unknown or absent).
+    pub fn reclaim_of(&self, n: NodeId) -> f64 {
+        self.reclaim_at.get(&n).copied().unwrap_or(f64::INFINITY)
     }
 
     /// Current allocation as trainer -> node list.
@@ -65,13 +96,29 @@ impl Pool {
         self.assigned.get(&n).copied()
     }
 
-    /// Nodes join N. Returns how many were genuinely new.
-    pub fn join(&mut self, nodes: &[NodeId]) -> usize {
+    /// The pool as a remaining-lifetime profile at time `now`, bucketed
+    /// relative to `t_fwd` — what [`super::Coordinator::request`] hands
+    /// the allocators. Blind pools (all reclaims unknown) collapse to
+    /// [`LifetimeProfile::flat`].
+    pub fn lifetime_profile(&self, now: f64, t_fwd: f64) -> LifetimeProfile {
+        LifetimeProfile::from_lives(
+            self.nodes.iter().map(|n| self.reclaim_of(*n) - now),
+            t_fwd,
+        )
+    }
+
+    /// Nodes join N, carrying their scheduled reclaim times (`reclaim_at`
+    /// parallel to `nodes`; empty = all unknown). Returns how many were
+    /// genuinely new. Re-joining a node refreshes its annotation.
+    pub fn join(&mut self, nodes: &[NodeId], reclaim_at: &[f64]) -> usize {
+        debug_assert!(reclaim_at.is_empty() || reclaim_at.len() == nodes.len());
         let mut added = 0;
-        for &n in nodes {
+        for (i, &n) in nodes.iter().enumerate() {
             if self.nodes.insert(n) {
                 added += 1;
             }
+            let r = reclaim_at.get(i).copied().unwrap_or(f64::INFINITY);
+            self.reclaim_at.insert(n, r);
         }
         added
     }
@@ -83,7 +130,9 @@ impl Pool {
         let mut hit: BTreeMap<TrainerId, u32> = BTreeMap::new();
         for &n in nodes {
             if self.nodes.remove(&n) {
+                self.reclaim_at.remove(&n);
                 if let Some(j) = self.assigned.remove(&n) {
+                    self.dec_count(j);
                     *hit.entry(j).or_insert(0) += 1;
                 }
             }
@@ -98,12 +147,31 @@ impl Pool {
         for n in &mine {
             self.assigned.remove(n);
         }
+        self.counts.remove(&j);
         mine.len() as u32
     }
 
+    fn dec_count(&mut self, j: TrainerId) {
+        match self.counts.get_mut(&j) {
+            Some(c) if *c > 1 => *c -= 1,
+            Some(_) => {
+                self.counts.remove(&j);
+            }
+            None => debug_assert!(false, "count cache underflow for trainer {j}"),
+        }
+    }
+
+    fn inc_count(&mut self, j: TrainerId) {
+        *self.counts.entry(j).or_insert(0) += 1;
+    }
+
     /// Apply a target scale map (trainer -> n_j), respecting no-migration:
-    /// trainers that shrink keep an arbitrary subset of their own nodes;
-    /// trainers that grow receive only free/released nodes. Panics if the
+    /// trainers that shrink keep a subset of their own nodes — the
+    /// longest-lived ones, releasing the shortest-life first; trainers
+    /// that grow receive only free/released nodes, longest-remaining-life
+    /// first. Ties (and lifetime-blind pools, where every reclaim is
+    /// INFINITY) fall back to the original deterministic order: release
+    /// highest-numbered first, grow lowest-numbered first. Panics if the
     /// targets are infeasible (sum exceeds pool size) — allocators must
     /// never produce that.
     pub fn apply_allocation(&mut self, targets: &BTreeMap<TrainerId, u32>) {
@@ -113,42 +181,46 @@ impl Pool {
             "allocation {total} exceeds pool {}",
             self.nodes.len()
         );
-        // Phase 1: shrink (including to zero) — releases nodes.
+        // Phase 1: shrink (including to zero) — releases nodes, shortest
+        // scheduled life first (ties: highest id, the original order).
         for (&j, &want) in targets {
             let have = self.count_of(j);
             if want < have {
-                let mut excess = have - want;
-                let mine: Vec<NodeId> =
+                let mut mine: Vec<NodeId> =
                     self.assigned.iter().filter(|&(_, &t)| t == j).map(|(&n, _)| n).collect();
-                // Release highest-numbered first (deterministic).
-                for n in mine.into_iter().rev() {
-                    if excess == 0 {
-                        break;
-                    }
+                mine.sort_by(|a, b| {
+                    self.reclaim_of(*a).total_cmp(&self.reclaim_of(*b)).then(b.cmp(a))
+                });
+                for n in mine.into_iter().take((have - want) as usize) {
                     self.assigned.remove(&n);
-                    excess -= 1;
+                    self.dec_count(j);
                 }
             }
         }
         // Drop assignments for trainers not in the target map at all.
         let known: BTreeSet<TrainerId> = targets.keys().copied().collect();
-        let stray: Vec<NodeId> = self
+        let stray: Vec<(NodeId, TrainerId)> = self
             .assigned
             .iter()
             .filter(|&(_, t)| !known.contains(t))
-            .map(|(&n, _)| n)
+            .map(|(&n, &t)| (n, t))
             .collect();
-        for n in stray {
+        for (n, j) in stray {
             self.assigned.remove(&n);
+            self.dec_count(j);
         }
-        // Phase 2: grow from the free list.
-        let mut free = self.free_nodes().into_iter();
+        // Phase 2: grow from the free list, longest remaining life first
+        // (ties: lowest id, the original order).
+        let mut free = self.free_nodes();
+        free.sort_by(|a, b| self.reclaim_of(*b).total_cmp(&self.reclaim_of(*a)).then(a.cmp(b)));
+        let mut free = free.into_iter();
         for (&j, &want) in targets {
             let have = self.count_of(j);
             if want > have {
                 for _ in 0..(want - have) {
                     let n = free.next().expect("free node accounting broken");
                     self.assigned.insert(n, j);
+                    self.inc_count(j);
                 }
             }
         }
@@ -166,16 +238,17 @@ mod tests {
     #[test]
     fn join_and_free_accounting() {
         let mut p = Pool::new();
-        assert_eq!(p.join(&[1, 2, 3]), 3);
-        assert_eq!(p.join(&[3]), 0); // duplicate
+        assert_eq!(p.join(&[1, 2, 3], &[]), 3);
+        assert_eq!(p.join(&[3], &[]), 0); // duplicate
         assert_eq!(p.len(), 3);
         assert_eq!(p.n_free(), 3);
+        assert!(p.reclaim_of(1).is_infinite());
     }
 
     #[test]
     fn allocation_grows_from_free_nodes_only() {
         let mut p = Pool::new();
-        p.join(&[1, 2, 3, 4]);
+        p.join(&[1, 2, 3, 4], &[]);
         p.apply_allocation(&map(&[(0, 2), (1, 2)]));
         assert_eq!(p.count_of(0), 2);
         assert_eq!(p.count_of(1), 2);
@@ -185,7 +258,7 @@ mod tests {
     #[test]
     fn shrink_keeps_subset_of_own_nodes() {
         let mut p = Pool::new();
-        p.join(&[1, 2, 3, 4]);
+        p.join(&[1, 2, 3, 4], &[]);
         p.apply_allocation(&map(&[(0, 4)]));
         let before: BTreeSet<NodeId> = p.allocation()[&0].iter().copied().collect();
         p.apply_allocation(&map(&[(0, 2)]));
@@ -197,7 +270,7 @@ mod tests {
     #[test]
     fn grow_keeps_all_own_nodes() {
         let mut p = Pool::new();
-        p.join(&[1, 2, 3, 4, 5]);
+        p.join(&[1, 2, 3, 4, 5], &[]);
         p.apply_allocation(&map(&[(0, 2)]));
         let before: BTreeSet<NodeId> = p.allocation()[&0].iter().copied().collect();
         p.apply_allocation(&map(&[(0, 4)]));
@@ -208,7 +281,7 @@ mod tests {
     #[test]
     fn leave_reports_affected_trainers() {
         let mut p = Pool::new();
-        p.join(&[1, 2, 3, 4]);
+        p.join(&[1, 2, 3, 4], &[]);
         p.apply_allocation(&map(&[(0, 2), (1, 2)]));
         let t0_nodes = p.allocation()[&0].clone();
         let hit = p.leave(&[t0_nodes[0], 99]); // 99 not in pool
@@ -222,7 +295,7 @@ mod tests {
         // Shrink A by 1 and grow B by 1 in one call: B gets A's released
         // node (that's allowed — B only adds).
         let mut p = Pool::new();
-        p.join(&[1, 2]);
+        p.join(&[1, 2], &[]);
         p.apply_allocation(&map(&[(0, 2)]));
         p.apply_allocation(&map(&[(0, 1), (1, 1)]));
         assert_eq!(p.count_of(0), 1);
@@ -232,7 +305,7 @@ mod tests {
     #[test]
     fn trainer_absent_from_target_is_fully_released() {
         let mut p = Pool::new();
-        p.join(&[1, 2]);
+        p.join(&[1, 2], &[]);
         p.apply_allocation(&map(&[(0, 2)]));
         p.apply_allocation(&map(&[(1, 1)]));
         assert_eq!(p.count_of(0), 0);
@@ -244,16 +317,85 @@ mod tests {
     #[should_panic]
     fn over_allocation_panics() {
         let mut p = Pool::new();
-        p.join(&[1]);
+        p.join(&[1], &[]);
         p.apply_allocation(&map(&[(0, 2)]));
     }
 
     #[test]
     fn release_all_frees_nodes() {
         let mut p = Pool::new();
-        p.join(&[1, 2, 3]);
+        p.join(&[1, 2, 3], &[]);
         p.apply_allocation(&map(&[(0, 3)]));
         assert_eq!(p.release_all(0), 3);
         assert_eq!(p.n_free(), 3);
+        assert_eq!(p.count_of(0), 0);
+    }
+
+    #[test]
+    fn blind_placement_matches_original_order() {
+        // No lifetime info: growth takes ascending node ids, shrink
+        // releases highest-numbered first — the pre-lifetime behavior.
+        let mut p = Pool::new();
+        p.join(&[5, 1, 9, 3], &[]);
+        p.apply_allocation(&map(&[(0, 3)]));
+        assert_eq!(p.allocation()[&0], vec![1, 3, 5]);
+        p.apply_allocation(&map(&[(0, 1)]));
+        assert_eq!(p.allocation()[&0], vec![1]);
+    }
+
+    #[test]
+    fn informed_placement_prefers_long_lived_nodes() {
+        // Nodes 1,2 die at t=50; 3,4,5 have no scheduled reclaim. A
+        // 3-node trainer must land on {3,4,5}.
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3, 4, 5], &[50.0, 50.0, f64::INFINITY, f64::INFINITY, f64::INFINITY]);
+        p.apply_allocation(&map(&[(0, 3)]));
+        assert_eq!(p.allocation()[&0], vec![3, 4, 5]);
+        // Shrinking to 1 keeps a long-lived node even after the doomed
+        // ones join the trainer.
+        p.apply_allocation(&map(&[(0, 5)]));
+        p.apply_allocation(&map(&[(0, 1)]));
+        let kept = p.allocation()[&0][0];
+        assert!(p.reclaim_of(kept).is_infinite(), "kept doomed node {kept}");
+    }
+
+    #[test]
+    fn informed_release_drops_shortest_life_first() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3], &[300.0, 100.0, 200.0]);
+        p.apply_allocation(&map(&[(0, 3)]));
+        p.apply_allocation(&map(&[(0, 2)]));
+        // node 2 (life 100) released first
+        assert_eq!(p.allocation()[&0], vec![1, 3]);
+        p.apply_allocation(&map(&[(0, 1)]));
+        assert_eq!(p.allocation()[&0], vec![1]);
+    }
+
+    #[test]
+    fn lifetime_profile_buckets_pool() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3], &[1000.0, 130.0, f64::INFINITY]);
+        let prof = p.lifetime_profile(100.0, 600.0);
+        assert_eq!(prof.size(), 3);
+        // remaining lives at now=100: 900 (>= t_fwd), 30, INF
+        assert_eq!(prof.classes[0], (f64::INFINITY, 2));
+        assert_eq!(prof.classes[1].1, 1);
+        assert!(prof.classes[1].0 < 600.0);
+    }
+
+    #[test]
+    fn count_cache_tracks_every_mutation() {
+        let mut p = Pool::new();
+        p.join(&[1, 2, 3, 4, 5, 6], &[]);
+        p.apply_allocation(&map(&[(0, 3), (1, 2)]));
+        assert_eq!(p.count_of(0), 3);
+        p.leave(&[p.allocation()[&0][0]]);
+        assert_eq!(p.count_of(0), 2);
+        p.apply_allocation(&map(&[(0, 1), (1, 3)]));
+        assert_eq!(p.count_of(0), 1);
+        assert_eq!(p.count_of(1), 3);
+        p.release_all(1);
+        assert_eq!(p.count_of(1), 0);
+        assert_eq!(p.n_free(), 4);
     }
 }

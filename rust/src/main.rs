@@ -126,13 +126,58 @@ fn cmd_characterize(args: &[String]) -> i32 {
     0
 }
 
+/// Parse a `--knowledge` flag value, reporting the accepted names.
+fn parse_knowledge(s: &str) -> Option<trace::Knowledge> {
+    let k = trace::Knowledge::parse(s);
+    if k.is_none() {
+        eprintln!("unknown knowledge mode {s:?} (blind | oracle | walltime)");
+    }
+    k
+}
+
+/// One trace per requested knowledge mode, in flag order, running the
+/// expensive generation/backfill replay once per *informed* mode: the
+/// modes share the event topology (DESIGN.md §13.1), so Blind is derived
+/// by stripping an informed trace's annotations whenever one is also
+/// requested, instead of replaying the whole job stream again.
+fn traces_by_knowledge(
+    modes: &[trace::Knowledge],
+    mut make: impl FnMut(trace::Knowledge) -> trace::Trace,
+) -> Vec<(trace::Knowledge, Arc<trace::Trace>)> {
+    use trace::Knowledge;
+    let mut cache: Vec<(Knowledge, Arc<trace::Trace>)> = Vec::new();
+    let mut cached = |cache: &mut Vec<(Knowledge, Arc<trace::Trace>)>, m: Knowledge| {
+        if let Some((_, t)) = cache.iter().find(|(k, _)| *k == m) {
+            return t.clone();
+        }
+        let t = Arc::new(make(m));
+        cache.push((m, t.clone()));
+        t
+    };
+    modes
+        .iter()
+        .map(|&mode| {
+            let t = match modes.iter().copied().find(|&m| m != Knowledge::Blind) {
+                Some(informed) if mode == Knowledge::Blind => {
+                    Arc::new(cached(&mut cache, informed).strip_annotations())
+                }
+                _ => cached(&mut cache, mode),
+            };
+            (mode, t)
+        })
+        .collect()
+}
+
 fn cmd_synth_trace(args: &[String]) -> i32 {
     let cmd = Command::new("synth-trace", "generate an idle-node trace CSV")
         .opt("machine", "summit", "machine preset")
         .opt("seed", "42", "trace seed")
+        .opt("knowledge", "blind", "hole-lifetime knowledge: blind | oracle | walltime")
         .opt("out", "trace.csv", "output path");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
-    let params = machines::by_name(&m.get_str("machine").unwrap()).expect("machine");
+    let mut params = machines::by_name(&m.get_str("machine").unwrap()).expect("machine");
+    let Some(k) = parse_knowledge(&m.get_str("knowledge").unwrap()) else { return 2 };
+    params.knowledge = k;
     let t = trace::generate(&params, m.get_u64("seed").unwrap());
     let out = m.get_str("out").unwrap();
     if let Err(e) = t.save_csv(std::path::Path::new(&out)) {
@@ -177,6 +222,7 @@ fn cmd_trace(args: &[String]) -> i32 {
         .opt("hours", "168", "window length (h)")
         .opt("warmup-h", "24", "lead-in replayed before the window (h)")
         .opt("debounce", "10", "drop idle fragments shorter than this (s)")
+        .opt("knowledge", "blind", "hole-lifetime knowledge: blind | oracle | walltime")
         .opt("out", "", "write the sliced trace as an event CSV");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
     let path = m.get_str("swf").unwrap();
@@ -206,6 +252,8 @@ fn cmd_trace(args: &[String]) -> i32 {
     );
     spec.warmup_s = m.get_f64("warmup-h").unwrap() * 3600.0;
     spec.debounce_s = m.get_f64("debounce").unwrap();
+    let Some(k) = parse_knowledge(&m.get_str("knowledge").unwrap()) else { return 2 };
+    spec.knowledge = k;
     let sliced = trace::swf::slice(&log, &spec);
     println!(
         "slice: {} nodes, window [{:.1} h, {:.1} h): {} jobs in window, {} started, \
@@ -284,6 +332,7 @@ fn cmd_replay(args: &[String]) -> i32 {
         .opt("dnn", "ShuffleNet", "HPO model (Tab 2 name)")
         .opt("epochs", "2", "ImageNet epochs per trainer")
         .opt("hours", "24", "trace hours to replay")
+        .opt("knowledge", "blind", "hole-lifetime knowledge: blind | oracle | walltime")
         .flag("run-to-completion", "continue past trace end");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
     let mut cfg = if m.get_str("config").unwrap().is_empty() {
@@ -319,6 +368,8 @@ fn cmd_replay(args: &[String]) -> i32 {
 
     let mut params = machines::by_name(&cfg.machine).unwrap();
     params.duration_s = cfg.duration_hours * 3600.0;
+    let Some(k) = parse_knowledge(&m.get_str("knowledge").unwrap()) else { return 2 };
+    params.knowledge = k;
     let t = trace::generate(&params, cfg.seed);
     let wl = build_workload(&cfg);
     let coord = build_coordinator(&cfg);
@@ -352,6 +403,10 @@ fn cmd_replay(args: &[String]) -> i32 {
         ])
         .row(vec!["preemptions".to_string(), mm.preemptions.to_string()])
         .row(vec![
+            "leaves anticipated/surprise".to_string(),
+            format!("{}/{}", mm.leaves_anticipated, mm.leaves_surprise),
+        ])
+        .row(vec![
             "completed trainers".to_string(),
             format!("{}/{}", mm.completed, cfg.trainers),
         ])
@@ -368,6 +423,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
         .opt("objectives", "throughput", "comma list: throughput | efficiency | priority")
         .opt("machine", "summit", "machine preset")
         .opt("seeds", "42", "comma list of trace seeds (one scenario each)")
+        .opt(
+            "knowledge",
+            "blind",
+            "comma list of lifetime-knowledge modes per scenario: blind | oracle | walltime",
+        )
         .opt("hours", "8", "trace hours per scenario")
         .opt("workload", "hpo", "hpo | diverse")
         .opt("trainers", "20", "number of trainers")
@@ -425,8 +485,18 @@ fn cmd_sweep(args: &[String]) -> i32 {
         }
         v
     };
-    if policies.is_empty() || objectives.is_empty() || seeds.is_empty() {
-        eprintln!("need at least one policy, objective and seed");
+    let modes: Vec<trace::Knowledge> = {
+        let mut v = Vec::new();
+        for s in m.get_str("knowledge").unwrap().split(',').filter(|s| !s.trim().is_empty()) {
+            match parse_knowledge(s.trim()) {
+                Some(k) => v.push(k),
+                None => return 2,
+            }
+        }
+        v
+    };
+    if policies.is_empty() || objectives.is_empty() || seeds.is_empty() || modes.is_empty() {
+        eprintln!("need at least one policy, objective, seed and knowledge mode");
         return 2;
     }
     let Some(mut params) = machines::by_name(&m.get_str("machine").unwrap()) else {
@@ -449,12 +519,21 @@ fn cmd_sweep(args: &[String]) -> i32 {
     let opts =
         ReplayOpts { run_to_completion: m.flag("run-to-completion"), ..Default::default() };
 
-    // One trace + workload per scenario (synthetic seed or SWF slice),
-    // shared across the policy × objective grid of that scenario.
-    let mut scenarios: Vec<(String, Arc<trace::Trace>)> = Vec::new();
+    // One trace per (scenario × knowledge mode) — synthetic seed or SWF
+    // slice; knowledge changes only the reclaim annotations, so all modes
+    // of one scenario share the event topology and [`traces_by_knowledge`]
+    // replays each job stream only once per informed mode. The workload is
+    // shared across the policy × objective grid of each scenario.
+    let mut scenarios: Vec<(String, &'static str, u64, Arc<trace::Trace>)> = Vec::new();
     for &seed in &seeds {
         let label = format!("{}/s{}", m.get_str("machine").unwrap(), seed);
-        scenarios.push((label, Arc::new(trace::generate(&params, seed))));
+        let traces = traces_by_knowledge(&modes, |mode| {
+            params.knowledge = mode;
+            trace::generate(&params, seed)
+        });
+        for (mode, t) in traces {
+            scenarios.push((label.clone(), mode.name(), seed, t));
+        }
     }
     let swf_path = m.get_str("swf").unwrap();
     if !swf_path.is_empty() {
@@ -465,32 +544,38 @@ fn cmd_sweep(args: &[String]) -> i32 {
                 return 2;
             }
         };
-        let spec = swf_slice_spec(
+        let mut spec = swf_slice_spec(
             m.get_u64("swf-nodes").unwrap() as u32,
             m.get_u64("swf-procs-per-node").unwrap() as u32,
             m.get_u64("swf-week").unwrap(),
             -1.0,
             m.get_f64("hours").unwrap(),
         );
-        let sliced = trace::swf::slice(&log, &spec);
         let stem = std::path::Path::new(&swf_path)
             .file_stem()
             .map_or_else(|| "log".to_string(), |s| s.to_string_lossy().into_owned());
         let label = format!("swf:{}/w{}", stem, m.get_u64("swf-week").unwrap());
-        eprintln!(
-            "{label}: {} jobs in window, {} started, {} too large, {} events",
-            sliced.jobs_in_window,
-            sliced.started,
-            sliced.dropped_too_large,
-            sliced.trace.len()
-        );
-        scenarios.push((label, Arc::new(sliced.trace)));
+        let traces = traces_by_knowledge(&modes, |mode| {
+            spec.knowledge = mode;
+            let sliced = trace::swf::slice(&log, &spec);
+            eprintln!(
+                "{label} ({}): {} jobs in window, {} started, {} too large, {} events",
+                mode.name(),
+                sliced.jobs_in_window,
+                sliced.started,
+                sliced.dropped_too_large,
+                sliced.trace.len()
+            );
+            sliced.trace
+        });
+        for (mode, t) in traces {
+            scenarios.push((label.clone(), mode.name(), seeds[0], t));
+        }
     }
     let mut cases = Vec::new();
-    for (i, (label, trace)) in scenarios.iter().enumerate() {
-        let seed = seeds.get(i).copied().unwrap_or(seeds[0]);
+    for (label, knowledge, seed, trace) in &scenarios {
         let wl = Arc::new(if diverse {
-            workload::diverse_poisson(trainers, epochs, mean_gap_s, seed)
+            workload::diverse_poisson(trainers, epochs, mean_gap_s, *seed)
         } else {
             workload::hpo_campaign(dnn, trainers, epochs)
         });
@@ -498,6 +583,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
             for objective in &objectives {
                 cases.push(SweepCase {
                     label: label.clone(),
+                    knowledge: (*knowledge).to_string(),
                     policy: policy.clone(),
                     objective: objective.clone(),
                     t_fwd: m.get_f64("t-fwd").unwrap(),
@@ -511,7 +597,7 @@ fn cmd_sweep(args: &[String]) -> i32 {
         }
     }
     eprintln!(
-        "sweep: {} cases ({} scenarios × {} policies × {} objectives)",
+        "sweep: {} cases ({} scenario × knowledge combos × {} policies × {} objectives)",
         cases.len(),
         scenarios.len(),
         policies.len(),

@@ -160,10 +160,10 @@ mod tests {
         let id = coord.submit(spec, 0.0);
 
         let mut trace = Trace::new(8);
-        trace.push(PoolEvent { t: 0.0, joins: vec![0, 1], leaves: vec![] });
-        trace.push(PoolEvent { t: 100.0, joins: vec![2, 3], leaves: vec![] });
-        trace.push(PoolEvent { t: 200.0, joins: vec![], leaves: vec![0] });
-        trace.push(PoolEvent { t: 300.0, joins: vec![], leaves: vec![] });
+        trace.push(PoolEvent { t: 0.0, joins: vec![0, 1], leaves: vec![], ..Default::default() });
+        trace.push(PoolEvent { t: 100.0, joins: vec![2, 3], leaves: vec![], ..Default::default() });
+        trace.push(PoolEvent { t: 200.0, joins: vec![], leaves: vec![0], ..Default::default() });
+        trace.push(PoolEvent { t: 300.0, joins: vec![], leaves: vec![], ..Default::default() });
 
         let vars: BTreeMap<usize, Variant> = [(id, v)].into_iter().collect();
         let res = run(coord, &trace, &engine, &vars, &opts).unwrap();

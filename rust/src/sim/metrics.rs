@@ -59,6 +59,14 @@ pub struct ReplayMetrics {
     /// figure pipeline gates on (wall-clock solve times are recorded but
     /// never compared).
     pub lp_refactorizations: u64,
+    /// Node leaves whose scheduled reclaim time had arrived when they
+    /// fired — the predicted side of predicted-vs-realized preemption
+    /// accounting (0 on lifetime-blind traces).
+    pub leaves_anticipated: u64,
+    /// Node leaves with no (or a later) scheduled reclaim — surprises the
+    /// forward-looking strategy could not plan around. On a blind trace
+    /// every leave is a surprise.
+    pub leaves_surprise: u64,
 }
 
 /// Per-window efficiency series (Fig 10): (window start, U).

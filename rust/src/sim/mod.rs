@@ -92,8 +92,8 @@ mod tests {
     #[test]
     fn baseline_run_defaults_and_runs() {
         let mut t = Trace::new(8);
-        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
-        t.push(PoolEvent { t: 2000.0, joins: vec![], leaves: (0..4).collect() });
+        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![], ..Default::default() });
+        t.push(PoolEvent { t: 2000.0, leaves: (0..4).collect(), ..Default::default() });
         let wl = Workload::all_at_zero(vec![TrainerSpec {
             name: "t".into(),
             n_min: 1,

@@ -44,6 +44,10 @@ pub struct ReplayResult {
     pub coordinator: Coordinator,
     /// Replay horizon actually simulated.
     pub horizon: f64,
+    /// Pool-size samples `(t, |N|)` the resource integral was computed
+    /// from — strictly the trace's event points (no duplicate `(0, 0)`
+    /// sentinel when the trace starts at t = 0).
+    pub pool_sizes: Vec<(f64, usize)>,
 }
 
 impl ReplayResult {
@@ -87,7 +91,12 @@ pub fn replay(
     let mut windowed = WindowedSeries { window_s: opts.window_s, values: Vec::new() };
     let mut window_acc = 0.0f64;
     let mut window_start = 0.0f64;
-    let mut pool_sizes: Vec<(f64, usize)> = vec![(0.0, 0)];
+    // Seed the (0, empty-pool) sample only when the trace leaves a gap
+    // before its first event — a trace whose first event is at t = 0
+    // would otherwise produce a duplicate-t sentinel that pollutes the
+    // resource-integral inputs.
+    let mut pool_sizes: Vec<(f64, usize)> =
+        if trace.events.first().is_none_or(|e| e.t > 0.0) { vec![(0.0, 0)] } else { Vec::new() };
 
     let trace_end = trace.events.last().map(|e| e.t).unwrap_or(0.0);
     let horizon = if opts.horizon_s > 0.0 { opts.horizon_s } else { trace_end };
@@ -189,7 +198,18 @@ pub fn replay(
             }
         }
     }
-    pool_sizes.push((now, coord.pool.len()));
+    // Close the series at the final clock; skip when it would duplicate
+    // the last sample (empty traces, horizon landing on the last event).
+    if pool_sizes.last() != Some(&(now, coord.pool.len())) {
+        pool_sizes.push((now, coord.pool.len()));
+    }
+    debug_assert!(pool_sizes.windows(2).all(|w| w[0].0 <= w[1].0), "pool_sizes out of order");
+    // Regression guard for the duplicate t=0 sentinel: the empty-pool
+    // seed may only appear when the first real sample comes later.
+    debug_assert!(
+        !(pool_sizes.len() >= 2 && pool_sizes[0] == (0.0, 0) && pool_sizes[1].0 == 0.0),
+        "duplicate (0, 0) sentinel in pool_sizes"
+    );
 
     // final partial window
     if opts.window_s > 0.0 && window_acc > 0.0 {
@@ -220,6 +240,8 @@ pub fn replay(
             .iter()
             .map(|e| e.lp_refactorizations as u64)
             .sum(),
+        leaves_anticipated: coord.event_log.iter().map(|e| e.leaves_anticipated as u64).sum(),
+        leaves_surprise: coord.event_log.iter().map(|e| e.leaves_surprise as u64).sum(),
     };
     ReplayResult {
         metrics,
@@ -227,6 +249,7 @@ pub fn replay(
         windowed_samples: windowed,
         coordinator: coord,
         horizon: now,
+        pool_sizes,
     }
 }
 
@@ -246,12 +269,8 @@ pub fn static_baseline_outcome(
         spec.r_dw = 0.0;
     }
     let mut trace = Trace::new(eq_nodes);
-    trace.push(PoolEvent { t: 0.0, joins: (0..eq_nodes).collect(), leaves: vec![] });
-    trace.push(PoolEvent {
-        t: duration_s,
-        joins: vec![],
-        leaves: (0..eq_nodes).collect(),
-    });
+    trace.push(PoolEvent { t: 0.0, joins: (0..eq_nodes).collect(), ..Default::default() });
+    trace.push(PoolEvent { t: duration_s, leaves: (0..eq_nodes).collect(), ..Default::default() });
     coord.rescale_cost_multiplier = 0.0;
     let opts = ReplayOpts { horizon_s: duration_s, ..Default::default() };
     let res = replay(coord, &trace, &wl, &opts);
@@ -303,9 +322,9 @@ mod tests {
 
     fn simple_trace() -> Trace {
         let mut t = Trace::new(16);
-        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
-        t.push(PoolEvent { t: 1000.0, joins: (4..8).collect(), leaves: vec![] });
-        t.push(PoolEvent { t: 2000.0, joins: vec![], leaves: (0..8).collect() });
+        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![], ..Default::default() });
+        t.push(PoolEvent { t: 1000.0, joins: (4..8).collect(), ..Default::default() });
+        t.push(PoolEvent { t: 2000.0, leaves: (0..8).collect(), ..Default::default() });
         t
     }
 
@@ -348,6 +367,42 @@ mod tests {
         let res = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
         // 4 nodes × 1000 s + 8 × 1000 s = 12000 node-s = 10/3 node-h
         assert!((res.metrics.resource_node_hours - 12000.0 / 3600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_duplicate_sentinel_when_trace_starts_at_zero() {
+        // simple_trace's first event is at t = 0: the pool_sizes series
+        // must open with the real (0, 4) sample, not a (0, 0) sentinel.
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let res = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
+        assert_eq!(res.pool_sizes.first(), Some(&(0.0, 4)));
+        // A trace starting later keeps the empty-pool seed.
+        let mut late = Trace::new(16);
+        late.push(PoolEvent { t: 100.0, joins: (0..4).collect(), ..Default::default() });
+        let res = replay(coord(), &late, &wl, &ReplayOpts::default());
+        assert_eq!(res.pool_sizes.first(), Some(&(0.0, 0)));
+        assert!((res.metrics.eq_nodes - 4.0).abs() < 4.1, "integral still sane");
+    }
+
+    #[test]
+    fn annotated_trace_classifies_leaves() {
+        // Joins annotated with their exact reclaim: both leaves at
+        // t=2000 are anticipated; the blind variant counts surprises.
+        let mut t = Trace::new(16);
+        t.push(PoolEvent {
+            t: 0.0,
+            joins: (0..2).collect(),
+            reclaim_at: vec![2000.0, 2000.0],
+            ..Default::default()
+        });
+        t.push(PoolEvent { t: 2000.0, leaves: (0..2).collect(), ..Default::default() });
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let res = replay(coord(), &t, &wl, &ReplayOpts::default());
+        assert_eq!(res.metrics.leaves_anticipated, 2);
+        assert_eq!(res.metrics.leaves_surprise, 0);
+        let blind = replay(coord(), &simple_trace(), &wl, &ReplayOpts::default());
+        assert_eq!(blind.metrics.leaves_anticipated, 0);
+        assert_eq!(blind.metrics.leaves_surprise, 8);
     }
 
     #[test]
@@ -394,8 +449,8 @@ mod tests {
         // never finish, so completion must rely on... give it a pool that
         // persists: modify trace to keep 2 nodes.
         let mut t = Trace::new(16);
-        t.push(PoolEvent { t: 0.0, joins: (0..2).collect(), leaves: vec![] });
-        t.push(PoolEvent { t: 100.0, joins: vec![2], leaves: vec![] });
+        t.push(PoolEvent { t: 0.0, joins: (0..2).collect(), leaves: vec![], ..Default::default() });
+        t.push(PoolEvent { t: 100.0, joins: vec![2], leaves: vec![], ..Default::default() });
         let wl = Workload::all_at_zero(vec![spec(100_000.0)]);
         let opts = ReplayOpts { run_to_completion: true, ..Default::default() };
         let res = replay(coord(), &t, &wl, &opts);

@@ -23,6 +23,11 @@ use std::time::Instant;
 pub struct SweepCase {
     /// Scenario tag shown in the table (e.g. `summit/s42`).
     pub label: String,
+    /// Lifetime-knowledge mode the scenario trace was generated with
+    /// (`blind` / `oracle` / `walltime`) — a label for the table and the
+    /// JSON record; the trace itself already carries (or omits) the
+    /// reclaim annotations.
+    pub knowledge: String,
     /// Allocator name for [`allocator_by_name`].
     pub policy: String,
     pub objective: Objective,
@@ -42,6 +47,8 @@ pub struct SweepCase {
 #[derive(Clone, Debug)]
 pub struct SweepOutcome {
     pub label: String,
+    /// Lifetime-knowledge mode of the scenario trace.
+    pub knowledge: String,
     pub policy: String,
     pub objective: &'static str,
     pub events: usize,
@@ -63,6 +70,10 @@ pub struct SweepOutcome {
     /// Solves that warm-started from the previous event.
     pub warm_started: usize,
     pub preemptions: u64,
+    /// Node leaves that matched / missed their scheduled reclaim time
+    /// (predicted-vs-realized; both 0 on blind traces).
+    pub leaves_anticipated: u64,
+    pub leaves_surprise: u64,
     pub completed: usize,
     /// Wall-clock time this case took to replay (seconds).
     pub wall_s: f64,
@@ -127,6 +138,7 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
     let m = &res.metrics;
     SweepOutcome {
         label: case.label.clone(),
+        knowledge: case.knowledge.clone(),
         policy: case.policy.clone(),
         objective: case.objective.name(),
         events: m.n_events,
@@ -140,25 +152,32 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
         fallbacks: m.fallbacks,
         warm_started: res.coordinator.event_log.iter().filter(|e| e.warm_started).count(),
         preemptions: m.preemptions,
+        leaves_anticipated: m.leaves_anticipated,
+        leaves_surprise: m.leaves_surprise,
         completed: m.completed,
         wall_s: t0.elapsed().as_secs_f64(),
     }
 }
 
-/// Render the cross-scenario comparison table, one row per outcome plus a
-/// trailing `best U` marker row per scenario label.
+/// Render the cross-scenario comparison table, one row per outcome, with
+/// a `*` marking the best-U policy within each (scenario, knowledge)
+/// group.
 pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
     let mut tab = Table::new(vec![
-        "scenario", "policy", "objective", "events", "A_e", "U", "solve ms (mean/max)",
+        "scenario", "know", "policy", "objective", "events", "A_e", "U", "solve ms (mean/max)",
         "LP iters/refac", "warm", "fallbacks", "preempt", "done", "wall s",
     ]);
     for o in outcomes {
+        // Best policy within its (scenario, knowledge) group — comparing
+        // U across knowledge regimes would let the informed rows hide the
+        // best blind policy.
         let best = outcomes
             .iter()
-            .filter(|x| x.label == o.label)
+            .filter(|x| x.label == o.label && x.knowledge == o.knowledge)
             .all(|x| o.utilization >= x.utilization - 1e-12);
         tab.row(vec![
             o.label.clone(),
+            o.knowledge.clone(),
             if best { format!("{} *", o.policy) } else { o.policy.clone() },
             o.objective.to_string(),
             o.events.to_string(),
@@ -208,14 +227,17 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
     for (i, o) in outcomes.iter().enumerate() {
         s.push_str(&format!(
             concat!(
-                "  {{\"scenario\": \"{}\", \"policy\": \"{}\", \"objective\": \"{}\", ",
+                "  {{\"scenario\": \"{}\", \"knowledge\": \"{}\", \"policy\": \"{}\", ",
+                "\"objective\": \"{}\", ",
                 "\"events\": {}, \"samples\": {}, \"baseline\": {}, \"utilization\": {}, ",
                 "\"mean_solve_ms\": {}, \"max_solve_ms\": {}, \"lp_iterations\": {}, ",
                 "\"lp_refactorizations\": {}, ",
                 "\"warm_started\": {}, \"fallbacks\": {}, \"preemptions\": {}, ",
+                "\"leaves_anticipated\": {}, \"leaves_surprise\": {}, ",
                 "\"completed\": {}, \"wall_s\": {}}}"
             ),
             esc(&o.label),
+            esc(&o.knowledge),
             esc(&o.policy),
             esc(o.objective),
             o.events,
@@ -229,6 +251,8 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
             o.warm_started,
             o.fallbacks,
             o.preemptions,
+            o.leaves_anticipated,
+            o.leaves_surprise,
             o.completed,
             num(o.wall_s),
         ));
@@ -259,9 +283,9 @@ mod tests {
 
     fn tiny_trace() -> Arc<Trace> {
         let mut t = Trace::new(16);
-        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![] });
-        t.push(PoolEvent { t: 1000.0, joins: (4..8).collect(), leaves: vec![] });
-        t.push(PoolEvent { t: 2000.0, joins: vec![], leaves: (0..8).collect() });
+        t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), leaves: vec![], ..Default::default() });
+        t.push(PoolEvent { t: 1000.0, joins: (4..8).collect(), ..Default::default() });
+        t.push(PoolEvent { t: 2000.0, leaves: (0..8).collect(), ..Default::default() });
         Arc::new(t)
     }
 
@@ -273,6 +297,7 @@ mod tests {
             for objective in [Objective::Throughput, Objective::ScalingEfficiency] {
                 out.push(SweepCase {
                     label: "tiny/s0".into(),
+                    knowledge: "blind".into(),
                     policy: policy.into(),
                     objective,
                     t_fwd: 120.0,
@@ -349,6 +374,7 @@ mod tests {
         assert_eq!(arr.len(), outs.len());
         for (v, o) in arr.iter().zip(&outs) {
             assert_eq!(v.get("scenario").and_then(|j| j.as_str()), Some(o.label.as_str()));
+            assert_eq!(v.get("knowledge").and_then(|j| j.as_str()), Some(o.knowledge.as_str()));
             assert_eq!(v.get("policy").and_then(|j| j.as_str()), Some(o.policy.as_str()));
             assert_eq!(v.get("events").and_then(|j| j.as_usize()), Some(o.events));
             let u = v.get("utilization").and_then(|j| j.as_f64()).unwrap();

@@ -19,11 +19,22 @@ pub struct PoolEvent {
     pub joins: Vec<NodeId>,
     /// Nodes reclaimed by the main scheduler (left N) at `t`.
     pub leaves: Vec<NodeId>,
+    /// Scheduled reclaim time of each join, parallel to `joins` (absolute
+    /// trace seconds; `f64::INFINITY` = not reclaimed within the trace).
+    /// Empty = no lifetime knowledge for this event
+    /// ([`Knowledge::Blind`](super::scheduler::Knowledge)); otherwise the
+    /// length must equal `joins.len()`.
+    pub reclaim_at: Vec<f64>,
 }
 
 impl PoolEvent {
     pub fn is_empty(&self) -> bool {
         self.joins.is_empty() && self.leaves.is_empty()
+    }
+
+    /// Scheduled reclaim time of `joins[i]` (INFINITY when unannotated).
+    pub fn reclaim_of(&self, i: usize) -> f64 {
+        self.reclaim_at.get(i).copied().unwrap_or(f64::INFINITY)
     }
 }
 
@@ -40,11 +51,17 @@ impl Trace {
         Trace { events: Vec::new(), machine_nodes }
     }
 
-    /// Append an event; panics if out of order.
+    /// Append an event; panics if out of order or if the reclaim
+    /// annotations are not parallel to the joins.
     pub fn push(&mut self, ev: PoolEvent) {
         if let Some(last) = self.events.last() {
             assert!(ev.t >= last.t, "events out of order: {} < {}", ev.t, last.t);
         }
+        assert!(
+            ev.reclaim_at.is_empty() || ev.reclaim_at.len() == ev.joins.len(),
+            "reclaim_at must be empty or parallel to joins at t={}",
+            ev.t
+        );
         if !ev.is_empty() {
             self.events.push(ev);
         }
@@ -94,22 +111,34 @@ impl Trace {
 
     /// Keep only events in [t0, t1), rebasing nothing (times preserved).
     /// The initial pool population at t0 is emitted as a synthetic join
-    /// event so replay starts from the correct |N|.
+    /// event (with its reclaim annotations, when the source trace carries
+    /// them) so replay starts from the correct |N|.
     pub fn window(&self, t0: f64, t1: f64) -> Trace {
-        let mut live: std::collections::BTreeSet<NodeId> = std::collections::BTreeSet::new();
+        // node -> scheduled reclaim (INFINITY when the source is blind).
+        let mut live: std::collections::BTreeMap<NodeId, f64> = std::collections::BTreeMap::new();
+        let mut annotated = false;
         let mut out = Trace::new(self.machine_nodes);
         let mut boot = PoolEvent { t: t0, ..Default::default() };
+        let fill_boot = |boot: &mut PoolEvent,
+                         live: &std::collections::BTreeMap<NodeId, f64>,
+                         annotated: bool| {
+            boot.joins = live.keys().copied().collect();
+            if annotated {
+                boot.reclaim_at = live.values().copied().collect();
+            }
+        };
         for ev in &self.events {
             if ev.t < t0 {
-                for &n in &ev.joins {
-                    live.insert(n);
+                annotated |= !ev.reclaim_at.is_empty();
+                for (i, &n) in ev.joins.iter().enumerate() {
+                    live.insert(n, ev.reclaim_of(i));
                 }
                 for &n in &ev.leaves {
                     live.remove(&n);
                 }
             } else if ev.t < t1 {
                 if boot.joins.is_empty() && !live.is_empty() {
-                    boot.joins = live.iter().copied().collect();
+                    fill_boot(&mut boot, &live, annotated);
                     out.push(std::mem::take(&mut boot));
                     live.clear();
                 }
@@ -118,7 +147,7 @@ impl Trace {
         }
         // Window with no events after t0 but a live pool: still emit boot.
         if !live.is_empty() {
-            boot.joins = live.iter().copied().collect();
+            fill_boot(&mut boot, &live, annotated);
             let mut t = Trace::new(self.machine_nodes);
             t.push(boot);
             for e in out.events {
@@ -129,13 +158,39 @@ impl Trace {
         out
     }
 
-    /// Serialize as CSV: `t,kind,node` rows (kind: J join / L leave).
+    /// The trace with every reclaim annotation removed — the Blind view
+    /// of the same event topology. A blind-generated trace and the
+    /// stripped oracle trace of the same job stream are identical
+    /// (property-pinned in `tests/lifetime_contract.rs`).
+    pub fn strip_annotations(&self) -> Trace {
+        let mut out = Trace::new(self.machine_nodes);
+        for ev in &self.events {
+            out.push(PoolEvent { reclaim_at: Vec::new(), ..ev.clone() });
+        }
+        out
+    }
+
+    /// Serialize as CSV: `t,kind,node[,reclaim]` rows (kind: J join / L
+    /// leave). Join rows of annotated events carry a fourth `reclaim`
+    /// field (`inf` for never-within-trace); a fully blind trace writes
+    /// the original three-column header and rows, byte-identical to the
+    /// pre-lifetime format.
     pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "t,kind,node")?;
+        let annotated = self.events.iter().any(|e| !e.reclaim_at.is_empty());
+        writeln!(f, "{}", if annotated { "t,kind,node,reclaim" } else { "t,kind,node" })?;
         for ev in &self.events {
-            for &n in &ev.joins {
-                writeln!(f, "{},J,{}", ev.t, n)?;
+            for (i, &n) in ev.joins.iter().enumerate() {
+                if ev.reclaim_at.is_empty() {
+                    writeln!(f, "{},J,{}", ev.t, n)?;
+                } else {
+                    let r = ev.reclaim_at[i];
+                    if r.is_infinite() {
+                        writeln!(f, "{},J,{},inf", ev.t, n)?;
+                    } else {
+                        writeln!(f, "{},J,{},{}", ev.t, n, r)?;
+                    }
+                }
             }
             for &n in &ev.leaves {
                 writeln!(f, "{},L,{}", ev.t, n)?;
@@ -175,9 +230,34 @@ impl Trace {
             if flush {
                 trace.push(cur.take().unwrap());
             }
+            let reclaim = match parts.next().map(str::trim) {
+                None | Some("") => None,
+                Some("inf") | Some("INF") | Some("Inf") => Some(f64::INFINITY),
+                Some(v) => {
+                    // NaN would poison the lifetime orderings downstream;
+                    // reject it here like any other unparseable field.
+                    let r: f64 = v.parse().map_err(|_| parse_err("bad reclaim"))?;
+                    if r.is_nan() {
+                        return Err(parse_err("bad reclaim"));
+                    }
+                    Some(r)
+                }
+            };
             let ev = cur.get_or_insert_with(|| PoolEvent { t, ..Default::default() });
             match kind {
-                "J" => ev.joins.push(node),
+                "J" => {
+                    ev.joins.push(node);
+                    // Keep annotations parallel: a partially annotated
+                    // event pads the unannotated joins with INFINITY.
+                    if let Some(r) = reclaim {
+                        while ev.reclaim_at.len() + 1 < ev.joins.len() {
+                            ev.reclaim_at.push(f64::INFINITY);
+                        }
+                        ev.reclaim_at.push(r);
+                    } else if !ev.reclaim_at.is_empty() {
+                        ev.reclaim_at.push(f64::INFINITY);
+                    }
+                }
                 "L" => ev.leaves.push(node),
                 other => return Err(parse_err(&format!("bad kind {other}"))),
             }
@@ -195,9 +275,28 @@ mod tests {
 
     fn sample_trace() -> Trace {
         let mut t = Trace::new(16);
-        t.push(PoolEvent { t: 0.0, joins: vec![0, 1, 2], leaves: vec![] });
-        t.push(PoolEvent { t: 10.0, joins: vec![3], leaves: vec![1] });
-        t.push(PoolEvent { t: 30.0, joins: vec![], leaves: vec![0, 2] });
+        t.push(PoolEvent { t: 0.0, joins: vec![0, 1, 2], ..Default::default() });
+        t.push(PoolEvent { t: 10.0, joins: vec![3], leaves: vec![1], ..Default::default() });
+        t.push(PoolEvent { t: 30.0, leaves: vec![0, 2], ..Default::default() });
+        t
+    }
+
+    /// sample_trace with oracle reclaim annotations on every join.
+    fn annotated_trace() -> Trace {
+        let mut t = Trace::new(16);
+        t.push(PoolEvent {
+            t: 0.0,
+            joins: vec![0, 1, 2],
+            reclaim_at: vec![30.0, 10.0, 30.0],
+            ..Default::default()
+        });
+        t.push(PoolEvent {
+            t: 10.0,
+            joins: vec![3],
+            leaves: vec![1],
+            reclaim_at: vec![f64::INFINITY],
+        });
+        t.push(PoolEvent { t: 30.0, leaves: vec![0, 2], ..Default::default() });
         t
     }
 
@@ -218,8 +317,20 @@ mod tests {
     #[should_panic]
     fn out_of_order_push_panics() {
         let mut t = Trace::new(4);
-        t.push(PoolEvent { t: 5.0, joins: vec![0], leaves: vec![] });
-        t.push(PoolEvent { t: 1.0, joins: vec![1], leaves: vec![] });
+        t.push(PoolEvent { t: 5.0, joins: vec![0], ..Default::default() });
+        t.push(PoolEvent { t: 1.0, joins: vec![1], ..Default::default() });
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_parallel_reclaims_panic() {
+        let mut t = Trace::new(4);
+        t.push(PoolEvent {
+            t: 0.0,
+            joins: vec![0, 1],
+            reclaim_at: vec![5.0],
+            ..Default::default()
+        });
     }
 
     #[test]
@@ -237,7 +348,17 @@ mod tests {
         assert_eq!(w.events.len(), 3);
         assert_eq!(w.events[0].t, 5.0);
         assert_eq!(w.events[0].joins, vec![0, 1, 2]);
+        assert!(w.events[0].reclaim_at.is_empty(), "blind source stays blind");
         assert_eq!(w.events[1].t, 10.0);
+    }
+
+    #[test]
+    fn window_boot_keeps_reclaim_annotations() {
+        let t = annotated_trace();
+        let w = t.window(5.0, 40.0);
+        assert_eq!(w.events[0].joins, vec![0, 1, 2]);
+        assert_eq!(w.events[0].reclaim_at, vec![30.0, 10.0, 30.0]);
+        assert_eq!(w.events[1].reclaim_at, vec![f64::INFINITY]);
     }
 
     #[test]
@@ -250,6 +371,41 @@ mod tests {
         let t2 = Trace::load_csv(&p, 16).unwrap();
         assert_eq!(t.events, t2.events);
         assert_eq!(t2.machine_nodes, 16);
+        // Blind traces keep the pre-lifetime three-column format exactly.
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("t,kind,node\n"), "blind header changed: {text}");
+        assert!(!text.contains("reclaim"));
+    }
+
+    #[test]
+    fn csv_round_trip_with_reclaims() {
+        let t = annotated_trace();
+        let dir = std::env::temp_dir().join("bft_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t_annotated.csv");
+        t.save_csv(&p).unwrap();
+        let t2 = Trace::load_csv(&p, 16).unwrap();
+        assert_eq!(t.events, t2.events, "reclaim annotations must survive the CSV");
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("t,kind,node,reclaim\n"));
+        // NaN reclaims are rejected at parse time, not smuggled into the
+        // pool's lifetime orderings.
+        let bad = dir.join("t_nan.csv");
+        std::fs::write(&bad, "t,kind,node,reclaim\n0,J,1,nan\n").unwrap();
+        assert!(Trace::load_csv(&bad, 16).is_err());
+    }
+
+    #[test]
+    fn strip_annotations_keeps_topology() {
+        let t = annotated_trace();
+        let s = t.strip_annotations();
+        assert_eq!(s.events.len(), t.events.len());
+        for (a, b) in s.events.iter().zip(&t.events) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.joins, b.joins);
+            assert_eq!(a.leaves, b.leaves);
+            assert!(a.reclaim_at.is_empty());
+        }
     }
 
     #[test]

@@ -129,10 +129,10 @@ mod tests {
 
     fn trace_two_nodes() -> Trace {
         let mut t = Trace::new(8);
-        t.push(PoolEvent { t: 0.0, joins: vec![0], leaves: vec![] });
-        t.push(PoolEvent { t: 100.0, joins: vec![1], leaves: vec![] });
-        t.push(PoolEvent { t: 150.0, joins: vec![], leaves: vec![0] });
-        t.push(PoolEvent { t: 400.0, joins: vec![0], leaves: vec![1] });
+        t.push(PoolEvent { t: 0.0, joins: vec![0], ..Default::default() });
+        t.push(PoolEvent { t: 100.0, joins: vec![1], ..Default::default() });
+        t.push(PoolEvent { t: 150.0, leaves: vec![0], ..Default::default() });
+        t.push(PoolEvent { t: 400.0, joins: vec![0], leaves: vec![1], ..Default::default() });
         t
     }
 

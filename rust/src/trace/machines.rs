@@ -18,6 +18,7 @@
 //! The experiments in §4/§5 use a 1024-node Summit slice over one week;
 //! [`summit_1024`] is the default everywhere.
 
+use super::scheduler::Knowledge;
 use super::synth::SynthParams;
 
 /// One week in seconds.
@@ -42,6 +43,7 @@ pub fn summit_1024() -> SynthParams {
         debounce_s: 10.0,
         duration_s: WEEK_S,
         warmup_s: 12.0 * 3600.0,
+        knowledge: Knowledge::Blind,
     }
 }
 
@@ -79,6 +81,7 @@ pub fn theta() -> SynthParams {
         debounce_s: 10.0,
         duration_s: WEEK_S,
         warmup_s: 24.0 * 3600.0,
+        knowledge: Knowledge::Blind,
     }
 }
 
@@ -106,6 +109,7 @@ pub fn mira() -> SynthParams {
         debounce_s: 10.0,
         duration_s: WEEK_S,
         warmup_s: 24.0 * 3600.0,
+        knowledge: Knowledge::Blind,
     }
 }
 

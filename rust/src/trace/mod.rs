@@ -14,6 +14,6 @@ pub mod synth;
 
 pub use event::{NodeId, PoolEvent, Trace};
 pub use fragments::{characterize, extract, fragment_cdf, Fragment, IdleStats};
-pub use scheduler::{replay_jobs, BackfillOutcome, BackfillParams, SchedJob};
+pub use scheduler::{replay_jobs, BackfillOutcome, BackfillParams, Knowledge, SchedJob};
 pub use swf::{SliceOutcome, SliceSpec, SwfJob, SwfLog};
 pub use synth::{generate, generate_jobs, SynthParams};

@@ -24,6 +24,51 @@
 use super::event::{NodeId, PoolEvent, Trace};
 use std::collections::{BTreeMap, BTreeSet};
 
+/// How much the produced trace reveals about each idle hole's end — the
+/// lifetime-knowledge regimes of the forward-looking strategy (paper
+/// §3.3; MalleTrain's "holes of known duration"):
+///
+/// * [`Knowledge::Oracle`] — every join is annotated with the exact time
+///   the node is reclaimed (the main scheduler publishes reclaim times
+///   and walltimes are exact);
+/// * [`Knowledge::WalltimeEstimate`] — annotations are stretched by the
+///   replay's mean requested-over-actual walltime ratio, modeling user
+///   walltime overestimates: holes look longer than they are, so some
+///   reclaims arrive as surprises;
+/// * [`Knowledge::Blind`] — no annotations at all (the pre-lifetime
+///   contract; every downstream consumer sees infinite remaining life).
+///
+/// Knowledge changes *only* the annotations: the event topology (times,
+/// joins, leaves) is identical across modes for the same job stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Knowledge {
+    Oracle,
+    WalltimeEstimate,
+    #[default]
+    Blind,
+}
+
+impl Knowledge {
+    /// CLI name of the mode.
+    pub fn name(self) -> &'static str {
+        match self {
+            Knowledge::Oracle => "oracle",
+            Knowledge::WalltimeEstimate => "walltime",
+            Knowledge::Blind => "blind",
+        }
+    }
+
+    /// Parse a CLI name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Knowledge> {
+        match s.to_ascii_lowercase().as_str() {
+            "oracle" | "informed" => Some(Knowledge::Oracle),
+            "walltime" | "walltime-estimate" | "estimate" => Some(Knowledge::WalltimeEstimate),
+            "blind" | "none" => Some(Knowledge::Blind),
+            _ => None,
+        }
+    }
+}
+
 /// One rigid batch job as the scheduler sees it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedJob {
@@ -50,6 +95,8 @@ pub struct BackfillParams {
     pub duration_s: f64,
     /// Warmup discarded from the front (machine fills from empty).
     pub warmup_s: f64,
+    /// What the trace reveals about each hole's scheduled reclaim time.
+    pub knowledge: Knowledge,
 }
 
 /// What a backfill replay produced beyond the trace itself.
@@ -101,6 +148,9 @@ pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> Backfill
     let mut changes: Vec<PoolChange> = Vec::new();
     let mut started = 0usize;
     let mut busy_node_seconds = 0.0f64;
+    // Mean requested/actual walltime ratio of started jobs — the
+    // overestimate factor the WalltimeEstimate knowledge mode applies.
+    let mut walltime_ratio_sum = 0.0f64;
 
     loop {
         // Next event time: arrival or completion.
@@ -144,6 +194,8 @@ pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> Backfill
         for r in &running[running_before..] {
             started += 1;
             busy_node_seconds += r.nodes.len() as f64 * (r.end_actual.min(horizon) - now);
+            let run = (r.end_actual - now).max(1e-9);
+            walltime_ratio_sum += ((r.end_requested - now) / run).clamp(1.0, 10.0);
         }
         // Nodes that freed and were immediately re-allocated never became
         // idle from BFTrainer's perspective (the paper removes these).
@@ -159,8 +211,9 @@ pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> Backfill
         }
     }
 
+    let stretch = if started > 0 { walltime_ratio_sum / started as f64 } else { 1.0 };
     BackfillOutcome {
-        trace: build_trace(params, changes),
+        trace: build_trace(params, changes, stretch),
         started,
         dropped_too_large,
         busy_node_seconds,
@@ -246,7 +299,15 @@ fn start(
 /// Convert the raw change log into a debounced, warmup-trimmed [`Trace`].
 /// Every node starts idle at t = 0 (the machine fills from empty), so the
 /// trace's idle intervals are the exact complement of job occupancy.
-fn build_trace(params: &BackfillParams, changes: Vec<PoolChange>) -> Trace {
+///
+/// Under [`Knowledge::Oracle`] each join is annotated with the exact end
+/// of its idle interval (holes that outlive the window get INFINITY);
+/// [`Knowledge::WalltimeEstimate`] stretches the hole length by
+/// `stretch` — the replay's mean requested/actual walltime ratio — so
+/// predicted reclaims land *later* than realized ones, the way EASY
+/// reservations computed from user walltime requests do;
+/// [`Knowledge::Blind`] emits no annotations at all.
+fn build_trace(params: &BackfillParams, changes: Vec<PoolChange>, stretch: f64) -> Trace {
     // Per-node idle intervals; all nodes open (idle) at t = 0.
     let mut open: BTreeMap<NodeId, f64> = (0..params.total_nodes).map(|n| (n, 0.0)).collect();
     let mut intervals: Vec<(NodeId, f64, f64)> = Vec::new();
@@ -265,9 +326,16 @@ fn build_trace(params: &BackfillParams, changes: Vec<PoolChange>) -> Trace {
         intervals.push((n, t0, horizon));
     }
     // Debounce: drop fragments shorter than debounce_s; trim to the
-    // [warmup, horizon] window and rebase to t=0.
+    // [warmup, horizon] window and rebase to t=0. Joins carry their
+    // reclaim annotation so they can be co-sorted by node id below.
     let t0 = params.warmup_s;
-    let mut evs: BTreeMap<i64, PoolEvent> = Default::default();
+    #[derive(Default)]
+    struct RawEvent {
+        t: f64,
+        joins: Vec<(NodeId, f64)>,
+        leaves: Vec<NodeId>,
+    }
+    let mut evs: BTreeMap<i64, RawEvent> = Default::default();
     let quant = |t: f64| (t * 1000.0).round() as i64; // 1 ms resolution keys
     for (n, a, b) in intervals {
         let (a, b) = (a.max(t0), b.min(horizon));
@@ -281,21 +349,31 @@ fn build_trace(params: &BackfillParams, changes: Vec<PoolChange>) -> Trace {
         if quant(ra) == quant(rb) && rb < params.duration_s - 1e-9 {
             continue;
         }
-        evs.entry(quant(ra))
-            .or_insert_with(|| PoolEvent { t: ra, ..Default::default() })
-            .joins
-            .push(n);
-        if rb < params.duration_s - 1e-9 {
+        let leaves_within = rb < params.duration_s - 1e-9;
+        let reclaim = match params.knowledge {
+            Knowledge::Blind => f64::NAN, // never serialized (see below)
+            _ if !leaves_within => f64::INFINITY,
+            Knowledge::Oracle => rb,
+            Knowledge::WalltimeEstimate => ra + (rb - ra) * stretch,
+        };
+        let ev = evs.entry(quant(ra)).or_insert_with(|| RawEvent { t: ra, ..Default::default() });
+        ev.joins.push((n, reclaim));
+        if leaves_within {
             evs.entry(quant(rb))
-                .or_insert_with(|| PoolEvent { t: rb, ..Default::default() })
+                .or_insert_with(|| RawEvent { t: rb, ..Default::default() })
                 .leaves
                 .push(n);
         }
     }
     let mut trace = Trace::new(params.total_nodes);
-    for (_, mut ev) in evs {
-        ev.joins.sort_unstable();
-        ev.leaves.sort_unstable();
+    for (_, mut raw) in evs {
+        raw.joins.sort_unstable_by_key(|&(n, _)| n);
+        raw.leaves.sort_unstable();
+        let mut ev = PoolEvent { t: raw.t, leaves: raw.leaves, ..Default::default() };
+        ev.joins = raw.joins.iter().map(|&(n, _)| n).collect();
+        if params.knowledge != Knowledge::Blind {
+            ev.reclaim_at = raw.joins.iter().map(|&(_, r)| r).collect();
+        }
         trace.push(ev);
     }
     trace
@@ -307,7 +385,13 @@ mod tests {
     use crate::trace::fragments;
 
     fn params(total_nodes: u32, duration_s: f64) -> BackfillParams {
-        BackfillParams { total_nodes, debounce_s: 0.0, duration_s, warmup_s: 0.0 }
+        BackfillParams {
+            total_nodes,
+            debounce_s: 0.0,
+            duration_s,
+            warmup_s: 0.0,
+            knowledge: Knowledge::Blind,
+        }
     }
 
     fn job(id: u64, submit: f64, nodes: u32, req: f64, run: f64) -> SchedJob {
@@ -401,13 +485,87 @@ mod tests {
 
     #[test]
     fn warmup_trims_and_rebases() {
-        let p =
-            BackfillParams { total_nodes: 4, debounce_s: 0.0, duration_s: 500.0, warmup_s: 100.0 };
+        let p = BackfillParams { warmup_s: 100.0, ..params(4, 500.0) };
         let out = replay_jobs(&p, vec![job(1, 0.0, 4, 150.0, 150.0)]);
         // Job occupies [0,150]; window is [100,600] rebased to [0,500]:
         // all 4 nodes join at rebased t=50.
         assert_eq!(out.trace.events.len(), 1);
         assert!((out.trace.events[0].t - 50.0).abs() < 1e-9);
         assert_eq!(out.trace.events[0].joins.len(), 4);
+    }
+
+    #[test]
+    fn blind_traces_carry_no_annotations() {
+        let out = replay_jobs(&params(4, 500.0), vec![job(1, 100.0, 2, 50.0, 50.0)]);
+        for ev in &out.trace.events {
+            assert!(ev.reclaim_at.is_empty());
+        }
+    }
+
+    #[test]
+    fn oracle_annotations_match_realized_leaves() {
+        // Every annotated reclaim must be exactly when the node's leave
+        // event fires; nodes idle through the horizon get INFINITY.
+        let p = BackfillParams { knowledge: Knowledge::Oracle, ..params(4, 1000.0) };
+        let out = replay_jobs(
+            &p,
+            vec![job(1, 100.0, 2, 300.0, 300.0), job(2, 600.0, 4, 200.0, 200.0)],
+        );
+        let mut leaves_of: BTreeMap<NodeId, Vec<f64>> = BTreeMap::new();
+        for ev in &out.trace.events {
+            for &n in &ev.leaves {
+                leaves_of.entry(n).or_default().push(ev.t);
+            }
+        }
+        let mut checked = 0;
+        for ev in &out.trace.events {
+            assert_eq!(ev.reclaim_at.len(), ev.joins.len());
+            for (i, &n) in ev.joins.iter().enumerate() {
+                let r = ev.reclaim_at[i];
+                // The node's first leave strictly after this join is its
+                // realized reclaim.
+                let next_leave = leaves_of
+                    .get(&n)
+                    .and_then(|ts| ts.iter().copied().find(|&lt| lt > ev.t));
+                match next_leave {
+                    Some(lt) => {
+                        assert!((r - lt).abs() < 2e-3, "node {n}: reclaim {r} vs leave {lt}");
+                        checked += 1;
+                    }
+                    None => assert!(r.is_infinite(), "node {n} never leaves but reclaim {r}"),
+                }
+            }
+        }
+        assert!(checked > 0, "no reclaimed joins exercised");
+    }
+
+    #[test]
+    fn knowledge_modes_share_event_topology() {
+        // Knowledge must only change annotations, never the events.
+        let jobs: Vec<SchedJob> =
+            (0..30).map(|i| job(i, 29.0 * i as f64, 1 + (i as u32 % 3), 180.0, 120.0)).collect();
+        let blind = replay_jobs(&params(6, 2000.0), jobs.clone());
+        let oracle = replay_jobs(
+            &BackfillParams { knowledge: Knowledge::Oracle, ..params(6, 2000.0) },
+            jobs.clone(),
+        );
+        let est = replay_jobs(
+            &BackfillParams { knowledge: Knowledge::WalltimeEstimate, ..params(6, 2000.0) },
+            jobs,
+        );
+        assert_eq!(blind.trace.events.len(), oracle.trace.events.len());
+        for ((b, o), e) in
+            blind.trace.events.iter().zip(&oracle.trace.events).zip(&est.trace.events)
+        {
+            assert_eq!(b.t, o.t);
+            assert_eq!(b.joins, o.joins);
+            assert_eq!(b.leaves, o.leaves);
+            assert_eq!(b.joins, e.joins);
+            // Walltime estimates never predict earlier than the oracle
+            // (users overestimate, stretch >= 1).
+            for (i, (&or, &er)) in o.reclaim_at.iter().zip(&e.reclaim_at).enumerate() {
+                assert!(er >= or - 1e-9, "join {i}: estimate {er} before oracle {or}");
+            }
+        }
     }
 }

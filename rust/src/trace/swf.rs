@@ -38,7 +38,7 @@
 //! take the SWF default `-1`.
 
 use super::event::Trace;
-use super::scheduler::{self, BackfillParams, SchedJob};
+use super::scheduler::{self, BackfillParams, Knowledge, SchedJob};
 use std::path::Path;
 
 /// One job record surviving the parse + filter.
@@ -201,6 +201,8 @@ pub struct SliceSpec {
     pub warmup_s: f64,
     /// Fragment debounce, as in [`BackfillParams`].
     pub debounce_s: f64,
+    /// Lifetime-knowledge mode of the produced trace ([`Knowledge`]).
+    pub knowledge: Knowledge,
 }
 
 impl SliceSpec {
@@ -215,6 +217,7 @@ impl SliceSpec {
             t1: t0 + super::machines::WEEK_S,
             warmup_s: 24.0 * 3600.0,
             debounce_s: 10.0,
+            knowledge: Knowledge::Blind,
         }
     }
 }
@@ -260,6 +263,7 @@ pub fn slice(log: &SwfLog, spec: &SliceSpec) -> SliceOutcome {
         debounce_s: spec.debounce_s,
         duration_s: spec.t1 - spec.t0,
         warmup_s: lead,
+        knowledge: spec.knowledge,
     };
     let out = scheduler::replay_jobs(&params, jobs);
     SliceOutcome {
@@ -386,6 +390,7 @@ mod tests {
             t1: 2000.0,
             warmup_s: 0.0,
             debounce_s: 0.0,
+            knowledge: Knowledge::Blind,
         };
         let out = slice(&log, &spec);
         assert_eq!(out.jobs_in_window, 2);
@@ -410,6 +415,7 @@ mod tests {
             t1: 1500.0,
             warmup_s: 500.0,
             debounce_s: 0.0,
+            knowledge: Knowledge::Blind,
         };
         let with_warmup = slice(&log, &spec);
         spec.warmup_s = 0.0;

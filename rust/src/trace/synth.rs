@@ -21,7 +21,7 @@
 //!   debug/dev/DL churn real systems see alongside capability jobs).
 
 use super::event::Trace;
-use super::scheduler::{self, BackfillParams, SchedJob};
+use super::scheduler::{self, BackfillParams, Knowledge, SchedJob};
 use crate::util::rng::Rng;
 
 /// Workload / machine parameters for the synthesizer.
@@ -56,6 +56,9 @@ pub struct SynthParams {
     pub duration_s: f64,
     /// Warmup discarded from the front (machine fills from empty).
     pub warmup_s: f64,
+    /// How much the produced trace reveals about hole lifetimes
+    /// ([`Knowledge`]); annotations only, never the event topology.
+    pub knowledge: Knowledge,
 }
 
 impl Default for SynthParams {
@@ -72,6 +75,7 @@ impl SynthParams {
             debounce_s: self.debounce_s,
             duration_s: self.duration_s,
             warmup_s: self.warmup_s,
+            knowledge: self.knowledge,
         }
     }
 }

@@ -102,13 +102,18 @@ pub fn random_alloc_request(
             }
         })
         .collect();
-    AllocRequest { jobs, pool_size: pool, t_fwd: 120.0 }
+    // Lifetime-blind pool: the Fig 5 benches measure solver effort on the
+    // paper's setup; lifetime-profiled requests are exercised by the
+    // allocator property suites and `advance_request`.
+    AllocRequest::flat(jobs, pool, 120.0)
 }
 
 /// Advance `req` to the next event of a synthetic consecutive-event
 /// workload (the Fig 5 incremental bench and the warm-start equivalence
 /// tests share this): the applied `targets` become the new current
-/// scales, then the pool grows or shrinks by 1..=`max_delta` nodes.
+/// scales, then the pool grows or shrinks by 1..=`max_delta` nodes and
+/// — half the time — re-buckets into a fresh random lifetime profile, so
+/// warm-start paths are exercised against both size and lifetime churn.
 /// Shrinks preempt the way the coordinator would — the largest
 /// assignments lose nodes first, and a job pushed below its minimum
 /// scale drops to 0.
@@ -118,15 +123,17 @@ pub fn advance_request(
     targets: &std::collections::BTreeMap<usize, u32>,
     max_delta: u32,
 ) {
+    use crate::coordinator::LifetimeProfile;
     for job in req.jobs.iter_mut() {
         job.current = targets.get(&job.id).copied().unwrap_or(0);
     }
     let delta = rng.range_u64(1, max_delta.max(1) as u64) as u32;
-    if rng.chance(0.5) {
-        req.pool_size += delta;
+    let size = if rng.chance(0.5) {
+        req.pool_size() + delta
     } else {
-        req.pool_size = req.pool_size.saturating_sub(delta);
-    }
+        req.pool_size().saturating_sub(delta)
+    };
+    req.pool = LifetimeProfile::random(rng, size, req.t_fwd);
     // Same preemption repair the allocator's warm-start adaptation uses.
     let mut shed = req.current_map();
     req.shed_to_capacity(&mut shed);
@@ -170,7 +177,7 @@ mod tests {
         for _ in 0..20 {
             let req = random_alloc_request(&mut rng, 10, 100);
             let cur: u32 = req.jobs.iter().map(|j| j.current).sum();
-            assert!(cur <= req.pool_size);
+            assert!(cur <= req.pool_size());
             assert!(req.check(&req.current_map()).is_ok());
         }
     }

@@ -6,7 +6,7 @@
 
 use bftrainer::coordinator::{
     AggregateMilpAllocator, AllocJob, AllocRequest, Allocator, DpAllocator, EqualShareAllocator,
-    PerNodeMilpAllocator,
+    LifetimeProfile, PerNodeMilpAllocator,
 };
 use bftrainer::mini::prop::{check_with, Config, Gen, Outcome};
 use bftrainer::util::rng::Rng;
@@ -52,7 +52,11 @@ fn gen_instance(max_jobs: usize, max_pool: u32) -> Gen<AllocRequest> {
             })
             .collect();
         let pool_size = used + rng.range_u64(0, max_pool as u64) as u32;
-        AllocRequest { jobs, pool_size, t_fwd: rng.range_f64(5.0, 240.0) }
+        let t_fwd = rng.range_f64(5.0, 240.0);
+        // Half flat (lifetime-blind), half randomly bucketed: the
+        // equivalence claims must hold for every lifetime profile.
+        let pool = LifetimeProfile::random(rng, pool_size, t_fwd);
+        AllocRequest { jobs, pool, t_fwd }
     })
 }
 
@@ -79,7 +83,7 @@ fn dp_equals_aggregate_milp() {
 fn dp_equals_pernode_milp_small() {
     let cfg = Config { cases: 12, ..Default::default() };
     check_with(&cfg, &gen_instance(3, 6), |_| vec![], |req| {
-        if req.pool_size > 10 {
+        if req.pool_size() > 10 {
             return Outcome::Discard; // keep per-node model small
         }
         let dp = DpAllocator.allocate(req);

@@ -125,6 +125,62 @@ fn cli_compare_exit_codes() {
 }
 
 #[test]
+fn sweep_json_round_trips_knowledge_mode() {
+    // The knowledge-mode axis must survive `sweep --json`'s serializer
+    // and come back through the runtime JSON parser.
+    use bftrainer::coordinator::{Objective, TrainerSpec};
+    use bftrainer::scaling::ScalingCurve;
+    use bftrainer::sim::{self, ReplayOpts, SweepCase, Workload};
+    use bftrainer::trace::{PoolEvent, Trace};
+    use std::sync::Arc;
+
+    let mut t = Trace::new(8);
+    t.push(PoolEvent {
+        t: 0.0,
+        joins: (0..4).collect(),
+        reclaim_at: vec![2000.0, 2000.0, f64::INFINITY, f64::INFINITY],
+        ..Default::default()
+    });
+    t.push(PoolEvent { t: 2000.0, leaves: vec![0, 1], ..Default::default() });
+    let trace = Arc::new(t);
+    let wl = Arc::new(Workload::all_at_zero(vec![TrainerSpec {
+        name: "t".into(),
+        n_min: 1,
+        n_max: 4,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0)]),
+        total_samples: 1e9,
+    }]));
+    let cases: Vec<SweepCase> = ["oracle", "blind"]
+        .iter()
+        .map(|k| SweepCase {
+            label: "tiny/s1".into(),
+            knowledge: k.to_string(),
+            policy: "dp".into(),
+            objective: Objective::Throughput,
+            t_fwd: 120.0,
+            pj_max: 4,
+            rescale_multiplier: 1.0,
+            trace: trace.clone(),
+            workload: wl.clone(),
+            opts: ReplayOpts::default(),
+        })
+        .collect();
+    let outs = sim::run_sweep(&cases, 2);
+    let text = sim::outcomes_json(&outs);
+    let parsed = json::parse(&text).expect("valid JSON");
+    let arr = parsed.as_arr().expect("array");
+    assert_eq!(arr.len(), 2);
+    assert_eq!(arr[0].get("knowledge").and_then(|j| j.as_str()), Some("oracle"));
+    assert_eq!(arr[1].get("knowledge").and_then(|j| j.as_str()), Some("blind"));
+    for v in arr {
+        assert!(v.get("leaves_anticipated").and_then(|j| j.as_usize()).is_some());
+        assert!(v.get("leaves_surprise").and_then(|j| j.as_usize()).is_some());
+    }
+}
+
+#[test]
 fn registry_covers_all_twelve_figures() {
     let names: Vec<&str> = bench::registry().iter().map(|f| f.name).collect();
     assert_eq!(names.len(), 12);

@@ -1,0 +1,253 @@
+//! Contract tests for lifetime-aware allocation (DESIGN.md §13):
+//!
+//! * property (mini/prop): `Pool::apply_allocation` under arbitrary
+//!   lifetime annotations preserves the no-migration invariant, the
+//!   count cache, and the bucket identity — lifetime-class counts always
+//!   sum to `pool.len()`;
+//! * differential: the Blind knowledge mode is exactly the absence of
+//!   annotations — a blind-generated trace is byte-identical to an
+//!   oracle trace with its annotations stripped, and replays
+//!   identically (the old, pre-lifetime behavior);
+//! * deterministic end-to-end: on a hand-built trace, informed
+//!   annotations strictly reduce preemptions at equal-or-better output.
+
+use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective, Pool};
+use bftrainer::mini::prop::{check_with, Config, Gen, Outcome};
+use bftrainer::scaling::{Dnn, ScalingCurve};
+use bftrainer::sim::{self, ReplayOpts};
+use bftrainer::trace::{self, machines, Knowledge, PoolEvent, Trace};
+use bftrainer::util::rng::Rng;
+use bftrainer::workload;
+use std::collections::{BTreeMap, BTreeSet};
+
+// ---------------------------------------------------------------------------
+// Property: apply_allocation under lifetimes
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct PoolScenario {
+    /// Per-node scheduled reclaim (INFINITY = unknown), node ids 0..n.
+    reclaims: Vec<f64>,
+    /// Successive target maps; each sums to ≤ n.
+    rounds: Vec<BTreeMap<usize, u32>>,
+    /// Nodes to reclaim after the rounds.
+    leaves: Vec<u32>,
+    t_fwd: f64,
+}
+
+fn gen_pool_scenario() -> Gen<PoolScenario> {
+    Gen::new(|rng: &mut Rng| {
+        let n = rng.range_usize(1, 24) as u32;
+        let t_fwd = rng.range_f64(30.0, 600.0);
+        let reclaims: Vec<f64> = (0..n)
+            .map(|_| if rng.chance(0.4) { f64::INFINITY } else { rng.range_f64(0.0, 2.0 * t_fwd) })
+            .collect();
+        let n_trainers = rng.range_usize(1, 5);
+        let rounds: Vec<BTreeMap<usize, u32>> = (0..rng.range_usize(2, 6))
+            .map(|_| {
+                let mut left = n;
+                let mut m = BTreeMap::new();
+                for j in 0..n_trainers {
+                    let take = rng.range_u64(0, left as u64) as u32;
+                    if rng.chance(0.8) && take > 0 {
+                        m.insert(j, take);
+                        left -= take;
+                    }
+                }
+                m
+            })
+            .collect();
+        let leaves: Vec<u32> = (0..n).filter(|_| rng.chance(0.3)).collect();
+        PoolScenario { reclaims, rounds, leaves, t_fwd }
+    })
+}
+
+/// Cross-check the cached counts against a full scan and the lifetime
+/// profile against the pool size.
+fn check_pool_invariants(p: &Pool, t_fwd: f64) -> Result<(), String> {
+    let alloc = p.allocation();
+    for (j, nodes) in &alloc {
+        if p.count_of(*j) as usize != nodes.len() {
+            let (c, n) = (p.count_of(*j), nodes.len());
+            return Err(format!("count cache: trainer {j} cached {c} vs {n}"));
+        }
+    }
+    // bucket counts always sum to pool.len(), at any probe time
+    for now in [0.0, 1.0, t_fwd / 2.0, t_fwd, 10.0 * t_fwd] {
+        let prof = p.lifetime_profile(now, t_fwd);
+        if prof.size() as usize != p.len() {
+            return Err(format!("profile size {} != pool {} at now={now}", prof.size(), p.len()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn apply_allocation_preserves_no_migration_and_bucket_counts() {
+    let cfg = Config { cases: 48, ..Default::default() };
+    check_with(&cfg, &gen_pool_scenario(), |_| vec![], |sc| {
+        let mut p = Pool::new();
+        let ids: Vec<u32> = (0..sc.reclaims.len() as u32).collect();
+        p.join(&ids, &sc.reclaims);
+        let mut prev: BTreeMap<usize, BTreeSet<u32>> = BTreeMap::new();
+        for (ri, targets) in sc.rounds.iter().enumerate() {
+            p.apply_allocation(targets);
+            let now: BTreeMap<usize, BTreeSet<u32>> = p
+                .allocation()
+                .into_iter()
+                .map(|(j, v)| (j, v.into_iter().collect()))
+                .collect();
+            // every target honored exactly
+            for (j, &want) in targets {
+                let got = now.get(j).map_or(0, |s| s.len()) as u32;
+                if got != want {
+                    return Outcome::Fail(format!("round {ri}: trainer {j} got {got} want {want}"));
+                }
+            }
+            // no-migration: grows keep all old nodes, shrinks keep a subset
+            for (j, old) in &prev {
+                let new = now.get(j).cloned().unwrap_or_default();
+                let ok = if new.len() >= old.len() {
+                    old.is_subset(&new)
+                } else {
+                    new.is_subset(old)
+                };
+                if !ok {
+                    return Outcome::Fail(format!(
+                        "round {ri}: trainer {j} migrated: {old:?} -> {new:?}"
+                    ));
+                }
+            }
+            if let Err(e) = check_pool_invariants(&p, sc.t_fwd) {
+                return Outcome::Fail(format!("round {ri}: {e}"));
+            }
+            prev = now;
+        }
+        p.leave(&sc.leaves);
+        if let Err(e) = check_pool_invariants(&p, sc.t_fwd) {
+            return Outcome::Fail(format!("after leave: {e}"));
+        }
+        Outcome::Pass
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Differential: Blind == stripped Oracle == old behavior
+// ---------------------------------------------------------------------------
+
+fn coord(policy: &str) -> Coordinator {
+    Coordinator::new(allocator_by_name(policy).unwrap(), Objective::Throughput, 120.0, 10)
+}
+
+#[test]
+fn blind_mode_is_seed_equivalent_to_stripped_oracle() {
+    let mut p = machines::summit_1024();
+    p.duration_s = 6.0 * 3600.0;
+    p.warmup_s = 6.0 * 3600.0;
+    p.knowledge = Knowledge::Blind;
+    let blind = trace::generate(&p, 42);
+    p.knowledge = Knowledge::Oracle;
+    let oracle = trace::generate(&p, 42);
+
+    // Same seed, different knowledge: identical event topology, and
+    // stripping the oracle's annotations reproduces the blind trace
+    // exactly — Blind is the absence of information, nothing more.
+    assert_eq!(blind.events.len(), oracle.events.len());
+    assert_eq!(oracle.strip_annotations().events, blind.events);
+    for ev in &blind.events {
+        assert!(ev.reclaim_at.is_empty());
+    }
+
+    // Replaying the blind trace and the stripped oracle trace must be
+    // indistinguishable, for an exact policy and the baseline heuristic.
+    let wl = workload::hpo_campaign(Dnn::ShuffleNet, 30, 5.0);
+    for policy in ["dp", "heuristic"] {
+        let a = sim::replay(coord(policy), &blind, &wl, &ReplayOpts::default());
+        let b =
+            sim::replay(coord(policy), &oracle.strip_annotations(), &wl, &ReplayOpts::default());
+        assert_eq!(a.metrics.samples_processed, b.metrics.samples_processed, "{policy}");
+        assert_eq!(a.metrics.preemptions, b.metrics.preemptions, "{policy}");
+        assert_eq!(a.metrics.rescale_cost_samples, b.metrics.rescale_cost_samples, "{policy}");
+        assert_eq!(a.metrics.n_events, b.metrics.n_events, "{policy}");
+        // On a blind trace every leave is a surprise, none anticipated.
+        assert_eq!(a.metrics.leaves_anticipated, 0, "{policy}");
+        assert!(a.metrics.leaves_surprise > 0, "{policy}: fixture has leaves");
+        // Identical final allocations event by event.
+        for (ea, eb) in a.coordinator.event_log.iter().zip(&b.coordinator.event_log) {
+            assert_eq!(ea.pool_size, eb.pool_size, "{policy}");
+            assert_eq!(ea.preempted, eb.preempted, "{policy}");
+        }
+    }
+}
+
+#[test]
+fn oracle_leaves_are_all_anticipated_on_replay() {
+    let mut p = machines::summit_1024();
+    p.duration_s = 4.0 * 3600.0;
+    p.warmup_s = 6.0 * 3600.0;
+    p.knowledge = Knowledge::Oracle;
+    let t = trace::generate(&p, 7);
+    let wl = workload::hpo_campaign(Dnn::ShuffleNet, 20, 5.0);
+    let res = sim::replay(coord("dp"), &t, &wl, &ReplayOpts::default());
+    assert_eq!(
+        res.metrics.leaves_surprise, 0,
+        "oracle annotations must match every realized reclaim"
+    );
+    assert!(res.metrics.leaves_anticipated > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic end-to-end: informed placement dodges reclaims
+// ---------------------------------------------------------------------------
+
+#[test]
+fn informed_annotations_strictly_reduce_preemptions() {
+    // Six nodes at t=0; nodes 0,1 scheduled to vanish at t=1000. One
+    // 4-node trainer with plenty of work. Informed placement lands on
+    // {2..5} and rides out the reclaim; blind placement (ascending ids)
+    // sits on {0..3} and gets preempted.
+    let spec = bftrainer::coordinator::TrainerSpec {
+        name: "t".into(),
+        n_min: 1,
+        n_max: 4,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0)]),
+        total_samples: 1e9,
+    };
+    let wl = sim::Workload::all_at_zero(vec![spec]);
+    let mk = |annotated: bool| {
+        let mut t = Trace::new(8);
+        t.push(PoolEvent {
+            t: 0.0,
+            joins: (0..6).collect(),
+            reclaim_at: if annotated {
+                vec![1000.0, 1000.0, f64::INFINITY, f64::INFINITY, f64::INFINITY, f64::INFINITY]
+            } else {
+                Vec::new()
+            },
+            ..Default::default()
+        });
+        t.push(PoolEvent { t: 1000.0, leaves: vec![0, 1], ..Default::default() });
+        // A tail join keeps the replay alive past the reclaim so the
+        // blind run pays its re-grow stall where the informed run does
+        // not; the long-lived nodes are never reclaimed.
+        t.push(PoolEvent {
+            t: 3000.0,
+            joins: vec![6, 7],
+            reclaim_at: if annotated { vec![f64::INFINITY, f64::INFINITY] } else { Vec::new() },
+            ..Default::default()
+        });
+        t
+    };
+    let blind = sim::replay(coord("dp"), &mk(false), &wl, &ReplayOpts::default());
+    let informed = sim::replay(coord("dp"), &mk(true), &wl, &ReplayOpts::default());
+    assert!(blind.metrics.preemptions > 0, "blind run must hit the reclaim");
+    assert_eq!(informed.metrics.preemptions, 0, "informed run must dodge it");
+    assert!(
+        informed.metrics.samples_processed >= blind.metrics.samples_processed,
+        "dodging the reclaim cannot cost output: informed {} vs blind {}",
+        informed.metrics.samples_processed,
+        blind.metrics.samples_processed
+    );
+}

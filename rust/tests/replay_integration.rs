@@ -80,9 +80,9 @@ fn samples_conserved_across_policies() {
 fn preemptions_only_when_nodes_leave() {
     // A join-only trace must produce zero preemptions.
     let mut t = Trace::new(64);
-    t.push(PoolEvent { t: 0.0, joins: (0..8).collect(), leaves: vec![] });
-    t.push(PoolEvent { t: 1000.0, joins: (8..32).collect(), leaves: vec![] });
-    t.push(PoolEvent { t: 5000.0, joins: (32..40).collect(), leaves: vec![] });
+    t.push(PoolEvent { t: 0.0, joins: (0..8).collect(), leaves: vec![], ..Default::default() });
+    t.push(PoolEvent { t: 1000.0, joins: (8..32).collect(), leaves: vec![], ..Default::default() });
+    t.push(PoolEvent { t: 5000.0, joins: (32..40).collect(), ..Default::default() });
     let wl = workload::hpo_campaign(Dnn::ShuffleNet, 8, 5.0);
     let res = sim::replay(
         coord("dp", Objective::Throughput, 120.0, 10),

@@ -65,12 +65,12 @@ fn live_mode_survives_full_preemption() {
     let spec = live::live_spec(&v, "t", 4, 1_000_000, &opts);
     let id = coord.submit(spec, 0.0);
     let mut trace = Trace::new(8);
-    trace.push(PoolEvent { t: 0.0, joins: vec![0, 1], leaves: vec![] });
-    trace.push(PoolEvent { t: 50.0, joins: vec![], leaves: vec![0, 1] }); // total preemption
-    trace.push(PoolEvent { t: 100.0, joins: vec![2, 3, 4], leaves: vec![] });
+    trace.push(PoolEvent { t: 0.0, joins: vec![0, 1], leaves: vec![], ..Default::default() });
+    trace.push(PoolEvent { t: 50.0, leaves: vec![0, 1], ..Default::default() }); // total preemption
+    trace.push(PoolEvent { t: 100.0, joins: vec![2, 3, 4], leaves: vec![], ..Default::default() });
     // trailing event so the [100, 300) interval has nonzero duration
     // (empty events are dropped by Trace::push)
-    trace.push(PoolEvent { t: 300.0, joins: vec![5], leaves: vec![] });
+    trace.push(PoolEvent { t: 300.0, joins: vec![5], leaves: vec![], ..Default::default() });
     let vars: BTreeMap<usize, runtime::Variant> = [(id, v)].into_iter().collect();
     let res = live::run(coord, &trace, &engine, &vars, &opts).unwrap();
     assert!(res.total_steps > 5);

@@ -7,7 +7,7 @@ use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective, TrainerS
 use bftrainer::scaling::ScalingCurve;
 use bftrainer::sim::{replay, ReplayOpts, Workload};
 use bftrainer::trace::scheduler::{replay_jobs, BackfillParams, SchedJob};
-use bftrainer::trace::{self, swf, SliceSpec};
+use bftrainer::trace::{self, swf, Knowledge, SliceSpec};
 use bftrainer::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -25,6 +25,7 @@ fn fixture_slice(nodes: u32) -> SliceSpec {
         t1: FIXTURE_SPAN_S,
         warmup_s: 0.0,
         debounce_s: 0.0,
+        knowledge: Knowledge::Blind,
     }
 }
 
@@ -116,8 +117,13 @@ fn scheduler_replay_conserves_node_hours_property() {
                 }
             })
             .collect();
-        let params =
-            BackfillParams { total_nodes: MACHINE, debounce_s: 0.0, duration_s: T, warmup_s: 0.0 };
+        let params = BackfillParams {
+            total_nodes: MACHINE,
+            debounce_s: 0.0,
+            duration_s: T,
+            warmup_s: 0.0,
+            knowledge: Knowledge::Blind,
+        };
         let out = replay_jobs(&params, jobs);
         let idle: f64 = trace::extract(&out.trace, T).iter().map(trace::Fragment::len).sum();
         let total = f64::from(MACHINE) * T;
