@@ -1,0 +1,12 @@
+//! Shim for the streaming-replay throughput gate (sharded SWF ingest).
+//!
+//! The implementation lives in the figure registry
+//! (`bftrainer::bench::figures`, DESIGN.md §12) so that `cargo bench
+//! --bench fig15_replay_throughput`, `bftrainer bench` and CI all run
+//! the exact same code. Full-length by default (a 1-year, 4096-node
+//! synthetic log); `BFT_BENCH_QUICK=1` (or a `--quick` arg) selects the
+//! CI preset. Exits nonzero when a paper anchor is violated.
+
+fn main() {
+    std::process::exit(bftrainer::bench::run_bench_target("fig15_replay_throughput"));
+}

@@ -1,4 +1,4 @@
-//! The 12 registered figures. Each renders the paper tables the old
+//! The 13 registered figures. Each renders the paper tables the old
 //! standalone bench binaries printed *and* emits counter-based metrics
 //! plus paper anchors through [`FigureCtx`] (DESIGN.md §12).
 //!
@@ -8,7 +8,11 @@
 //!   `machine_hours`, `trace`) — quick presets shrink windows and grids,
 //!   never seeds, so both modes are individually deterministic.
 //! * Wall-clock values go to stdout only (tables, `BenchRunner`); they
-//!   never enter a metric.
+//!   never enter a metric. Sole exception: [`fig15_replay_throughput`]
+//!   is a throughput gate, so it records `events_per_sec` /
+//!   `replay_wall_s` as metrics with effectively-infinite comparison
+//!   tolerances — its anchors do the gating, and CI's byte-identity
+//!   determinism diff strips that one figure.
 //! * Anchor tolerances are wide regime gates (DESIGN.md §12.2); the
 //!   structural anchors (agreement, conservation, bound-derived rows)
 //!   are tight because they are exact claims.
@@ -650,12 +654,15 @@ pub fn fig7_8_9(ctx: &mut FigureCtx) {
     // an oracle trace every realized leave was scheduled.
     ctx.anchor_near("knowledge_topology_identical", 1.0, 0.0);
     ctx.anchor_near("informed_surprise_frac", 0.0, 0.0);
-    // Regime gates (provisional wide bands, DESIGN.md §12.2): informed
-    // placement strictly reduces preemptions ("1" = at least one fewer;
-    // slack 1 keeps the provisional gate at no-worse until a green run
-    // records a real trajectory) at equal-or-better U.
-    ctx.anchor_at_least("informed_preempt_reduction", 1.0, 1.0);
-    ctx.anchor_at_least("informed_u_delta", 0.0, 0.05);
+    // Regime gates (DESIGN.md §12.2), re-banded from the provisional
+    // "1 ± 1" / "0 ± 0.05" pair: that encoding claimed a strict
+    // reduction but enforced only no-worse, while its U twin let a 5 pp
+    // oracle *regression* pass. The gates now state exactly the
+    // defensible claim — informed placement never pays more preemptions
+    // than blind (floor 0, no slack: ties pass, any excess fails) at
+    // equal-or-better U (1 pp slack absorbs rescale-timing noise).
+    ctx.anchor_at_least("informed_preempt_reduction", 0.0, 0.0);
+    ctx.anchor_at_least("informed_u_delta", 0.0, 0.01);
 }
 
 // ---------------------------------------------------------------------------
@@ -1215,4 +1222,119 @@ pub fn solver(ctx: &mut FigureCtx) {
     ctx.anchor_near("bound_derived_rows", 0.0, 0.0);
     ctx.anchor_near("lp_status_ok", 1.0, 0.0);
     ctx.anchor_at_most("warm_minus_cold_iters_max", 0.0, 10.0);
+}
+
+// ---------------------------------------------------------------------------
+// Streaming replay throughput (sharded SWF ingest)
+// ---------------------------------------------------------------------------
+
+/// Fleet-scale streaming replay: synthesize a long SWF log, replay it as
+/// overlapping-warmup shards across worker threads, and gate both the
+/// seam conservation invariant and an events/sec throughput floor.
+///
+/// Full mode replays a 1-year, 4096-node log (~100k jobs) in weekly
+/// shards; quick mode a 2-day, 256-node log in 12 h shards. Unlike every
+/// other figure, the throughput metrics (`events_per_sec`,
+/// `replay_wall_s`) are wall-clock: their comparison tolerances are set
+/// effectively infinite so the `--compare` gate never flaps on machine
+/// noise, and the anchors carry the real floors. CI's determinism diff
+/// excludes this figure for the same reason.
+pub fn fig15_replay_throughput(ctx: &mut FigureCtx) {
+    let sc = ctx.sc();
+    let mut runner = BenchRunner::embedded("fig15: streaming replay throughput", &sc);
+
+    // A deliberately under-loaded machine: lots of idle pool, ~2 pool
+    // events per job, ~100k jobs/year at a 315 s mean inter-arrival.
+    let mut p = machines::summit_1024();
+    p.total_nodes = sc.pick(4096, 256);
+    p.mean_interarrival_s = sc.pick(315.0, 90.0);
+    p.duration_s = sc.pick(365.0, 2.0) * 24.0 * 3600.0;
+    p.warmup_s = 0.0;
+
+    let t_gen = Instant::now();
+    let text = trace::synth_swf_text(&p, sc.seed);
+    let log = swf::parse_str(&text);
+    let gen_s = t_gen.elapsed().as_secs_f64();
+    runner.record("synth-swf:generate+parse", vec![gen_s], Some(log.jobs.len() as f64));
+    println!(
+        "synthesized SWF log: {} jobs, {} nodes, {:.0} days",
+        log.jobs.len(),
+        p.total_nodes,
+        p.duration_s / 86_400.0
+    );
+
+    let base = trace::SliceSpec {
+        nodes: p.total_nodes,
+        procs_per_node: 1,
+        t0: 0.0,
+        t1: p.duration_s,
+        warmup_s: 24.0 * 3600.0,
+        debounce_s: 0.0,
+        knowledge: Knowledge::Blind,
+    };
+    let window_s = sc.pick(7.0 * 24.0, 12.0) * 3600.0;
+    let wl = workload::hpo_campaign(Dnn::ShuffleNet, sc.pick(1000, 100), 100.0);
+    let run = BaselineRun::default();
+
+    let t_replay = Instant::now();
+    let shards = sim::replay_shards(&log, &base, window_s, &run, &wl, 0);
+    let wall = t_replay.elapsed().as_secs_f64().max(1e-9);
+    let stitched = sim::stitch_shards(&base, &shards);
+    let events = stitched.metrics.n_events as f64;
+    runner.record("replay:sharded-streaming", vec![wall], Some(events));
+
+    let mut tab = Table::new(vec!["shards", "jobs", "events", "pool samples", "idle nh", "U span"]);
+    tab.row(vec![
+        stitched.shards.to_string(),
+        stitched.jobs_total.to_string(),
+        stitched.metrics.n_events.to_string(),
+        stitched.pool_samples.to_string(),
+        f(stitched.metrics.resource_node_hours, 0),
+        hms(stitched.metrics.duration_s),
+    ]);
+    println!("{}", tab.render());
+    println!(
+        "replayed {} events in {:.2} s ({:.0} events/s), seam conservation {:.2e}",
+        stitched.metrics.n_events,
+        wall,
+        events / wall,
+        stitched.conservation_rel
+    );
+
+    // Differential spot-check inside the bench itself: the first shard's
+    // streamed decisions must match a materialized replay of the same
+    // window (the full property test lives in tests/streaming_differential.rs).
+    let w0 = sim::shard_windows(&base, window_s)[0].clone();
+    let mat = swf::slice(&log, &w0);
+    let res_m = sim::replay(run.coordinator(), &mat.trace, &wl, &run.opts);
+    let samples_rel = (res_m.metrics.samples_processed - shards[0].metrics.samples_processed).abs()
+        / res_m.metrics.samples_processed.max(1.0);
+    let mismatch = (res_m.metrics.n_events != shards[0].events) as u32
+        + (res_m.pool_sizes.len() != shards[0].pool_samples) as u32
+        + (samples_rel > 1e-12) as u32;
+    runner.finish();
+
+    ctx.metric("shards", stitched.shards as f64, 0.0, Better::Equal);
+    ctx.metric("jobs_total", stitched.jobs_total as f64, 0.0, Better::Equal);
+    let ev_tol = counter_tol(events, 0.25, 10.0);
+    ctx.metric("replay_events", events, ev_tol, Better::Equal);
+    ctx.metric("pool_samples", stitched.pool_samples as f64, ev_tol, Better::Equal);
+    ctx.metric("stitch_conservation_rel", stitched.conservation_rel, 1e-6, Better::Lower);
+    ctx.metric("stream_materialized_mismatch", mismatch as f64, 0.0, Better::Equal);
+    // Wall-clock metrics: tolerance 1e9 = never compared in practice.
+    ctx.metric("events_per_sec", events / wall, 1e9, Better::Higher);
+    ctx.metric("replay_wall_s", wall, 1e9, Better::Lower);
+
+    ctx.anchor_at_most("stitch_conservation_rel", 0.0, 1e-6);
+    ctx.anchor_near("stream_materialized_mismatch", 0.0, 0.0);
+    if sc.quick {
+        // Effective floor 1000 events/s: ~100x headroom on a loaded
+        // shared runner, still catches an accidental quadratic.
+        ctx.anchor_at_least("events_per_sec", 20_000.0, 19_000.0);
+    } else {
+        ctx.anchor_at_least("events_per_sec", 50_000.0, 45_000.0);
+        // The tentpole budget: 1 year x 4k nodes replayed under a
+        // minute, doubled for slow weekly-CI hardware.
+        ctx.anchor_at_most("replay_wall_s", 60.0, 60.0);
+    }
 }

@@ -11,13 +11,16 @@
 //! * `bftrainer bench --compare old.json new.json` — diffs two
 //!   trajectories and exits nonzero on regressions beyond each metric's
 //!   declared tolerance;
-//! * the 12 `rust/benches/*` targets — thin shims over
+//! * the 13 `rust/benches/*` targets — thin shims over
 //!   [`run_bench_target`], so `cargo bench` keeps working unchanged.
 //!
 //! Determinism contract: reports contain counter-based metrics only —
 //! fixed seeds, no wall-clock values — so two runs of the same figure at
 //! the same preset are byte-identical (`rust/tests/bench_json.rs` pins
-//! this).
+//! this). Sole exception: `fig15_replay_throughput` gates a wall-clock
+//! throughput floor, so its report is excluded from byte-identity checks
+//! and its wall metrics carry effectively-infinite comparison tolerances
+//! (the anchors do the gating).
 
 pub mod figures;
 
@@ -95,6 +98,11 @@ pub fn registry() -> Vec<Figure> {
             name: "solver",
             title: "LP-core micro benchmarks",
             run: figures::solver,
+        },
+        Figure {
+            name: "fig15_replay_throughput",
+            title: "streaming replay throughput (sharded SWF)",
+            run: figures::fig15_replay_throughput,
         },
     ]
 }
@@ -355,7 +363,7 @@ mod tests {
     #[test]
     fn registry_names_unique_and_complete() {
         let figs = registry();
-        assert_eq!(figs.len(), 12);
+        assert_eq!(figs.len(), 13);
         for (i, a) in figs.iter().enumerate() {
             assert!(figs.iter().skip(i + 1).all(|b| b.name != a.name), "dup {}", a.name);
             assert!(by_name(a.name).is_some());

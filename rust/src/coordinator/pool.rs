@@ -13,30 +13,46 @@
 //! and the order degrades to the original deterministic one (ascending
 //! node id on grow, descending on release).
 //!
-//! Per-trainer scale lookups (`count_of`) are served from a cached
-//! count map — they sit on the replay inner loop, which runs hundreds of
-//! millions of iterations on long traces.
+//! State is struct-of-arrays keyed by dense node index (DESIGN.md §14):
+//! membership, assignment and reclaim live in flat slot vectors indexed
+//! by `NodeId`, so the membership/assignment probes on the replay inner
+//! loop — which runs hundreds of millions of iterations on long traces —
+//! are direct loads instead of tree walks. Every enumeration scans slots
+//! in ascending node id, which is exactly the iteration order of the old
+//! `BTreeSet`/`BTreeMap` representation, and the placement sorts are
+//! stable over those scans — so placement decisions are byte-identical
+//! to the tree-based pool. Per-trainer scale lookups ([`Pool::count_of`])
+//! are served from a cached count vector kept in sync by every mutator.
 
 use crate::trace::NodeId;
 use std::collections::BTreeMap;
-use std::collections::BTreeSet;
 
 use super::alloc::LifetimeProfile;
 use super::trainer::TrainerId;
 
-/// Pool state: idle nodes, their assignment and scheduled reclaim times.
+/// Free-slot sentinel in [`Pool::assigned`]; real trainer ids are small
+/// sequential indices and can never collide with it.
+const UNASSIGNED: TrainerId = TrainerId::MAX;
+
+/// Pool state: idle nodes, their assignment and scheduled reclaim times,
+/// in parallel slot vectors indexed by node id.
 #[derive(Clone, Debug, Default)]
 pub struct Pool {
-    /// All nodes currently in N.
-    nodes: BTreeSet<NodeId>,
-    /// node -> trainer assignment (absent = free).
-    assigned: BTreeMap<NodeId, TrainerId>,
-    /// node -> scheduled reclaim time (absolute trace seconds; INFINITY
-    /// when unknown). One entry per node in `nodes`.
-    reclaim_at: BTreeMap<NodeId, f64>,
+    /// Slot membership: `in_pool[n]` ⇔ node `n` is currently in N.
+    in_pool: Vec<bool>,
+    /// Slot assignment (`UNASSIGNED` = free). An assigned slot is always
+    /// a member: `leave` clears both together.
+    assigned: Vec<TrainerId>,
+    /// Slot scheduled reclaim time (absolute trace seconds; INFINITY
+    /// when unknown). Reset to INFINITY when the node leaves.
+    reclaim: Vec<f64>,
     /// Cached trainer -> node count, kept in sync by every mutator; the
-    /// O(log) fast path behind [`Pool::count_of`].
-    counts: BTreeMap<TrainerId, u32>,
+    /// O(1) fast path behind [`Pool::count_of`].
+    counts: Vec<u32>,
+    /// Number of `true` slots in `in_pool`.
+    n_in_pool: usize,
+    /// Number of non-`UNASSIGNED` slots in `assigned`.
+    n_assigned: usize,
 }
 
 impl Pool {
@@ -45,33 +61,52 @@ impl Pool {
     }
 
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.n_in_pool
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.n_in_pool == 0
     }
 
     pub fn contains(&self, n: NodeId) -> bool {
-        self.nodes.contains(&n)
+        self.in_pool.get(n as usize).copied().unwrap_or(false)
+    }
+
+    /// Grow the slot vectors to cover node `n`, returning its index.
+    fn slot(&mut self, n: NodeId) -> usize {
+        let i = n as usize;
+        if i >= self.in_pool.len() {
+            self.in_pool.resize(i + 1, false);
+            self.assigned.resize(i + 1, UNASSIGNED);
+            self.reclaim.resize(i + 1, f64::INFINITY);
+        }
+        i
     }
 
     /// Nodes not assigned to any Trainer (ascending id).
     pub fn free_nodes(&self) -> Vec<NodeId> {
-        self.nodes.iter().copied().filter(|n| !self.assigned.contains_key(n)).collect()
+        (0..self.in_pool.len())
+            .filter(|&i| self.in_pool[i] && self.assigned[i] == UNASSIGNED)
+            .map(|i| i as NodeId)
+            .collect()
     }
 
     pub fn n_free(&self) -> usize {
-        self.nodes.len() - self.assigned.len()
+        self.n_in_pool - self.n_assigned
+    }
+
+    /// Nodes currently assigned to trainer `j` (ascending id).
+    fn nodes_of(&self, j: TrainerId) -> Vec<NodeId> {
+        (0..self.assigned.len()).filter(|&i| self.assigned[i] == j).map(|i| i as NodeId).collect()
     }
 
     /// Current scale C_j of a trainer (cached; debug builds cross-check
     /// against the assignment scan).
     pub fn count_of(&self, j: TrainerId) -> u32 {
-        let cached = self.counts.get(&j).copied().unwrap_or(0);
+        let cached = self.counts.get(j).copied().unwrap_or(0);
         debug_assert_eq!(
             cached,
-            self.assigned.values().filter(|&&t| t == j).count() as u32,
+            self.assigned.iter().filter(|&&t| t == j).count() as u32,
             "count cache out of sync for trainer {j}"
         );
         cached
@@ -79,21 +114,26 @@ impl Pool {
 
     /// Scheduled reclaim time of a node (INFINITY when unknown or absent).
     pub fn reclaim_of(&self, n: NodeId) -> f64 {
-        self.reclaim_at.get(&n).copied().unwrap_or(f64::INFINITY)
+        self.reclaim.get(n as usize).copied().unwrap_or(f64::INFINITY)
     }
 
-    /// Current allocation as trainer -> node list.
+    /// Current allocation as trainer -> node list (ascending node id).
     pub fn allocation(&self) -> BTreeMap<TrainerId, Vec<NodeId>> {
         let mut out: BTreeMap<TrainerId, Vec<NodeId>> = BTreeMap::new();
-        for (&n, &j) in &self.assigned {
-            out.entry(j).or_default().push(n);
+        for i in 0..self.assigned.len() {
+            if self.assigned[i] != UNASSIGNED {
+                out.entry(self.assigned[i]).or_default().push(i as NodeId);
+            }
         }
         out
     }
 
     /// Trainer assigned to a node, if any.
     pub fn trainer_of(&self, n: NodeId) -> Option<TrainerId> {
-        self.assigned.get(&n).copied()
+        match self.assigned.get(n as usize) {
+            Some(&j) if j != UNASSIGNED => Some(j),
+            _ => None,
+        }
     }
 
     /// The pool as a remaining-lifetime profile at time `now`, bucketed
@@ -102,7 +142,7 @@ impl Pool {
     /// [`LifetimeProfile::flat`].
     pub fn lifetime_profile(&self, now: f64, t_fwd: f64) -> LifetimeProfile {
         LifetimeProfile::from_lives(
-            self.nodes.iter().map(|n| self.reclaim_of(*n) - now),
+            (0..self.in_pool.len()).filter(|&i| self.in_pool[i]).map(|i| self.reclaim[i] - now),
             t_fwd,
         )
     }
@@ -114,11 +154,13 @@ impl Pool {
         debug_assert!(reclaim_at.is_empty() || reclaim_at.len() == nodes.len());
         let mut added = 0;
         for (i, &n) in nodes.iter().enumerate() {
-            if self.nodes.insert(n) {
+            let s = self.slot(n);
+            if !self.in_pool[s] {
+                self.in_pool[s] = true;
+                self.n_in_pool += 1;
                 added += 1;
             }
-            let r = reclaim_at.get(i).copied().unwrap_or(f64::INFINITY);
-            self.reclaim_at.insert(n, r);
+            self.reclaim[s] = reclaim_at.get(i).copied().unwrap_or(f64::INFINITY);
         }
         added
     }
@@ -129,9 +171,14 @@ impl Pool {
     pub fn leave(&mut self, nodes: &[NodeId]) -> BTreeMap<TrainerId, u32> {
         let mut hit: BTreeMap<TrainerId, u32> = BTreeMap::new();
         for &n in nodes {
-            if self.nodes.remove(&n) {
-                self.reclaim_at.remove(&n);
-                if let Some(j) = self.assigned.remove(&n) {
+            let i = n as usize;
+            if i < self.in_pool.len() && self.in_pool[i] {
+                self.in_pool[i] = false;
+                self.n_in_pool -= 1;
+                self.reclaim[i] = f64::INFINITY;
+                let j = std::mem::replace(&mut self.assigned[i], UNASSIGNED);
+                if j != UNASSIGNED {
+                    self.n_assigned -= 1;
                     self.dec_count(j);
                     *hit.entry(j).or_insert(0) += 1;
                 }
@@ -142,27 +189,32 @@ impl Pool {
 
     /// Release all nodes of a trainer (completion or forced to waiting).
     pub fn release_all(&mut self, j: TrainerId) -> u32 {
-        let mine: Vec<NodeId> =
-            self.assigned.iter().filter(|&(_, &t)| t == j).map(|(&n, _)| n).collect();
-        for n in &mine {
-            self.assigned.remove(n);
+        let mut released = 0u32;
+        for slot in self.assigned.iter_mut() {
+            if *slot == j {
+                *slot = UNASSIGNED;
+                released += 1;
+            }
         }
-        self.counts.remove(&j);
-        mine.len() as u32
+        self.n_assigned -= released as usize;
+        if let Some(c) = self.counts.get_mut(j) {
+            *c = 0;
+        }
+        released
     }
 
     fn dec_count(&mut self, j: TrainerId) {
-        match self.counts.get_mut(&j) {
-            Some(c) if *c > 1 => *c -= 1,
-            Some(_) => {
-                self.counts.remove(&j);
-            }
-            None => debug_assert!(false, "count cache underflow for trainer {j}"),
+        match self.counts.get_mut(j) {
+            Some(c) if *c > 0 => *c -= 1,
+            _ => debug_assert!(false, "count cache underflow for trainer {j}"),
         }
     }
 
     fn inc_count(&mut self, j: TrainerId) {
-        *self.counts.entry(j).or_insert(0) += 1;
+        if j >= self.counts.len() {
+            self.counts.resize(j + 1, 0);
+        }
+        self.counts[j] += 1;
     }
 
     /// Apply a target scale map (trainer -> n_j), respecting no-migration:
@@ -177,37 +229,34 @@ impl Pool {
     pub fn apply_allocation(&mut self, targets: &BTreeMap<TrainerId, u32>) {
         let total: u32 = targets.values().sum();
         assert!(
-            total as usize <= self.nodes.len(),
+            total as usize <= self.n_in_pool,
             "allocation {total} exceeds pool {}",
-            self.nodes.len()
+            self.n_in_pool
         );
         // Phase 1: shrink (including to zero) — releases nodes, shortest
         // scheduled life first (ties: highest id, the original order).
         for (&j, &want) in targets {
             let have = self.count_of(j);
             if want < have {
-                let mut mine: Vec<NodeId> =
-                    self.assigned.iter().filter(|&(_, &t)| t == j).map(|(&n, _)| n).collect();
+                let mut mine = self.nodes_of(j);
                 mine.sort_by(|a, b| {
                     self.reclaim_of(*a).total_cmp(&self.reclaim_of(*b)).then(b.cmp(a))
                 });
                 for n in mine.into_iter().take((have - want) as usize) {
-                    self.assigned.remove(&n);
+                    self.assigned[n as usize] = UNASSIGNED;
+                    self.n_assigned -= 1;
                     self.dec_count(j);
                 }
             }
         }
         // Drop assignments for trainers not in the target map at all.
-        let known: BTreeSet<TrainerId> = targets.keys().copied().collect();
-        let stray: Vec<(NodeId, TrainerId)> = self
-            .assigned
-            .iter()
-            .filter(|&(_, t)| !known.contains(t))
-            .map(|(&n, &t)| (n, t))
-            .collect();
-        for (n, j) in stray {
-            self.assigned.remove(&n);
-            self.dec_count(j);
+        for i in 0..self.assigned.len() {
+            let j = self.assigned[i];
+            if j != UNASSIGNED && !targets.contains_key(&j) {
+                self.assigned[i] = UNASSIGNED;
+                self.n_assigned -= 1;
+                self.dec_count(j);
+            }
         }
         // Phase 2: grow from the free list, longest remaining life first
         // (ties: lowest id, the original order).
@@ -219,7 +268,8 @@ impl Pool {
             if want > have {
                 for _ in 0..(want - have) {
                     let n = free.next().expect("free node accounting broken");
-                    self.assigned.insert(n, j);
+                    self.assigned[n as usize] = j;
+                    self.n_assigned += 1;
                     self.inc_count(j);
                 }
             }
@@ -230,6 +280,7 @@ impl Pool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeSet;
 
     fn map(entries: &[(TrainerId, u32)]) -> BTreeMap<TrainerId, u32> {
         entries.iter().copied().collect()
@@ -397,5 +448,26 @@ mod tests {
         p.release_all(1);
         assert_eq!(p.count_of(1), 0);
         assert_eq!(p.n_free(), 4);
+    }
+
+    #[test]
+    fn sparse_ids_and_rejoin_keep_assignment() {
+        // Slot vectors grow on demand; gaps between live ids stay empty.
+        let mut p = Pool::new();
+        p.join(&[0, 7, 4096], &[]);
+        p.apply_allocation(&map(&[(3, 2)]));
+        assert_eq!(p.allocation()[&3], vec![0, 7]);
+        // Re-join refreshes the annotation but keeps the assignment.
+        p.join(&[7], &[123.0]);
+        assert_eq!(p.trainer_of(7), Some(3));
+        assert_eq!(p.reclaim_of(7), 123.0);
+        assert!(p.reclaim_of(4096).is_infinite());
+        assert!(p.reclaim_of(2).is_infinite()); // never joined
+        assert!(!p.contains(2));
+        assert_eq!(p.n_free(), 1);
+        // Leaving the far slot keeps everything else intact.
+        p.leave(&[4096]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.count_of(3), 2);
     }
 }

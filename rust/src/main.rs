@@ -4,6 +4,8 @@
 //!
 //! * `characterize`  — idle-node statistics of a machine preset (Tab 1/Fig 1)
 //! * `synth-trace`   — generate + save an idle-node event trace (CSV)
+//! * `synth-swf`     — deterministically generate a synthetic SWF scheduler
+//!                     log from a machine preset and a seed
 //! * `trace`         — ingest a real SWF scheduler log: slice, characterize,
 //!                     optionally emit the event CSV
 //! * `replay`        — replay a trace against a Trainer workload (§5)
@@ -36,6 +38,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("characterize") => cmd_characterize(&args[1..]),
         Some("synth-trace") => cmd_synth_trace(&args[1..]),
+        Some("synth-swf") => cmd_synth_swf(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("replay") => cmd_replay(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
@@ -63,6 +66,7 @@ fn print_usage() {
          SUBCOMMANDS:\n  \
          characterize   idle-node statistics for a machine preset (Tab 1 / Fig 1)\n  \
          synth-trace    generate an idle-node event trace CSV\n  \
+         synth-swf      generate a deterministic synthetic SWF scheduler log\n  \
          trace          ingest an SWF scheduler log (slice, characterize, emit CSV)\n  \
          replay         replay a trace against a Trainer workload (§5 experiments)\n  \
          sweep          parallel multi-scenario sweep (trace × policy × objective)\n  \
@@ -189,6 +193,48 @@ fn cmd_synth_trace(args: &[String]) -> i32 {
         t.len(),
         t.machine_nodes,
         t.duration() / 3600.0
+    );
+    0
+}
+
+fn cmd_synth_swf(args: &[String]) -> i32 {
+    let cmd = Command::new("synth-swf", "generate a deterministic synthetic SWF scheduler log")
+        .opt("machine", "summit", "machine preset the job stream is shaped after")
+        .opt("nodes", "0", "override machine size in nodes (0 = preset)")
+        .opt("days", "0", "log span in days (0 = preset week)")
+        .opt("interarrival", "0", "override mean job inter-arrival (s, 0 = preset)")
+        .opt("seed", "42", "generator seed (same seed = byte-identical log)")
+        .opt("out", "synthetic.swf", "output path");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let Some(mut params) = machines::by_name(&m.get_str("machine").unwrap()) else {
+        eprintln!("unknown machine");
+        return 2;
+    };
+    let nodes = m.get_u64("nodes").unwrap();
+    if nodes > 0 {
+        params.total_nodes = nodes as u32;
+    }
+    let days = m.get_f64("days").unwrap();
+    if days > 0.0 {
+        params.duration_s = days * 86_400.0;
+    }
+    let gap = m.get_f64("interarrival").unwrap();
+    if gap > 0.0 {
+        params.mean_interarrival_s = gap;
+    }
+    // The span flag means the whole log, not warmup + window.
+    params.warmup_s = 0.0;
+    let text = trace::synth_swf_text(&params, m.get_u64("seed").unwrap());
+    let out = m.get_str("out").unwrap();
+    if let Err(e) = std::fs::write(&out, &text) {
+        eprintln!("write failed: {e}");
+        return 1;
+    }
+    let jobs = text.lines().filter(|l| !l.starts_with(';')).count();
+    println!(
+        "wrote {jobs} jobs ({} nodes, {:.1} days) to {out}",
+        params.total_nodes,
+        params.duration_s / 86_400.0
     );
     0
 }

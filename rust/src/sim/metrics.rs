@@ -69,6 +69,33 @@ pub struct ReplayMetrics {
     pub leaves_surprise: u64,
 }
 
+impl ReplayMetrics {
+    /// Merge another window's metrics into this one: counters and
+    /// integrals add, solve-time stats combine (event-weighted mean, max
+    /// of max). Derived rate fields (`eq_nodes`) are NOT recomputed here
+    /// — shard stitching recomputes them over the full stitched span,
+    /// where the per-window tails past each last event are known.
+    pub fn absorb(&mut self, other: &ReplayMetrics) {
+        let (n_a, n_b) = (self.n_events as f64, other.n_events as f64);
+        if n_a + n_b > 0.0 {
+            self.mean_solve_s = (self.mean_solve_s * n_a + other.mean_solve_s * n_b) / (n_a + n_b);
+        }
+        self.max_solve_s = self.max_solve_s.max(other.max_solve_s);
+        self.samples_processed += other.samples_processed;
+        self.resource_node_hours += other.resource_node_hours;
+        self.duration_s += other.duration_s;
+        self.rescale_cost_samples += other.rescale_cost_samples;
+        self.preemptions += other.preemptions;
+        self.completed += other.completed;
+        self.fallbacks += other.fallbacks;
+        self.n_events += other.n_events;
+        self.lp_iterations += other.lp_iterations;
+        self.lp_refactorizations += other.lp_refactorizations;
+        self.leaves_anticipated += other.leaves_anticipated;
+        self.leaves_surprise += other.leaves_surprise;
+    }
+}
+
 /// Per-window efficiency series (Fig 10): (window start, U).
 #[derive(Clone, Debug, Default)]
 pub struct WindowedSeries {
@@ -129,6 +156,36 @@ mod tests {
         assert!((r.roi - 10.0).abs() < 1e-9);
         assert!((r.mean_investment - 200.0).abs() < 1e-9);
         assert!((r.mean_return - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_merges_counters_and_weights_solve_times() {
+        let mut a = ReplayMetrics {
+            samples_processed: 100.0,
+            n_events: 3,
+            mean_solve_s: 0.010,
+            max_solve_s: 0.030,
+            preemptions: 2,
+            lp_iterations: 50,
+            ..Default::default()
+        };
+        let b = ReplayMetrics {
+            samples_processed: 50.0,
+            n_events: 1,
+            mean_solve_s: 0.002,
+            max_solve_s: 0.002,
+            preemptions: 1,
+            lp_iterations: 10,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.samples_processed, 150.0);
+        assert_eq!(a.n_events, 4);
+        assert_eq!(a.preemptions, 3);
+        assert_eq!(a.lp_iterations, 60);
+        // event-weighted mean: (0.010·3 + 0.002·1) / 4
+        assert!((a.mean_solve_s - 0.008).abs() < 1e-12);
+        assert_eq!(a.max_solve_s, 0.030);
     }
 
     #[test]

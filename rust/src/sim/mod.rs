@@ -7,9 +7,13 @@ pub mod sweep;
 
 pub use metrics::{eq_nodes, resource_integral_node_hours, ReplayMetrics, RoiStats};
 pub use replay::{
-    preemption_within_tfwd, replay, static_baseline_outcome, ReplayOpts, ReplayResult, Workload,
+    preemption_within_tfwd, replay, replay_stream, static_baseline_outcome, ReplayOpts,
+    ReplayResult, Workload,
 };
-pub use sweep::{comparison_table, outcomes_json, run_sweep, SweepCase, SweepOutcome};
+pub use sweep::{
+    comparison_table, outcomes_json, replay_shards, run_sweep, shard_windows, stitch_shards,
+    ShardOutcome, StitchedMetrics, SweepCase, SweepOutcome,
+};
 
 use crate::coordinator::{allocator_by_name, Coordinator, Objective};
 use crate::trace::Trace;
@@ -56,7 +60,7 @@ impl Default for BaselineRun {
 }
 
 impl BaselineRun {
-    fn coordinator(&self) -> Coordinator {
+    pub(crate) fn coordinator(&self) -> Coordinator {
         let mut c = Coordinator::new(
             allocator_by_name(&self.policy).expect("caller validated the policy name"),
             self.objective.clone(),

@@ -11,7 +11,7 @@
 
 use super::metrics::{self, ReplayMetrics, RoiStats, WindowedSeries};
 use crate::coordinator::{Coordinator, TrainerSpec};
-use crate::trace::{PoolEvent, Trace};
+use crate::trace::{EventStream, PoolEvent, Trace, TraceStream};
 
 /// A submission stream: (time, spec) sorted by time.
 #[derive(Clone, Debug, Default)]
@@ -75,10 +75,31 @@ impl Default for ReplayOpts {
     }
 }
 
-/// Drive `coord` with `trace` + `workload`.
+/// Drive `coord` with a materialized `trace` + `workload`.
+///
+/// Thin wrapper over [`replay_stream`]: the trace is adapted through a
+/// [`TraceStream`], so the materialized and streaming paths share one
+/// event loop and cannot drift apart.
 pub fn replay(
-    mut coord: Coordinator,
+    coord: Coordinator,
     trace: &Trace,
+    workload: &Workload,
+    opts: &ReplayOpts,
+) -> ReplayResult {
+    replay_stream(coord, &mut TraceStream::new(trace), workload, opts)
+}
+
+/// Drive `coord` with a pull-based event `stream` + `workload`.
+///
+/// Events are consumed through a one-event lookahead, so only a single
+/// [`PoolEvent`] is resident at a time — a year-scale SWF log replays
+/// without ever materializing its [`Trace`]. When `opts.horizon_s == 0`
+/// the horizon is the stream's end, discovered the moment the lookahead
+/// drains; for a materialized trace that is exactly the old `trace_end`,
+/// so decisions are byte-identical between the two paths.
+pub fn replay_stream(
+    mut coord: Coordinator,
+    stream: &mut dyn EventStream,
     workload: &Workload,
     opts: &ReplayOpts,
 ) -> ReplayResult {
@@ -91,26 +112,42 @@ pub fn replay(
     let mut windowed = WindowedSeries { window_s: opts.window_s, values: Vec::new() };
     let mut window_acc = 0.0f64;
     let mut window_start = 0.0f64;
-    // Seed the (0, empty-pool) sample only when the trace leaves a gap
-    // before its first event — a trace whose first event is at t = 0
+
+    // One-event lookahead. `last_event_t` trails the newest pulled event,
+    // so once the stream drains it holds the final event time — the
+    // trace-end horizon, discovered without materializing anything.
+    let mut pending: Option<PoolEvent> = stream.next_event();
+    let mut last_event_t = pending.as_ref().map(|e| e.t).unwrap_or(0.0);
+
+    // Seed the (0, empty-pool) sample only when the stream leaves a gap
+    // before its first event — a stream whose first event is at t = 0
     // would otherwise produce a duplicate-t sentinel that pollutes the
     // resource-integral inputs.
     let mut pool_sizes: Vec<(f64, usize)> =
-        if trace.events.first().is_none_or(|e| e.t > 0.0) { vec![(0.0, 0)] } else { Vec::new() };
+        if pending.as_ref().is_none_or(|e| e.t > 0.0) { vec![(0.0, 0)] } else { Vec::new() };
 
-    let trace_end = trace.events.last().map(|e| e.t).unwrap_or(0.0);
-    let horizon = if opts.horizon_s > 0.0 { opts.horizon_s } else { trace_end };
+    let horizon_fixed = (opts.horizon_s > 0.0).then_some(opts.horizon_s);
     // Resolved once per replay: the env lookup is too slow for a loop that
     // runs hundreds of millions of iterations on long traces.
     let debug_inner = std::env::var("BFT_REPLAY_DEBUG").is_ok();
 
     // Unified timeline: pool events + submissions, processed in order;
     // completions subdivide intervals.
-    let mut ev_idx = 0usize;
     loop {
+        // With no fixed horizon the effective horizon is the stream end.
+        // While the lookahead still holds an event that end is unknown,
+        // but it only ever gates submissions AFTER the pending event (the
+        // event wins the `min` below), so admitting them is harmless;
+        // once the lookahead drains, `last_event_t` IS the stream end and
+        // the gate becomes exact.
+        let horizon = horizon_fixed.unwrap_or(last_event_t);
         // Next timeline point.
-        let t_event = trace.events.get(ev_idx).map(|e| e.t).filter(|&t| t <= horizon);
-        let t_sub = subs.get(next_sub).map(|s| s.0).filter(|&t| t <= horizon);
+        let t_event =
+            pending.as_ref().map(|e| e.t).filter(|&t| horizon_fixed.is_none_or(|h| t <= h));
+        let t_sub = subs.get(next_sub).map(|s| s.0).filter(|&t| match horizon_fixed {
+            Some(h) => t <= h,
+            None => pending.is_some() || t <= last_event_t,
+        });
         let t_next = match (t_event, t_sub) {
             (Some(a), Some(b)) => a.min(b),
             (Some(a), None) => a,
@@ -179,10 +216,13 @@ pub fn replay(
         // Process the event/submission at t_next.
         if let Some(te) = t_event {
             if te <= t_next {
-                let ev: &PoolEvent = &trace.events[ev_idx];
-                coord.handle_event(te, ev);
+                let ev = pending.take().expect("t_event implies a pending event");
+                coord.handle_event(te, &ev);
                 pool_sizes.push((te, coord.pool.len()));
-                ev_idx += 1;
+                pending = stream.next_event();
+                if let Some(e) = &pending {
+                    last_event_t = e.t;
+                }
             }
         }
         if let Some(ts) = t_sub {
@@ -441,6 +481,38 @@ mod tests {
         // 0 (leave at 2000 within 5000: yes), 1000 (yes), 2000 (no leave
         // after) -> 2/3
         assert!((p5000 - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replay_stream_from_backfill_matches_materialized() {
+        use crate::trace::{replay_jobs, BackfillParams, BackfillStream, Knowledge, SchedJob};
+        let jobs: Vec<SchedJob> = (0..40)
+            .map(|i| SchedJob {
+                id: i,
+                submit: 31.0 * i as f64,
+                nodes: 1 + (i % 5) as u32,
+                req_walltime: 400.0,
+                runtime: 250.0,
+            })
+            .collect();
+        let params = BackfillParams {
+            total_nodes: 8,
+            debounce_s: 0.0,
+            duration_s: 1500.0,
+            warmup_s: 100.0,
+            knowledge: Knowledge::Oracle,
+        };
+        let out = replay_jobs(&params, jobs.clone());
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let opts = ReplayOpts::default();
+        let mat = replay(coord(), &out.trace, &wl, &opts);
+        let mut stream = BackfillStream::new(&params, jobs);
+        let live = replay_stream(coord(), &mut stream, &wl, &opts);
+        assert_eq!(live.pool_sizes, mat.pool_sizes);
+        assert_eq!(live.metrics.n_events, mat.metrics.n_events);
+        assert_eq!(live.metrics.preemptions, mat.metrics.preemptions);
+        assert!((live.metrics.samples_processed - mat.metrics.samples_processed).abs() < 1e-9);
+        assert!((live.horizon - mat.horizon).abs() < 1e-12);
     }
 
     #[test]

@@ -8,10 +8,19 @@
 //! and workloads ride behind `Arc`), so cases parallelize without any
 //! cross-talk; results come back in case order regardless of which worker
 //! finished first.
+//!
+//! The same worker-thread pattern also powers fleet-scale **sharded
+//! streaming replay** ([`replay_shards`]): a long SWF window is tiled
+//! into consecutive time windows ([`shard_windows`]), each window
+//! streamed through its own backfill simulation + coordinator, and the
+//! per-window results stitched back together ([`stitch_shards`]) with a
+//! node-second conservation check at the seams (DESIGN.md §14).
 
+use super::metrics::ReplayMetrics;
+use super::BaselineRun;
 use crate::coordinator::{allocator_by_name, Coordinator, Objective};
-use crate::sim::replay::{replay, static_baseline_outcome, ReplayOpts, Workload};
-use crate::trace::Trace;
+use crate::sim::replay::{replay, replay_stream, static_baseline_outcome, ReplayOpts, Workload};
+use crate::trace::{stream_slice, SliceSpec, SwfLog, Trace};
 use crate::util::table::{f, Table};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -156,6 +165,172 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
         leaves_surprise: m.leaves_surprise,
         completed: m.completed,
         wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Tile `[base.t0, base.t1)` into consecutive `window_s`-second windows,
+/// each keeping `base`'s node slice, warmup lead-in (clamped to the
+/// available history by the slicer), debounce and knowledge mode. The
+/// final window is truncated at `base.t1`.
+pub fn shard_windows(base: &SliceSpec, window_s: f64) -> Vec<SliceSpec> {
+    assert!(window_s > 0.0, "window_s must be positive");
+    let mut out = Vec::new();
+    let mut t0 = base.t0;
+    while t0 < base.t1 - 1e-9 {
+        let t1 = (t0 + window_s).min(base.t1);
+        out.push(SliceSpec { t0, t1, ..base.clone() });
+        t0 = t1;
+    }
+    out
+}
+
+/// One window's replay result within a sharded streaming run.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    /// Index of this window in the [`shard_windows`] tiling.
+    pub window: usize,
+    /// Absolute window bounds in log seconds.
+    pub t0: f64,
+    pub t1: f64,
+    /// Jobs submitted inside the warmup-extended window.
+    pub jobs_in_window: usize,
+    /// Allocation events the coordinator processed.
+    pub events: usize,
+    /// Pool-size samples recorded (`(t, |N|)` points, ~one per pool
+    /// event) — the deterministic volume figure the throughput bench
+    /// normalizes by.
+    pub pool_samples: usize,
+    /// Idle node-seconds the pool offered post-warmup, including the
+    /// tail past the last event (holes surviving to the window horizon
+    /// emit no leave, so the pool stays at `final_pool` until `t1`).
+    pub idle_node_seconds: f64,
+    /// Busy node-seconds post-warmup from the backfill engine.
+    pub busy_node_seconds: f64,
+    /// Pool size at the end of the window (seam handoff).
+    pub final_pool: usize,
+    pub metrics: ReplayMetrics,
+}
+
+fn run_shard(
+    log: &SwfLog,
+    window: usize,
+    spec: &SliceSpec,
+    run: &BaselineRun,
+    workload: &Workload,
+) -> ShardOutcome {
+    let (mut stream, jobs_in_window) = stream_slice(log, spec);
+    let res = replay_stream(run.coordinator(), &mut stream, workload, &run.opts);
+    let duration = spec.t1 - spec.t0;
+    let (last_t, final_pool) = res.pool_sizes.last().copied().unwrap_or((0.0, 0));
+    let idle_node_seconds =
+        res.metrics.resource_node_hours * 3600.0 + final_pool as f64 * (duration - last_t).max(0.0);
+    ShardOutcome {
+        window,
+        t0: spec.t0,
+        t1: spec.t1,
+        jobs_in_window,
+        events: res.metrics.n_events,
+        pool_samples: res.pool_sizes.len(),
+        idle_node_seconds,
+        busy_node_seconds: stream.busy_node_seconds_post_warmup(),
+        final_pool,
+        metrics: res.metrics,
+    }
+}
+
+/// Replay a long SWF window as consecutive shards across worker threads:
+/// each shard streams its own backfill simulation (with `base`'s warmup
+/// lead-in) through [`replay_stream`] with a fresh coordinator, so
+/// nothing is ever materialized per window beyond the live event.
+/// Returns shard outcomes in window order regardless of which worker
+/// finished first.
+///
+/// Trainer state does NOT carry across seams — each window restarts the
+/// workload — so sharded replay measures pool/scheduling behavior at
+/// fleet scale, not end-to-end training trajectories; use the
+/// single-pass path for those (DESIGN.md §14).
+pub fn replay_shards(
+    log: &SwfLog,
+    base: &SliceSpec,
+    window_s: f64,
+    run: &BaselineRun,
+    workload: &Workload,
+    threads: usize,
+) -> Vec<ShardOutcome> {
+    let specs = shard_windows(base, window_s);
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+    .clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ShardOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = run_shard(log, i, &specs[i], run, workload);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.into_inner().unwrap().expect("every shard slot filled")).collect()
+}
+
+/// Shard results stitched back into one fleet-scale summary.
+#[derive(Clone, Debug)]
+pub struct StitchedMetrics {
+    pub shards: usize,
+    pub jobs_total: usize,
+    /// Merged §4.1 metrics over the full span: counters summed via
+    /// [`ReplayMetrics::absorb`], `duration_s`/`resource_node_hours`/
+    /// `eq_nodes` recomputed from the stitched idle node-seconds
+    /// (per-window tails included).
+    pub metrics: ReplayMetrics,
+    pub idle_node_seconds: f64,
+    pub busy_node_seconds: f64,
+    /// Relative node-second conservation defect across all window seams:
+    /// `|idle + busy − nodes × span| / (nodes × span)`. Exact (float
+    /// rounding only, ≈1e-15) when `base.debounce_s == 0`; debouncing
+    /// drops sub-threshold idle fragments from the trace and shows up
+    /// here as a small positive defect.
+    pub conservation_rel: f64,
+    pub pool_samples: usize,
+}
+
+/// Stitch per-window [`ShardOutcome`]s into a [`StitchedMetrics`] with
+/// the seam conservation check. Each window's own simulation partitions
+/// its `nodes × (t1 − t0)` node-seconds into idle (trace integral plus
+/// horizon tail) and busy (backfill engine accrual clipped to the
+/// post-warmup window), so the stitched sum must tile the full span.
+pub fn stitch_shards(base: &SliceSpec, shards: &[ShardOutcome]) -> StitchedMetrics {
+    let mut m = ReplayMetrics::default();
+    for s in shards {
+        m.absorb(&s.metrics);
+    }
+    let idle: f64 = shards.iter().map(|s| s.idle_node_seconds).sum();
+    let busy: f64 = shards.iter().map(|s| s.busy_node_seconds).sum();
+    let span_s = base.t1 - base.t0;
+    m.duration_s = span_s;
+    m.resource_node_hours = idle / 3600.0;
+    m.eq_nodes = if span_s > 0.0 { idle / span_s } else { 0.0 };
+    let total = base.nodes as f64 * span_s;
+    StitchedMetrics {
+        shards: shards.len(),
+        jobs_total: shards.iter().map(|s| s.jobs_in_window).sum(),
+        metrics: m,
+        idle_node_seconds: idle,
+        busy_node_seconds: busy,
+        conservation_rel: if total > 0.0 { ((idle + busy - total) / total).abs() } else { 0.0 },
+        pool_samples: shards.iter().map(|s| s.pool_samples).sum(),
     }
 }
 
@@ -363,6 +538,91 @@ mod tests {
     #[test]
     fn empty_sweep_is_fine() {
         assert!(run_sweep(&[], 4).is_empty());
+    }
+
+    fn swf_log(n: usize) -> SwfLog {
+        let text: String = (0..n)
+            .map(|i| {
+                format!(
+                    "{} {} -1 {} {} -1 -1 {} 900 -1 1 -1 -1 -1 -1 -1 -1 -1",
+                    i + 1,
+                    97 * i,
+                    500 + (i % 7) * 100,
+                    1 + i % 4,
+                    1 + i % 4,
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        crate::trace::swf::parse_str(&text)
+    }
+
+    fn base_spec() -> SliceSpec {
+        SliceSpec {
+            nodes: 8,
+            procs_per_node: 1,
+            t0: 600.0,
+            t1: 5400.0,
+            warmup_s: 600.0,
+            debounce_s: 0.0,
+            knowledge: crate::trace::Knowledge::Blind,
+        }
+    }
+
+    #[test]
+    fn shard_windows_tile_exactly() {
+        let base = SliceSpec { t0: 0.0, t1: 10_000.0, ..base_spec() };
+        let w = shard_windows(&base, 3000.0);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0].t0, 0.0);
+        assert_eq!(w[3].t1, 10_000.0);
+        for pair in w.windows(2) {
+            assert_eq!(pair[0].t1, pair[1].t0, "gap or overlap at a seam");
+        }
+        assert!((w[3].t1 - w[3].t0 - 1000.0).abs() < 1e-9, "last window truncated at t1");
+    }
+
+    #[test]
+    fn sharded_replay_conserves_node_seconds() {
+        let log = swf_log(60);
+        let base = base_spec();
+        let run = BaselineRun::default();
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let shards = replay_shards(&log, &base, 1200.0, &run, &wl, 2);
+        assert_eq!(shards.len(), 4);
+        // Every window's own simulation partitions its node-seconds.
+        for s in &shards {
+            let total = 8.0 * (s.t1 - s.t0);
+            let got = s.idle_node_seconds + s.busy_node_seconds;
+            assert!((got - total).abs() < 1e-6 * total, "window {}: {got} vs {total}", s.window);
+        }
+        let st = stitch_shards(&base, &shards);
+        assert_eq!(st.shards, 4);
+        assert!(st.conservation_rel < 1e-9, "seam defect {}", st.conservation_rel);
+        assert!((st.metrics.duration_s - 4800.0).abs() < 1e-9);
+        // Thread count must not change anything.
+        let seq = replay_shards(&log, &base, 1200.0, &run, &wl, 1);
+        for (a, b) in shards.iter().zip(&seq) {
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.pool_samples, b.pool_samples);
+            assert_eq!(a.final_pool, b.final_pool);
+            assert!((a.metrics.samples_processed - b.metrics.samples_processed).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn single_shard_matches_direct_streaming_slice() {
+        let log = swf_log(60);
+        let base = base_spec();
+        let run = BaselineRun::default();
+        let wl = Workload::all_at_zero(vec![spec(1e9)]);
+        let one = replay_shards(&log, &base, 4800.0, &run, &wl, 1);
+        assert_eq!(one.len(), 1);
+        let (mut stream, jobs_in_window) = stream_slice(&log, &base);
+        let res = replay_stream(run.coordinator(), &mut stream, &wl, &run.opts);
+        assert_eq!(one[0].jobs_in_window, jobs_in_window);
+        assert_eq!(one[0].events, res.metrics.n_events);
+        assert!((one[0].metrics.samples_processed - res.metrics.samples_processed).abs() < 1e-9);
     }
 
     #[test]

@@ -38,6 +38,49 @@ impl PoolEvent {
     }
 }
 
+/// A pull-based source of time-ordered [`PoolEvent`]s.
+///
+/// The materialized [`Trace`] is one implementor (via [`TraceStream`]);
+/// the backfill engine's incremental
+/// [`BackfillStream`](super::scheduler::BackfillStream) is the other —
+/// it emits events while the job replay is still running, so a year-long
+/// SWF log never needs a whole `Trace` in memory. The replay engine
+/// ([`crate::sim::replay_stream`]) consumes either through this trait
+/// and is pinned byte-identical across the two in
+/// `tests/streaming_differential.rs`.
+pub trait EventStream {
+    /// Total machine size the stream draws from (for ratios).
+    fn machine_nodes(&self) -> u32;
+
+    /// The next event in time order, or `None` when the stream is done.
+    /// Implementations must never yield out-of-order or empty events.
+    fn next_event(&mut self) -> Option<PoolEvent>;
+}
+
+/// [`EventStream`] view of a materialized [`Trace`].
+pub struct TraceStream<'a> {
+    trace: &'a Trace,
+    idx: usize,
+}
+
+impl<'a> TraceStream<'a> {
+    pub fn new(trace: &'a Trace) -> Self {
+        TraceStream { trace, idx: 0 }
+    }
+}
+
+impl EventStream for TraceStream<'_> {
+    fn machine_nodes(&self) -> u32 {
+        self.trace.machine_nodes
+    }
+
+    fn next_event(&mut self) -> Option<PoolEvent> {
+        let ev = self.trace.events.get(self.idx)?.clone();
+        self.idx += 1;
+        Some(ev)
+    }
+}
+
 /// A time-ordered idle-node event trace.
 #[derive(Clone, Debug, Default)]
 pub struct Trace {
@@ -411,5 +454,18 @@ mod tests {
     #[test]
     fn duration_empty_is_zero() {
         assert_eq!(Trace::new(4).duration(), 0.0);
+    }
+
+    #[test]
+    fn trace_stream_yields_events_in_order() {
+        let t = annotated_trace();
+        let mut s = TraceStream::new(&t);
+        assert_eq!(s.machine_nodes(), 16);
+        let mut got = Vec::new();
+        while let Some(ev) = s.next_event() {
+            got.push(ev);
+        }
+        assert_eq!(got, t.events);
+        assert_eq!(s.next_event(), None, "exhausted stream stays exhausted");
     }
 }

@@ -21,8 +21,8 @@
 //! node-time exactly tile `total_nodes × duration_s` — property-tested
 //! in `tests/swf_ingest.rs`.
 
-use super::event::{NodeId, PoolEvent, Trace};
-use std::collections::{BTreeMap, BTreeSet};
+use super::event::{EventStream, NodeId, PoolEvent, Trace};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// How much the produced trace reveals about each idle hole's end — the
 /// lifetime-knowledge regimes of the forward-looking strategy (paper
@@ -112,6 +112,12 @@ pub struct BackfillOutcome {
     pub dropped_too_large: usize,
     /// Busy node-seconds inside `[0, warmup + duration]`, pre-debounce.
     pub busy_node_seconds: f64,
+    /// Busy node-seconds inside `[warmup, warmup + duration]` only — the
+    /// window the trace covers after trimming. With `debounce_s == 0`
+    /// this plus the trace's idle node-time tiles
+    /// `total_nodes × duration_s`, which is what sharded replay checks at
+    /// every window seam (DESIGN.md §14).
+    pub busy_node_seconds_post_warmup: f64,
 }
 
 /// One change to the idle pool in the raw (pre-debounce) change log.
@@ -131,31 +137,64 @@ struct Running {
     nodes: Vec<NodeId>,
 }
 
-/// Replay a job stream through the FCFS + EASY scheduler. Jobs need not
-/// be sorted; ties and out-of-order submissions are handled.
-pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> BackfillOutcome {
-    jobs.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
-    let horizon = params.warmup_s + params.duration_s;
-    let total = params.total_nodes;
-    let n_before = jobs.len();
-    jobs.retain(|j| j.nodes > 0 && j.nodes <= total);
-    let dropped_too_large = n_before - jobs.len();
-
-    let mut free: BTreeSet<NodeId> = (0..total).collect();
-    let mut queue: Vec<SchedJob> = Vec::new(); // FCFS order
-    let mut running: Vec<Running> = Vec::new();
-    let mut next_arrival = 0usize;
-    let mut changes: Vec<PoolChange> = Vec::new();
-    let mut started = 0usize;
-    let mut busy_node_seconds = 0.0f64;
+/// The FCFS + EASY simulation itself, steppable one scheduling pass at a
+/// time. [`replay_jobs`] drains it to a change log and materializes a
+/// [`Trace`]; [`BackfillStream`] interleaves stepping with event
+/// emission so nothing is ever materialized.
+struct SimCore {
+    horizon: f64,
+    warmup_s: f64,
+    jobs: Vec<SchedJob>,
+    next_arrival: usize,
+    free: BTreeSet<NodeId>,
+    queue: Vec<SchedJob>, // FCFS order
+    running: Vec<Running>,
+    started: usize,
+    busy_node_seconds: f64,
+    busy_node_seconds_post_warmup: f64,
     // Mean requested/actual walltime ratio of started jobs — the
     // overestimate factor the WalltimeEstimate knowledge mode applies.
-    let mut walltime_ratio_sum = 0.0f64;
+    walltime_ratio_sum: f64,
+    done: bool,
+}
 
-    loop {
+impl SimCore {
+    /// Sort and filter the job stream; returns the sim plus how many jobs
+    /// were dropped as unfittable.
+    fn new(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> (SimCore, usize) {
+        jobs.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+        let total = params.total_nodes;
+        let n_before = jobs.len();
+        jobs.retain(|j| j.nodes > 0 && j.nodes <= total);
+        let dropped_too_large = n_before - jobs.len();
+        let sim = SimCore {
+            horizon: params.warmup_s + params.duration_s,
+            warmup_s: params.warmup_s,
+            jobs,
+            next_arrival: 0,
+            free: (0..total).collect(),
+            queue: Vec::new(),
+            running: Vec::new(),
+            started: 0,
+            busy_node_seconds: 0.0,
+            busy_node_seconds_post_warmup: 0.0,
+            walltime_ratio_sum: 0.0,
+            done: false,
+        };
+        (sim, dropped_too_large)
+    }
+
+    /// Advance to the next arrival/completion and run one scheduling
+    /// pass. `None` = simulation over; `Some(None)` = the pass changed
+    /// nothing the idle pool can see (full immediate reuse).
+    fn step(&mut self) -> Option<Option<PoolChange>> {
+        if self.done {
+            return None;
+        }
         // Next event time: arrival or completion.
-        let t_arr = jobs.get(next_arrival).map(|j| j.submit);
-        let t_done = running
+        let t_arr = self.jobs.get(self.next_arrival).map(|j| j.submit);
+        let t_done = self
+            .running
             .iter()
             .map(|r| r.end_actual)
             .min_by(|a, b| a.partial_cmp(b).unwrap());
@@ -163,14 +202,18 @@ pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> Backfill
             (Some(a), Some(d)) => a.min(d),
             (Some(a), None) => a,
             (None, Some(d)) => d,
-            (None, None) => break,
+            (None, None) => {
+                self.done = true;
+                return None;
+            }
         };
-        if now > horizon {
-            break;
+        if now > self.horizon {
+            self.done = true;
+            return None;
         }
         // Process completions at `now`.
         let mut freed: Vec<NodeId> = Vec::new();
-        running.retain(|r| {
+        self.running.retain(|r| {
             if r.end_actual <= now + 1e-9 {
                 freed.extend(r.nodes.iter().copied());
                 false
@@ -179,23 +222,32 @@ pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> Backfill
             }
         });
         for &n in &freed {
-            free.insert(n);
+            self.free.insert(n);
         }
         let mut to_idle = freed;
         // Process arrivals at `now`.
-        while next_arrival < jobs.len() && jobs[next_arrival].submit <= now + 1e-9 {
-            queue.push(jobs[next_arrival].clone());
-            next_arrival += 1;
+        while self.next_arrival < self.jobs.len()
+            && self.jobs[self.next_arrival].submit <= now + 1e-9
+        {
+            self.queue.push(self.jobs[self.next_arrival].clone());
+            self.next_arrival += 1;
         }
         // Schedule: FCFS + EASY backfill.
         let mut from_idle: Vec<NodeId> = Vec::new();
-        let running_before = running.len();
-        schedule(&mut queue, &mut running, &mut free, now, &mut from_idle);
-        for r in &running[running_before..] {
-            started += 1;
-            busy_node_seconds += r.nodes.len() as f64 * (r.end_actual.min(horizon) - now);
+        let running_before = self.running.len();
+        schedule(&mut self.queue, &mut self.running, &mut self.free, now, &mut from_idle);
+        for r in &self.running[running_before..] {
+            self.started += 1;
+            busy_node_seconds_accrue(
+                &mut self.busy_node_seconds,
+                &mut self.busy_node_seconds_post_warmup,
+                r,
+                now,
+                self.warmup_s,
+                self.horizon,
+            );
             let run = (r.end_actual - now).max(1e-9);
-            walltime_ratio_sum += ((r.end_requested - now) / run).clamp(1.0, 10.0);
+            self.walltime_ratio_sum += ((r.end_requested - now) / run).clamp(1.0, 10.0);
         }
         // Nodes that freed and were immediately re-allocated never became
         // idle from BFTrainer's perspective (the paper removes these).
@@ -206,17 +258,50 @@ pub fn replay_jobs(params: &BackfillParams, mut jobs: Vec<SchedJob>) -> Backfill
             .collect();
         to_idle.retain(|n| !reused.contains(n));
         from_idle.retain(|n| !reused.contains(n));
-        if !to_idle.is_empty() || !from_idle.is_empty() {
-            changes.push(PoolChange { t: now, to_idle, from_idle });
+        if to_idle.is_empty() && from_idle.is_empty() {
+            Some(None)
+        } else {
+            Some(Some(PoolChange { t: now, to_idle, from_idle }))
         }
     }
 
-    let stretch = if started > 0 { walltime_ratio_sum / started as f64 } else { 1.0 };
+    fn stretch(&self) -> f64 {
+        if self.started > 0 { self.walltime_ratio_sum / self.started as f64 } else { 1.0 }
+    }
+}
+
+/// A started job's busy node-time, clipped to the full `[0, horizon]`
+/// span and to the post-warmup `[warmup, horizon]` window.
+fn busy_node_seconds_accrue(
+    total: &mut f64,
+    post_warmup: &mut f64,
+    r: &Running,
+    now: f64,
+    warmup_s: f64,
+    horizon: f64,
+) {
+    let n = r.nodes.len() as f64;
+    *total += n * (r.end_actual.min(horizon) - now);
+    *post_warmup += n * (r.end_actual.min(horizon) - now.max(warmup_s)).max(0.0);
+}
+
+/// Replay a job stream through the FCFS + EASY scheduler. Jobs need not
+/// be sorted; ties and out-of-order submissions are handled.
+pub fn replay_jobs(params: &BackfillParams, jobs: Vec<SchedJob>) -> BackfillOutcome {
+    let (mut sim, dropped_too_large) = SimCore::new(params, jobs);
+    let mut changes: Vec<PoolChange> = Vec::new();
+    while let Some(change) = sim.step() {
+        if let Some(ch) = change {
+            changes.push(ch);
+        }
+    }
+    let stretch = sim.stretch();
     BackfillOutcome {
         trace: build_trace(params, changes, stretch),
-        started,
+        started: sim.started,
         dropped_too_large,
-        busy_node_seconds,
+        busy_node_seconds: sim.busy_node_seconds,
+        busy_node_seconds_post_warmup: sim.busy_node_seconds_post_warmup,
     }
 }
 
@@ -310,12 +395,12 @@ fn start(
 fn build_trace(params: &BackfillParams, changes: Vec<PoolChange>, stretch: f64) -> Trace {
     // Per-node idle intervals; all nodes open (idle) at t = 0.
     let mut open: BTreeMap<NodeId, f64> = (0..params.total_nodes).map(|n| (n, 0.0)).collect();
-    let mut intervals: Vec<(NodeId, f64, f64)> = Vec::new();
+    let mut asm = EventAssembler::new(params, stretch);
     let horizon = params.warmup_s + params.duration_s;
     for ch in &changes {
         for &n in &ch.from_idle {
             if let Some(t0) = open.remove(&n) {
-                intervals.push((n, t0, ch.t));
+                asm.add_interval(n, t0, ch.t);
             }
         }
         for &n in &ch.to_idle {
@@ -323,60 +408,278 @@ fn build_trace(params: &BackfillParams, changes: Vec<PoolChange>, stretch: f64) 
         }
     }
     for (n, t0) in open {
-        intervals.push((n, t0, horizon));
+        asm.add_interval(n, t0, horizon);
     }
-    // Debounce: drop fragments shorter than debounce_s; trim to the
-    // [warmup, horizon] window and rebase to t=0. Joins carry their
-    // reclaim annotation so they can be co-sorted by node id below.
-    let t0 = params.warmup_s;
-    #[derive(Default)]
-    struct RawEvent {
-        t: f64,
-        joins: Vec<(NodeId, f64)>,
-        leaves: Vec<NodeId>,
+    let mut ready: VecDeque<PoolEvent> = VecDeque::new();
+    asm.drain_below(i64::MAX, &mut ready);
+    let mut trace = Trace::new(params.total_nodes);
+    for ev in ready {
+        trace.push(ev);
     }
-    let mut evs: BTreeMap<i64, RawEvent> = Default::default();
-    let quant = |t: f64| (t * 1000.0).round() as i64; // 1 ms resolution keys
-    for (n, a, b) in intervals {
-        let (a, b) = (a.max(t0), b.min(horizon));
-        if b - a < params.debounce_s {
-            continue;
+    trace
+}
+
+/// Pending (not yet emitted) event under assembly, keyed by quantized
+/// time in [`EventAssembler::pending`].
+#[derive(Default)]
+struct RawEvent {
+    t: f64,
+    joins: Vec<(NodeId, f64)>,
+    leaves: Vec<NodeId>,
+}
+
+/// 1 ms resolution quantization keys for event grouping.
+fn quant(t: f64) -> i64 {
+    (t * 1000.0).round() as i64
+}
+
+/// Turns raw per-node idle intervals into debounced, warmup-trimmed,
+/// quantized [`PoolEvent`]s. This is the *single* normalization path
+/// behind both [`build_trace`] (which feeds every interval and drains
+/// once) and [`BackfillStream`] (which drains incrementally behind the
+/// emission frontier) — streamed and materialized events are identical
+/// by construction, a contract pinned in
+/// `tests/streaming_differential.rs`.
+struct EventAssembler {
+    debounce_s: f64,
+    duration_s: f64,
+    warmup_s: f64,
+    horizon: f64,
+    knowledge: Knowledge,
+    stretch: f64,
+    pending: BTreeMap<i64, RawEvent>,
+}
+
+impl EventAssembler {
+    fn new(params: &BackfillParams, stretch: f64) -> EventAssembler {
+        EventAssembler {
+            debounce_s: params.debounce_s,
+            duration_s: params.duration_s,
+            warmup_s: params.warmup_s,
+            horizon: params.warmup_s + params.duration_s,
+            knowledge: params.knowledge,
+            stretch,
+            pending: BTreeMap::new(),
         }
-        let (ra, rb) = (a - t0, b - t0);
+    }
+
+    /// Quantized key the interval opening at absolute time `a` will join
+    /// at after trimming and rebasing — the emission-frontier component
+    /// for still-open intervals.
+    fn join_key(&self, a: f64) -> i64 {
+        quant(a.max(self.warmup_s) - self.warmup_s)
+    }
+
+    /// Feed one raw idle interval `[a, b)` in absolute (pre-rebase)
+    /// time: debounce, trim to the `[warmup, horizon]` window, rebase to
+    /// t = 0, and group into quantized events. Joins carry their reclaim
+    /// annotation so they can be co-sorted by node id at drain time.
+    fn add_interval(&mut self, n: NodeId, a: f64, b: f64) {
+        let (a, b) = (a.max(self.warmup_s), b.min(self.horizon));
+        if b - a < self.debounce_s {
+            return;
+        }
+        let (ra, rb) = (a - self.warmup_s, b - self.warmup_s);
         // Intervals that vanish at the 1 ms quantization (zero-length
         // start-of-trace fragments, sub-ms gaps) would put the same node
         // in joins and leaves of one event; drop them.
-        if quant(ra) == quant(rb) && rb < params.duration_s - 1e-9 {
-            continue;
+        if quant(ra) == quant(rb) && rb < self.duration_s - 1e-9 {
+            return;
         }
-        let leaves_within = rb < params.duration_s - 1e-9;
-        let reclaim = match params.knowledge {
-            Knowledge::Blind => f64::NAN, // never serialized (see below)
+        let leaves_within = rb < self.duration_s - 1e-9;
+        let reclaim = match self.knowledge {
+            Knowledge::Blind => f64::NAN, // never serialized (see drain)
             _ if !leaves_within => f64::INFINITY,
             Knowledge::Oracle => rb,
-            Knowledge::WalltimeEstimate => ra + (rb - ra) * stretch,
+            Knowledge::WalltimeEstimate => ra + (rb - ra) * self.stretch,
         };
-        let ev = evs.entry(quant(ra)).or_insert_with(|| RawEvent { t: ra, ..Default::default() });
+        let ev = self
+            .pending
+            .entry(quant(ra))
+            .or_insert_with(|| RawEvent { t: ra, ..Default::default() });
         ev.joins.push((n, reclaim));
         if leaves_within {
-            evs.entry(quant(rb))
+            self.pending
+                .entry(quant(rb))
                 .or_insert_with(|| RawEvent { t: rb, ..Default::default() })
                 .leaves
                 .push(n);
         }
     }
-    let mut trace = Trace::new(params.total_nodes);
-    for (_, mut raw) in evs {
-        raw.joins.sort_unstable_by_key(|&(n, _)| n);
-        raw.leaves.sort_unstable();
-        let mut ev = PoolEvent { t: raw.t, leaves: raw.leaves, ..Default::default() };
-        ev.joins = raw.joins.iter().map(|&(n, _)| n).collect();
-        if params.knowledge != Knowledge::Blind {
-            ev.reclaim_at = raw.joins.iter().map(|&(_, r)| r).collect();
+
+    /// Emit every assembled event with quantized key strictly below
+    /// `frontier`, in time order. Pass `i64::MAX` to drain everything.
+    fn drain_below(&mut self, frontier: i64, out: &mut VecDeque<PoolEvent>) {
+        while let Some(entry) = self.pending.first_entry() {
+            if *entry.key() >= frontier {
+                break;
+            }
+            let mut raw = entry.remove();
+            raw.joins.sort_unstable_by_key(|&(n, _)| n);
+            raw.leaves.sort_unstable();
+            let mut ev = PoolEvent { t: raw.t, leaves: raw.leaves, ..Default::default() };
+            ev.joins = raw.joins.iter().map(|&(n, _)| n).collect();
+            if self.knowledge != Knowledge::Blind {
+                ev.reclaim_at = raw.joins.iter().map(|&(_, r)| r).collect();
+            }
+            if !ev.is_empty() {
+                out.push_back(ev);
+            }
         }
-        trace.push(ev);
     }
-    trace
+}
+
+/// Incremental [`EventStream`] over a backfill replay: pool events are
+/// assembled and emitted *while* the FCFS + EASY simulation runs, so a
+/// year-long SWF job stream never materializes a full [`Trace`]. Events
+/// are held back until no future idle interval can still land at or
+/// before their quantized time (the emission frontier), which makes the
+/// streamed sequence exactly the one [`replay_jobs`] would materialize.
+///
+/// [`Knowledge::WalltimeEstimate`] is the exception: its annotations
+/// scale by the mean requested/actual walltime ratio over the *whole*
+/// replay, a quantity only known after the last job starts, so that mode
+/// transparently falls back to an internal materialized replay
+/// (DESIGN.md §14). Oracle and Blind stream incrementally.
+pub struct BackfillStream {
+    total_nodes: u32,
+    dropped_too_large: usize,
+    inner: StreamInner,
+}
+
+enum StreamInner {
+    Incremental {
+        sim: SimCore,
+        /// Per-node open idle intervals (start time); seeded with every
+        /// node at t = 0, mirroring [`build_trace`].
+        open: BTreeMap<NodeId, f64>,
+        asm: EventAssembler,
+        ready: VecDeque<PoolEvent>,
+        finished: bool,
+    },
+    Materialized {
+        events: std::vec::IntoIter<PoolEvent>,
+        started: usize,
+        busy_node_seconds: f64,
+        busy_node_seconds_post_warmup: f64,
+    },
+}
+
+impl BackfillStream {
+    pub fn new(params: &BackfillParams, jobs: Vec<SchedJob>) -> BackfillStream {
+        if params.knowledge == Knowledge::WalltimeEstimate {
+            let out = replay_jobs(params, jobs);
+            return BackfillStream {
+                total_nodes: params.total_nodes,
+                dropped_too_large: out.dropped_too_large,
+                inner: StreamInner::Materialized {
+                    events: out.trace.events.into_iter(),
+                    started: out.started,
+                    busy_node_seconds: out.busy_node_seconds,
+                    busy_node_seconds_post_warmup: out.busy_node_seconds_post_warmup,
+                },
+            };
+        }
+        let (sim, dropped_too_large) = SimCore::new(params, jobs);
+        BackfillStream {
+            total_nodes: params.total_nodes,
+            dropped_too_large,
+            inner: StreamInner::Incremental {
+                sim,
+                open: (0..params.total_nodes).map(|n| (n, 0.0)).collect(),
+                asm: EventAssembler::new(params, 1.0),
+                ready: VecDeque::new(),
+                finished: false,
+            },
+        }
+    }
+
+    /// Jobs skipped as unfittable (valid immediately).
+    pub fn dropped_too_large(&self) -> usize {
+        self.dropped_too_large
+    }
+
+    /// Jobs started so far; final once the stream is exhausted.
+    pub fn started(&self) -> usize {
+        match &self.inner {
+            StreamInner::Incremental { sim, .. } => sim.started,
+            StreamInner::Materialized { started, .. } => *started,
+        }
+    }
+
+    /// Busy node-seconds accrued so far; final once exhausted.
+    pub fn busy_node_seconds(&self) -> f64 {
+        match &self.inner {
+            StreamInner::Incremental { sim, .. } => sim.busy_node_seconds,
+            StreamInner::Materialized { busy_node_seconds, .. } => *busy_node_seconds,
+        }
+    }
+
+    /// Post-warmup busy node-seconds accrued so far; final once
+    /// exhausted. See [`BackfillOutcome::busy_node_seconds_post_warmup`].
+    pub fn busy_node_seconds_post_warmup(&self) -> f64 {
+        match &self.inner {
+            StreamInner::Incremental { sim, .. } => sim.busy_node_seconds_post_warmup,
+            StreamInner::Materialized { busy_node_seconds_post_warmup, .. } => {
+                *busy_node_seconds_post_warmup
+            }
+        }
+    }
+}
+
+impl EventStream for BackfillStream {
+    fn machine_nodes(&self) -> u32 {
+        self.total_nodes
+    }
+
+    fn next_event(&mut self) -> Option<PoolEvent> {
+        let (sim, open, asm, ready, finished) = match &mut self.inner {
+            StreamInner::Materialized { events, .. } => return events.next(),
+            StreamInner::Incremental { sim, open, asm, ready, finished } => {
+                (sim, open, asm, ready, finished)
+            }
+        };
+        loop {
+            if let Some(ev) = ready.pop_front() {
+                return Some(ev);
+            }
+            if *finished {
+                return None;
+            }
+            match sim.step() {
+                None => {
+                    // Leftover open intervals close at the horizon.
+                    for (&n, &a) in open.iter() {
+                        asm.add_interval(n, a, sim.horizon);
+                    }
+                    open.clear();
+                    asm.drain_below(i64::MAX, ready);
+                    *finished = true;
+                }
+                Some(None) => {}
+                Some(Some(ch)) => {
+                    for &n in &ch.from_idle {
+                        if let Some(a) = open.remove(&n) {
+                            asm.add_interval(n, a, ch.t);
+                        }
+                    }
+                    for &n in &ch.to_idle {
+                        open.insert(n, ch.t);
+                    }
+                    // Emission frontier: every future interval closes at
+                    // or after this change (changes are time-ordered) and
+                    // opens either now or from the currently open set, so
+                    // no event with a key strictly below the frontier can
+                    // gain another join or leave.
+                    let mut frontier = asm.join_key(ch.t);
+                    for &a in open.values() {
+                        frontier = frontier.min(asm.join_key(a));
+                    }
+                    asm.drain_below(frontier, ready);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -537,6 +840,59 @@ mod tests {
             }
         }
         assert!(checked > 0, "no reclaimed joins exercised");
+    }
+
+    /// Drain a stream to a vector of events.
+    fn collect_stream(mut s: BackfillStream) -> Vec<PoolEvent> {
+        let mut out = Vec::new();
+        while let Some(ev) = s.next_event() {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn stream_matches_materialized_trace() {
+        // The incremental stream must yield byte-identical events to the
+        // materialized path, in every knowledge mode (WalltimeEstimate
+        // exercises the internal fallback).
+        let jobs: Vec<SchedJob> =
+            (0..40).map(|i| job(i, 23.0 * i as f64, 1 + (i as u32 % 5), 300.0, 200.0)).collect();
+        for knowledge in [Knowledge::Blind, Knowledge::Oracle, Knowledge::WalltimeEstimate] {
+            let p = BackfillParams { knowledge, ..params(8, 1500.0) };
+            let out = replay_jobs(&p, jobs.clone());
+            let stream = BackfillStream::new(&p, jobs.clone());
+            assert_eq!(stream.machine_nodes(), 8);
+            assert_eq!(stream.dropped_too_large(), out.dropped_too_large);
+            let events = collect_stream(stream);
+            assert_eq!(events, out.trace.events, "{knowledge:?} stream diverged");
+        }
+    }
+
+    #[test]
+    fn stream_stats_match_outcome_after_exhaustion() {
+        let jobs: Vec<SchedJob> =
+            (0..25).map(|i| job(i, 41.0 * i as f64, 1 + (i as u32 % 3), 250.0, 180.0)).collect();
+        let p = BackfillParams { warmup_s: 200.0, ..params(6, 1000.0) };
+        let out = replay_jobs(&p, jobs.clone());
+        let mut stream = BackfillStream::new(&p, jobs);
+        while stream.next_event().is_some() {}
+        assert_eq!(stream.started(), out.started);
+        assert!((stream.busy_node_seconds() - out.busy_node_seconds).abs() < 1e-9);
+        assert!(
+            (stream.busy_node_seconds_post_warmup() - out.busy_node_seconds_post_warmup).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn busy_post_warmup_clips_to_window() {
+        // One 4-node job over [0, 150] with 100 s of warmup: 4 × 50 = 200
+        // of the 600 busy node-seconds fall after the warmup boundary.
+        let p = BackfillParams { warmup_s: 100.0, ..params(4, 500.0) };
+        let out = replay_jobs(&p, vec![job(1, 0.0, 4, 150.0, 150.0)]);
+        assert!((out.busy_node_seconds - 600.0).abs() < 1e-9);
+        assert!((out.busy_node_seconds_post_warmup - 200.0).abs() < 1e-9);
     }
 
     #[test]

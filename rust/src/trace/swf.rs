@@ -38,7 +38,7 @@
 //! take the SWF default `-1`.
 
 use super::event::Trace;
-use super::scheduler::{self, BackfillParams, Knowledge, SchedJob};
+use super::scheduler::{self, BackfillParams, BackfillStream, Knowledge, SchedJob};
 use std::path::Path;
 
 /// One job record surviving the parse + filter.
@@ -135,9 +135,12 @@ fn parse_job(line: &str) -> Option<SwfJob> {
     if f.len() < 5 {
         return None;
     }
+    // Non-finite values ("nan", "inf", overflowing literals like 1e999)
+    // parse as f64 but would poison submit-time sorting and the backfill
+    // engine's time comparisons; treat them as unparseable.
     let get = |i: usize| -> Option<f64> {
         match f.get(i) {
-            Some(s) => s.parse::<f64>().ok(),
+            Some(s) => s.parse::<f64>().ok().filter(|v| v.is_finite()),
             None => Some(-1.0),
         }
     };
@@ -181,6 +184,28 @@ pub fn to_swf_text(jobs: &[SwfJob], max_nodes: u32) -> String {
         ));
     }
     out
+}
+
+/// Deterministically synthesize a full SWF document from the synthetic
+/// job-stream generator: same `(params, seed)` → byte-identical text.
+/// Job ids are shifted to start at 1 (SWF job numbers are 1-based) and
+/// times round to whole seconds per SWF convention, with runtimes and
+/// requested times clamped to at least 1 s so rounding cannot produce a
+/// job the ingest filter would drop. Backs the `bftrainer synth-swf`
+/// subcommand, the `fig15_replay_throughput` bench, and the scale tests.
+pub fn synth_swf_text(params: &super::synth::SynthParams, seed: u64) -> String {
+    let jobs: Vec<SwfJob> = super::synth::generate_jobs(params, seed)
+        .into_iter()
+        .map(|j| SwfJob {
+            id: j.id + 1,
+            submit: j.submit.round(),
+            runtime: j.runtime.round().max(1.0),
+            procs: j.nodes,
+            req_time: j.req_walltime.round().max(1.0),
+            status: 1,
+        })
+        .collect();
+    to_swf_text(&jobs, params.total_nodes)
 }
 
 /// A node-slice × time-window cut of a parsed log.
@@ -236,12 +261,15 @@ pub struct SliceOutcome {
     pub started: usize,
     /// Busy node-seconds inside the warmup-extended window.
     pub busy_node_seconds: f64,
+    /// Busy node-seconds inside `[t0, t1]` only — see
+    /// [`BackfillOutcome::busy_node_seconds_post_warmup`](super::scheduler::BackfillOutcome::busy_node_seconds_post_warmup).
+    pub busy_node_seconds_post_warmup: f64,
 }
 
-/// Cut `log` to `spec`'s window and replay it through the backfill
-/// engine, producing an idle-pool trace compatible with everything
-/// downstream (replay, sweep, characterization).
-pub fn slice(log: &SwfLog, spec: &SliceSpec) -> SliceOutcome {
+/// Project `log` onto `spec`'s warmup-extended window: the rebased
+/// [`SchedJob`] stream plus the backfill parameters that replay it. The
+/// shared front half of [`slice`] and [`stream_slice`].
+fn slice_jobs(log: &SwfLog, spec: &SliceSpec) -> (Vec<SchedJob>, BackfillParams) {
     let ppn = spec.procs_per_node.max(1);
     let lead = spec.warmup_s.clamp(0.0, spec.t0);
     let w0 = spec.t0 - lead;
@@ -257,7 +285,6 @@ pub fn slice(log: &SwfLog, spec: &SliceSpec) -> SliceOutcome {
             runtime: j.runtime,
         })
         .collect();
-    let jobs_in_window = jobs.len();
     let params = BackfillParams {
         total_nodes: spec.nodes,
         debounce_s: spec.debounce_s,
@@ -265,6 +292,15 @@ pub fn slice(log: &SwfLog, spec: &SliceSpec) -> SliceOutcome {
         warmup_s: lead,
         knowledge: spec.knowledge,
     };
+    (jobs, params)
+}
+
+/// Cut `log` to `spec`'s window and replay it through the backfill
+/// engine, producing an idle-pool trace compatible with everything
+/// downstream (replay, sweep, characterization).
+pub fn slice(log: &SwfLog, spec: &SliceSpec) -> SliceOutcome {
+    let (jobs, params) = slice_jobs(log, spec);
+    let jobs_in_window = jobs.len();
     let out = scheduler::replay_jobs(&params, jobs);
     SliceOutcome {
         trace: out.trace,
@@ -272,12 +308,25 @@ pub fn slice(log: &SwfLog, spec: &SliceSpec) -> SliceOutcome {
         dropped_too_large: out.dropped_too_large,
         started: out.started,
         busy_node_seconds: out.busy_node_seconds,
+        busy_node_seconds_post_warmup: out.busy_node_seconds_post_warmup,
     }
+}
+
+/// The streaming counterpart of [`slice`]: same window projection, but
+/// the events come back as an incremental [`BackfillStream`] instead of
+/// a materialized trace — the whole point for year-long logs. Returns
+/// the stream plus the number of jobs in the warmup-extended window;
+/// started/busy statistics are read off the stream once it is exhausted.
+pub fn stream_slice(log: &SwfLog, spec: &SliceSpec) -> (BackfillStream, usize) {
+    let (jobs, params) = slice_jobs(log, spec);
+    let jobs_in_window = jobs.len();
+    (BackfillStream::new(&params, jobs), jobs_in_window)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::EventStream;
 
     fn line(id: u64, submit: f64, run: f64, procs: i64, req: f64, status: i64) -> String {
         format!(
@@ -400,6 +449,74 @@ mod tests {
         assert!((out.busy_node_seconds - 2400.0).abs() < 1e-6);
         assert_eq!(out.trace.machine_nodes, 16);
         assert!(!out.trace.is_empty());
+    }
+
+    #[test]
+    fn non_finite_fields_are_malformed_not_poison() {
+        // A NaN submit would panic the submit-time sort; inf/overflow
+        // runtimes would wedge the backfill engine's time comparisons.
+        let text = [
+            "1 nan -1 600 4 -1 -1 4 900 -1 1",
+            "2 10 -1 inf 4 -1 -1 4 900 -1 1",
+            "3 20 -1 600 4 -1 -1 4 1e999 -1 1",
+            &line(4, 30.0, 600.0, 4, 900.0, 1),
+        ]
+        .join("\n");
+        let log = parse_str(&text);
+        assert_eq!(log.jobs.len(), 1);
+        assert_eq!(log.jobs[0].id, 4);
+        assert_eq!(log.malformed_lines, 3);
+    }
+
+    #[test]
+    fn stream_slice_matches_materialized_slice() {
+        let text: String = (0..30)
+            .map(|i| line(i, 60.0 * i as f64, 400.0, 4, 600.0, 1))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let log = parse_str(&text);
+        let spec = SliceSpec {
+            nodes: 8,
+            procs_per_node: 2,
+            t0: 300.0,
+            t1: 1800.0,
+            warmup_s: 300.0,
+            debounce_s: 0.0,
+            knowledge: Knowledge::Oracle,
+        };
+        let out = slice(&log, &spec);
+        let (mut stream, jobs_in_window) = stream_slice(&log, &spec);
+        assert_eq!(jobs_in_window, out.jobs_in_window);
+        let mut events = Vec::new();
+        while let Some(ev) = stream.next_event() {
+            events.push(ev);
+        }
+        assert_eq!(events, out.trace.events);
+        assert_eq!(stream.started(), out.started);
+        assert_eq!(stream.dropped_too_large(), out.dropped_too_large);
+        assert!(
+            (stream.busy_node_seconds_post_warmup() - out.busy_node_seconds_post_warmup).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn synth_swf_text_is_deterministic_and_round_trips() {
+        let mut p = crate::trace::machines::summit_1024();
+        p.duration_s = 4.0 * 3600.0;
+        p.warmup_s = 0.0;
+        let text = synth_swf_text(&p, 7);
+        assert_eq!(text, synth_swf_text(&p, 7), "same seed must be byte-identical");
+        assert_ne!(text, synth_swf_text(&p, 8), "different seed must differ");
+        // Every generated job survives the ingest filter: ids 1-based,
+        // whole-second times, runtimes >= 1 s.
+        let n_jobs = crate::trace::generate_jobs(&p, 7).len();
+        let log = parse_str(&text);
+        assert_eq!(log.jobs.len(), n_jobs);
+        assert_eq!(log.malformed_lines, 0);
+        assert_eq!(log.filtered_jobs, 0);
+        assert_eq!(log.max_nodes, Some(p.total_nodes));
+        assert!(log.jobs.iter().all(|j| j.id >= 1 && j.runtime >= 1.0 && j.submit.fract() == 0.0));
     }
 
     #[test]

@@ -181,12 +181,12 @@ fn sweep_json_round_trips_knowledge_mode() {
 }
 
 #[test]
-fn registry_covers_all_twelve_figures() {
+fn registry_covers_all_thirteen_figures() {
     let names: Vec<&str> = bench::registry().iter().map(|f| f.name).collect();
-    assert_eq!(names.len(), 12);
+    assert_eq!(names.len(), 13);
     for expect in [
         "fig1_tab1", "tab2", "fig5", "fig6", "fig7_8_9", "fig10_11", "fig12_13",
-        "fig14_tab3_tab4", "fig15", "fig16", "hotpath", "solver",
+        "fig14_tab3_tab4", "fig15", "fig16", "hotpath", "solver", "fig15_replay_throughput",
     ] {
         assert!(names.contains(&expect), "missing figure {expect}");
     }

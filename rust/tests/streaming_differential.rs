@@ -1,0 +1,235 @@
+//! Differential harness pinning streaming == materialized (DESIGN.md
+//! §14): for seeded synthetic job streams crossed with every allocator
+//! policy and both knowledge modes, the pull-based [`BackfillStream`] →
+//! `replay_stream` path must make byte-identical decisions to the
+//! materialized `replay_jobs` → `replay` path — same `EventRecord`
+//! sequence (modulo solver wall time), same `ReplayMetrics`, same pool
+//! samples. A sharded run over an SWF log must also conserve node-hours
+//! exactly across window seams.
+
+use bftrainer::coordinator::{allocator_by_name, Coordinator, EventRecord, Objective, TrainerSpec};
+use bftrainer::scaling::ScalingCurve;
+use bftrainer::sim::{self, replay, replay_stream, ReplayMetrics, ReplayOpts, ReplayResult};
+use bftrainer::trace::scheduler::{replay_jobs, BackfillParams, BackfillStream, SchedJob};
+use bftrainer::trace::{self, swf, Knowledge};
+use bftrainer::util::rng::Rng;
+
+const MACHINE: u32 = 12;
+const SPAN_S: f64 = 8000.0;
+
+/// Integer-second random job stream: small enough that the MILP policies
+/// stay cheap, varied enough (count, size, accuracy of estimates) that
+/// the two paths would diverge on any ordering or horizon bug.
+fn synth_jobs(seed: u64) -> Vec<SchedJob> {
+    let mut rng = Rng::new(seed);
+    let n_jobs = rng.range_usize(4, 24);
+    (0..n_jobs)
+        .map(|i| {
+            let req = rng.range_u64(30, 3000) as f64;
+            let frac = rng.range_f64(0.3, 1.0);
+            SchedJob {
+                id: i as u64,
+                submit: rng.range_u64(0, SPAN_S as u64) as f64,
+                nodes: rng.range_u64(1, u64::from(MACHINE)) as u32,
+                req_walltime: req,
+                runtime: (req * frac).ceil().max(1.0),
+            }
+        })
+        .collect()
+}
+
+fn workload() -> sim::Workload {
+    let spec = |name: &str, n_max: u32, total: f64| TrainerSpec {
+        name: name.into(),
+        n_min: 1,
+        n_max,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+        total_samples: total,
+    };
+    // One trainer completes mid-replay, one never does: exercises the
+    // completion-driven re-solve and the drain-at-horizon paths.
+    sim::Workload {
+        submissions: vec![(0.0, spec("short", 8, 9e4)), (500.0, spec("long", 8, 1e9))],
+    }
+}
+
+/// Everything in an [`EventRecord`] except solver wall time, with floats
+/// captured bit-exactly — "byte-identical decisions" is the contract.
+#[allow(clippy::type_complexity)]
+fn event_key(e: &EventRecord) -> (u64, u64, usize, bool, bool, usize, usize, usize, usize, usize) {
+    (
+        e.t.to_bits(),
+        e.rescale_cost_samples.to_bits(),
+        e.preempted,
+        e.fell_back,
+        e.warm_started,
+        e.pool_size,
+        e.leaves_anticipated,
+        e.leaves_surprise,
+        e.lp_iterations,
+        e.lp_refactorizations,
+    )
+}
+
+/// Every [`ReplayMetrics`] field except the wall-clock solve-time stats.
+#[allow(clippy::type_complexity)]
+fn metrics_key(
+    m: &ReplayMetrics,
+) -> (u64, u64, u64, u64, u64, u64, usize, usize, usize, u64, u64, u64, u64) {
+    (
+        m.samples_processed.to_bits(),
+        m.resource_node_hours.to_bits(),
+        m.eq_nodes.to_bits(),
+        m.duration_s.to_bits(),
+        m.rescale_cost_samples.to_bits(),
+        m.preemptions,
+        m.completed,
+        m.fallbacks,
+        m.n_events,
+        m.lp_iterations,
+        m.lp_refactorizations,
+        m.leaves_anticipated,
+        m.leaves_surprise,
+    )
+}
+
+fn coordinator(policy: &str) -> Coordinator {
+    Coordinator::new(allocator_by_name(policy).unwrap(), Objective::Throughput, 120.0, 2)
+}
+
+fn assert_identical(label: &str, mat: &ReplayResult, strm: &ReplayResult) {
+    assert_eq!(
+        mat.coordinator.event_log.len(),
+        strm.coordinator.event_log.len(),
+        "{label}: event counts diverge"
+    );
+    for (i, (a, b)) in
+        mat.coordinator.event_log.iter().zip(&strm.coordinator.event_log).enumerate()
+    {
+        assert_eq!(event_key(a), event_key(b), "{label}: event {i} diverges");
+    }
+    assert_eq!(metrics_key(&mat.metrics), metrics_key(&strm.metrics), "{label}: metrics diverge");
+    assert_eq!(mat.pool_sizes, strm.pool_sizes, "{label}: pool samples diverge");
+    assert_eq!(mat.interval_samples, strm.interval_samples, "{label}: intervals diverge");
+    assert!(
+        (mat.horizon - strm.horizon).abs() < 1e-12,
+        "{label}: horizon {} vs {}",
+        mat.horizon,
+        strm.horizon
+    );
+}
+
+#[test]
+fn streaming_matches_materialized_across_seeds_policies_and_knowledge() {
+    let wl = workload();
+    let opts = ReplayOpts::default();
+    let mut replays = 0usize;
+    for seed in 0..54u64 {
+        let jobs = synth_jobs(seed);
+        for knowledge in [Knowledge::Oracle, Knowledge::Blind] {
+            let params = BackfillParams {
+                total_nodes: MACHINE,
+                debounce_s: 0.0,
+                duration_s: SPAN_S,
+                warmup_s: 0.0,
+                knowledge,
+            };
+            let out = replay_jobs(&params, jobs.clone());
+            for policy in ["dp", "milp-aggregate", "milp-pernode"] {
+                let label = format!("seed {seed} / {policy} / {knowledge:?}");
+                let mat = replay(coordinator(policy), &out.trace, &wl, &opts);
+                let mut stream = BackfillStream::new(&params, jobs.clone());
+                let strm = replay_stream(coordinator(policy), &mut stream, &wl, &opts);
+                assert_identical(&label, &mat, &strm);
+                replays += 1;
+            }
+        }
+    }
+    assert_eq!(replays, 54 * 2 * 3);
+}
+
+#[test]
+fn run_to_completion_tail_is_identical_too() {
+    // The post-trace tail (run_to_completion) extends the horizon past
+    // the last pool event — the lookahead's end-of-stream discovery must
+    // not change where that tail begins.
+    let wl = workload();
+    let opts = ReplayOpts { run_to_completion: true, ..ReplayOpts::default() };
+    for seed in [3u64, 17, 41] {
+        let jobs = synth_jobs(seed);
+        let params = BackfillParams {
+            total_nodes: MACHINE,
+            debounce_s: 0.0,
+            duration_s: SPAN_S,
+            warmup_s: 0.0,
+            knowledge: Knowledge::Oracle,
+        };
+        let out = replay_jobs(&params, jobs.clone());
+        let mat = replay(coordinator("dp"), &out.trace, &wl, &opts);
+        let mut stream = BackfillStream::new(&params, jobs);
+        let strm = replay_stream(coordinator("dp"), &mut stream, &wl, &opts);
+        assert_identical(&format!("seed {seed} / rtc"), &mat, &strm);
+    }
+}
+
+#[test]
+fn sharded_replay_conserves_node_hours_across_seams() {
+    // A synthesized SWF log cut into five windows: each window's sim
+    // partitions nodes × span into idle + busy exactly, so the stitched
+    // totals must tile the full span with zero seam loss, and must agree
+    // with an unsharded streaming replay's own partition.
+    let mut p = trace::machines::summit_1024();
+    p.total_nodes = 32;
+    p.duration_s = 40_000.0;
+    p.warmup_s = 0.0;
+    p.mean_interarrival_s = 400.0;
+    let text = swf::synth_swf_text(&p, 9);
+    let log = swf::parse_str(&text);
+    assert!(log.jobs.len() > 20, "stream too sparse to exercise seams");
+
+    let base = trace::SliceSpec {
+        nodes: p.total_nodes,
+        procs_per_node: 1,
+        t0: 0.0,
+        t1: p.duration_s,
+        warmup_s: 0.0,
+        debounce_s: 0.0,
+        knowledge: Knowledge::Blind,
+    };
+    let run = sim::BaselineRun::default();
+    let wl = workload();
+    let shards = sim::replay_shards(&log, &base, 8000.0, &run, &wl, 2);
+    assert_eq!(shards.len(), 5);
+    let total = f64::from(p.total_nodes) * p.duration_s;
+    for s in &shards {
+        let span = f64::from(p.total_nodes) * (s.t1 - s.t0);
+        assert!(
+            (s.idle_node_seconds + s.busy_node_seconds - span).abs() < 1e-6,
+            "window [{}, {}): idle {} + busy {} != {span}",
+            s.t0,
+            s.t1,
+            s.idle_node_seconds,
+            s.busy_node_seconds
+        );
+    }
+    let stitched = sim::stitch_shards(&base, &shards);
+    assert!(
+        stitched.conservation_rel < 1e-9,
+        "seam conservation violated: rel {}",
+        stitched.conservation_rel
+    );
+    assert!(
+        (stitched.idle_node_seconds + stitched.busy_node_seconds - total).abs() < 1e-6,
+        "stitched idle {} + busy {} != {total}",
+        stitched.idle_node_seconds,
+        stitched.busy_node_seconds
+    );
+    assert_eq!(stitched.shards, 5);
+    assert_eq!(stitched.jobs_total, shards.iter().map(|s| s.jobs_in_window).sum::<usize>());
+    // The stitched resource integral equals the per-shard idle total.
+    assert!(
+        (stitched.metrics.resource_node_hours * 3600.0 - stitched.idle_node_seconds).abs() < 1e-6
+    );
+}

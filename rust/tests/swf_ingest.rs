@@ -7,7 +7,7 @@ use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective, TrainerS
 use bftrainer::scaling::ScalingCurve;
 use bftrainer::sim::{replay, ReplayOpts, Workload};
 use bftrainer::trace::scheduler::{replay_jobs, BackfillParams, SchedJob};
-use bftrainer::trace::{self, swf, Knowledge, SliceSpec};
+use bftrainer::trace::{self, swf, EventStream, Knowledge, SliceSpec};
 use bftrainer::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -91,6 +91,82 @@ fn fixture_full_pipeline_replays_against_coordinator() {
     let res = replay(coord, &out.trace, &wl, &ReplayOpts::default());
     assert!(res.metrics.samples_processed > 0.0, "trainers must harvest idle nodes");
     assert!(res.metrics.n_events > 0);
+}
+
+#[test]
+fn adversarial_lines_recover_with_exact_counts() {
+    // One well-formed log around a pile of hostile lines: negative
+    // submit/runtime and zero-proc jobs are *filtered* (they parsed but
+    // describe no occupancy), while nan/inf/overflowing literals and
+    // truncated lines are *malformed*. A huge-but-finite proc count must
+    // saturate (not wrap) on the f64 → u32 cast so the slice can drop it
+    // as too large instead of admitting a tiny aliased job.
+    let text = "\
+; MaxNodes: 8
+10 700 -1 600 4 -1 -1 4 900 -1 1
+2 -50 -1 600 4 -1 -1 4 900 -1 1
+3 100 -1 -600 4 -1 -1 4 900 -1 1
+4 200 -1 600 0 -1 -1 0 900 -1 1
+5 nan -1 600 4 -1 -1 4 900 -1 1
+6 300 -1 inf 4 -1 -1 4 900 -1 1
+7 400 -1 600 1e999 -1 -1 4 900 -1 1
+8 500
+9 600 -1 600 99999999999 -1 -1 -1 900 -1 1
+1 0 -1 600 4 -1 -1 4 900 -1 1
+";
+    let log = swf::parse_str(text);
+    let ids: Vec<u64> = log.jobs.iter().map(|j| j.id).collect();
+    assert_eq!(ids, vec![1, 9, 10], "survivors, re-sorted by submit time");
+    assert_eq!(log.filtered_jobs, 3, "negative submit, negative runtime, zero procs");
+    assert_eq!(log.malformed_lines, 4, "nan, inf, 1e999, truncated");
+    assert_eq!(log.jobs[1].procs, u32::MAX, "overflowing procs saturate");
+
+    let out = swf::slice(&log, &fixture_slice(8));
+    assert_eq!(out.dropped_too_large, 1, "the saturated job cannot fit any slice");
+    assert_eq!(out.started, 2);
+}
+
+#[test]
+fn interleaved_completions_and_horizon_spanning_jobs_conserve() {
+    // Line order is neither submit nor completion order: the short job
+    // submits later but finishes long before the first one, which spans
+    // the slice horizon t1. Both paths must clip the spanning job at the
+    // horizon and still tile nodes x span exactly.
+    let text = "\
+2 1000 -1 200 2 -1 -1 2 300 -1 1
+1 0 -1 5000 2 -1 -1 2 6000 -1 1
+";
+    let log = swf::parse_str(text);
+    assert_eq!(log.jobs[0].id, 1, "jobs re-sorted by submit time");
+    let span = 4000.0;
+    let spec = SliceSpec {
+        nodes: 4,
+        procs_per_node: 1,
+        t0: 0.0,
+        t1: span,
+        warmup_s: 0.0,
+        debounce_s: 0.0,
+        knowledge: Knowledge::Blind,
+    };
+    let out = swf::slice(&log, &spec);
+    assert_eq!(out.jobs_in_window, 2);
+    assert_eq!(out.started, 2);
+    let idle: f64 =
+        trace::extract(&out.trace, span).iter().map(trace::Fragment::len).sum();
+    let total = 4.0 * span;
+    assert!(
+        (idle + out.busy_node_seconds_post_warmup - total).abs() < 1e-6,
+        "idle {idle} + busy {} != {total}",
+        out.busy_node_seconds_post_warmup
+    );
+    // The streaming path sees the identical event sequence.
+    let (mut stream, jobs_in_window) = trace::stream_slice(&log, &spec);
+    assert_eq!(jobs_in_window, 2);
+    let mut events = Vec::new();
+    while let Some(e) = stream.next_event() {
+        events.push(e);
+    }
+    assert_eq!(events, out.trace.events);
 }
 
 #[test]
