@@ -335,6 +335,13 @@ pub struct SolverStats {
     pub lp_iterations: usize,
     /// Basis refactorizations across every LP relaxation of this solve.
     pub lp_refactorizations: usize,
+    /// Certified optimality gap, when the solver produced one: an upper
+    /// bound on `(OPT − achieved) / max(|achieved|, 1)` proven by a
+    /// relaxation bound — the aggregate LP root for `knapsack-decomp`
+    /// (DESIGN.md §15), the branch-and-bound bound for the MILP
+    /// allocators. `None` when no certificate was computed (DP proves
+    /// exact optimality through `optimal` instead).
+    pub certified_gap: Option<f64>,
 }
 
 /// The plan an [`Allocator`] answers an [`AllocRequest`] with: target

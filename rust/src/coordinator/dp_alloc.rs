@@ -14,9 +14,26 @@
 //! exactly in `O(J · |N| · range)`. Property tests in `rust/tests/`
 //! verify it matches both MILP formulations.
 
-use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
+use super::alloc::{AllocJob, AllocPlan, AllocRequest, Allocator, SolverStats};
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// Admissible-value table of one job at pool capacity `cap`: the n = 0
+/// value plus `vals[i] = v(lo + i)` for the box `lo..=min(n_max, cap)`
+/// (`vals` empty when the box is). Shared by the exact DP's inner loop
+/// and the per-job best responses of
+/// [`super::knapsack_decomp::KnapsackDecompAllocator`].
+pub(crate) fn value_table(req: &AllocRequest, job: &AllocJob, cap: usize) -> (f64, usize, Vec<f64>) {
+    let v0 = req.value_of(job, 0);
+    let lo = job.n_min as usize;
+    let hi = (job.n_max as usize).min(cap);
+    let vals: Vec<f64> = if hi >= lo {
+        (lo..=hi).map(|n| req.value_of(job, n as u32)).collect()
+    } else {
+        Vec::new()
+    };
+    (v0, lo, vals)
+}
 
 /// Exact DP allocator.
 #[derive(Clone, Debug, Default)]
@@ -40,20 +57,14 @@ impl Allocator for DpAllocator {
         for (ji, job) in req.jobs.iter().enumerate() {
             let mut next = vec![NEG; cap + 1];
             // Precompute v(n) for admissible n.
-            let v0 = req.value_of(job, 0);
-            let lo = job.n_min as usize;
-            let hi = (job.n_max as usize).min(cap);
-            let vals: Vec<f64> = if hi >= lo {
-                (lo..=hi).map(|n| req.value_of(job, n as u32)).collect()
-            } else {
-                Vec::new()
-            };
+            let (v0, lo, vals) = value_table(req, job, cap);
+            let hi = lo + vals.len().saturating_sub(1);
             for k in 0..=cap {
                 // n = 0 option
                 let mut best = dp[k] + v0;
                 let mut best_n = 0u32;
                 // n in [lo, min(hi, k)]
-                if hi >= lo {
+                if !vals.is_empty() {
                     let top = hi.min(k);
                     let mut n = lo;
                     while n <= top {

@@ -100,6 +100,13 @@ impl AggregateMilpAllocator {
     pub fn incremental_only() -> Self {
         AggregateMilpAllocator { warm_start_with_dp: false, ..Default::default() }
     }
+
+    /// Default warm-start configuration under caller-chosen solver
+    /// limits (e.g. a [`milp::Limits::threads`] override for the
+    /// parallel branch-and-bound).
+    pub fn with_limits(limits: milp::Limits) -> Self {
+        AggregateMilpAllocator { limits, ..Default::default() }
+    }
 }
 
 /// Repair a previous event's target map against a new request: drop
@@ -331,6 +338,9 @@ impl Allocator for AggregateMilpAllocator {
                         warm_started,
                         lp_iterations: root.iterations,
                         lp_refactorizations: root.refactorizations,
+                        certified_gap: Some(
+                            ((root.objective - best_obj) / best_obj.abs().max(1.0)).max(0.0),
+                        ),
                     },
                 };
             }
@@ -383,6 +393,12 @@ impl Allocator for AggregateMilpAllocator {
                 warm_started,
                 lp_iterations: root_effort.0 + res.lp_iterations,
                 lp_refactorizations: root_effort.1 + res.lp_refactorizations,
+                // B&B bound (maximize direction) certifies the returned
+                // map even on the §3.6 fallback path.
+                certified_gap: res
+                    .bound
+                    .is_finite()
+                    .then(|| ((res.bound - objective) / objective.abs().max(1.0)).max(0.0)),
             },
         }
     }

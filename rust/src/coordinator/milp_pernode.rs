@@ -287,6 +287,10 @@ impl Allocator for PerNodeMilpAllocator {
                 warm_started: false,
                 lp_iterations: res.lp_iterations,
                 lp_refactorizations: res.lp_refactorizations,
+                certified_gap: res
+                    .bound
+                    .is_finite()
+                    .then(|| ((res.bound - objective) / objective.abs().max(1.0)).max(0.0)),
             },
         }
     }

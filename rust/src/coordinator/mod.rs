@@ -6,7 +6,7 @@
 //! (paper §3: "we solve a MILP whenever there is a change to N, a Trainer
 //! completes, or a new Trainer is ready to run").
 //!
-//! All four strategies implement the single [`Allocator`] trait
+//! All five strategies implement the single [`Allocator`] trait
 //! (`AllocRequest → AllocPlan`); [`allocator_by_name`] is the registry.
 //! The coordinator keeps its allocator for the whole run, which is what
 //! lets the aggregate MILP warm-start each event's solve from the
@@ -15,6 +15,7 @@
 pub mod alloc;
 pub mod dp_alloc;
 pub mod heuristic;
+pub mod knapsack_decomp;
 pub mod milp_aggregate;
 pub mod milp_pernode;
 pub mod objective;
@@ -26,6 +27,7 @@ pub use alloc::{
 };
 pub use dp_alloc::DpAllocator;
 pub use heuristic::EqualShareAllocator;
+pub use knapsack_decomp::KnapsackDecompAllocator;
 pub use milp_aggregate::AggregateMilpAllocator;
 pub use milp_pernode::PerNodeMilpAllocator;
 pub use objective::Objective;
@@ -37,19 +39,23 @@ use std::collections::{BTreeMap, VecDeque};
 
 /// Canonical CLI names of the built-in allocation strategies, in the
 /// order `DESIGN.md` §5 describes them.
-pub const ALLOCATOR_NAMES: [&str; 4] = ["milp", "milp-pernode", "dp", "heuristic"];
+pub const ALLOCATOR_NAMES: [&str; 5] =
+    ["milp", "milp-pernode", "dp", "knapsack-decomp", "heuristic"];
 
 /// Construct a boxed [`Allocator`] from its CLI name. Accepted names
 /// (case-insensitive): `milp`/`milp-aggregate` (the production aggregate
 /// MILP with DP + incremental warm starts), `milp-pernode`/`pernode` (the
 /// paper-literal per-node formulation, small pools only), `dp` (exact
-/// dynamic program, identical optimum to the MILPs), and
+/// dynamic program, identical optimum to the MILPs),
+/// `knapsack-decomp`/`decomp` (Lagrangian per-job knapsack decomposition
+/// with a certified gap, DESIGN.md §15), and
 /// `heuristic`/`equal`/`equal-share` (the §5.1 baseline).
 pub fn allocator_by_name(name: &str) -> Option<Box<dyn Allocator>> {
     match name.to_ascii_lowercase().as_str() {
         "milp" | "milp-aggregate" => Some(Box::<AggregateMilpAllocator>::default()),
         "milp-pernode" | "pernode" => Some(Box::<PerNodeMilpAllocator>::default()),
         "dp" => Some(Box::new(DpAllocator)),
+        "knapsack-decomp" | "decomp" => Some(Box::<KnapsackDecompAllocator>::default()),
         "heuristic" | "equal" | "equal-share" => Some(Box::<EqualShareAllocator>::default()),
         _ => None,
     }

@@ -367,7 +367,7 @@ fn build_workload(cfg: &ExperimentConfig) -> sim::Workload {
 fn cmd_replay(args: &[String]) -> i32 {
     let cmd = Command::new("replay", "replay a trace against a Trainer workload")
         .opt("config", "", "TOML config file (flags override)")
-        .opt("policy", "milp", "milp | dp | heuristic | milp-pernode")
+        .opt("policy", "milp", "milp | dp | heuristic | milp-pernode | knapsack-decomp")
         .opt("objective", "throughput", "throughput | efficiency | priority")
         .opt("t-fwd", "120", "forward-looking time (s)")
         .opt("pj-max", "10", "max parallel trainers")
@@ -465,7 +465,11 @@ fn cmd_replay(args: &[String]) -> i32 {
 
 fn cmd_sweep(args: &[String]) -> i32 {
     let cmd = Command::new("sweep", "parallel multi-scenario sweep (trace × policy × objective)")
-        .opt("policies", "milp,dp,heuristic", "comma list: milp | dp | heuristic | milp-pernode")
+        .opt(
+            "policies",
+            "milp,dp,heuristic",
+            "comma list: milp | dp | heuristic | milp-pernode | knapsack-decomp",
+        )
         .opt("objectives", "throughput", "comma list: throughput | efficiency | priority")
         .opt("machine", "summit", "machine preset")
         .opt("seeds", "42", "comma list of trace seeds (one scenario each)")
@@ -668,7 +672,7 @@ fn cmd_milp_bench(args: &[String]) -> i32 {
         .opt("jobs", "5,10,20,30", "job counts")
         .opt("nodes", "50,100,200,400,800", "pool sizes")
         .opt("reps", "5", "repetitions per point")
-        .opt("solver", "milp", "milp | dp | pernode");
+        .opt("solver", "milp", "milp | dp | pernode | decomp");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
     let jobs = m.get_usize_list("jobs").unwrap();
     let nodes = m.get_usize_list("nodes").unwrap();
@@ -690,6 +694,10 @@ fn cmd_milp_bench(args: &[String]) -> i32 {
                     "pernode" => {
                         use bftrainer::coordinator::{Allocator, PerNodeMilpAllocator};
                         let _ = PerNodeMilpAllocator::default().allocate(&req);
+                    }
+                    "decomp" => {
+                        use bftrainer::coordinator::{Allocator, KnapsackDecompAllocator};
+                        let _ = KnapsackDecompAllocator::default().allocate(&req);
                     }
                     _ => {
                         use bftrainer::coordinator::{AggregateMilpAllocator, Allocator};

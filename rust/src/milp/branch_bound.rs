@@ -7,11 +7,28 @@
 //! if none was found the caller keeps the current allocation map
 //! (handled in `coordinator`). Warm starts (e.g. from the DP fast path)
 //! can be injected so the search starts with a strong bound.
+//!
+//! With [`Limits::threads`] > 1 the search stays **bit-identical to the
+//! serial one** while spending multiple cores: a speculative prefetcher
+//! pops the top of the heap, solves the pending child relaxations in
+//! parallel on the shared worker pool ([`crate::util::pool`]), memoizes
+//! each result on its node, and reinserts — the strict total heap order
+//! (bound, depth, creation sequence) makes pop-and-reinsert invisible,
+//! and an LP relaxation is a pure function of `(model, bounds, basis)`,
+//! so a memoized solve is the *same* solve the serial loop would have
+//! done at pop time. A shared atomic incumbent lets workers skip
+//! speculating on already-dominated nodes. Effort counters only
+//! accumulate when a node is actually popped, so `lp_iterations` /
+//! `nodes_explored` match the serial run too; the one escape hatch is
+//! the wall-clock limit, which is inherently timing-dependent
+//! (DESIGN.md §15).
 
 use super::model::{Model, VarKind};
-use super::simplex::{solve_lp_warm, LpBasis, LpStatus};
+use super::simplex::{solve_lp_warm, LpBasis, LpSolution, LpStatus};
+use crate::util::pool::run_indexed;
 use std::collections::BinaryHeap;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const INT_TOL: f64 = 1e-6;
@@ -23,11 +40,21 @@ pub struct Limits {
     pub time_limit: Duration,
     /// Stop when (upper bound - incumbent) / max(|incumbent|,1) < rel_gap.
     pub rel_gap: f64,
+    /// Workers for speculative parallel LP evaluation (`1` = the pure
+    /// serial loop, `0` = one per core). Any value returns the same
+    /// optimum, bound, and effort counters as `1` unless the wall-clock
+    /// limit cuts the search short.
+    pub threads: usize,
 }
 
 impl Default for Limits {
     fn default() -> Self {
-        Limits { max_nodes: 200_000, time_limit: Duration::from_secs(30), rel_gap: 1e-6 }
+        Limits {
+            max_nodes: 200_000,
+            time_limit: Duration::from_secs(30),
+            rel_gap: 1e-6,
+            threads: 1,
+        }
     }
 }
 
@@ -88,15 +115,26 @@ struct Node {
     /// relaxation objective (in maximize space) — the node's potential
     relax_obj: f64,
     depth: usize,
+    /// Creation sequence number: the final heap tie-break. With it the
+    /// heap order is a strict total order, so the pop sequence is a pure
+    /// function of the heap's *contents* — which is what lets the
+    /// prefetcher pop nodes, solve them speculatively, and reinsert them
+    /// without perturbing the serial search.
+    seq: u64,
     /// Parent relaxation basis (shared between both children).
-    basis: Rc<LpBasis>,
+    basis: Arc<LpBasis>,
+    /// Relaxation solve memoized by the speculative prefetcher. The LP
+    /// is a pure function of `(model, bounds, basis)`, so consuming this
+    /// at pop time is bit-identical to solving there.
+    lp: Option<Box<LpSolution>>,
 }
 
-/// Heap ordering: best relaxation bound first (max-heap).
+/// Heap ordering: best relaxation bound first (max-heap); ties broken
+/// deeper-first, then by earlier creation — a strict total order.
 struct HeapNode(Node);
 impl PartialEq for HeapNode {
     fn eq(&self, other: &Self) -> bool {
-        self.0.relax_obj == other.0.relax_obj
+        self.cmp(other) == std::cmp::Ordering::Equal
     }
 }
 impl Eq for HeapNode {}
@@ -112,6 +150,7 @@ impl Ord for HeapNode {
             .partial_cmp(&other.0.relax_obj)
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(other.0.depth.cmp(&self.0.depth)) // deeper first on ties
+            .then(other.0.seq.cmp(&self.0.seq)) // then earlier-created first
     }
 }
 
@@ -142,6 +181,11 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
             incumbent = Some((ws.to_vec(), to_max(model.objective_value(ws))));
         }
     }
+    // Incumbent objective (maximize space) shared with the prefetch
+    // workers as f64 bits; they read it to skip speculating on dominated
+    // nodes. Only the main loop ever stores to it.
+    let inc_bits =
+        AtomicU64::new(incumbent.as_ref().map_or(f64::NEG_INFINITY, |(_, o)| *o).to_bits());
 
     let root_bounds: Vec<(f64, f64)> = model.vars.iter().map(|v| (v.lo, v.hi)).collect();
     let root_lp = solve_lp_warm(model, &root_bounds, warm.basis);
@@ -184,11 +228,14 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
     let root_basis = root_lp.basis.clone();
 
     let mut heap = BinaryHeap::new();
+    let mut next_seq = 1u64;
     heap.push(HeapNode(Node {
         bounds: root_bounds,
         relax_obj: to_max(root_lp.objective),
         depth: 0,
-        basis: Rc::new(root_lp.basis),
+        seq: 0,
+        basis: Arc::new(root_lp.basis),
+        lp: None,
     }));
 
     let mut nodes = 0usize;
@@ -203,7 +250,13 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
     let mut pruned_unknown = false;
     let mut dropped_bound = f64::NEG_INFINITY;
 
-    while let Some(HeapNode(node)) = heap.pop() {
+    loop {
+        // Speculative prefetch: solve upcoming relaxations in parallel
+        // and memoize them on their nodes; a pure reordering of work.
+        if limits.threads != 1 && heap.len() > 1 {
+            prefetch_lps(model, &mut heap, limits.threads, &inc_bits, limits.rel_gap);
+        }
+        let Some(HeapNode(mut node)) = heap.pop() else { break };
         nodes += 1;
         // Best-first: top of heap (plus any abandoned subtree) is the
         // global upper bound.
@@ -236,12 +289,17 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
         // phase 1 merely repairs the branched variable — basic just
         // outside its tightened bound — in a few pivots; a branch that
         // fixed a variable changes the layout and falls back to a cold
-        // solve.
-        let lp = solve_lp_warm(model, &node.bounds, Some(node.basis.as_ref()));
+        // solve. A memoized prefetch result is the identical pure-function
+        // solve; effort counters accumulate here either way, so they match
+        // the serial search (wasted speculation is never counted).
+        let lp = match node.lp.take() {
+            Some(memo) => *memo,
+            None => solve_lp_warm(model, &node.bounds, Some(node.basis.as_ref())),
+        };
         lp_iterations += lp.iterations;
         lp_refactorizations += lp.refactorizations;
         let (x, relax_obj, node_basis) = match lp.status {
-            LpStatus::Optimal => (lp.x, to_max(lp.objective), Rc::new(lp.basis)),
+            LpStatus::Optimal => (lp.x, to_max(lp.objective), Arc::new(lp.basis)),
             LpStatus::Infeasible => continue, // proven-empty subtree: prune
             LpStatus::Unbounded | LpStatus::Stalled => {
                 // Numerical failure: prune, but remember the proof is gone
@@ -274,6 +332,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 let obj = to_max(model.objective_value(&xr));
                 if incumbent.as_ref().is_none_or(|(_, io)| obj > *io) {
                     incumbent = Some((xr, obj));
+                    inc_bits.store(obj.to_bits(), Ordering::Relaxed);
                 }
             }
             (Some((vi, xval)), _) => {
@@ -288,8 +347,11 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                             bounds: b,
                             relax_obj,
                             depth: node.depth + 1,
+                            seq: next_seq,
                             basis: node_basis.clone(),
+                            lp: None,
                         }));
+                        next_seq += 1;
                     }
                 }
             }
@@ -310,8 +372,11 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                         bounds: child,
                         relax_obj,
                         depth: node.depth + 1,
+                        seq: next_seq,
                         basis: node_basis.clone(),
+                        lp: None,
                     }));
+                    next_seq += 1;
                 }
             }
         }
@@ -350,6 +415,56 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
             lp_refactorizations,
         },
     }
+}
+
+/// Speculatively solve the relaxations of the top-of-heap nodes on the
+/// shared worker pool and memoize the results, then reinsert everything.
+///
+/// Correctness rests on three facts (DESIGN.md §15):
+/// 1. the heap order is a strict total order, so pop-and-reinsert does
+///    not perturb the subsequent pop sequence;
+/// 2. `solve_lp_warm` is a pure function of `(model, bounds, basis)`,
+///    so a memoized result equals the solve the serial loop would run;
+/// 3. skipping a node (already memoized, or dominated per the shared
+///    incumbent) only means it gets solved synchronously at pop — or
+///    never, if the search ends first, exactly as in the serial run.
+fn prefetch_lps(
+    model: &Model,
+    heap: &mut BinaryHeap<HeapNode>,
+    threads: usize,
+    inc_bits: &AtomicU64,
+    rel_gap: f64,
+) {
+    let budget = crate::util::pool::resolve_threads(threads, heap.len());
+    if budget < 2 {
+        return;
+    }
+    let mut batch: Vec<Node> = Vec::with_capacity(budget);
+    while batch.len() < budget {
+        match heap.pop() {
+            Some(HeapNode(n)) => batch.push(n),
+            None => break,
+        }
+    }
+    let inc = f64::from_bits(inc_bits.load(Ordering::Relaxed));
+    let todo: Vec<usize> = batch
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| {
+            n.lp.is_none()
+                && (inc == f64::NEG_INFINITY
+                    || (n.relax_obj - inc) / inc.abs().max(1.0) > rel_gap)
+        })
+        .map(|(i, _)| i)
+        .collect();
+    let solved = run_indexed(todo.len(), budget, |k| {
+        let n = &batch[todo[k]];
+        solve_lp_warm(model, &n.bounds, Some(n.basis.as_ref()))
+    });
+    for (&i, lp) in todo.iter().zip(solved) {
+        batch[i].lp = Some(Box::new(lp));
+    }
+    heap.extend(batch.into_iter().map(HeapNode));
 }
 
 fn stalled_result(
@@ -663,6 +778,77 @@ mod tests {
         if r.status == MilpStatus::Feasible {
             assert!(r.objective <= r_full.objective + 1e-6);
         }
+    }
+
+    #[test]
+    fn parallel_search_is_bit_identical_to_serial() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD15C);
+        for case in 0..20 {
+            let n = rng.range_usize(6, 14);
+            let mut m = Model::new(Direction::Maximize);
+            let mut capex = LinExpr::new();
+            let mut obj = LinExpr::new();
+            for i in 0..n {
+                let b = m.binary(format!("b{i}"));
+                capex.add(b, rng.range_f64(1.0, 9.0).round());
+                obj.add(b, rng.range_f64(1.0, 20.0).round());
+            }
+            m.constrain(capex, Sense::Le, rng.range_f64(8.0, 30.0).round(), "cap");
+            m.set_objective(obj, 0.0);
+            let serial = solve(&m, &Limits::default(), None);
+            for threads in [2, 4, 0] {
+                let par = solve(&m, &Limits { threads, ..Default::default() }, None);
+                assert_eq!(par.status, serial.status, "case {case} threads {threads}");
+                assert_eq!(
+                    par.objective.to_bits(),
+                    serial.objective.to_bits(),
+                    "case {case} threads {threads}: objective diverged"
+                );
+                assert_eq!(
+                    par.bound.to_bits(),
+                    serial.bound.to_bits(),
+                    "case {case} threads {threads}: bound diverged"
+                );
+                assert_eq!(par.x, serial.x, "case {case} threads {threads}");
+                assert_eq!(
+                    par.nodes_explored, serial.nodes_explored,
+                    "case {case} threads {threads}: node count diverged"
+                );
+                assert_eq!(
+                    par.lp_iterations, serial.lp_iterations,
+                    "case {case} threads {threads}: LP effort diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_sos2_matches_serial() {
+        // SOS2 branching exercises the weighted-center split path under
+        // the prefetcher too.
+        let mut m = Model::new(Direction::Maximize);
+        let pts = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let vals = [0.0, 2.0, 1.0, 5.0, 3.0];
+        let ws: Vec<_> = (0..5).map(|i| m.continuous(0.0, 1.0, format!("w{i}"))).collect();
+        let mut convex = LinExpr::new();
+        let mut xdef = LinExpr::new();
+        let mut fdef = LinExpr::new();
+        for i in 0..5 {
+            convex.add(ws[i], 1.0);
+            xdef.add(ws[i], pts[i]);
+            fdef.add(ws[i], vals[i]);
+        }
+        m.constrain(convex, Sense::Eq, 1.0, "convexity");
+        m.constrain(xdef, Sense::Le, 2.5, "xcap");
+        m.add_sos2(ws, "pw");
+        m.set_objective(fdef, 0.0);
+        let serial = solve(&m, &Limits::default(), None);
+        let par = solve(&m, &Limits { threads: 4, ..Default::default() }, None);
+        assert_eq!(par.status, serial.status);
+        assert_eq!(par.objective.to_bits(), serial.objective.to_bits());
+        assert_eq!(par.nodes_explored, serial.nodes_explored);
+        assert_eq!(par.lp_iterations, serial.lp_iterations);
     }
 
     #[test]

@@ -1,0 +1,408 @@
+//! Sparse LU factorization of the simplex basis with Forrest–Tomlin-style
+//! eta updates (DESIGN.md §15.2).
+//!
+//! Replaces the dense product-form basis inverse the revised simplex
+//! carried before: instead of an explicit `m × m` `B⁻¹` (O(m²) storage,
+//! O(m²) per eta update and O(m³) per refactorization), the basis is held
+//! as a sparse factorization `P·B = L·U` — left-looking Gaussian
+//! elimination with partial pivoting, both factors stored by column with
+//! only their nonzeros — plus an **eta file**: each pivot appends one
+//! sparse eta transformation instead of rewriting the factors, exactly
+//! the Forrest–Tomlin update discipline (the spike column is absorbed by
+//! a rank-one elementary matrix; the LU base is left untouched until the
+//! scheduled refactorization). After `k` pivots
+//!
+//! ```text
+//!   B_k⁻¹ = E_k · E_{k-1} ⋯ E_1 · (LU)⁻¹ P
+//! ```
+//!
+//! so FTRAN solves with the base factors then applies etas oldest-first,
+//! and BTRAN applies eta transposes newest-first then solves with the
+//! transposed factors. The refactorization *policy* is unchanged from the
+//! dense code and lives in the simplex: every `REFACTOR_EVERY` pivots,
+//! on numerical trouble, and on warm-basis adoption ([`BasisLu::factor`]
+//! returning `None` is the singular-basis rejection the `LpBasis`
+//! adoption contract relies on).
+//!
+//! Index spaces: FTRAN input and BTRAN output live in *row* space
+//! (original constraint rows); FTRAN output and BTRAN input live in
+//! *basis-position* space (the k-th basis column), matching what the rows
+//! of the old dense `B⁻¹` meant. Etas act in basis-position space.
+
+/// Pivot elements smaller than this make the factorization singular —
+/// the same threshold the simplex uses for pivot admission.
+const PIVOT_MIN: f64 = 1e-10;
+
+/// One Forrest–Tomlin eta: replacing basis position `r` where the
+/// entering column's FTRAN image was `w` yields the elementary matrix
+/// `E` with `E[r,r] = 1/w_r`, `E[i,r] = −w_i/w_r` — stored sparsely as
+/// the off-pivot entries of `w`.
+#[derive(Clone, Debug)]
+struct Eta {
+    r: usize,
+    inv_piv: f64,
+    /// `(i, w_i)` for `i ≠ r`, `w_i ≠ 0`.
+    w: Vec<(usize, f64)>,
+}
+
+/// Sparse LU factors of one basis plus the eta file accumulated since.
+#[derive(Clone, Debug, Default)]
+pub struct BasisLu {
+    m: usize,
+    /// Elimination step → original row pivoted there.
+    rowperm: Vec<usize>,
+    /// Original row → elimination step (inverse of `rowperm`).
+    rowpos: Vec<usize>,
+    /// Column `k` of `L` (unit diagonal implicit): `(original row, mult)`
+    /// for the sub-diagonal nonzeros produced at step `k`.
+    l_cols: Vec<Vec<(usize, f64)>>,
+    /// Column `k` of `U` above the diagonal: `(step, value)` with
+    /// `step < k`.
+    u_cols: Vec<Vec<(usize, f64)>>,
+    u_diag: Vec<f64>,
+    etas: Vec<Eta>,
+}
+
+impl BasisLu {
+    /// The identity basis (all-logical slack start): trivial factors, no
+    /// elimination needed, never singular.
+    pub fn identity(m: usize) -> BasisLu {
+        BasisLu {
+            m,
+            rowperm: (0..m).collect(),
+            rowpos: (0..m).collect(),
+            l_cols: vec![Vec::new(); m],
+            u_cols: vec![Vec::new(); m],
+            u_diag: vec![1.0; m],
+            etas: Vec::new(),
+        }
+    }
+
+    /// Factorize an `m × m` basis given column-by-column through
+    /// `scatter_col(k, buf)`, which must fill `buf` with the `(row, val)`
+    /// nonzeros of basis column `k`. Left-looking elimination with
+    /// partial pivoting; returns `None` when no remaining pivot reaches
+    /// [`PIVOT_MIN`] (singular basis — the warm-adoption rejection path).
+    pub fn factor(m: usize, mut scatter_col: impl FnMut(usize, &mut Vec<(usize, f64)>)) -> Option<BasisLu> {
+        let mut lu = BasisLu {
+            m,
+            rowperm: Vec::with_capacity(m),
+            rowpos: vec![usize::MAX; m],
+            l_cols: Vec::with_capacity(m),
+            u_cols: Vec::with_capacity(m),
+            u_diag: Vec::with_capacity(m),
+            etas: Vec::new(),
+        };
+        let mut work = vec![0.0f64; m];
+        let mut touched: Vec<usize> = Vec::new();
+        let mut col: Vec<(usize, f64)> = Vec::new();
+        for k in 0..m {
+            col.clear();
+            scatter_col(k, &mut col);
+            for &(r, v) in &col {
+                work[r] += v;
+                touched.push(r);
+            }
+            // Left-looking: apply the previous steps' L columns in order.
+            // Only steps whose pivot row currently holds a nonzero do any
+            // work, which is where the sparsity pays off.
+            for s in 0..k {
+                let t = work[lu.rowperm[s]];
+                if t == 0.0 {
+                    continue;
+                }
+                for &(r, v) in &lu.l_cols[s] {
+                    if work[r] == 0.0 {
+                        touched.push(r);
+                    }
+                    work[r] -= v * t;
+                }
+            }
+            // U column: entries at already-pivoted rows.
+            let mut ucol: Vec<(usize, f64)> = Vec::new();
+            for s in 0..k {
+                let v = work[lu.rowperm[s]];
+                if v != 0.0 {
+                    ucol.push((s, v));
+                }
+            }
+            // Partial pivot among the unpivoted rows.
+            let mut piv_row = usize::MAX;
+            let mut piv_abs = PIVOT_MIN;
+            for &r in &touched {
+                if lu.rowpos[r] == usize::MAX && work[r].abs() >= piv_abs {
+                    piv_abs = work[r].abs();
+                    piv_row = r;
+                }
+            }
+            if piv_row == usize::MAX {
+                return None;
+            }
+            let piv = work[piv_row];
+            let mut lcol: Vec<(usize, f64)> = Vec::new();
+            for &r in &touched {
+                if r != piv_row && lu.rowpos[r] == usize::MAX && work[r] != 0.0 {
+                    lcol.push((r, work[r] / piv));
+                }
+            }
+            // `touched` may hold duplicates; dedupe L by clearing as we go.
+            for &r in &touched {
+                work[r] = 0.0;
+            }
+            touched.clear();
+            lcol.sort_unstable_by_key(|&(r, _)| r);
+            lcol.dedup_by_key(|&mut (r, _)| r);
+            lu.rowpos[piv_row] = k;
+            lu.rowperm.push(piv_row);
+            lu.l_cols.push(lcol);
+            lu.u_cols.push(ucol);
+            lu.u_diag.push(piv);
+        }
+        Some(lu)
+    }
+
+    /// Number of etas appended since factorization.
+    pub fn n_etas(&self) -> usize {
+        self.etas.len()
+    }
+
+    /// Append the Forrest–Tomlin eta for a pivot that replaced basis
+    /// position `r`, where `w` (basis-position space) is the entering
+    /// column's FTRAN image under the *current* operator.
+    pub fn append_eta(&mut self, r: usize, w: &[f64]) {
+        let inv_piv = 1.0 / w[r];
+        let wvec: Vec<(usize, f64)> = w
+            .iter()
+            .enumerate()
+            .filter(|&(i, &v)| i != r && v != 0.0)
+            .map(|(i, &v)| (i, v))
+            .collect();
+        self.etas.push(Eta { r, inv_piv, w: wvec });
+    }
+
+    /// FTRAN: `v` enters in row space holding `a`; returns `B⁻¹ a` in
+    /// basis-position space.
+    pub fn ftran(&self, v: &mut [f64]) -> Vec<f64> {
+        debug_assert_eq!(v.len(), self.m);
+        // L solve in row space, elimination order.
+        for k in 0..self.m {
+            let t = v[self.rowperm[k]];
+            if t != 0.0 {
+                for &(r, mult) in &self.l_cols[k] {
+                    v[r] -= mult * t;
+                }
+            }
+        }
+        // Gather to step space and back-substitute U by column.
+        let mut c: Vec<f64> = self.rowperm.iter().map(|&r| v[r]).collect();
+        for k in (0..self.m).rev() {
+            let t = c[k] / self.u_diag[k];
+            c[k] = t;
+            if t != 0.0 {
+                for &(s, val) in &self.u_cols[k] {
+                    c[s] -= val * t;
+                }
+            }
+        }
+        // Eta file, oldest first.
+        for e in &self.etas {
+            if c[e.r] != 0.0 {
+                let t = c[e.r] * e.inv_piv;
+                for &(i, wi) in &e.w {
+                    c[i] -= wi * t;
+                }
+                c[e.r] = t;
+            }
+        }
+        c
+    }
+
+    /// BTRAN: `c` enters in basis-position space; returns `cᵀ B⁻¹` (row
+    /// space).
+    pub fn btran(&self, mut c: Vec<f64>) -> Vec<f64> {
+        debug_assert_eq!(c.len(), self.m);
+        // Eta transposes, newest first.
+        for e in self.etas.iter().rev() {
+            let mut acc = c[e.r];
+            for &(i, wi) in &e.w {
+                acc -= wi * c[i];
+            }
+            c[e.r] = acc * e.inv_piv;
+        }
+        // Uᵀ forward solve (column k of U is row k of Uᵀ).
+        for k in 0..self.m {
+            let mut acc = c[k];
+            for &(s, val) in &self.u_cols[k] {
+                acc -= val * c[s];
+            }
+            c[k] = acc / self.u_diag[k];
+        }
+        // Lᵀ backward solve; entries of column k sit at steps > k, already
+        // final when k is processed.
+        for k in (0..self.m).rev() {
+            let mut acc = c[k];
+            for &(r, mult) in &self.l_cols[k] {
+                acc -= mult * c[self.rowpos[r]];
+            }
+            c[k] = acc;
+        }
+        // Scatter back to row space.
+        let mut y = vec![0.0f64; self.m];
+        for k in 0..self.m {
+            y[self.rowperm[k]] = c[k];
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Dense reference: factor-free Gaussian solve of `M x = b`.
+    fn dense_solve(mat: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+        let m = b.len();
+        let mut a: Vec<Vec<f64>> = mat.to_vec();
+        let mut x = b.to_vec();
+        for col in 0..m {
+            let piv = (col..m).max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs())).unwrap();
+            a.swap(col, piv);
+            x.swap(col, piv);
+            let d = a[col][col];
+            for k in 0..m {
+                a[col][k] /= d;
+            }
+            x[col] /= d;
+            for r in 0..m {
+                if r != col && a[r][col] != 0.0 {
+                    let f = a[r][col];
+                    for k in 0..m {
+                        a[r][k] -= f * a[col][k];
+                    }
+                    x[r] -= f * x[col];
+                }
+            }
+        }
+        x
+    }
+
+    fn random_basis(rng: &mut Rng, m: usize) -> Vec<Vec<f64>> {
+        // Diagonally-dominated sparse matrix: always nonsingular.
+        let mut mat = vec![vec![0.0f64; m]; m];
+        for (i, row) in mat.iter_mut().enumerate() {
+            row[i] = rng.range_f64(1.0, 4.0);
+            for (j, v) in row.iter_mut().enumerate() {
+                if j != i && rng.chance(0.3) {
+                    *v = rng.range_f64(-0.4, 0.4);
+                }
+            }
+        }
+        mat
+    }
+
+    fn factor_of(mat: &[Vec<f64>]) -> BasisLu {
+        let m = mat.len();
+        BasisLu::factor(m, |k, buf| {
+            for (r, row) in mat.iter().enumerate() {
+                if row[k] != 0.0 {
+                    buf.push((r, row[k]));
+                }
+            }
+        })
+        .expect("nonsingular")
+    }
+
+    #[test]
+    fn ftran_matches_dense_solve() {
+        let mut rng = Rng::new(42);
+        for m in [1usize, 2, 5, 13, 40] {
+            let mat = random_basis(&mut rng, m);
+            let lu = factor_of(&mat);
+            let b: Vec<f64> = (0..m).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let got = lu.ftran(&mut b.clone());
+            let want = dense_solve(&mat, &b);
+            for i in 0..m {
+                assert!((got[i] - want[i]).abs() < 1e-8, "m={m} i={i}: {} vs {}", got[i], want[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn btran_matches_dense_transpose_solve() {
+        let mut rng = Rng::new(7);
+        for m in [1usize, 3, 8, 21] {
+            let mat = random_basis(&mut rng, m);
+            let lu = factor_of(&mat);
+            let c: Vec<f64> = (0..m).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+            let got = lu.btran(c.clone());
+            // Bᵀ y = c.
+            let tmat: Vec<Vec<f64>> =
+                (0..m).map(|i| (0..m).map(|j| mat[j][i]).collect()).collect();
+            let want = dense_solve(&tmat, &c);
+            for i in 0..m {
+                assert!((got[i] - want[i]).abs() < 1e-8, "m={m} i={i}: {} vs {}", got[i], want[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn eta_update_matches_refactorized_basis() {
+        // Replace one basis column, once via append_eta and once by
+        // factoring the updated matrix from scratch: FTRAN and BTRAN must
+        // agree to numerical precision.
+        let mut rng = Rng::new(0xFACE);
+        for m in [3usize, 9, 25] {
+            let mut mat = random_basis(&mut rng, m);
+            let lu0 = factor_of(&mat);
+            let newcol: Vec<f64> = (0..m)
+                .map(|i| if i % 2 == 0 { rng.range_f64(0.5, 2.0) } else { 0.0 })
+                .collect();
+            let r = m / 2;
+            // FTRAN image of the entering column under the current basis.
+            let w = lu0.ftran(&mut newcol.clone());
+            assert!(w[r].abs() > 1e-9, "pivot must be usable");
+            let mut lu_eta = lu0.clone();
+            lu_eta.append_eta(r, &w);
+            assert_eq!(lu_eta.n_etas(), 1);
+            for (i, row) in mat.iter_mut().enumerate() {
+                row[r] = newcol[i];
+            }
+            let lu_ref = factor_of(&mat);
+            let b: Vec<f64> = (0..m).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let f_eta = lu_eta.ftran(&mut b.clone());
+            let f_ref = lu_ref.ftran(&mut b.clone());
+            let g_eta = lu_eta.btran(b.clone());
+            let g_ref = lu_ref.btran(b.clone());
+            for i in 0..m {
+                assert!((f_eta[i] - f_ref[i]).abs() < 1e-7, "ftran m={m} i={i}");
+                assert!((g_eta[i] - g_ref[i]).abs() < 1e-7, "btran m={m} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_basis_rejected() {
+        // Two identical columns.
+        let lu = BasisLu::factor(2, |_, buf| {
+            buf.push((0, 1.0));
+            buf.push((1, 2.0));
+        });
+        assert!(lu.is_none());
+    }
+
+    #[test]
+    fn identity_is_a_no_op() {
+        let lu = BasisLu::identity(4);
+        let v = vec![1.0, -2.0, 3.5, 0.0];
+        assert_eq!(lu.ftran(&mut v.clone()), v);
+        assert_eq!(lu.btran(v.clone()), v);
+    }
+
+    #[test]
+    fn empty_basis() {
+        let lu = BasisLu::identity(0);
+        assert!(lu.ftran(&mut []).is_empty());
+        assert!(lu.btran(vec![]).is_empty());
+    }
+}

@@ -6,12 +6,16 @@
 //! * [`sparse`] — CSC storage the LP core works from
 //! * [`presolve`] — fixed/empty-column and singleton-row reduction with
 //!   solution restore and the warm-start layout signature
+//! * [`lu`] — sparse LU factorization of the basis with Forrest–Tomlin
+//!   style eta updates; the FTRAN/BTRAN engine behind the simplex
 //! * [`simplex`] — bounded-variable revised simplex (Devex pricing,
-//!   product-form basis inverse with periodic refactorization), with
+//!   sparse LU basis via [`lu`] with periodic refactorization), with
 //!   basis-snapshot re-use across structurally identical solves
 //! * [`branch_bound`] — best-first B&B that branches by tightening
 //!   variable bounds in place, reusing each parent's basis per child,
-//!   with incumbent warm starts and the paper's timeout semantics
+//!   with incumbent warm starts, the paper's timeout semantics, and
+//!   optional speculative parallel LP evaluation that preserves the
+//!   serial search bit for bit (DESIGN.md §15)
 //! * `dense` — the pre-rewrite dense tableau solver, retained behind the
 //!   `dense-lp` feature as the differential-test oracle
 //!
@@ -21,6 +25,7 @@
 pub mod branch_bound;
 #[cfg(feature = "dense-lp")]
 pub mod dense;
+pub mod lu;
 pub mod model;
 pub mod presolve;
 pub mod simplex;

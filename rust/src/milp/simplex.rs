@@ -10,9 +10,13 @@
 //! the old dense tableau carried one extra row per bounded variable.
 //!
 //! Mechanics: the constraint matrix is CSC ([`super::sparse::CscMatrix`]);
-//! the basis inverse is dense and maintained by product-form eta updates
-//! with a full refactorization every `REFACTOR_EVERY` pivots (and on
-//! numerical trouble). Pricing is Devex — the practical approximation of
+//! the basis is held as a sparse LU factorization with Forrest–Tomlin-
+//! style eta updates ([`super::lu::BasisLu`], DESIGN.md §15.2) — each
+//! pivot appends one sparse eta, with a full refactorization every
+//! `REFACTOR_EVERY` pivots (and on numerical trouble), replacing the
+//! dense product-form `B⁻¹` of the original implementation (the dense
+//! *tableau* oracle survives unchanged behind the `dense-lp` feature).
+//! Pricing is Devex — the practical approximation of
 //! steepest edge — degrading to Dantzig under fresh reference weights and
 //! to Bland's rule after an iteration threshold to break cycling. Phase 1
 //! runs the same machinery under composite infeasibility costs (basic
@@ -29,6 +33,7 @@
 //! basic just outside its tightened bound. Any structural mismatch
 //! silently falls back to the cold start.
 
+use super::lu::BasisLu;
 use super::model::{Direction, Model};
 use super::presolve::{presolve, Presolved};
 use super::sparse::CscMatrix;
@@ -261,8 +266,8 @@ struct Solver<'a> {
     basis: Vec<usize>,
     /// Value of every column (nonbasic pinned to a bound).
     x: Vec<f64>,
-    /// Dense basis inverse, row-major `m × m`.
-    binv: Vec<f64>,
+    /// Sparse LU of the basis plus the Forrest–Tomlin eta file.
+    lu: BasisLu,
     /// Devex reference weights (nonbasic entries meaningful).
     devex: Vec<f64>,
     iterations: usize,
@@ -303,7 +308,7 @@ impl<'a> Solver<'a> {
             state: vec![VarState::AtLower; ncols],
             basis: vec![0; m],
             x: vec![0.0; ncols],
-            binv: vec![0.0; m * m],
+            lu: BasisLu::identity(m),
             devex: vec![1.0; ncols],
             iterations: 0,
             refactorizations: 0,
@@ -312,27 +317,21 @@ impl<'a> Solver<'a> {
     }
 
     /// `w = B⁻¹ a_j` (FTRAN) straight off the CSC slices — logical
-    /// columns are unit vectors, so they just copy a `binv` column.
+    /// columns are unit vectors, so their rhs is `e_{j−n}`.
     fn ftran_col(&self, j: usize) -> Vec<f64> {
-        let m = self.m;
-        let mut w = vec![0.0f64; m];
+        let mut rhs = vec![0.0f64; self.m];
         if j < self.n {
             let (rows, vals) = self.a.col_slices(j);
             for (&r, &v) in rows.iter().zip(vals) {
-                for i in 0..m {
-                    w[i] += self.binv[i * m + r] * v;
-                }
+                rhs[r] = v;
             }
         } else {
-            let r = j - self.n;
-            for i in 0..m {
-                w[i] = self.binv[i * m + r];
-            }
+            rhs[j - self.n] = 1.0;
         }
-        w
+        self.lu.ftran(&mut rhs)
     }
 
-    /// All-logical start: slack basis (`binv = I`), structural columns at
+    /// All-logical start: slack basis (`B⁻¹ = I`), structural columns at
     /// their lower bound.
     fn cold_start(&mut self) {
         for j in 0..self.n {
@@ -350,10 +349,7 @@ impl<'a> Solver<'a> {
     }
 
     fn set_identity(&mut self) {
-        self.binv.fill(0.0);
-        for i in 0..self.m {
-            self.binv[i * self.m + i] = 1.0;
-        }
+        self.lu = BasisLu::identity(self.m);
         self.pivots_since_refactor = 0;
     }
 
@@ -407,65 +403,23 @@ impl<'a> Solver<'a> {
         true
     }
 
-    /// Rebuild `binv` from scratch (Gauss-Jordan with partial pivoting).
-    /// Returns false when the basis is singular.
+    /// Rebuild the basis factorization from scratch (sparse LU with
+    /// partial pivoting, discarding the eta file). Returns false when the
+    /// basis is singular.
     fn refactor(&mut self) -> bool {
-        let m = self.m;
-        let mut mat = vec![0.0f64; m * m];
-        for (i, &bj) in self.basis.iter().enumerate() {
-            if bj < self.n {
-                let (rows, vals) = self.a.col_slices(bj);
-                for (&r, &v) in rows.iter().zip(vals) {
-                    mat[r * m + i] = v;
-                }
+        let (a, n, basis) = (self.a, self.n, &self.basis);
+        let Some(lu) = BasisLu::factor(self.m, |i, buf| {
+            let bj = basis[i];
+            if bj < n {
+                let (rows, vals) = a.col_slices(bj);
+                buf.extend(rows.iter().zip(vals).map(|(&r, &v)| (r, v)));
             } else {
-                mat[(bj - self.n) * m + i] = 1.0;
+                buf.push((bj - n, 1.0));
             }
-        }
-        let mut inv = vec![0.0f64; m * m];
-        for i in 0..m {
-            inv[i * m + i] = 1.0;
-        }
-        for col in 0..m {
-            let mut best = col;
-            let mut best_abs = mat[col * m + col].abs();
-            for r in (col + 1)..m {
-                let a = mat[r * m + col].abs();
-                if a > best_abs {
-                    best_abs = a;
-                    best = r;
-                }
-            }
-            if best_abs < PIVOT_MIN {
-                return false;
-            }
-            if best != col {
-                for k in 0..m {
-                    mat.swap(col * m + k, best * m + k);
-                    inv.swap(col * m + k, best * m + k);
-                }
-            }
-            let piv_inv = 1.0 / mat[col * m + col];
-            for k in 0..m {
-                mat[col * m + k] *= piv_inv;
-                inv[col * m + k] *= piv_inv;
-            }
-            for r in 0..m {
-                if r == col {
-                    continue;
-                }
-                let f = mat[r * m + col];
-                if f != 0.0 {
-                    for k in 0..m {
-                        let sub_m = f * mat[col * m + k];
-                        let sub_i = f * inv[col * m + k];
-                        mat[r * m + k] -= sub_m;
-                        inv[r * m + k] -= sub_i;
-                    }
-                }
-            }
-        }
-        self.binv = inv;
+        }) else {
+            return false;
+        };
+        self.lu = lu;
         self.refactorizations += 1;
         self.pivots_since_refactor = 0;
         true
@@ -488,12 +442,9 @@ impl<'a> Solver<'a> {
                 }
             }
         }
+        let xb = self.lu.ftran(&mut r);
         for i in 0..m {
-            let mut acc = 0.0;
-            for k in 0..m {
-                acc += self.binv[i * m + k] * r[k];
-            }
-            self.x[self.basis[i]] = acc;
+            self.x[self.basis[i]] = xb[i];
         }
     }
 
@@ -518,33 +469,27 @@ impl<'a> Solver<'a> {
     }
 
     /// `y = c_Bᵀ B⁻¹` (BTRAN).
-    fn btran(&self, cb: &[f64]) -> Vec<f64> {
-        let m = self.m;
-        let mut y = vec![0.0f64; m];
-        for (i, &ci) in cb.iter().enumerate() {
-            if ci != 0.0 {
-                for k in 0..m {
-                    y[k] += ci * self.binv[i * m + k];
-                }
-            }
-        }
-        y
+    fn btran(&self, cb: Vec<f64>) -> Vec<f64> {
+        self.lu.btran(cb)
     }
 
     /// Devex weight maintenance after a pivot on row `r` with pivot
     /// element `piv` (entering column already marked basic, leaving column
-    /// `lv` already nonbasic). Uses the pre-update row `r` of `binv`, so
-    /// it must run before [`Self::eta_update`].
+    /// `lv` already nonbasic). Uses the pre-update pivot row
+    /// `ρ = e_rᵀ B⁻¹` — one extra BTRAN per pivot — so it must run before
+    /// [`Self::eta_update`] appends this pivot's eta.
     fn update_devex(&mut self, q: usize, lv: usize, r: usize, piv: f64) {
         let m = self.m;
-        let rho = &self.binv[r * m..(r + 1) * m];
+        let mut e_r = vec![0.0f64; m];
+        e_r[r] = 1.0;
+        let rho = self.lu.btran(e_r);
         let wq = self.devex[q].max(1.0);
         for j in 0..(self.n + m) {
             if self.state[j] == VarState::Basic || j == q {
                 continue;
             }
             let alpha = if j < self.n {
-                self.a.dot_col(j, rho)
+                self.a.dot_col(j, &rho)
             } else {
                 rho[j - self.n]
             };
@@ -558,27 +503,11 @@ impl<'a> Solver<'a> {
         self.devex[lv] = (wq / (piv * piv)).max(1.0);
     }
 
-    /// Product-form update of `binv` after replacing basis row `r` with a
-    /// column whose FTRAN image is `w`.
+    /// Forrest–Tomlin-style basis update after replacing basis row `r`
+    /// with a column whose FTRAN image is `w`: append one sparse eta to
+    /// the factorization instead of rewriting it ([`BasisLu::append_eta`]).
     fn eta_update(&mut self, r: usize, w: &[f64]) {
-        let m = self.m;
-        let inv = 1.0 / w[r];
-        let rho: Vec<f64> = self.binv[r * m..(r + 1) * m].to_vec();
-        for k in 0..m {
-            self.binv[r * m + k] = rho[k] * inv;
-        }
-        for i in 0..m {
-            if i == r {
-                continue;
-            }
-            let f = w[i] * inv;
-            if f != 0.0 {
-                let base = i * m;
-                for k in 0..m {
-                    self.binv[base + k] -= f * rho[k];
-                }
-            }
-        }
+        self.lu.append_eta(r, w);
         self.pivots_since_refactor += 1;
     }
 
@@ -655,7 +584,7 @@ impl<'a> Solver<'a> {
             } else {
                 self.basis.iter().map(|&b| self.cost[b]).collect()
             };
-            let y = self.btran(&cb);
+            let y = self.btran(cb);
 
             // Pricing: Devex score d²/w among violating nonbasics.
             let mut enter: Option<usize> = None;

@@ -9,8 +9,9 @@
 //! cross-talk; results come back in case order regardless of which worker
 //! finished first.
 //!
-//! The same worker-thread pattern also powers fleet-scale **sharded
-//! streaming replay** ([`replay_shards`]): a long SWF window is tiled
+//! The same worker pool ([`crate::util::pool::run_indexed`], shared
+//! with the branch-and-bound LP prefetcher) also powers fleet-scale
+//! **sharded streaming replay** ([`replay_shards`]): a long SWF window is tiled
 //! into consecutive time windows ([`shard_windows`]), each window
 //! streamed through its own backfill simulation + coordinator, and the
 //! per-window results stitched back together ([`stitch_shards`]) with a
@@ -21,9 +22,9 @@ use super::BaselineRun;
 use crate::coordinator::{allocator_by_name, Coordinator, Objective};
 use crate::sim::replay::{replay, replay_stream, static_baseline_outcome, ReplayOpts, Workload};
 use crate::trace::{stream_slice, SliceSpec, SwfLog, Trace};
+use crate::util::pool::run_indexed;
 use crate::util::table::{f, Table};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One scenario of a sweep: a trace + workload pair replayed under one
@@ -91,35 +92,7 @@ pub struct SweepOutcome {
 /// Run every case, `threads` at a time (0 = one per core, capped at the
 /// case count). Returns outcomes in the same order as `cases`.
 pub fn run_sweep(cases: &[SweepCase], threads: usize) -> Vec<SweepOutcome> {
-    let n = cases.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let threads = if threads == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-    } else {
-        threads
-    }
-    .clamp(1, n);
-
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<SweepOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = run_case(&cases[i]);
-                *slots[i].lock().unwrap() = Some(out);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|s| s.into_inner().unwrap().expect("every sweep slot filled"))
-        .collect()
+    run_indexed(cases.len(), threads, |i| run_case(&cases[i]))
 }
 
 fn run_case(case: &SweepCase) -> SweepOutcome {
@@ -258,31 +231,7 @@ pub fn replay_shards(
     threads: usize,
 ) -> Vec<ShardOutcome> {
     let specs = shard_windows(base, window_s);
-    let n = specs.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let threads = if threads == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-    } else {
-        threads
-    }
-    .clamp(1, n);
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<ShardOutcome>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = run_shard(log, i, &specs[i], run, workload);
-                *slots[i].lock().unwrap() = Some(out);
-            });
-        }
-    });
-    slots.into_iter().map(|s| s.into_inner().unwrap().expect("every shard slot filled")).collect()
+    run_indexed(specs.len(), threads, |i| run_shard(log, i, &specs[i], run, workload))
 }
 
 /// Shard results stitched back into one fleet-scale summary.

@@ -1,5 +1,6 @@
-//! Shared utilities: PRNG, statistics, report tables.
+//! Shared utilities: PRNG, statistics, report tables, worker pool.
 
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;

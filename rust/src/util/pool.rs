@@ -1,0 +1,99 @@
+//! Scoped worker pool shared by the sweep driver, sharded replay, and
+//! the branch-and-bound speculative LP prefetcher (DESIGN.md §15).
+//!
+//! The pattern is deliberately minimal: `n` independent index-addressed
+//! work items, a relaxed atomic cursor handing out the next index, and
+//! one mutex-guarded result slot per item so outputs come back in index
+//! order regardless of which worker finished first. Determinism of the
+//! *callers* rests on `work` being a pure function of its index — the
+//! pool itself adds no ordering beyond that.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a thread-count knob: `0` means one worker per core; the
+/// result is always clamped to `[1, n]` so a small batch never spawns
+/// idle workers.
+pub fn resolve_threads(threads: usize, n: usize) -> usize {
+    let t = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    t.clamp(1, n.max(1))
+}
+
+/// Run `work(i)` for every `i in 0..n` across `threads` scoped workers
+/// (`0` = one per core) and return the results in index order.
+///
+/// With one worker the items run inline on the caller's thread — no
+/// spawn, identical results — so callers can expose a `threads` knob
+/// whose `1` setting is exactly the serial code path.
+pub fn run_indexed<T, F>(n: usize, threads: usize, work: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = resolve_threads(threads, n);
+    if threads == 1 {
+        return (0..n).map(work).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = work(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for threads in [1, 2, 8] {
+            let out = run_indexed(37, threads, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_spawns_nothing() {
+        let out: Vec<usize> = run_indexed(0, 8, |_| unreachable!("no items"));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn resolve_clamps_to_batch() {
+        assert_eq!(resolve_threads(16, 3), 3);
+        assert_eq!(resolve_threads(2, 100), 2);
+        assert!(resolve_threads(0, 100) >= 1);
+        assert_eq!(resolve_threads(0, 0), 1);
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_shared_reads() {
+        // The B&B prefetcher's shape: workers read a shared slice and
+        // compute independent results.
+        let data: Vec<u64> = (0..1000).map(|i| i * 7 + 3).collect();
+        let serial = run_indexed(50, 1, |i| data[i * 20..(i + 1) * 20].iter().sum::<u64>());
+        let parallel = run_indexed(50, 4, |i| data[i * 20..(i + 1) * 20].iter().sum::<u64>());
+        assert_eq!(serial, parallel);
+    }
+}

@@ -1,0 +1,139 @@
+//! PR-7 equivalence suite (DESIGN.md §15):
+//!
+//! 1. the knapsack-decomposition allocator's **certified gap** must be
+//!    sound against the paper-faithful per-node MILP — the exact optimum
+//!    can never exceed the decomposed objective by more than the
+//!    certificate claims, on any random lifetime profile;
+//! 2. the **parallel branch-and-bound** must return the bit-identical
+//!    incumbent, bound, and effort counters as the serial search, both
+//!    directly and through warm-started incremental solve sequences.
+
+use bftrainer::coordinator::{
+    AggregateMilpAllocator, AllocRequest, Allocator, KnapsackDecompAllocator,
+    PerNodeMilpAllocator,
+};
+use bftrainer::milp::{self, Direction, LinExpr, Limits, MilpStatus, MilpWarmStart, Model, Sense};
+use bftrainer::mini::prop::{check_with, Config, Gen, Outcome};
+use bftrainer::util::rng::Rng;
+use bftrainer::workload::{advance_request, random_alloc_request};
+
+/// Small instances so the per-node formulation (jobs × pool binaries)
+/// proves optimality fast enough to run as the reference at every case.
+fn gen_small() -> Gen<AllocRequest> {
+    Gen::new(move |rng: &mut Rng| {
+        let jobs = rng.range_usize(1, 4);
+        let pool = rng.range_u64(2, 10) as u32;
+        random_alloc_request(rng, jobs, pool)
+    })
+}
+
+#[test]
+fn decomp_gap_certificate_covers_pernode_optimum() {
+    let cfg = Config { cases: 25, ..Default::default() };
+    check_with(&cfg, &gen_small(), |_| vec![], |req| {
+        if req.pool_size() > 10 {
+            return Outcome::Discard; // keep the per-node model small
+        }
+        let kd = KnapsackDecompAllocator::default().allocate(req);
+        let pn = PerNodeMilpAllocator::default().allocate(req);
+        if !pn.stats.optimal && !pn.stats.fell_back {
+            return Outcome::Discard; // timeout without proof: no reference
+        }
+        if let Err(e) = req.check(&kd.targets) {
+            return Outcome::Fail(format!("decomp infeasible: {e}"));
+        }
+        let gap = match kd.stats.certified_gap {
+            Some(g) if g >= 0.0 => g,
+            other => return Outcome::Fail(format!("bad certificate: {other:?}")),
+        };
+        let slack = gap * kd.objective.abs().max(1.0) + 1e-5;
+        if pn.objective > kd.objective + slack {
+            return Outcome::Fail(format!(
+                "certificate unsound: pernode {} vs decomp {} + gap {}",
+                pn.objective, kd.objective, gap
+            ));
+        }
+        Outcome::Pass
+    });
+}
+
+fn random_knapsack(rng: &mut Rng) -> Model {
+    let n = rng.range_usize(6, 14);
+    let mut m = Model::new(Direction::Maximize);
+    let mut capex = LinExpr::new();
+    let mut obj = LinExpr::new();
+    for i in 0..n {
+        let b = m.binary(format!("b{i}"));
+        capex.add(b, rng.range_f64(1.0, 9.0).round());
+        obj.add(b, rng.range_f64(1.0, 20.0).round());
+    }
+    m.constrain(capex, Sense::Le, rng.range_f64(8.0, 30.0).round(), "cap");
+    m.set_objective(obj, 0.0);
+    m
+}
+
+/// Generous wall clock so the one nondeterministic limit can never fire
+/// on CI; everything else about the parallel search is deterministic.
+fn limits(threads: usize) -> Limits {
+    Limits { threads, time_limit: std::time::Duration::from_secs(120), ..Default::default() }
+}
+
+#[test]
+fn parallel_bb_incumbent_equality_over_warm_start_seeds() {
+    let mut rng = Rng::new(0xA11E);
+    for case in 0..12 {
+        let base = random_knapsack(&mut rng);
+        let cold = milp::solve(&base, &limits(1), None);
+        assert_eq!(cold.status, MilpStatus::Optimal, "case {case}");
+        // Warm-start a perturbed solve from the cold result, serial vs
+        // parallel: same incumbent seed, same basis, must stay in
+        // lockstep bit for bit.
+        let mut perturbed = base.clone();
+        let extra = perturbed.binary("extra");
+        let mut obj = perturbed.objective.clone();
+        obj.add(extra, rng.range_f64(1.0, 5.0).round());
+        perturbed.set_objective(obj, 0.0);
+        let mut ws_x = cold.x.clone();
+        ws_x.push(0.0);
+        let warm = MilpWarmStart { incumbent: Some(&ws_x), basis: None };
+        let serial = milp::solve_warm(&perturbed, &limits(1), &warm);
+        for threads in [2, 4, 0] {
+            let par = milp::solve_warm(&perturbed, &limits(threads), &warm);
+            let tag = format!("case {case} threads {threads}");
+            assert_eq!(par.status, serial.status, "{tag}");
+            assert_eq!(par.objective.to_bits(), serial.objective.to_bits(), "{tag}");
+            assert_eq!(par.bound.to_bits(), serial.bound.to_bits(), "{tag}");
+            assert_eq!(par.x, serial.x, "{tag}");
+            assert_eq!(par.nodes_explored, serial.nodes_explored, "{tag}");
+            assert_eq!(par.lp_iterations, serial.lp_iterations, "{tag}");
+            assert_eq!(par.lp_refactorizations, serial.lp_refactorizations, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn parallel_bb_tracks_serial_through_incremental_sequences() {
+    // The production path: the aggregate allocator's warm-start carry
+    // (previous solution + root basis) evolved over pool events, with the
+    // B&B running serial in one allocator and parallel in the other. The
+    // carried state itself must stay identical, so the whole sequence
+    // stays in lockstep.
+    let mut rng = Rng::new(0xB00B5);
+    for seq in 0..4 {
+        let jobs = rng.range_usize(2, 4);
+        let pool = rng.range_u64(8, 24) as u32;
+        let mut req = random_alloc_request(&mut rng, jobs, pool);
+        let mut serial = AggregateMilpAllocator::with_limits(limits(1));
+        let mut parallel = AggregateMilpAllocator::with_limits(limits(4));
+        for step in 0..5 {
+            let tag = format!("seq {seq} step {step}");
+            let s = serial.allocate(&req);
+            let p = parallel.allocate(&req);
+            assert_eq!(p.objective.to_bits(), s.objective.to_bits(), "{tag}");
+            assert_eq!(p.targets, s.targets, "{tag}");
+            assert_eq!(p.stats.nodes_explored, s.stats.nodes_explored, "{tag}");
+            assert_eq!(p.stats.lp_iterations, s.stats.lp_iterations, "{tag}");
+            advance_request(&mut rng, &mut req, &s.targets, 3);
+        }
+    }
+}
