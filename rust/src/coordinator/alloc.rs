@@ -18,6 +18,7 @@
 //! [`LifetimeProfile::flat`] / Blind case) this reduces exactly to the
 //! paper's `Σ_j T_fwd·O_j(n_j) − Σ_j O_j(C_j)·R_j(n_j)` (Eqn 16).
 
+use super::elide::ValueMemo;
 use super::trainer::TrainerId;
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -342,6 +343,10 @@ pub struct SolverStats {
     /// allocators. `None` when no certificate was computed (DP proves
     /// exact optimality through `optimal` instead).
     pub certified_gap: Option<f64>,
+    /// True when no solver ran at all: the elision certificate
+    /// ([`super::elide::try_elide`]) proved the current assignment is the
+    /// unique optimum and the plan was reused (DESIGN.md §16).
+    pub solve_skipped: bool,
 }
 
 /// The plan an [`Allocator`] answers an [`AllocRequest`] with: target
@@ -370,6 +375,21 @@ pub trait Allocator: Send {
     fn name(&self) -> &'static str;
     /// Solve one event's reallocation problem.
     fn allocate(&mut self, req: &AllocRequest) -> AllocPlan;
+    /// Solve with a shared [`ValueMemo`] (DESIGN.md §16): allocators that
+    /// consume per-job value tables or SOS2 coefficients route those
+    /// lookups through `memo` so repeated profiles across events hit the
+    /// cache. The memo is input-keyed, so the plan is bit-identical to
+    /// [`Allocator::allocate`]; the default ignores the memo.
+    fn allocate_memo(&mut self, req: &AllocRequest, _memo: &mut ValueMemo) -> AllocPlan {
+        self.allocate(req)
+    }
+    /// Whether [`super::elide::try_elide`]'s unique-optimum certificate
+    /// may skip a solve for this allocator. True only for strategies that
+    /// provably return the certified optimum (the exact DP, both MILPs,
+    /// the certified decomposition); heuristics must keep solving.
+    fn elidable(&self) -> bool {
+        false
+    }
     /// Drop any warm-start state carried between consecutive events.
     /// No-op for stateless allocators.
     fn reset(&mut self) {}

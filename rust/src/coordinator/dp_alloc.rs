@@ -15,6 +15,7 @@
 //! verify it matches both MILP formulations.
 
 use super::alloc::{AllocJob, AllocPlan, AllocRequest, Allocator, SolverStats};
+use super::elide::ValueMemo;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -23,7 +24,11 @@ use std::time::Instant;
 /// (`vals` empty when the box is). Shared by the exact DP's inner loop
 /// and the per-job best responses of
 /// [`super::knapsack_decomp::KnapsackDecompAllocator`].
-pub(crate) fn value_table(req: &AllocRequest, job: &AllocJob, cap: usize) -> (f64, usize, Vec<f64>) {
+pub(crate) fn value_table(
+    req: &AllocRequest,
+    job: &AllocJob,
+    cap: usize,
+) -> (f64, usize, Vec<f64>) {
     let v0 = req.value_of(job, 0);
     let lo = job.n_min as usize;
     let hi = (job.n_max as usize).min(cap);
@@ -45,6 +50,10 @@ impl Allocator for DpAllocator {
     }
 
     fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
+        self.allocate_memo(req, &mut ValueMemo::disabled())
+    }
+
+    fn allocate_memo(&mut self, req: &AllocRequest, memo: &mut ValueMemo) -> AllocPlan {
         let t0 = Instant::now();
         let cap = req.pool_size() as usize;
         let nj = req.jobs.len();
@@ -56,8 +65,8 @@ impl Allocator for DpAllocator {
         let mut choice = vec![vec![0u32; cap + 1]; nj];
         for (ji, job) in req.jobs.iter().enumerate() {
             let mut next = vec![NEG; cap + 1];
-            // Precompute v(n) for admissible n.
-            let (v0, lo, vals) = value_table(req, job, cap);
+            // Precompute v(n) for admissible n (memo-cached across events).
+            let (v0, lo, vals) = memo.table(req, job, cap);
             let hi = lo + vals.len().saturating_sub(1);
             for k in 0..=cap {
                 // n = 0 option
@@ -108,6 +117,10 @@ impl Allocator for DpAllocator {
                 ..Default::default()
             },
         }
+    }
+
+    fn elidable(&self) -> bool {
+        true
     }
 }
 

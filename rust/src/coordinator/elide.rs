@@ -1,0 +1,555 @@
+//! Hot-path amortization: memoized value tables and solve elision
+//! (DESIGN.md §16).
+//!
+//! Every pool event costs one allocator solve, and every solve recomputes
+//! each job's Eqn-16′ value table even though [`LifetimeProfile`]s
+//! quantize into a handful of recurring classes. This module amortizes
+//! both costs without changing a single decision:
+//!
+//! * [`ValueMemo`] — a keyed cache over [`super::dp_alloc::value_table`]
+//!   outputs and the MILP SOS2 gain-seconds coefficients, shared by the
+//!   DP, both MILP model builders and the knapsack decomposition. Keys
+//!   capture *every* input the cached value depends on (job parameters,
+//!   breakpoints, profile classes, `t_fwd`, capacity), so a hit is
+//!   definitionally bit-identical to a recompute; stored breakpoints are
+//!   re-verified on every hit so a fingerprint collision degrades to a
+//!   miss, never a wrong table.
+//! * [`try_elide`] — a sound optimality certificate that skips the solve
+//!   outright when the current assignment is provably the *unique*
+//!   optimum of this event's [`AllocRequest`]: every job's admissible
+//!   value is strictly maximized at its current scale. Per-job strict
+//!   uniqueness makes the joint optimum unique, so any exact allocator
+//!   (DP, either MILP, the certified decomposition) would return exactly
+//!   the current map — reusing it is indistinguishable from solving.
+//!
+//! Both layers are individually off-switchable through [`HotpathOpts`]
+//! (the third switch, same-timestamp event coalescing, lives in
+//! [`crate::sim::replay_stream`]) and are pinned bit-identical to the
+//! slow path by `tests/elision_differential.rs`.
+
+use super::alloc::{AllocJob, AllocPlan, AllocRequest, LifetimeProfile, SolverStats};
+use super::dp_alloc::value_table;
+use super::trainer::TrainerId;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Per-coordinator switches for the three hot-path layers. All three
+/// default to on; `--no-elide`, `--no-memo` and `--no-coalesce` (or
+/// [`HotpathOpts::disabled`]) select the slow path, which the
+/// differential suite pins bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HotpathOpts {
+    /// Skip provably no-op solves via the [`try_elide`] certificate.
+    pub elide: bool,
+    /// Cache value tables / SOS2 coefficients across events.
+    pub memo: bool,
+    /// Fold same-1 ms-timestamp pool events into one solve
+    /// ([`crate::sim::replay_stream`]).
+    pub coalesce: bool,
+}
+
+impl Default for HotpathOpts {
+    fn default() -> Self {
+        HotpathOpts { elide: true, memo: true, coalesce: true }
+    }
+}
+
+impl HotpathOpts {
+    /// Everything off — the pre-amortization slow path.
+    pub fn disabled() -> Self {
+        HotpathOpts { elide: false, memo: false, coalesce: false }
+    }
+}
+
+/// Largest number of lifetime classes a profile may have and still get a
+/// fixed-size key. [`LifetimeProfile::from_lives`] emits at most 5 (and
+/// [`LifetimeProfile::flat`] exactly 1), so in practice every profile is
+/// keyable; a hand-built wider profile just bypasses the cache.
+const MAX_KEY_CLASSES: usize = 6;
+
+/// Cheap fixed-size equality key for a [`LifetimeProfile`]: the class
+/// table as `(life_bits, count)` pairs. Two profiles with equal keys are
+/// `==` (bitwise on lives), which is what lets the memo layer use it as
+/// a hash-key component without storing the profile itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    len: u8,
+    classes: [(u64, u32); MAX_KEY_CLASSES],
+}
+
+impl LifetimeProfile {
+    /// The profile's [`ProfileKey`], or `None` when it has more classes
+    /// than the fixed-size key holds (never for profiles built by
+    /// [`LifetimeProfile::from_lives`] / [`LifetimeProfile::flat`]).
+    pub fn key(&self) -> Option<ProfileKey> {
+        if self.classes.len() > MAX_KEY_CLASSES {
+            return None;
+        }
+        let mut classes = [(0u64, 0u32); MAX_KEY_CLASSES];
+        for (slot, &(life, count)) in classes.iter_mut().zip(&self.classes) {
+            *slot = (life.to_bits(), count);
+        }
+        Some(ProfileKey { len: self.classes.len() as u8, classes })
+    }
+}
+
+/// FNV-1a over the breakpoint table. Collisions are tolerated: entries
+/// keep a copy of their breakpoints and re-verify on every hit.
+fn points_fp(points: &[(u32, f64)]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| h = (h ^ x).wrapping_mul(0x1_0000_0001_b3);
+    for &(b, v) in points {
+        mix(b as u64);
+        mix(v.to_bits());
+    }
+    h
+}
+
+/// Full input signature of one [`value_table`] call. Everything
+/// [`AllocJob::value`] reads is either in here as exact bits or verified
+/// against the stored breakpoints on hit, so equal keys (plus the
+/// verification) imply bit-equal tables. The capacity is normalized to
+/// `min(cap, n_max)`: the table is identical beyond `n_max`, and the
+/// normalization keeps pure pool-size jitter from splitting entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct TableKey {
+    job: TrainerId,
+    current: u32,
+    n_min: u32,
+    n_max: u32,
+    r_up: u64,
+    r_dw: u64,
+    points: u64,
+    profile: ProfileKey,
+    t_fwd: u64,
+    cap: usize,
+}
+
+/// SOS2 gain-seconds coefficients depend only on the breakpoints, the
+/// profile and `t_fwd` — not on `current` or the rescale rates (those
+/// enter the MILP through separate cost terms) — so both MILP builders
+/// share entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct CoefKey {
+    points: u64,
+    profile: ProfileKey,
+    t_fwd: u64,
+}
+
+/// One cached [`value_table`] plus its precomputed admissible argmax —
+/// the quantity [`try_elide`]'s certificate tests.
+#[derive(Clone, Debug)]
+pub struct MemoEntry {
+    /// Breakpoints verified on every hit (fingerprint-collision guard).
+    points: Vec<(u32, f64)>,
+    /// Value at n = 0.
+    pub v0: f64,
+    /// First admissible positive scale.
+    pub lo: usize,
+    /// `vals[i]` = value at scale `lo + i`, up to `min(n_max, cap)`.
+    pub vals: Vec<f64>,
+    /// Admissible scale (0 allowed) maximizing the value.
+    pub argmax: u32,
+    /// True when `argmax` *strictly* beats every other admissible scale.
+    pub unique: bool,
+}
+
+fn make_entry(req: &AllocRequest, job: &AllocJob, cap: usize) -> MemoEntry {
+    let (v0, lo, vals) = value_table(req, job, cap);
+    let mut argmax = 0u32;
+    let mut best = v0;
+    let mut unique = true;
+    for (i, &v) in vals.iter().enumerate() {
+        if v > best {
+            best = v;
+            argmax = (lo + i) as u32;
+            unique = true;
+        } else if v == best {
+            unique = false;
+        }
+    }
+    MemoEntry { points: job.points.clone(), v0, lo, vals, argmax, unique }
+}
+
+fn make_coefs(req: &AllocRequest, job: &AllocJob) -> Vec<f64> {
+    job.points
+        .iter()
+        .map(|&(b, bv)| {
+            if req.pool.is_flat() {
+                req.t_fwd * bv
+            } else {
+                bv * req.horizon_seconds(b) / b as f64
+            }
+        })
+        .collect()
+}
+
+/// Entry caps: past these the cache is cleared wholesale (deterministic,
+/// allocation-free eviction). Real replays cycle through far fewer keys.
+const TABLE_CAP: usize = 4096;
+const COEF_CAP: usize = 1024;
+
+/// Keyed cache over per-job value tables and SOS2 coefficient rows,
+/// shared by every allocator a [`super::Coordinator`] dispatches to. Hit
+/// and miss counters feed the `cache_hits` / `cache_misses` fields of
+/// [`super::EventRecord`] and the hotpath figure's gated hit-rate metric.
+/// With `enabled == false` every call computes fresh and counts nothing —
+/// the bit-identical slow path.
+#[derive(Debug, Default)]
+pub struct ValueMemo {
+    enabled: bool,
+    tables: HashMap<TableKey, MemoEntry>,
+    coefs: HashMap<CoefKey, (Vec<(u32, f64)>, Vec<f64>)>,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to compute (including unkeyable profiles).
+    pub misses: u64,
+    scratch: Option<MemoEntry>,
+}
+
+impl ValueMemo {
+    /// A caching memo (the default hot path).
+    pub fn new() -> Self {
+        ValueMemo { enabled: true, ..Default::default() }
+    }
+
+    /// A pass-through memo: computes everything fresh, counts nothing.
+    pub fn disabled() -> Self {
+        ValueMemo::default()
+    }
+
+    /// Turn caching on/off. Turning it off also drops stored entries so
+    /// a later re-enable cannot serve stale-generation lookups.
+    pub fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+        if !enabled {
+            self.tables.clear();
+            self.coefs.clear();
+        }
+    }
+
+    /// Profile component of the memo keys. On flat pools the Eqn-16′
+    /// value and the SOS2 coefficients read `t_fwd` and the breakpoints
+    /// only — never the node count ([`AllocJob::value`]'s flat branch) —
+    /// so the count is canonicalized to 0: pure pool-size jitter on blind
+    /// traces must not split entries (the size still reaches the table
+    /// through the normalized `cap`).
+    fn pool_key(req: &AllocRequest) -> Option<ProfileKey> {
+        let mut key = req.pool.key()?;
+        if req.pool.is_flat() {
+            for slot in key.classes.iter_mut() {
+                slot.1 = 0;
+            }
+        }
+        Some(key)
+    }
+
+    fn table_key(req: &AllocRequest, job: &AllocJob, cap: usize) -> Option<TableKey> {
+        Some(TableKey {
+            job: job.id,
+            current: job.current,
+            n_min: job.n_min,
+            n_max: job.n_max,
+            r_up: job.r_up.to_bits(),
+            r_dw: job.r_dw.to_bits(),
+            points: points_fp(&job.points),
+            profile: Self::pool_key(req)?,
+            t_fwd: req.t_fwd.to_bits(),
+            cap: cap.min(job.n_max as usize),
+        })
+    }
+
+    /// Borrow the cached [`MemoEntry`] for `(job, cap)` under this
+    /// request's pool, computing it on miss. Used by [`try_elide`].
+    pub fn lookup(&mut self, req: &AllocRequest, job: &AllocJob, cap: usize) -> &MemoEntry {
+        let key = if self.enabled { Self::table_key(req, job, cap) } else { None };
+        let Some(key) = key else {
+            if self.enabled {
+                self.misses += 1;
+            }
+            self.scratch = Some(make_entry(req, job, cap));
+            return self.scratch.as_ref().unwrap();
+        };
+        // Verified hit: the fingerprint matched *and* the stored
+        // breakpoints are the job's breakpoints.
+        if self.tables.get(&key).is_some_and(|e| e.points == job.points) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.tables.len() >= TABLE_CAP {
+                self.tables.clear();
+            }
+            self.tables.insert(key, make_entry(req, job, cap));
+        }
+        &self.tables[&key]
+    }
+
+    /// Owned copy of the `(v0, lo, vals)` value table — the exact tuple
+    /// [`value_table`] returns — for the DP and the decomposition.
+    pub fn table(
+        &mut self,
+        req: &AllocRequest,
+        job: &AllocJob,
+        cap: usize,
+    ) -> (f64, usize, Vec<f64>) {
+        let e = self.lookup(req, job, cap);
+        (e.v0, e.lo, e.vals.clone())
+    }
+
+    /// Owned per-breakpoint SOS2 gain-seconds coefficients for `job`
+    /// (`t_fwd·V_b` on flat pools, `V_b·H(b)/b` otherwise) — shared by
+    /// both MILP model builders.
+    pub fn sos2_coefs(&mut self, req: &AllocRequest, job: &AllocJob) -> Vec<f64> {
+        let key = if self.enabled {
+            Self::pool_key(req).map(|profile| CoefKey {
+                points: points_fp(&job.points),
+                profile,
+                t_fwd: req.t_fwd.to_bits(),
+            })
+        } else {
+            None
+        };
+        let Some(key) = key else {
+            if self.enabled {
+                self.misses += 1;
+            }
+            return make_coefs(req, job);
+        };
+        if self.coefs.get(&key).is_some_and(|(pts, _)| *pts == job.points) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.coefs.len() >= COEF_CAP {
+                self.coefs.clear();
+            }
+            self.coefs.insert(key, (job.points.clone(), make_coefs(req, job)));
+        }
+        self.coefs[&key].1.clone()
+    }
+}
+
+/// Solve elision (DESIGN.md §16): return a reusable plan when the
+/// current assignment is certified to be the unique optimum of `req`,
+/// `None` when the certificate does not apply and the allocator must
+/// run.
+///
+/// Certificate: for every job, the admissible value over
+/// `{0} ∪ [n_min, min(n_max, |N|)]` is *strictly* maximized at
+/// `job.current`. The objective is separable and the capacity constraint
+/// is satisfied by the current map (assigned nodes are in the pool, so
+/// `Σ current ≤ |N|` always), hence per-job strict unconstrained
+/// optimality makes the current map the unique global optimum: any other
+/// feasible map changes at least one job away from its strict maximizer
+/// and is strictly worse. Every exact allocator therefore returns
+/// exactly this map, which subsumes the two delta rules the certificate
+/// is used for — a leave that removed only unassigned slack nodes, and
+/// a join where every job's marginal value at `current + 1` is
+/// non-positive (both leave every per-job argmax at `current`; the
+/// tables are evaluated against the *post-delta* profile, so no
+/// separate delta analysis is needed). A leave that preempted a job
+/// moves that job's `current` off its argmax and the certificate
+/// declines, which is the unsound-skip regression case the differential
+/// suite pins.
+pub fn try_elide(req: &AllocRequest, memo: &mut ValueMemo) -> Option<AllocPlan> {
+    let start = Instant::now();
+    let cap = req.pool_size() as usize;
+    debug_assert!(req.jobs.iter().map(|j| j.current).sum::<u32>() <= req.pool_size());
+    let mut objective = 0.0;
+    for job in &req.jobs {
+        let e = memo.lookup(req, job, cap);
+        if !e.unique || e.argmax != job.current {
+            return None;
+        }
+        objective += if job.current == 0 {
+            e.v0
+        } else {
+            *e.vals.get(job.current as usize - e.lo)?
+        };
+    }
+    Some(AllocPlan {
+        targets: req.current_map(),
+        objective,
+        stats: SolverStats {
+            solve_time: start.elapsed(),
+            optimal: true,
+            solve_skipped: true,
+            ..Default::default()
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::alloc::testutil::{job, random_request};
+    use super::super::alloc::Allocator;
+    use super::super::dp_alloc::DpAllocator;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn flat_req(jobs: Vec<AllocJob>, pool: u32) -> AllocRequest {
+        AllocRequest::flat(jobs, pool, 120.0)
+    }
+
+    #[test]
+    fn profile_key_equality_matches_profile_equality() {
+        let a = LifetimeProfile::from_lives([10.0, 500.0, f64::INFINITY], 120.0);
+        let b = LifetimeProfile::from_lives([11.0, 480.0, f64::INFINITY], 120.0);
+        let c = LifetimeProfile::from_lives([10.0, 500.0], 120.0);
+        assert_eq!(a.key(), b.key(), "same classes, same key");
+        assert_ne!(a.key(), c.key());
+        assert_eq!(LifetimeProfile::flat(8).key(), LifetimeProfile::flat(8).key());
+        assert_ne!(LifetimeProfile::flat(8).key(), LifetimeProfile::flat(9).key());
+        let wide = LifetimeProfile { classes: (0..7).map(|i| (i as f64 + 1.0, 1)).collect() };
+        assert!(wide.key().is_none(), "over-wide profiles bypass the cache");
+    }
+
+    #[test]
+    fn memo_hits_are_bit_identical_to_recompute() {
+        let mut rng = Rng::new(7);
+        let mut memo = ValueMemo::new();
+        for _ in 0..200 {
+            let req = random_request(&mut rng, 5, 24);
+            let cap = req.pool_size() as usize;
+            for j in &req.jobs {
+                // twice: second call must hit and return the same bits
+                let cold = memo.table(&req, j, cap);
+                let warm = memo.table(&req, j, cap);
+                let direct = value_table(&req, j, cap);
+                assert_eq!(cold.0.to_bits(), direct.0.to_bits());
+                assert_eq!(cold.1, direct.1);
+                assert_eq!(
+                    cold.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    direct.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+                assert_eq!(warm.0.to_bits(), cold.0.to_bits());
+                assert_eq!(
+                    warm.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    cold.2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+        assert!(memo.hits > 0 && memo.misses > 0);
+    }
+
+    #[test]
+    fn disabled_memo_counts_and_stores_nothing() {
+        let mut rng = Rng::new(3);
+        let mut memo = ValueMemo::disabled();
+        let req = random_request(&mut rng, 4, 16);
+        let cap = req.pool_size() as usize;
+        for j in &req.jobs {
+            let got = memo.table(&req, j, cap);
+            let direct = value_table(&req, j, cap);
+            assert_eq!(got.0.to_bits(), direct.0.to_bits());
+        }
+        assert_eq!((memo.hits, memo.misses), (0, 0));
+        assert!(memo.tables.is_empty());
+    }
+
+    #[test]
+    fn cap_normalization_shares_entries_beyond_n_max() {
+        let mut memo = ValueMemo::new();
+        let j = job(0, 4, 1, 8);
+        let req = flat_req(vec![j.clone()], 64);
+        memo.table(&req, &j, 64);
+        // any cap >= n_max maps to the same entry
+        memo.table(&req, &j, 32);
+        memo.table(&req, &j, 8);
+        assert_eq!((memo.hits, memo.misses), (2, 1));
+        // below n_max the table genuinely differs: separate entry
+        memo.table(&req, &j, 5);
+        assert_eq!(memo.misses, 2);
+    }
+
+    #[test]
+    fn flat_pool_size_jitter_shares_memo_entries() {
+        // Blind traces rebuild `flat(pool_size)` every event; the flat
+        // value formula never reads the count, so two pool sizes with
+        // cap >= n_max must resolve to one canonical entry.
+        let mut memo = ValueMemo::new();
+        let j = job(0, 8, 1, 8);
+        let big = flat_req(vec![j.clone()], 64);
+        let small = flat_req(vec![j.clone()], 40);
+        memo.table(&big, &j, 64);
+        memo.table(&small, &j, 40);
+        assert_eq!((memo.hits, memo.misses), (1, 1), "flat size jitter must not split entries");
+        // Non-flat profiles keep their counts: horizons genuinely depend
+        // on how many nodes sit in each lifetime class.
+        let shaped = |lives: &[f64]| AllocRequest {
+            jobs: vec![j.clone()],
+            pool: LifetimeProfile::from_lives(lives.iter().copied(), 120.0),
+            t_fwd: 120.0,
+        };
+        let a = shaped(&[30.0, 30.0, f64::INFINITY]);
+        let b = shaped(&[30.0, f64::INFINITY, f64::INFINITY]);
+        memo.table(&a, &j, 3);
+        memo.table(&b, &j, 3);
+        assert_eq!(memo.misses, 3, "class-count changes on shaped profiles are distinct keys");
+    }
+
+    #[test]
+    fn sos2_coefs_match_the_builders_formula() {
+        let mut rng = Rng::new(11);
+        let mut memo = ValueMemo::new();
+        for _ in 0..100 {
+            let req = random_request(&mut rng, 4, 20);
+            for j in &req.jobs {
+                let cold = memo.sos2_coefs(&req, j);
+                let warm = memo.sos2_coefs(&req, j);
+                for (i, &(b, bv)) in j.points.iter().enumerate() {
+                    let want = if req.pool.is_flat() {
+                        req.t_fwd * bv
+                    } else {
+                        bv * req.horizon_seconds(b) / b as f64
+                    };
+                    assert_eq!(cold[i].to_bits(), want.to_bits());
+                    assert_eq!(warm[i].to_bits(), want.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elision_certifies_only_the_unique_optimum() {
+        let mut rng = Rng::new(19);
+        let mut memo = ValueMemo::new();
+        let mut dp = DpAllocator;
+        let mut reqs: Vec<AllocRequest> =
+            (0..400).map(|_| random_request(&mut rng, 5, 24)).collect();
+        // A crafted steady-state request the certificate provably accepts:
+        // both jobs sit at their strictly-unique argmax (n_max, strictly
+        // increasing gains, zero cost at current).
+        reqs.push(flat_req(vec![job(0, 8, 1, 8), job(1, 4, 2, 4)], 16));
+        let mut skipped = 0usize;
+        for req in &reqs {
+            if let Some(plan) = try_elide(req, &mut memo) {
+                skipped += 1;
+                assert!(plan.stats.solve_skipped && plan.stats.optimal);
+                let exact = dp.allocate(req);
+                assert_eq!(plan.targets, exact.targets, "elided plan must equal the DP optimum");
+                assert!(req.check(&plan.targets).is_ok());
+            }
+        }
+        assert!(skipped > 0, "certificate did not fire even on the crafted steady state");
+    }
+
+    #[test]
+    fn preempted_job_blocks_elision() {
+        // A job pushed below its argmax (e.g. by a leave hitting assigned
+        // nodes) must force a real solve.
+        let mut memo = ValueMemo::new();
+        let stable = job(0, 8, 1, 8); // strictly increasing gain: argmax = 8
+        let req = flat_req(vec![stable.clone()], 16);
+        assert!(try_elide(&req, &mut memo).is_some(), "at argmax: skip");
+        let mut preempted = stable;
+        preempted.current = 6;
+        let req = flat_req(vec![preempted], 16);
+        assert!(try_elide(&req, &mut memo).is_none(), "off argmax: must solve");
+    }
+
+    #[test]
+    fn waiting_job_blocks_elision() {
+        let req = flat_req(vec![job(0, 0, 1, 8)], 16);
+        assert!(try_elide(&req, &mut ValueMemo::new()).is_none());
+    }
+}

@@ -37,8 +37,8 @@
 //! fleet-scale (≥4k-node) policy.
 
 use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
-use super::dp_alloc::value_table;
-use super::milp_aggregate::build_model;
+use super::elide::ValueMemo;
+use super::milp_aggregate::build_model_memo;
 use super::trainer::TrainerId;
 use crate::milp;
 use std::collections::BTreeMap;
@@ -139,10 +139,14 @@ impl Allocator for KnapsackDecompAllocator {
     }
 
     fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
+        self.allocate_memo(req, &mut ValueMemo::disabled())
+    }
+
+    fn allocate_memo(&mut self, req: &AllocRequest, memo: &mut ValueMemo) -> AllocPlan {
         let t0 = Instant::now();
         let cap = req.pool_size();
         let tables: Vec<Table> =
-            req.jobs.iter().map(|j| value_table(req, j, cap as usize)).collect();
+            req.jobs.iter().map(|j| memo.table(req, j, cap as usize)).collect();
         let mut scans = 0usize;
 
         // Unconstrained best responses; if they already fit, λ = 0 is the
@@ -205,7 +209,7 @@ impl Allocator for KnapsackDecompAllocator {
         let mut bound = dual_bound;
         let (mut lp_iterations, mut lp_refactorizations) = (0usize, 0usize);
         if !self.skip_lp_bound && !req.jobs.is_empty() {
-            let (model, _) = build_model(req);
+            let (model, _) = build_model_memo(req, memo);
             let lp = milp::solve_lp(&model, &milp::model_bounds(&model));
             lp_iterations = lp.iterations;
             lp_refactorizations = lp.refactorizations;
@@ -228,6 +232,10 @@ impl Allocator for KnapsackDecompAllocator {
                 ..Default::default()
             },
         }
+    }
+
+    fn elidable(&self) -> bool {
+        true
     }
 }
 

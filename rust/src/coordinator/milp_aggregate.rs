@@ -20,6 +20,7 @@
 //! and the exact DP in `rust/tests/alloc_equivalence.rs`.
 
 use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
+use super::elide::ValueMemo;
 use super::trainer::TrainerId;
 use crate::milp::{self, Direction, LinExpr, Model, Sense};
 use std::collections::BTreeMap;
@@ -142,6 +143,14 @@ pub fn adapt_targets(
 /// (asserted by the solver-microbench and the differential suite), and
 /// branch-and-bound tightening them never reshapes the model.
 pub fn build_model(req: &AllocRequest) -> (Model, Vec<milp::VarId>) {
+    build_model_memo(req, &mut ValueMemo::disabled())
+}
+
+/// [`build_model`] with the SOS2 gain-seconds coefficients routed through
+/// a shared [`ValueMemo`] — bit-identical output, the coefficient row per
+/// `(breakpoints, profile, t_fwd)` is computed once across events
+/// (DESIGN.md §16).
+pub fn build_model_memo(req: &AllocRequest, memo: &mut ValueMemo) -> (Model, Vec<milp::VarId>) {
     let mut m = Model::new(Direction::Maximize);
     let pool = req.pool_size() as f64;
     let mut n_vars = Vec::with_capacity(req.jobs.len());
@@ -173,10 +182,16 @@ pub fn build_model(req: &AllocRequest) -> (Model, Vec<milp::VarId>) {
         );
 
         // SOS2 piecewise-linear gain over breakpoints, including (0, 0).
-        let mut bps: Vec<(f64, f64)> = vec![(0.0, 0.0)];
-        for &(bn, bv) in &job.points {
+        // Each entry carries its objective coefficient V_i = s_i·H(b_i)/b_i
+        // — the lifetime-capped gain-seconds at the breakpoint (Eqn 16′,
+        // DESIGN.md §13), `t_fwd·s_i` on flat profiles — from the shared
+        // memo ([`ValueMemo::sos2_coefs`], bit-identical to computing it
+        // here).
+        let coefs = memo.sos2_coefs(req, job);
+        let mut bps: Vec<(f64, f64, f64)> = vec![(0.0, 0.0, 0.0)];
+        for (&(bn, bv), &coef) in job.points.iter().zip(&coefs) {
             if (bn as f64) > 0.0 {
-                bps.push((bn as f64, bv));
+                bps.push((bn as f64, bv, coef));
             }
         }
         // Clamp breakpoints beyond the pool (unreachable anyway, but keeps
@@ -186,7 +201,7 @@ pub fn build_model(req: &AllocRequest) -> (Model, Vec<milp::VarId>) {
             .collect();
         let mut convex = LinExpr::new();
         let mut ndef = LinExpr::new();
-        for (i, &(bn, _)) in bps.iter().enumerate() {
+        for (i, &(bn, _, _)) in bps.iter().enumerate() {
             convex.add(ws[i], 1.0);
             ndef.add(ws[i], bn);
         }
@@ -196,22 +211,12 @@ pub fn build_model(req: &AllocRequest) -> (Model, Vec<milp::VarId>) {
         if ws.len() >= 2 {
             m.add_sos2(ws.clone(), format!("sos2[{jid}]"));
         }
-        // Gain contribution Σ w·V with V_i = s_i·H(b_i)/b_i — the
-        // lifetime-capped gain-seconds at each breakpoint (Eqn 16′,
-        // DESIGN.md §13). On a flat profile H(b)/b = T_fwd and this is
-        // the paper's T_fwd·Σ w·s. The SOS2 interpolation of V is the
-        // canonical valuation (`AllocJob::value`), so the relaxation and
-        // the DP agree exactly.
-        for (i, &(bn, bv)) in bps.iter().enumerate() {
+        // Gain contribution Σ w·V. On a flat profile H(b)/b = T_fwd and
+        // this is the paper's T_fwd·Σ w·s. The SOS2 interpolation of V is
+        // the canonical valuation (`AllocJob::value`), so the relaxation
+        // and the DP agree exactly.
+        for (i, &(bn, bv, coef)) in bps.iter().enumerate() {
             if bv != 0.0 && bn > 0.0 {
-                // Flat profiles use the literal pre-lifetime coefficient
-                // (bit-identical to the old model, like `AllocJob::value`).
-                let coef = if req.pool.is_flat() {
-                    req.t_fwd * bv
-                } else {
-                    let b = bn.round() as u32;
-                    bv * req.horizon_seconds(b) / b as f64
-                };
                 objective.add(ws[i], coef);
             }
         }
@@ -269,8 +274,12 @@ impl Allocator for AggregateMilpAllocator {
     }
 
     fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
+        self.allocate_memo(req, &mut ValueMemo::disabled())
+    }
+
+    fn allocate_memo(&mut self, req: &AllocRequest, memo: &mut ValueMemo) -> AllocPlan {
         let t0 = Instant::now();
-        let (model, n_vars) = build_model(req);
+        let (model, n_vars) = build_model_memo(req, memo);
 
         // Candidate incumbents in model space: the previous event's
         // solution (repaired to the new request) and/or the DP optimum.
@@ -290,7 +299,7 @@ impl Allocator for AggregateMilpAllocator {
             }
         }
         if self.warm_start_with_dp {
-            let dp = super::dp_alloc::DpAllocator.allocate(req);
+            let dp = super::dp_alloc::DpAllocator.allocate_memo(req, memo);
             let x = embed_solution(req, &model, &n_vars, &dp.targets);
             debug_assert!(model.is_feasible(&x, 1e-6));
             incumbents.push((x, dp.targets, dp.objective));
@@ -341,6 +350,7 @@ impl Allocator for AggregateMilpAllocator {
                         certified_gap: Some(
                             ((root.objective - best_obj) / best_obj.abs().max(1.0)).max(0.0),
                         ),
+                        solve_skipped: false,
                     },
                 };
             }
@@ -399,8 +409,13 @@ impl Allocator for AggregateMilpAllocator {
                     .bound
                     .is_finite()
                     .then(|| ((res.bound - objective) / objective.abs().max(1.0)).max(0.0)),
+                solve_skipped: false,
             },
         }
+    }
+
+    fn elidable(&self) -> bool {
+        true
     }
 
     fn reset(&mut self) {

@@ -19,6 +19,7 @@
 //! between the two is property-tested.
 
 use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
+use super::elide::ValueMemo;
 use crate::milp::{self, Direction, LinExpr, Model, Sense};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -39,6 +40,18 @@ impl Default for PerNodeMilpAllocator {
 /// Build the paper's model. `c` is the current assignment: `c[j][n]` over
 /// jobs × pool-node indices (dense 0..pool_size).
 pub fn build_model(req: &AllocRequest, c: &[Vec<bool>]) -> (Model, Vec<Vec<milp::VarId>>) {
+    build_model_memo(req, c, &mut ValueMemo::disabled())
+}
+
+/// [`build_model`] with the SOS2 gain coefficients routed through a
+/// shared [`ValueMemo`] — bit-identical output; the per-breakpoint
+/// coefficient row is the same one the aggregate builder caches, so both
+/// formulations share entries (DESIGN.md §16).
+pub fn build_model_memo(
+    req: &AllocRequest,
+    c: &[Vec<bool>],
+    memo: &mut ValueMemo,
+) -> (Model, Vec<Vec<milp::VarId>>) {
     let nn = req.pool_size() as usize;
     let nj = req.jobs.len();
     assert_eq!(c.len(), nj);
@@ -150,36 +163,31 @@ pub fn build_model(req: &AllocRequest, c: &[Vec<bool>]) -> (Model, Vec<Vec<milp:
         m.constrain(e, Sense::Le, c_j + big_m2, format!("e10b[{jid}]"));
 
         // ---- Eqn 11–12: SOS2 objective approximation ---------------------
-        let mut bps: Vec<(f64, f64)> = vec![(0.0, 0.0)];
-        for &(bn, bv) in &job.points {
-            bps.push((bn as f64, bv));
+        // Lifetime-capped gain coefficients V_i = s_i·H(b_i)/b_i, exactly
+        // as the aggregate model encodes them (DESIGN.md §13) — the
+        // objective stays a function of the count N_j and the shared
+        // profile, so per-node/aggregate equivalence (§6.2) is untouched.
+        // The coefficient row comes from the shared memo (bit-identical to
+        // computing it here; `t_fwd·s_i` on flat profiles).
+        let coefs = memo.sos2_coefs(req, job);
+        let mut bps: Vec<(f64, f64, f64)> = vec![(0.0, 0.0, 0.0)];
+        for (&(bn, bv), &coef) in job.points.iter().zip(&coefs) {
+            bps.push((bn as f64, bv, coef));
         }
         let ws: Vec<milp::VarId> = (0..bps.len())
             .map(|i| m.continuous(0.0, 1.0, format!("w[{jid},{i}]")))
             .collect();
         let mut convex = LinExpr::new();
         let mut ndef = nj_expr();
-        for (i, &(bn, _)) in bps.iter().enumerate() {
+        for (i, &(bn, _, _)) in bps.iter().enumerate() {
             convex.add(ws[i], 1.0);
             ndef.add(ws[i], -bn);
         }
         m.constrain(convex, Sense::Eq, 1.0, format!("e11a[{jid}]"));
         m.constrain(ndef, Sense::Eq, 0.0, format!("e11b[{jid}]"));
         m.add_sos2(ws.clone(), format!("sos2[{jid}]"));
-        // Lifetime-capped gain coefficients V_i = s_i·H(b_i)/b_i, exactly
-        // as the aggregate model encodes them (DESIGN.md §13) — the
-        // objective stays a function of the count N_j and the shared
-        // profile, so per-node/aggregate equivalence (§6.2) is untouched.
-        for (i, &(bn, bv)) in bps.iter().enumerate() {
+        for (i, &(bn, bv, coef)) in bps.iter().enumerate() {
             if bv != 0.0 && bn > 0.0 {
-                // Flat profiles use the literal pre-lifetime coefficient
-                // (bit-identical to the old model, like `AllocJob::value`).
-                let coef = if req.pool.is_flat() {
-                    req.t_fwd * bv
-                } else {
-                    let b = bn.round() as u32;
-                    bv * req.horizon_seconds(b) / b as f64
-                };
                 objective.add(ws[i], coef);
             }
         }
@@ -247,12 +255,16 @@ impl Allocator for PerNodeMilpAllocator {
     }
 
     fn allocate(&mut self, req: &AllocRequest) -> AllocPlan {
+        self.allocate_memo(req, &mut ValueMemo::disabled())
+    }
+
+    fn allocate_memo(&mut self, req: &AllocRequest, memo: &mut ValueMemo) -> AllocPlan {
         let t0 = Instant::now();
         let c = dense_assignment(req);
-        let (model, x) = build_model(req, &c);
+        let (model, x) = build_model_memo(req, &c, memo);
         // Warm-start with the exact DP optimum embedded (feasible by the
         // aggregate-equivalence argument); falls back to the current map.
-        let dp = super::dp_alloc::DpAllocator.allocate(req);
+        let dp = super::dp_alloc::DpAllocator.allocate_memo(req, memo);
         let warm = embed_targets(req, &model, &x, &c, &dp.targets)
             .or_else(|| embed_targets(req, &model, &x, &c, &req.current_map()));
         let res = milp::solve(&model, &self.limits, warm.as_deref());
@@ -291,8 +303,13 @@ impl Allocator for PerNodeMilpAllocator {
                     .bound
                     .is_finite()
                     .then(|| ((res.bound - objective) / objective.abs().max(1.0)).max(0.0)),
+                solve_skipped: false,
             },
         }
+    }
+
+    fn elidable(&self) -> bool {
+        true
     }
 }
 

@@ -14,6 +14,7 @@
 
 pub mod alloc;
 pub mod dp_alloc;
+pub mod elide;
 pub mod heuristic;
 pub mod knapsack_decomp;
 pub mod milp_aggregate;
@@ -26,6 +27,7 @@ pub use alloc::{
     AllocJob, AllocOutcome, AllocPlan, AllocRequest, Allocator, LifetimeProfile, SolverStats,
 };
 pub use dp_alloc::DpAllocator;
+pub use elide::{HotpathOpts, ValueMemo};
 pub use heuristic::EqualShareAllocator;
 pub use knapsack_decomp::KnapsackDecompAllocator;
 pub use milp_aggregate::AggregateMilpAllocator;
@@ -90,6 +92,18 @@ pub struct EventRecord {
     /// Basis refactorizations spent on this event's solve (0 for non-LP
     /// allocators).
     pub lp_refactorizations: usize,
+    /// Whether the solve was elided: the optimality certificate of
+    /// [`elide::try_elide`] proved the previous plan still optimal, so no
+    /// allocator ran (DESIGN.md §16.1).
+    pub solve_skipped: bool,
+    /// Value-table memo hits charged to this event (DESIGN.md §16.2).
+    pub cache_hits: u64,
+    /// Value-table memo misses charged to this event.
+    pub cache_misses: u64,
+    /// Extra pool events folded into this record by same-timestamp
+    /// coalescing (0 when the record covers a single event, DESIGN.md
+    /// §16.3).
+    pub coalesced: usize,
 }
 
 /// The coordinator: owns the idle-node pool, the trainer queue, the
@@ -116,6 +130,17 @@ pub struct Coordinator {
     pub event_log: Vec<EventRecord>,
     /// Global multiplier on rescale costs (Fig 16's artificial 2–10×).
     pub rescale_cost_multiplier: f64,
+    /// Hot-path switches: solve elision, value-table memoization and
+    /// same-timestamp coalescing (DESIGN.md §16). All on by default;
+    /// flip via [`Self::set_hotpath`].
+    pub hotpath: HotpathOpts,
+    /// Shared value-table memo: one cache reused by the DP, both MILP
+    /// coefficient builders, the decomposition allocator and the elision
+    /// certificate.
+    pub memo: ValueMemo,
+    /// Scratch buffer for per-event remaining-lifetime collection, so the
+    /// steady-state [`Self::request`] path allocates nothing.
+    scratch_lives: std::cell::RefCell<Vec<f64>>,
 }
 
 impl Coordinator {
@@ -140,12 +165,23 @@ impl Coordinator {
             weights: BTreeMap::new(),
             event_log: Vec::new(),
             rescale_cost_multiplier: 1.0,
+            hotpath: HotpathOpts::default(),
+            memo: ValueMemo::new(),
+            scratch_lives: std::cell::RefCell::new(Vec::new()),
         }
     }
 
     /// Name of the active allocation strategy (for reports).
     pub fn policy_name(&self) -> &'static str {
         self.allocator.name()
+    }
+
+    /// Flip the hot-path switches (`--no-elide` / `--no-memo` /
+    /// `--no-coalesce`). Disabling the memo also drops its cache so a
+    /// later re-enable starts cold.
+    pub fn set_hotpath(&mut self, opts: HotpathOpts) {
+        self.hotpath = opts;
+        self.memo.set_enabled(opts.memo);
     }
 
     /// Submit a trainer at time `now` (seconds); returns its id. Admission
@@ -261,37 +297,57 @@ impl Coordinator {
     /// scheduled reclaim annotations into the pool; leaves are classified
     /// as anticipated (the schedule said so) or surprise before removal.
     pub fn handle_event(&mut self, now: f64, ev: &PoolEvent) {
-        self.pool.join(&ev.joins, &ev.reclaim_at);
+        self.handle_events(now, std::slice::from_ref(ev));
+    }
+
+    /// Handle a batch of pool events sharing one (quantized) timestamp
+    /// with a single reallocation at the end — the coalesced hot path
+    /// (DESIGN.md §16.3). Per-event pool mutation, leave classification
+    /// and preemption accounting are applied sequentially exactly as
+    /// [`Self::handle_event`] would, so anticipated/surprise counts and
+    /// node-hour bookkeeping match the one-solve-per-event path; only the
+    /// number of solves (and the rescale decisions' timing within the
+    /// shared instant) differs.
+    pub fn handle_events(&mut self, now: f64, evs: &[PoolEvent]) {
+        let mut preempted = 0usize;
         let mut leaves_anticipated = 0usize;
         let mut leaves_surprise = 0usize;
-        for &n in &ev.leaves {
-            if !self.pool.contains(n) {
-                continue;
+        for ev in evs {
+            self.pool.join(&ev.joins, &ev.reclaim_at);
+            for &n in &ev.leaves {
+                if !self.pool.contains(n) {
+                    continue;
+                }
+                let p = self.pool.reclaim_of(n);
+                if p.is_finite() && now >= p - Self::RECLAIM_EPS {
+                    leaves_anticipated += 1;
+                } else {
+                    leaves_surprise += 1;
+                }
             }
-            let p = self.pool.reclaim_of(n);
-            if p.is_finite() && now >= p - Self::RECLAIM_EPS {
-                leaves_anticipated += 1;
-            } else {
-                leaves_surprise += 1;
+            let hit = self.pool.leave(&ev.leaves);
+            for (&id, &lost) in &hit {
+                let new = self.pool.count_of(id);
+                let old = new + lost;
+                let t = &mut self.trainers[id];
+                t.apply_rescale(now, old, new, true);
+                preempted += 1;
+                // Below minimum scale the job cannot run at all: it waits
+                // (its remaining nodes return to the free pool) until the
+                // allocator assigns >= n_min again.
+                if new > 0 && new < t.spec.n_min {
+                    self.pool.release_all(id);
+                    self.trainers[id].apply_rescale(now, new, 0, true);
+                }
             }
         }
-        let hit = self.pool.leave(&ev.leaves);
-        let mut preempted = 0usize;
-        for (&id, &lost) in &hit {
-            let new = self.pool.count_of(id);
-            let old = new + lost;
-            let t = &mut self.trainers[id];
-            t.apply_rescale(now, old, new, true);
-            preempted += 1;
-            // Below minimum scale the job cannot run at all: it waits (its
-            // remaining nodes return to the free pool) until the allocator
-            // assigns >= n_min again.
-            if new > 0 && new < t.spec.n_min {
-                self.pool.release_all(id);
-                self.trainers[id].apply_rescale(now, new, 0, true);
-            }
-        }
-        self.reallocate_with(now, preempted, leaves_anticipated, leaves_surprise);
+        self.reallocate_with(
+            now,
+            preempted,
+            leaves_anticipated,
+            leaves_surprise,
+            evs.len().saturating_sub(1),
+        );
     }
 
     /// Build the [`AllocRequest`] for the currently admitted trainers at
@@ -318,7 +374,14 @@ impl Coordinator {
                 }
             })
             .collect();
-        AllocRequest { jobs, pool: self.pool.lifetime_profile(now, self.t_fwd), t_fwd: self.t_fwd }
+        // Collect remaining lives into a reused scratch buffer instead of a
+        // fresh Vec per event (zero-alloc steady state, DESIGN.md §16.4).
+        let pool = {
+            let mut lives = self.scratch_lives.borrow_mut();
+            self.pool.fill_lives(now, &mut lives);
+            LifetimeProfile::from_lives(lives.iter().copied(), self.t_fwd)
+        };
+        AllocRequest { jobs, pool, t_fwd: self.t_fwd }
     }
 
     /// Re-run the allocator at time `now` (seconds) and apply its
@@ -326,7 +389,7 @@ impl Coordinator {
     /// [`EventRecord`]. `preempted` is the number of trainers forced down
     /// by the triggering event (0 for completions/submissions).
     pub fn reallocate(&mut self, now: f64, preempted: usize) {
-        self.reallocate_with(now, preempted, 0, 0);
+        self.reallocate_with(now, preempted, 0, 0, 0);
     }
 
     fn reallocate_with(
@@ -335,9 +398,22 @@ impl Coordinator {
         preempted: usize,
         leaves_anticipated: usize,
         leaves_surprise: usize,
+        coalesced: usize,
     ) {
         let req = self.request(now);
-        let plan = self.allocator.allocate(&req);
+        let (h0, m0) = (self.memo.hits, self.memo.misses);
+        // Hot-path gate (DESIGN.md §16.1): if the allocator is exact and
+        // the certificate proves the current assignment is the unique
+        // optimum of this request, reuse it and skip the solve.
+        let elided = if self.hotpath.elide && self.allocator.elidable() {
+            elide::try_elide(&req, &mut self.memo)
+        } else {
+            None
+        };
+        let plan = match elided {
+            Some(plan) => plan,
+            None => self.allocator.allocate_memo(&req, &mut self.memo),
+        };
         let mut rescale_cost_samples = 0.0;
         for job in &req.jobs {
             let new = plan.targets.get(&job.id).copied().unwrap_or(0);
@@ -372,6 +448,10 @@ impl Coordinator {
             leaves_surprise,
             lp_iterations: plan.stats.lp_iterations,
             lp_refactorizations: plan.stats.lp_refactorizations,
+            solve_skipped: plan.stats.solve_skipped,
+            cache_hits: self.memo.hits - h0,
+            cache_misses: self.memo.misses - m0,
+            coalesced,
         });
     }
 }

@@ -147,6 +147,18 @@ impl Pool {
         )
     }
 
+    /// Write every in-pool node's remaining life at `now` into `out`
+    /// (cleared first, ascending node id — the same order
+    /// [`Self::lifetime_profile`] walks). Lets the per-event hot path
+    /// reuse one scratch buffer instead of collecting a fresh `Vec` per
+    /// event ([`super::Coordinator::request`], DESIGN.md §16).
+    pub fn fill_lives(&self, now: f64, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(
+            (0..self.in_pool.len()).filter(|&i| self.in_pool[i]).map(|i| self.reclaim[i] - now),
+        );
+    }
+
     /// Nodes join N, carrying their scheduled reclaim times (`reclaim_at`
     /// parallel to `nodes`; empty = all unknown). Returns how many were
     /// genuinely new. Re-joining a node refreshes its annotation.

@@ -23,7 +23,7 @@
 //! Run `bftrainer <cmd> --help` for per-command options.
 
 use bftrainer::config::{ExperimentConfig, WorkloadKind};
-use bftrainer::coordinator::{allocator_by_name, Coordinator, Objective};
+use bftrainer::coordinator::{allocator_by_name, Coordinator, HotpathOpts, Objective};
 use bftrainer::mini::argparse::Command;
 use bftrainer::scaling::zoo::{self, Dnn, TAB2_NODES};
 use bftrainer::sim::{self, ReplayOpts, SweepCase};
@@ -379,7 +379,10 @@ fn cmd_replay(args: &[String]) -> i32 {
         .opt("epochs", "2", "ImageNet epochs per trainer")
         .opt("hours", "24", "trace hours to replay")
         .opt("knowledge", "blind", "hole-lifetime knowledge: blind | oracle | walltime")
-        .flag("run-to-completion", "continue past trace end");
+        .flag("run-to-completion", "continue past trace end")
+        .flag("no-elide", "disable the solve-elision certificate (DESIGN.md §16.1)")
+        .flag("no-memo", "disable the value-table memo (DESIGN.md §16.2)")
+        .flag("no-coalesce", "disable same-timestamp event coalescing (DESIGN.md §16.3)");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
     let mut cfg = if m.get_str("config").unwrap().is_empty() {
         ExperimentConfig::default()
@@ -418,7 +421,12 @@ fn cmd_replay(args: &[String]) -> i32 {
     params.knowledge = k;
     let t = trace::generate(&params, cfg.seed);
     let wl = build_workload(&cfg);
-    let coord = build_coordinator(&cfg);
+    let mut coord = build_coordinator(&cfg);
+    coord.set_hotpath(HotpathOpts {
+        elide: !m.flag("no-elide"),
+        memo: !m.flag("no-memo"),
+        coalesce: !m.flag("no-coalesce"),
+    });
     let opts = ReplayOpts { run_to_completion: m.flag("run-to-completion"), ..Default::default() };
     let res = sim::replay(coord, &t, &wl, &opts);
     let a_s = sim::static_baseline_outcome(
@@ -458,7 +466,11 @@ fn cmd_replay(args: &[String]) -> i32 {
         ])
         .row(vec!["mean solve time".to_string(), format!("{:.2} ms", 1e3 * mm.mean_solve_s)])
         .row(vec!["max solve time".to_string(), format!("{:.2} ms", 1e3 * mm.max_solve_s)])
-        .row(vec!["fallbacks (§3.6)".to_string(), mm.fallbacks.to_string()]);
+        .row(vec!["fallbacks (§3.6)".to_string(), mm.fallbacks.to_string()])
+        .row(vec![
+            "hotpath skip/hit/miss".to_string(),
+            format!("{}/{}/{}", mm.solves_skipped, mm.cache_hits, mm.cache_misses),
+        ]);
     println!("{}", tab.render());
     0
 }
@@ -493,7 +505,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
         .opt("swf-week", "0", "week index of the SWF window")
         .opt("swf-procs-per-node", "1", "SWF processors per node")
         .opt("json", "", "write per-case metrics (samples, U, solve times, LP iterations) as JSON")
-        .flag("run-to-completion", "continue each replay past trace end");
+        .flag("run-to-completion", "continue each replay past trace end")
+        .flag("no-elide", "disable the solve-elision certificate (DESIGN.md §16.1)")
+        .flag("no-memo", "disable the value-table memo (DESIGN.md §16.2)")
+        .flag("no-coalesce", "disable same-timestamp event coalescing (DESIGN.md §16.3)");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
 
     let policies: Vec<String> = m
@@ -639,6 +654,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
                     t_fwd: m.get_f64("t-fwd").unwrap(),
                     pj_max: m.get_usize("pj-max").unwrap(),
                     rescale_multiplier: m.get_f64("rescale-multiplier").unwrap(),
+                    hotpath: HotpathOpts {
+                        elide: !m.flag("no-elide"),
+                        memo: !m.flag("no-memo"),
+                        coalesce: !m.flag("no-coalesce"),
+                    },
                     trace: trace.clone(),
                     workload: wl.clone(),
                     opts: opts.clone(),

@@ -67,6 +67,17 @@ pub struct ReplayMetrics {
     /// forward-looking strategy could not plan around. On a blind trace
     /// every leave is a surprise.
     pub leaves_surprise: u64,
+    /// Events whose solve was elided by the optimality certificate
+    /// (DESIGN.md §16.1) — `solves_skipped / n_events` is the hot-path
+    /// skip rate the `hotpath` figure gates on.
+    pub solves_skipped: u64,
+    /// Value-table memo hits across every event (DESIGN.md §16.2).
+    pub cache_hits: u64,
+    /// Value-table memo misses across every event.
+    pub cache_misses: u64,
+    /// Extra pool events folded into shared-timestamp batches (DESIGN.md
+    /// §16.3); 0 on every assembler-quantized trace.
+    pub events_coalesced: u64,
 }
 
 impl ReplayMetrics {
@@ -93,6 +104,10 @@ impl ReplayMetrics {
         self.lp_refactorizations += other.lp_refactorizations;
         self.leaves_anticipated += other.leaves_anticipated;
         self.leaves_surprise += other.leaves_surprise;
+        self.solves_skipped += other.solves_skipped;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.events_coalesced += other.events_coalesced;
     }
 }
 

@@ -15,7 +15,7 @@ pub use sweep::{
     ShardOutcome, StitchedMetrics, SweepCase, SweepOutcome,
 };
 
-use crate::coordinator::{allocator_by_name, Coordinator, Objective};
+use crate::coordinator::{allocator_by_name, Coordinator, HotpathOpts, Objective};
 use crate::trace::Trace;
 
 /// Options for one replay-plus-baseline evaluation: replay a workload on
@@ -43,6 +43,9 @@ pub struct BaselineRun {
     pub pj_max: usize,
     /// Global rescale-cost multiplier (1.0 = paper costs).
     pub rescale_multiplier: f64,
+    /// Hot-path switches (elision / memo / coalescing, DESIGN.md §16);
+    /// all on by default and decision-neutral either way.
+    pub hotpath: HotpathOpts,
     pub opts: ReplayOpts,
 }
 
@@ -54,6 +57,7 @@ impl Default for BaselineRun {
             t_fwd: 120.0,
             pj_max: 10,
             rescale_multiplier: 1.0,
+            hotpath: HotpathOpts::default(),
             opts: ReplayOpts::default(),
         }
     }
@@ -68,6 +72,7 @@ impl BaselineRun {
             self.pj_max,
         );
         c.rescale_cost_multiplier = self.rescale_multiplier;
+        c.set_hotpath(self.hotpath);
         c
     }
 

@@ -11,7 +11,7 @@
 
 use super::metrics::{self, ReplayMetrics, RoiStats, WindowedSeries};
 use crate::coordinator::{Coordinator, TrainerSpec};
-use crate::trace::{EventStream, PoolEvent, Trace, TraceStream};
+use crate::trace::{quant, EventStream, PoolEvent, Trace, TraceStream};
 
 /// A submission stream: (time, spec) sorted by time.
 #[derive(Clone, Debug, Default)]
@@ -130,6 +130,10 @@ pub fn replay_stream(
     // Resolved once per replay: the env lookup is too slow for a loop that
     // runs hundreds of millions of iterations on long traces.
     let debug_inner = std::env::var("BFT_REPLAY_DEBUG").is_ok();
+    // Reused across events: same-1ms-tick events fold into one batch with
+    // a single solve (DESIGN.md §16.3). Capacity sticks, so the steady
+    // state allocates nothing.
+    let mut group: Vec<PoolEvent> = Vec::new();
 
     // Unified timeline: pool events + submissions, processed in order;
     // completions subdivide intervals.
@@ -217,12 +221,28 @@ pub fn replay_stream(
         if let Some(te) = t_event {
             if te <= t_next {
                 let ev = pending.take().expect("t_event implies a pending event");
-                coord.handle_event(te, &ev);
-                pool_sizes.push((te, coord.pool.len()));
                 pending = stream.next_event();
+                group.clear();
+                group.push(ev);
+                // Coalesce: pull every queued event on the same 1 ms tick
+                // into this batch so the group runs one solve. Every trace
+                // source already emits at most one event per tick
+                // (EventAssembler), so this only fires on hand-built
+                // traces — but there it keeps the per-event accounting
+                // exact while eliding the redundant intermediate solves.
+                while coord.hotpath.coalesce
+                    && pending.as_ref().is_some_and(|e| quant(e.t) == quant(te))
+                {
+                    let folded = pending.take().expect("checked is_some above");
+                    last_event_t = folded.t;
+                    group.push(folded);
+                    pending = stream.next_event();
+                }
                 if let Some(e) = &pending {
                     last_event_t = e.t;
                 }
+                coord.handle_events(te, &group);
+                pool_sizes.push((te, coord.pool.len()));
             }
         }
         if let Some(ts) = t_sub {
@@ -257,11 +277,40 @@ pub fn replay_stream(
     }
 
     let samples_processed: f64 = coord.trainers.iter().map(|t| t.progress).sum();
-    let rescale_cost_samples: f64 =
-        coord.event_log.iter().map(|e| e.rescale_cost_samples).sum();
     let preemptions: u64 = coord.trainers.iter().map(|t| t.preemptions).sum();
     let completed = coord.trainers.iter().filter(|t| t.is_done()).count();
-    let solve_times: Vec<f64> = coord.event_log.iter().map(|e| e.solve_time_s).collect();
+    // Single ordered pass over the event log — streaming mean/max
+    // accumulators instead of the old per-stat `Vec<f64>` staging plus
+    // seven separate passes. Sums fold with `+` in event order, exactly
+    // what `iter().sum()` over a collected Vec computed, so every derived
+    // stat is bit-identical (DESIGN.md §16.4).
+    let mut solve_sum_s = 0.0f64;
+    let mut max_solve_s = 0.0f64;
+    let mut rescale_cost_samples = 0.0f64;
+    let mut fallbacks = 0usize;
+    let mut lp_iterations = 0u64;
+    let mut lp_refactorizations = 0u64;
+    let mut leaves_anticipated = 0u64;
+    let mut leaves_surprise = 0u64;
+    let mut solves_skipped = 0u64;
+    let mut cache_hits = 0u64;
+    let mut cache_misses = 0u64;
+    let mut events_coalesced = 0u64;
+    for e in &coord.event_log {
+        solve_sum_s += e.solve_time_s;
+        max_solve_s = max_solve_s.max(e.solve_time_s);
+        rescale_cost_samples += e.rescale_cost_samples;
+        fallbacks += e.fell_back as usize;
+        lp_iterations += e.lp_iterations as u64;
+        lp_refactorizations += e.lp_refactorizations as u64;
+        leaves_anticipated += e.leaves_anticipated as u64;
+        leaves_surprise += e.leaves_surprise as u64;
+        solves_skipped += e.solve_skipped as u64;
+        cache_hits += e.cache_hits;
+        cache_misses += e.cache_misses;
+        events_coalesced += e.coalesced as u64;
+    }
+    let n_events = coord.event_log.len();
     let metrics = ReplayMetrics {
         samples_processed,
         resource_node_hours: metrics::resource_integral_node_hours(&pool_sizes),
@@ -270,18 +319,18 @@ pub fn replay_stream(
         rescale_cost_samples,
         preemptions,
         completed,
-        mean_solve_s: crate::util::stats::mean(&solve_times),
-        max_solve_s: solve_times.iter().cloned().fold(0.0, f64::max),
-        fallbacks: coord.event_log.iter().filter(|e| e.fell_back).count(),
-        n_events: coord.event_log.len(),
-        lp_iterations: coord.event_log.iter().map(|e| e.lp_iterations as u64).sum(),
-        lp_refactorizations: coord
-            .event_log
-            .iter()
-            .map(|e| e.lp_refactorizations as u64)
-            .sum(),
-        leaves_anticipated: coord.event_log.iter().map(|e| e.leaves_anticipated as u64).sum(),
-        leaves_surprise: coord.event_log.iter().map(|e| e.leaves_surprise as u64).sum(),
+        mean_solve_s: if n_events > 0 { solve_sum_s / n_events as f64 } else { 0.0 },
+        max_solve_s,
+        fallbacks,
+        n_events,
+        lp_iterations,
+        lp_refactorizations,
+        leaves_anticipated,
+        leaves_surprise,
+        solves_skipped,
+        cache_hits,
+        cache_misses,
+        events_coalesced,
     };
     ReplayResult {
         metrics,

@@ -19,7 +19,7 @@
 
 use super::metrics::ReplayMetrics;
 use super::BaselineRun;
-use crate::coordinator::{allocator_by_name, Coordinator, Objective};
+use crate::coordinator::{allocator_by_name, Coordinator, HotpathOpts, Objective};
 use crate::sim::replay::{replay, replay_stream, static_baseline_outcome, ReplayOpts, Workload};
 use crate::trace::{stream_slice, SliceSpec, SwfLog, Trace};
 use crate::util::pool::run_indexed;
@@ -47,6 +47,8 @@ pub struct SweepCase {
     pub pj_max: usize,
     /// Global rescale-cost multiplier (1.0 = paper costs).
     pub rescale_multiplier: f64,
+    /// Hot-path switches (elision / memo / coalescing, DESIGN.md §16).
+    pub hotpath: HotpathOpts,
     pub trace: Arc<Trace>,
     pub workload: Arc<Workload>,
     pub opts: ReplayOpts,
@@ -84,6 +86,13 @@ pub struct SweepOutcome {
     /// (predicted-vs-realized; both 0 on blind traces).
     pub leaves_anticipated: u64,
     pub leaves_surprise: u64,
+    /// Events whose solve was elided by the optimality certificate.
+    pub solves_skipped: u64,
+    /// Value-table memo hits / misses across the replay.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Extra events folded into shared-timestamp batches.
+    pub events_coalesced: u64,
     pub completed: usize,
     /// Wall-clock time this case took to replay (seconds).
     pub wall_s: f64,
@@ -104,6 +113,7 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
         case.pj_max,
     );
     coord.rescale_cost_multiplier = case.rescale_multiplier;
+    coord.set_hotpath(case.hotpath);
     let res = replay(coord, &case.trace, &case.workload, &case.opts);
     let baseline_coord = Coordinator::new(
         allocator_by_name(&case.policy).unwrap(),
@@ -136,6 +146,10 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
         preemptions: m.preemptions,
         leaves_anticipated: m.leaves_anticipated,
         leaves_surprise: m.leaves_surprise,
+        solves_skipped: m.solves_skipped,
+        cache_hits: m.cache_hits,
+        cache_misses: m.cache_misses,
+        events_coalesced: m.events_coalesced,
         completed: m.completed,
         wall_s: t0.elapsed().as_secs_f64(),
     }
@@ -289,7 +303,7 @@ pub fn stitch_shards(base: &SliceSpec, shards: &[ShardOutcome]) -> StitchedMetri
 pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
     let mut tab = Table::new(vec![
         "scenario", "know", "policy", "objective", "events", "A_e", "U", "solve ms (mean/max)",
-        "LP iters/refac", "warm", "fallbacks", "preempt", "done", "wall s",
+        "LP iters/refac", "warm", "skip/hit/miss", "fallbacks", "preempt", "done", "wall s",
     ]);
     for o in outcomes {
         // Best policy within its (scenario, knowledge) group — comparing
@@ -310,6 +324,7 @@ pub fn comparison_table(outcomes: &[SweepOutcome]) -> Table {
             format!("{}/{}", f(o.mean_solve_ms, 2), f(o.max_solve_ms, 2)),
             format!("{}/{}", o.lp_iterations, o.lp_refactorizations),
             o.warm_started.to_string(),
+            format!("{}/{}/{}", o.solves_skipped, o.cache_hits, o.cache_misses),
             o.fallbacks.to_string(),
             o.preemptions.to_string(),
             o.completed.to_string(),
@@ -358,6 +373,8 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
                 "\"lp_refactorizations\": {}, ",
                 "\"warm_started\": {}, \"fallbacks\": {}, \"preemptions\": {}, ",
                 "\"leaves_anticipated\": {}, \"leaves_surprise\": {}, ",
+                "\"solves_skipped\": {}, \"cache_hits\": {}, \"cache_misses\": {}, ",
+                "\"events_coalesced\": {}, ",
                 "\"completed\": {}, \"wall_s\": {}}}"
             ),
             esc(&o.label),
@@ -377,6 +394,10 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
             o.preemptions,
             o.leaves_anticipated,
             o.leaves_surprise,
+            o.solves_skipped,
+            o.cache_hits,
+            o.cache_misses,
+            o.events_coalesced,
             o.completed,
             num(o.wall_s),
         ));
@@ -427,6 +448,7 @@ mod tests {
                     t_fwd: 120.0,
                     pj_max: 10,
                     rescale_multiplier: 1.0,
+                    hotpath: HotpathOpts::default(),
                     trace: trace.clone(),
                     workload: wl.clone(),
                     opts: ReplayOpts::default(),
@@ -595,6 +617,15 @@ mod tests {
             assert_eq!(
                 v.get("lp_refactorizations").and_then(|j| j.as_usize()),
                 Some(o.lp_refactorizations as usize)
+            );
+            assert_eq!(
+                v.get("solves_skipped").and_then(|j| j.as_usize()),
+                Some(o.solves_skipped as usize)
+            );
+            assert_eq!(v.get("cache_hits").and_then(|j| j.as_usize()), Some(o.cache_hits as usize));
+            assert_eq!(
+                v.get("events_coalesced").and_then(|j| j.as_usize()),
+                Some(o.events_coalesced as usize)
             );
         }
         assert!(outcomes_json(&[]).contains("[\n]"), "empty array still valid");

@@ -15,7 +15,7 @@ pub mod synth;
 pub use event::{EventStream, NodeId, PoolEvent, Trace, TraceStream};
 pub use fragments::{characterize, extract, fragment_cdf, Fragment, IdleStats};
 pub use scheduler::{
-    replay_jobs, BackfillOutcome, BackfillParams, BackfillStream, Knowledge, SchedJob,
+    quant, replay_jobs, BackfillOutcome, BackfillParams, BackfillStream, Knowledge, SchedJob,
 };
 pub use swf::{stream_slice, synth_swf_text, SliceOutcome, SliceSpec, SwfJob, SwfLog};
 pub use synth::{generate, generate_jobs, SynthParams};

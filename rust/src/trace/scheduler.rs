@@ -428,8 +428,10 @@ struct RawEvent {
     leaves: Vec<NodeId>,
 }
 
-/// 1 ms resolution quantization keys for event grouping.
-fn quant(t: f64) -> i64 {
+/// 1 ms resolution quantization keys for event grouping. Public so the
+/// replay loop's same-timestamp coalescing (DESIGN.md §16.3) folds
+/// events by exactly the tick [`EventAssembler`] emits them on.
+pub fn quant(t: f64) -> i64 {
     (t * 1000.0).round() as i64
 }
 

@@ -162,6 +162,7 @@ fn sweep_json_round_trips_knowledge_mode() {
             t_fwd: 120.0,
             pj_max: 4,
             rescale_multiplier: 1.0,
+            hotpath: bftrainer::coordinator::HotpathOpts::default(),
             trace: trace.clone(),
             workload: wl.clone(),
             opts: ReplayOpts::default(),

@@ -1,0 +1,315 @@
+//! Differential harness pinning hot-path ON == OFF (DESIGN.md §16):
+//! for seeded synthetic job streams crossed with every exact allocator
+//! policy and both knowledge modes, a replay with solve elision + value
+//! memoization enabled must make byte-identical *decisions* to one with
+//! the hot path fully disabled — same event times, rescale costs,
+//! preemption counts, pool samples and end-to-end metrics. Only solver
+//! *effort* (wall time, LP iterations, fallbacks, skip/cache counters)
+//! may differ; those fields are deliberately excluded from the keys.
+//!
+//! Also pinned here: the unsound-certificate regression (a leave that
+//! preempts an assigned trainer must force a real solve) and the
+//! same-timestamp coalescing contract (folded batches keep per-event
+//! accounting exact while eliding intermediate solves).
+
+use bftrainer::coordinator::{
+    allocator_by_name, Coordinator, EventRecord, HotpathOpts, Objective, TrainerSpec,
+};
+use bftrainer::scaling::ScalingCurve;
+use bftrainer::sim::{self, replay, ReplayMetrics, ReplayOpts, ReplayResult};
+use bftrainer::trace::{replay_jobs, BackfillParams, Knowledge, PoolEvent, SchedJob, Trace};
+use bftrainer::util::rng::Rng;
+
+const MACHINE: u32 = 12;
+const SPAN_S: f64 = 8000.0;
+
+/// Same shape as the streaming harness's stream: varied enough that the
+/// certificate sees steady states, preemptions and empty pools.
+fn synth_jobs(seed: u64) -> Vec<SchedJob> {
+    let mut rng = Rng::new(seed);
+    let n_jobs = rng.range_usize(4, 24);
+    (0..n_jobs)
+        .map(|i| {
+            let req = rng.range_u64(30, 3000) as f64;
+            let frac = rng.range_f64(0.3, 1.0);
+            SchedJob {
+                id: i as u64,
+                submit: rng.range_u64(0, SPAN_S as u64) as f64,
+                nodes: rng.range_u64(1, u64::from(MACHINE)) as u32,
+                req_walltime: req,
+                runtime: (req * frac).ceil().max(1.0),
+            }
+        })
+        .collect()
+}
+
+fn spec(name: &str, n_max: u32, total: f64) -> TrainerSpec {
+    TrainerSpec {
+        name: name.into(),
+        n_min: 1,
+        n_max,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+        total_samples: total,
+    }
+}
+
+fn workload() -> sim::Workload {
+    // One trainer completes mid-replay, one never does: exercises the
+    // completion-driven re-solve and the drain-at-horizon paths.
+    sim::Workload {
+        submissions: vec![(0.0, spec("short", 8, 9e4)), (500.0, spec("long", 8, 1e9))],
+    }
+}
+
+fn coordinator(policy: &str, hotpath: HotpathOpts) -> Coordinator {
+    let mut c =
+        Coordinator::new(allocator_by_name(policy).unwrap(), Objective::Throughput, 120.0, 2);
+    c.set_hotpath(hotpath);
+    c
+}
+
+/// The decision content of an [`EventRecord`], floats bit-exact. Solver
+/// effort (solve time, LP iterations, warm starts, fallbacks, skip and
+/// cache counters) is excluded: the hot path is allowed — expected — to
+/// change how hard the solver worked, never what it decided.
+fn decision_key(e: &EventRecord) -> (u64, u64, usize, usize, usize, usize) {
+    (
+        e.t.to_bits(),
+        e.rescale_cost_samples.to_bits(),
+        e.preempted,
+        e.pool_size,
+        e.leaves_anticipated,
+        e.leaves_surprise,
+    )
+}
+
+/// Every outcome-bearing [`ReplayMetrics`] field, floats bit-exact.
+#[allow(clippy::type_complexity)]
+fn outcome_key(m: &ReplayMetrics) -> (u64, u64, u64, u64, u64, u64, usize, usize, u64, u64) {
+    (
+        m.samples_processed.to_bits(),
+        m.resource_node_hours.to_bits(),
+        m.eq_nodes.to_bits(),
+        m.duration_s.to_bits(),
+        m.rescale_cost_samples.to_bits(),
+        m.preemptions,
+        m.completed,
+        m.n_events,
+        m.leaves_anticipated,
+        m.leaves_surprise,
+    )
+}
+
+fn assert_same_decisions(label: &str, on: &ReplayResult, off: &ReplayResult) {
+    assert_eq!(
+        on.coordinator.event_log.len(),
+        off.coordinator.event_log.len(),
+        "{label}: event counts diverge"
+    );
+    for (i, (a, b)) in on.coordinator.event_log.iter().zip(&off.coordinator.event_log).enumerate()
+    {
+        assert_eq!(decision_key(a), decision_key(b), "{label}: event {i} decisions diverge");
+    }
+    assert_eq!(
+        outcome_key(&on.metrics),
+        outcome_key(&off.metrics),
+        "{label}: metrics diverge"
+    );
+    assert_eq!(on.pool_sizes, off.pool_sizes, "{label}: pool samples diverge");
+    assert_eq!(on.interval_samples, off.interval_samples, "{label}: intervals diverge");
+    assert!(
+        (on.horizon - off.horizon).abs() < 1e-12,
+        "{label}: horizon {} vs {}",
+        on.horizon,
+        off.horizon
+    );
+}
+
+#[test]
+fn hotpath_on_matches_off_across_seeds_policies_and_knowledge() {
+    let wl = workload();
+    let opts = ReplayOpts::default();
+    let mut replays = 0usize;
+    let mut total_skipped = 0u64;
+    let mut total_hits = 0u64;
+    for seed in 0..32u64 {
+        let jobs = synth_jobs(seed);
+        for knowledge in [Knowledge::Oracle, Knowledge::Blind] {
+            let params = BackfillParams {
+                total_nodes: MACHINE,
+                debounce_s: 0.0,
+                duration_s: SPAN_S,
+                warmup_s: 0.0,
+                knowledge,
+            };
+            let out = replay_jobs(&params, jobs.clone());
+            for policy in ["dp", "milp-aggregate", "milp-pernode", "knapsack-decomp"] {
+                let label = format!("seed {seed} / {policy} / {knowledge:?}");
+                let on =
+                    replay(coordinator(policy, HotpathOpts::default()), &out.trace, &wl, &opts);
+                let off =
+                    replay(coordinator(policy, HotpathOpts::disabled()), &out.trace, &wl, &opts);
+                assert_same_decisions(&label, &on, &off);
+                assert_eq!(
+                    (off.metrics.solves_skipped, off.metrics.cache_hits, off.metrics.cache_misses),
+                    (0, 0, 0),
+                    "{label}: disabled hot path must not skip or cache"
+                );
+                total_skipped += on.metrics.solves_skipped;
+                total_hits += on.metrics.cache_hits;
+                replays += 1;
+            }
+        }
+    }
+    assert_eq!(replays, 32 * 2 * 4);
+    // The suite must actually exercise the fast paths, not just prove a
+    // dead feature equal to itself.
+    assert!(total_skipped > 0, "certificate never fired across the whole suite");
+    assert!(total_hits > 0, "value table never hit across the whole suite");
+}
+
+/// A trace engineered so the certificate's accept and decline cases both
+/// occur at known events: a pure join with the trainer already at its
+/// strict argmax must be skipped; a leave that preempts assigned nodes
+/// must force a real solve (the unsound-skip regression).
+fn steady_then_preempt_trace() -> Trace {
+    let mut t = Trace::new(16);
+    t.push(PoolEvent { t: 0.0, joins: (0..8).collect(), ..Default::default() });
+    t.push(PoolEvent { t: 1000.0, joins: (8..10).collect(), ..Default::default() });
+    t.push(PoolEvent { t: 2000.0, leaves: (0..2).collect(), ..Default::default() });
+    t
+}
+
+#[test]
+fn assigned_node_leave_is_never_elided() {
+    let wl = sim::Workload::all_at_zero(vec![spec("t", 8, 1e9)]);
+    let res = replay(
+        coordinator("dp", HotpathOpts::default()),
+        &steady_then_preempt_trace(),
+        &wl,
+        &ReplayOpts::default(),
+    );
+    let at = |t: f64| {
+        res.coordinator
+            .event_log
+            .iter()
+            .find(|e| e.t == t)
+            .unwrap_or_else(|| panic!("no event at t={t}"))
+    };
+    // t=1000: two spare nodes join while the trainer sits at n_max = 8,
+    // its strictly-unique argmax — the certificate must fire.
+    let join = at(1000.0);
+    assert!(join.solve_skipped, "steady-state join should be elided");
+    assert_eq!(join.preempted, 0);
+    // t=2000: the leave hits assigned nodes, pushing the trainer off its
+    // argmax — skipping here would be unsound, so a real solve must run.
+    let leave = at(2000.0);
+    assert!(!leave.solve_skipped, "preempting leave must force a real solve");
+    assert_eq!(leave.preempted, 1);
+    assert!(res.metrics.solves_skipped >= 1);
+    // And the whole run still matches the slow path decision-for-decision.
+    let off = replay(
+        coordinator("dp", HotpathOpts::disabled()),
+        &steady_then_preempt_trace(),
+        &wl,
+        &ReplayOpts::default(),
+    );
+    assert_same_decisions("steady/preempt", &res, &off);
+}
+
+/// Two events on the exact same timestamp: coalescing folds them into
+/// one batch (one record, one solve) with zero numeric impact — the
+/// zero-width interval between them carries no samples, so every
+/// outcome float is bit-identical to the unfolded replay.
+fn same_instant_trace() -> Trace {
+    let mut t = Trace::new(16);
+    t.push(PoolEvent { t: 0.0, joins: (0..4).collect(), ..Default::default() });
+    t.push(PoolEvent { t: 1000.0, joins: (4..6).collect(), ..Default::default() });
+    t.push(PoolEvent { t: 1000.0, joins: (6..8).collect(), ..Default::default() });
+    t.push(PoolEvent { t: 2000.0, leaves: (0..8).collect(), ..Default::default() });
+    t
+}
+
+#[test]
+fn exact_same_timestamp_events_coalesce_exactly() {
+    let wl = sim::Workload::all_at_zero(vec![spec("t", 8, 1e9)]);
+    let opts = ReplayOpts::default();
+    let on = replay(coordinator("dp", HotpathOpts::default()), &same_instant_trace(), &wl, &opts);
+    let off = HotpathOpts { coalesce: false, ..HotpathOpts::default() };
+    let off = replay(coordinator("dp", off), &same_instant_trace(), &wl, &opts);
+
+    assert_eq!(off.metrics.events_coalesced, 0);
+    assert_eq!(on.metrics.events_coalesced, 1, "the two t=1000 events fold into one batch");
+    assert_eq!(on.metrics.n_events, off.metrics.n_events - 1);
+    let folded = on.coordinator.event_log.iter().find(|e| e.coalesced > 0).unwrap();
+    assert_eq!((folded.t, folded.coalesced), (1000.0, 1));
+    assert_eq!(folded.pool_size, 8, "batch record samples the post-batch pool");
+    // Zero-width fold: outcome floats are bit-identical, not just close.
+    assert_eq!(
+        on.metrics.samples_processed.to_bits(),
+        off.metrics.samples_processed.to_bits(),
+        "samples must be untouched by folding a zero-width interval"
+    );
+    assert!((on.metrics.resource_node_hours - off.metrics.resource_node_hours).abs() < 1e-9);
+    assert_eq!(on.metrics.preemptions, off.metrics.preemptions);
+    assert_eq!(on.metrics.leaves_surprise, off.metrics.leaves_surprise);
+}
+
+#[test]
+fn same_tick_mixed_join_leave_batch_keeps_accounting_exact() {
+    // A join and an assigned-node leave land on the same 1 ms tick (t
+    // differs by 0.4 ms). The fold must preserve the leave
+    // classification (anticipated via the reclaim annotation), the
+    // preemption count and the final pool — only the intermediate solve
+    // disappears.
+    let trace = || {
+        let mut t = Trace::new(16);
+        t.push(PoolEvent {
+            t: 0.0,
+            joins: (0..4).collect(),
+            reclaim_at: vec![1000.0, 1000.0, f64::INFINITY, f64::INFINITY],
+            ..Default::default()
+        });
+        t.push(PoolEvent { t: 1000.0, joins: (4..6).collect(), ..Default::default() });
+        t.push(PoolEvent { t: 1000.0004, leaves: (0..2).collect(), ..Default::default() });
+        t.push(PoolEvent { t: 2000.0, leaves: (2..6).collect(), ..Default::default() });
+        t
+    };
+    let wl = sim::Workload::all_at_zero(vec![spec("t", 8, 1e9)]);
+    let opts = ReplayOpts::default();
+    let on = replay(coordinator("dp", HotpathOpts::default()), &trace(), &wl, &opts);
+    let off_opts = HotpathOpts { coalesce: false, ..HotpathOpts::default() };
+    let off = replay(coordinator("dp", off_opts), &trace(), &wl, &opts);
+
+    assert_eq!(on.metrics.events_coalesced, 1);
+    assert_eq!(on.metrics.n_events, off.metrics.n_events - 1);
+    assert_eq!(on.metrics.leaves_anticipated, off.metrics.leaves_anticipated);
+    assert_eq!(on.metrics.leaves_surprise, off.metrics.leaves_surprise);
+    assert_eq!(on.metrics.leaves_anticipated, 2, "annotated leaves stay anticipated in a batch");
+    assert_eq!(on.metrics.preemptions, off.metrics.preemptions);
+    assert_eq!(
+        on.pool_sizes.last(),
+        off.pool_sizes.last(),
+        "final pool must agree after folding"
+    );
+    // The folded record carries the batch's combined accounting.
+    let folded = on.coordinator.event_log.iter().find(|e| e.coalesced > 0).unwrap();
+    assert_eq!(folded.leaves_anticipated, 2);
+    assert!(folded.preempted >= 1, "assigned-node leave inside the batch still preempts");
+}
+
+#[test]
+fn no_coalesce_flag_preserves_one_record_per_event() {
+    // The escape hatch: with coalescing off, same-instant events keep
+    // their own records (count matches the trace plus the submission
+    // re-solve), and nothing reports as coalesced.
+    let wl = sim::Workload::all_at_zero(vec![spec("t", 8, 1e9)]);
+    let opts = HotpathOpts { coalesce: false, ..HotpathOpts::default() };
+    let res = replay(coordinator("dp", opts), &same_instant_trace(), &wl, &ReplayOpts::default());
+    assert_eq!(res.metrics.events_coalesced, 0);
+    assert!(res.coordinator.event_log.iter().all(|e| e.coalesced == 0));
+    let at_1000 = res.coordinator.event_log.iter().filter(|e| e.t == 1000.0).count();
+    assert_eq!(at_1000, 2, "both t=1000 events must keep their own records");
+}
