@@ -126,6 +126,11 @@ pub struct Coordinator {
     pub t_fwd: f64,
     /// Priority weights (only used by Objective::Priority).
     pub weights: BTreeMap<TrainerId, f64>,
+    /// Tenant of each trainer (only used by Objective::TenantFair);
+    /// absent means the default tenant "".
+    pub tenants: BTreeMap<TrainerId, String>,
+    /// Per-tenant fairness shares (Objective::TenantFair); absent = 1.0.
+    pub tenant_weights: BTreeMap<String, f64>,
     /// Per-event records (for Figs 7, 8, 11).
     pub event_log: Vec<EventRecord>,
     /// Global multiplier on rescale costs (Fig 16's artificial 2–10×).
@@ -163,6 +168,8 @@ impl Coordinator {
             allocator,
             t_fwd,
             weights: BTreeMap::new(),
+            tenants: BTreeMap::new(),
+            tenant_weights: BTreeMap::new(),
             event_log: Vec::new(),
             rescale_cost_multiplier: 1.0,
             hotpath: HotpathOpts::default(),
@@ -193,6 +200,62 @@ impl Coordinator {
         self.queue.push_back(id);
         self.admit(now);
         id
+    }
+
+    /// Submit a trainer on behalf of a named tenant (the service-mode
+    /// admission channel). Identical to [`Self::submit`] except the id is
+    /// tagged so [`Objective::TenantFair`] can split the tenant's share
+    /// across its concurrently admitted jobs.
+    pub fn submit_for_tenant(&mut self, spec: TrainerSpec, now: f64, tenant: &str) -> TrainerId {
+        let id = self.submit(spec, now);
+        if !tenant.is_empty() {
+            self.tenants.insert(id, tenant.to_string());
+        }
+        id
+    }
+
+    /// Cancel a trainer at time `now`. A queued trainer is simply removed;
+    /// an admitted one releases its nodes and frees an admission slot
+    /// (FCFS backfill runs immediately). Returns `true` when the cancel
+    /// released resources, i.e. the caller should reallocate.
+    pub fn cancel(&mut self, id: TrainerId, now: f64) -> bool {
+        if id >= self.trainers.len() || self.trainers[id].is_done() {
+            return false;
+        }
+        if let Some(pos) = self.queue.iter().position(|&q| q == id) {
+            self.queue.remove(pos);
+            let t = &mut self.trainers[id];
+            t.phase = Phase::Done;
+            t.cancelled = true;
+            t.done_t = Some(now);
+            return false;
+        }
+        if self.admitted.contains(&id) {
+            self.pool.release_all(id);
+            self.admitted.retain(|&a| a != id);
+            let t = &mut self.trainers[id];
+            t.phase = Phase::Done;
+            t.cancelled = true;
+            t.done_t = Some(now);
+            self.admit(now);
+            return true;
+        }
+        false
+    }
+
+    /// Effective TenantFair weight of an admitted trainer: the tenant's
+    /// share split equally across that tenant's currently admitted jobs
+    /// (Synergy-style weighted fair shares).
+    fn tenant_fair_weight(&self, id: TrainerId) -> f64 {
+        let tenant = self.tenants.get(&id).map(String::as_str).unwrap_or("");
+        let share = self.tenant_weights.get(tenant).copied().unwrap_or(1.0);
+        let jobs = self
+            .admitted
+            .iter()
+            .filter(|&&a| self.tenants.get(&a).map(String::as_str).unwrap_or("") == tenant)
+            .count()
+            .max(1);
+        share / jobs as f64
     }
 
     /// FCFS admission up to pj_max.
@@ -360,7 +423,10 @@ impl Coordinator {
             .iter()
             .map(|&id| {
                 let t = &self.trainers[id];
-                let w = self.weights.get(&id).copied().unwrap_or(1.0);
+                let w = match self.objective {
+                    Objective::TenantFair => self.tenant_fair_weight(id),
+                    _ => self.weights.get(&id).copied().unwrap_or(1.0),
+                };
                 AllocJob {
                     id,
                     current: self.pool.count_of(id),

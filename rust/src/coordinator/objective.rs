@@ -8,6 +8,11 @@
 //!   single-node throughput (speedup). Trainer-agnostic; gives fair share
 //!   (Fig 12/Tab 4).
 //! * **Priority** — speedup weighted by an admin-assigned score.
+//! * **TenantFair** — Synergy-style weighted fair shares (arxiv
+//!   2110.06073): each tenant owns a share, split equally across its
+//!   concurrently admitted Trainers; the gain is speedup scaled by that
+//!   effective weight. With a single tenant it degenerates to
+//!   ScalingEfficiency (every job gets the same uniform weight).
 
 use crate::scaling::ScalingCurve;
 
@@ -20,6 +25,10 @@ pub enum Objective {
     ScalingEfficiency,
     /// Speedup scaled by a per-Trainer priority weight.
     Priority,
+    /// Speedup scaled by the trainer's tenant-fair share (the coordinator
+    /// computes the effective weight: tenant share / admitted jobs of
+    /// that tenant).
+    TenantFair,
 }
 
 impl Objective {
@@ -39,7 +48,7 @@ impl Objective {
                     0.0
                 }
             }
-            Objective::Priority => {
+            Objective::Priority | Objective::TenantFair => {
                 let t1 = curve.throughput(1);
                 if t1 > 0.0 {
                     weight * curve.throughput(n) / t1
@@ -74,6 +83,7 @@ impl Objective {
                 Some(Objective::ScalingEfficiency)
             }
             "priority" => Some(Objective::Priority),
+            "tenant-fair" | "tenantfair" | "fair-share" => Some(Objective::TenantFair),
             _ => None,
         }
     }
@@ -83,6 +93,7 @@ impl Objective {
             Objective::Throughput => "throughput",
             Objective::ScalingEfficiency => "scaling-efficiency",
             Objective::Priority => "priority",
+            Objective::TenantFair => "tenant-fair",
         }
     }
 }
@@ -136,10 +147,21 @@ mod tests {
     }
 
     #[test]
+    fn tenant_fair_weights_speedup() {
+        // Same functional form as Priority: the coordinator supplies the
+        // effective (share / jobs) weight.
+        let o = Objective::TenantFair;
+        assert!((o.gain(&curve(), 0.5, 4) - 1.5).abs() < 1e-12); // 0.5 * 30/10
+        assert_eq!(o.gain(&curve(), 0.5, 0), 0.0);
+    }
+
+    #[test]
     fn parse_names() {
         assert_eq!(Objective::parse("throughput"), Some(Objective::Throughput));
         assert_eq!(Objective::parse("EFFICIENCY"), Some(Objective::ScalingEfficiency));
         assert_eq!(Objective::parse("priority"), Some(Objective::Priority));
+        assert_eq!(Objective::parse("tenant-fair"), Some(Objective::TenantFair));
+        assert_eq!(Objective::parse("fair-share"), Some(Objective::TenantFair));
         assert_eq!(Objective::parse("x"), None);
     }
 }

@@ -78,6 +78,9 @@ pub struct TrainerState {
     pub admit_t: Option<f64>,
     /// Completion time.
     pub done_t: Option<f64>,
+    /// True when the Done phase was reached by an explicit cancel (the
+    /// service-mode admission channel), not by finishing its samples.
+    pub cancelled: bool,
     /// Accounting: rescale cost paid, in node-seconds and in samples.
     pub rescale_cost_node_s: f64,
     pub rescale_cost_samples: f64,
@@ -99,6 +102,7 @@ impl TrainerState {
             submit_t,
             admit_t: None,
             done_t: None,
+            cancelled: false,
             rescale_cost_node_s: 0.0,
             rescale_cost_samples: 0.0,
             preemptions: 0,

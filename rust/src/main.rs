@@ -8,7 +8,10 @@
 //!                     log from a machine preset and a seed
 //! * `trace`         — ingest a real SWF scheduler log: slice, characterize,
 //!                     optionally emit the event CSV
-//! * `replay`        — replay a trace against a Trainer workload (§5)
+//! * `replay`        — replay a trace against a Trainer workload (§5), or a
+//!                     serve journal (`--journal`) as the determinism oracle
+//! * `serve`         — long-running service daemon: live event feed,
+//!                     newline-JSON admission channel, crash-safe checkpoints
 //! * `sweep`         — N (trace × policy × objective) replays in parallel,
 //!                     with a comparison table; `--swf` adds a log-derived
 //!                     scenario next to the synthetic presets
@@ -41,6 +44,7 @@ fn main() {
         Some("synth-swf") => cmd_synth_swf(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("replay") => cmd_replay(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("milp-bench") => cmd_milp_bench(&args[1..]),
         Some("scaling-table") => cmd_scaling_table(&args[1..]),
@@ -69,6 +73,7 @@ fn print_usage() {
          synth-swf      generate a deterministic synthetic SWF scheduler log\n  \
          trace          ingest an SWF scheduler log (slice, characterize, emit CSV)\n  \
          replay         replay a trace against a Trainer workload (§5 experiments)\n  \
+         serve          live service daemon: event feed + admission channel + checkpoints\n  \
          sweep          parallel multi-scenario sweep (trace × policy × objective)\n  \
          milp-bench     MILP solve-time scaling (Fig 5)\n  \
          scaling-table  print the Tab 2 DNN zoo\n  \
@@ -177,14 +182,14 @@ fn cmd_synth_trace(args: &[String]) -> i32 {
         .opt("machine", "summit", "machine preset")
         .opt("seed", "42", "trace seed")
         .opt("knowledge", "blind", "hole-lifetime knowledge: blind | oracle | walltime")
-        .opt("out", "trace.csv", "output path");
+        .opt("out", "trace.csv", "output path (.jsonl = newline-JSON serve feed)");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
     let mut params = machines::by_name(&m.get_str("machine").unwrap()).expect("machine");
     let Some(k) = parse_knowledge(&m.get_str("knowledge").unwrap()) else { return 2 };
     params.knowledge = k;
     let t = trace::generate(&params, m.get_u64("seed").unwrap());
     let out = m.get_str("out").unwrap();
-    if let Err(e) = t.save_csv(std::path::Path::new(&out)) {
+    if let Err(e) = save_trace(&t, &out) {
         eprintln!("write failed: {e}");
         return 1;
     }
@@ -269,7 +274,7 @@ fn cmd_trace(args: &[String]) -> i32 {
         .opt("warmup-h", "24", "lead-in replayed before the window (h)")
         .opt("debounce", "10", "drop idle fragments shorter than this (s)")
         .opt("knowledge", "blind", "hole-lifetime knowledge: blind | oracle | walltime")
-        .opt("out", "", "write the sliced trace as an event CSV");
+        .opt("out", "", "write the sliced trace (.csv, or .jsonl for a serve feed)");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
     let path = m.get_str("swf").unwrap();
     let log = match trace::swf::load(std::path::Path::new(&path)) {
@@ -334,13 +339,24 @@ fn cmd_trace(args: &[String]) -> i32 {
     println!("{}", tab.render());
     let out = m.get_str("out").unwrap();
     if !out.is_empty() {
-        if let Err(e) = sliced.trace.save_csv(std::path::Path::new(&out)) {
+        if let Err(e) = save_trace(&sliced.trace, &out) {
             eprintln!("write failed: {e}");
             return 1;
         }
         println!("wrote {} events to {out}", sliced.trace.len());
     }
     0
+}
+
+/// Write a trace as CSV, or — when the path ends in `.jsonl` — as the
+/// newline-JSON event feed `bftrainer serve` tails.
+fn save_trace(t: &trace::Trace, out: &str) -> std::io::Result<()> {
+    let path = std::path::Path::new(out);
+    if out.ends_with(".jsonl") {
+        bftrainer::runtime::save_feed(t, path)
+    } else {
+        t.save_csv(path)
+    }
 }
 
 fn build_coordinator(cfg: &ExperimentConfig) -> Coordinator {
@@ -367,8 +383,10 @@ fn build_workload(cfg: &ExperimentConfig) -> sim::Workload {
 fn cmd_replay(args: &[String]) -> i32 {
     let cmd = Command::new("replay", "replay a trace against a Trainer workload")
         .opt("config", "", "TOML config file (flags override)")
+        .opt("journal", "", "replay a serve checkpoint journal instead (determinism oracle)")
+        .opt("metrics-out", "", "write deterministic final metrics JSON here")
         .opt("policy", "milp", "milp | dp | heuristic | milp-pernode | knapsack-decomp")
-        .opt("objective", "throughput", "throughput | efficiency | priority")
+        .opt("objective", "throughput", "throughput | efficiency | priority | tenant-fair")
         .opt("t-fwd", "120", "forward-looking time (s)")
         .opt("pj-max", "10", "max parallel trainers")
         .opt("machine", "summit", "machine preset")
@@ -384,6 +402,10 @@ fn cmd_replay(args: &[String]) -> i32 {
         .flag("no-memo", "disable the value-table memo (DESIGN.md §16.2)")
         .flag("no-coalesce", "disable same-timestamp event coalescing (DESIGN.md §16.3)");
     let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    let journal = m.get_str("journal").unwrap();
+    if !journal.is_empty() {
+        return replay_journal(&journal, &m.get_str("metrics-out").unwrap());
+    }
     let mut cfg = if m.get_str("config").unwrap().is_empty() {
         ExperimentConfig::default()
     } else {
@@ -472,7 +494,180 @@ fn cmd_replay(args: &[String]) -> i32 {
             format!("{}/{}/{}", mm.solves_skipped, mm.cache_hits, mm.cache_misses),
         ]);
     println!("{}", tab.render());
+    let mout = m.get_str("metrics-out").unwrap();
+    if !mout.is_empty() {
+        if let Err(e) = std::fs::write(&mout, bftrainer::runtime::result_json(&res).pretty()) {
+            eprintln!("writing {mout}: {e}");
+            return 1;
+        }
+    }
     0
+}
+
+/// Rebuild the coordinator a journal's config line describes.
+fn coordinator_from_run_config(cfg: &bftrainer::runtime::RunConfig) -> Option<Coordinator> {
+    let allocator = allocator_by_name(&cfg.policy)?;
+    let objective = Objective::parse(&cfg.objective)?;
+    let mut c = Coordinator::new(allocator, objective, cfg.t_fwd, cfg.pj_max);
+    c.set_hotpath(cfg.hotpath);
+    Some(c)
+}
+
+/// `replay --journal`: re-run a serve checkpoint journal through the
+/// deterministic engine — the replay-as-oracle side of the service
+/// differential (DESIGN.md §17.4). The journal alone fully determines
+/// the run: config line + events + admitted commands.
+fn replay_journal(path: &str, metrics_out: &str) -> i32 {
+    use bftrainer::runtime::checkpoint::{read_journal, JournalEntry};
+    let loaded = match read_journal(std::path::Path::new(path)) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            return 1;
+        }
+    };
+    let cfg = loaded.config;
+    let Some(coord) = coordinator_from_run_config(&cfg) else {
+        eprintln!("journal config names an unknown policy/objective");
+        return 2;
+    };
+    let mut t = trace::Trace::new(cfg.machine_nodes);
+    let mut actions: Vec<(f64, sim::Action)> = Vec::new();
+    for e in loaded.entries {
+        match e {
+            JournalEntry::Event(ev) => t.push(ev),
+            JournalEntry::Submit { t, tenant, weight, spec } => {
+                actions.push((t, sim::Action::Submit { spec, tenant, weight }));
+            }
+            JournalEntry::Cancel { t, id } => actions.push((t, sim::Action::Cancel(id))),
+        }
+    }
+    let opts = cfg.replay_opts();
+    let mut stream = trace::TraceStream::new(&t);
+    let res = sim::replay_actions(coord, &mut stream, actions, &opts);
+    println!(
+        "journal replay: {} events, {} trainers, {:.3e} samples, digest {:016x}",
+        res.metrics.n_events,
+        res.coordinator.trainers.len(),
+        res.metrics.samples_processed,
+        bftrainer::runtime::state_digest(&res.coordinator)
+    );
+    if !metrics_out.is_empty() {
+        if let Err(e) =
+            std::fs::write(metrics_out, bftrainer::runtime::result_json(&res).pretty())
+        {
+            eprintln!("writing {metrics_out}: {e}");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cmd = Command::new("serve", "live service: event feed + admission channel + checkpoints")
+        .req("feed", "event feed: path to a .jsonl feed file, or tcp:<port>")
+        .opt("control", "ctl.jsonl", "admission-channel command file (replies -> <file>.out)")
+        .opt("checkpoint", "ckpt", "checkpoint directory (write-ahead journal + snapshot)")
+        .opt("machine-nodes", "1024", "pool universe size |N| (fresh start only)")
+        .opt("policy", "milp", "milp | dp | heuristic | milp-pernode | knapsack-decomp")
+        .opt("objective", "throughput", "throughput | efficiency | priority | tenant-fair")
+        .opt("t-fwd", "120", "forward-looking time (s)")
+        .opt("pj-max", "10", "max parallel trainers")
+        .opt("horizon", "0", "stop after this many trace seconds (0 = stream end)")
+        .opt("window", "0", "windowed-efficiency sample size (s, 0 = off)")
+        .opt("poll-ms", "5", "idle poll interval (ms)")
+        .opt("metrics-out", "", "write deterministic final metrics JSON here on exit")
+        .opt("crash-after", "0", "test hook: abort after N journal entries (0 = off)")
+        .flag("resume", "restore from the checkpoint directory and continue the stream")
+        .flag("run-to-completion", "keep trainers running past stream end")
+        .flag("no-elide", "disable the solve-elision certificate (DESIGN.md §16.1)")
+        .flag("no-memo", "disable the value-table memo (DESIGN.md §16.2)")
+        .flag("no-coalesce", "disable same-timestamp event coalescing (DESIGN.md §16.3)");
+    let Some(m) = unwrap_args(cmd.parse_from(args)) else { return 2 };
+    match run_serve(&m) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn run_serve(m: &bftrainer::mini::argparse::Matches) -> std::io::Result<i32> {
+    use bftrainer::runtime::checkpoint::JournalEntry;
+    use bftrainer::runtime::{
+        result_json, run_service, Checkpoint, ControlChannel, FeedStream, RunConfig, ServeExit,
+        ServeOpts,
+    };
+    let dir = std::path::PathBuf::from(m.get_str("checkpoint").unwrap());
+    let feed_spec = m.get_str("feed").unwrap();
+
+    // On --resume the run config comes from the journal's first line; the
+    // policy/objective/sizing flags only shape a fresh start.
+    let (config, mut ckpt, entries) = if m.flag("resume") {
+        let (ckpt, loaded) = Checkpoint::resume(&dir)?;
+        (loaded.config, ckpt, loaded.entries)
+    } else {
+        let config = RunConfig {
+            policy: m.get_str("policy").unwrap(),
+            objective: m.get_str("objective").unwrap(),
+            t_fwd: m.get_f64("t-fwd").unwrap(),
+            pj_max: m.get_usize("pj-max").unwrap(),
+            machine_nodes: m.get_u64("machine-nodes").unwrap() as u32,
+            hotpath: HotpathOpts {
+                elide: !m.flag("no-elide"),
+                memo: !m.flag("no-memo"),
+                coalesce: !m.flag("no-coalesce"),
+            },
+            horizon_s: m.get_f64("horizon").unwrap(),
+            window_s: m.get_f64("window").unwrap(),
+            run_to_completion: m.flag("run-to-completion"),
+        };
+        (config, Checkpoint::create(&dir, &config)?, Vec::new())
+    };
+    let Some(coord) = coordinator_from_run_config(&config) else {
+        eprintln!("unknown policy/objective");
+        return Ok(2);
+    };
+    let n_events = entries.iter().filter(|e| matches!(e, JournalEntry::Event(_))).count();
+    let n_mutating = entries.len() - n_events;
+    let mut feed = FeedStream::open(&feed_spec, config.machine_nodes, true)?;
+    feed.skip_events(n_events);
+    let ctl_path = std::path::PathBuf::from(m.get_str("control").unwrap());
+    let mut ctl = ControlChannel::open(&ctl_path, n_mutating)?;
+    let verify = if m.flag("resume") { Checkpoint::load_snapshot(&dir) } else { None };
+    if m.flag("resume") {
+        eprintln!(
+            "serve: resuming from {} journal entries ({} events, {} commands)",
+            entries.len(),
+            n_events,
+            n_mutating
+        );
+    }
+    let opts = ServeOpts {
+        replay: config.replay_opts(),
+        poll_ms: m.get_u64("poll-ms").unwrap(),
+        crash_after_entries: m.get_usize("crash-after").unwrap(),
+    };
+    let outcome = run_service(coord, &mut feed, &mut ctl, &mut ckpt, entries, verify, &opts)?;
+    if outcome.exit == ServeExit::Crashed {
+        eprintln!("serve: crash hook fired after {} journal entries", ckpt.entries);
+        return Ok(3);
+    }
+    let res = outcome.result.expect("non-crash exit carries a result");
+    eprintln!(
+        "serve: {} ({} events, {} trainers, {:.3e} samples)",
+        if outcome.exit == ServeExit::Drained { "drained" } else { "stream ended" },
+        res.metrics.n_events,
+        res.coordinator.trainers.len(),
+        res.metrics.samples_processed
+    );
+    let mout = m.get_str("metrics-out").unwrap();
+    if !mout.is_empty() {
+        std::fs::write(&mout, result_json(&res).pretty())?;
+        eprintln!("serve: wrote metrics to {mout}");
+    }
+    Ok(0)
 }
 
 fn cmd_sweep(args: &[String]) -> i32 {
@@ -482,7 +677,11 @@ fn cmd_sweep(args: &[String]) -> i32 {
             "milp,dp,heuristic",
             "comma list: milp | dp | heuristic | milp-pernode | knapsack-decomp",
         )
-        .opt("objectives", "throughput", "comma list: throughput | efficiency | priority")
+        .opt(
+            "objectives",
+            "throughput",
+            "comma list: throughput | efficiency | priority | tenant-fair",
+        )
         .opt("machine", "summit", "machine preset")
         .opt("seeds", "42", "comma list of trace seeds (one scenario each)")
         .opt(

@@ -1,0 +1,619 @@
+//! Crash-safe service checkpointing: a write-ahead journal plus an
+//! atomically-renamed snapshot (DESIGN.md §17.3).
+//!
+//! The journal (`journal.jsonl`) is the source of truth: one compact
+//! JSON line per *input* the service consumed — a pool event pulled from
+//! the feed, or a `submit`/`cancel` accepted on the admission channel —
+//! fsync'd **before** the input is allowed to affect the engine. Because
+//! the replay engine is deterministic, replaying the journal through a
+//! fresh engine reconstructs the coordinator, the standing plan, the
+//! `ValueMemo` contents and the LP warm-start basis bit-identically —
+//! including the private allocator caches no serializer could reach.
+//!
+//! The snapshot (`snapshot.json`, deterministic [`Json::pretty`], tmp
+//! file + atomic rename + fsync) is written after every handled step and
+//! carries the run config plus a digest of the rebuilt state; on resume
+//! the digest is re-verified at the matching step boundary, so silent
+//! journal corruption cannot masquerade as a clean resume.
+
+use crate::coordinator::{Coordinator, HotpathOpts, Phase, TrainerId, TrainerSpec};
+use crate::runtime::feed::{event_from_json, event_to_json};
+use crate::runtime::json::{self, Json};
+use crate::scaling::ScalingCurve;
+use crate::sim::ReplayOpts;
+use crate::trace::PoolEvent;
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Everything needed to rebuild the coordinator and replay options —
+/// stored as the journal's first line so `serve --resume` and the
+/// `replay --journal` oracle need no CLI flags to agree with the
+/// original run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub policy: String,
+    pub objective: String,
+    pub t_fwd: f64,
+    pub pj_max: usize,
+    pub machine_nodes: u32,
+    pub hotpath: HotpathOpts,
+    pub horizon_s: f64,
+    pub window_s: f64,
+    pub run_to_completion: bool,
+}
+
+impl RunConfig {
+    pub fn replay_opts(&self) -> ReplayOpts {
+        ReplayOpts {
+            horizon_s: self.horizon_s,
+            window_s: self.window_s,
+            run_to_completion: self.run_to_completion,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kind".into(), Json::Str("config".into()));
+        o.insert("policy".into(), Json::Str(self.policy.clone()));
+        o.insert("objective".into(), Json::Str(self.objective.clone()));
+        o.insert("t_fwd".into(), Json::Num(self.t_fwd));
+        o.insert("pj_max".into(), Json::Num(self.pj_max as f64));
+        o.insert("machine_nodes".into(), Json::Num(self.machine_nodes as f64));
+        o.insert("elide".into(), Json::Bool(self.hotpath.elide));
+        o.insert("memo".into(), Json::Bool(self.hotpath.memo));
+        o.insert("coalesce".into(), Json::Bool(self.hotpath.coalesce));
+        o.insert("horizon_s".into(), Json::Num(self.horizon_s));
+        o.insert("window_s".into(), Json::Num(self.window_s));
+        o.insert("run_to_completion".into(), Json::Bool(self.run_to_completion));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunConfig, String> {
+        if v.get("kind").and_then(Json::as_str) != Some("config") {
+            return Err("journal does not start with a config line".into());
+        }
+        let f = |k: &str| v.get(k).and_then(Json::as_f64).ok_or(format!("config missing {k}"));
+        let b = |k: &str| v.get(k).and_then(Json::as_bool).unwrap_or(true);
+        Ok(RunConfig {
+            policy: v.get("policy").and_then(Json::as_str).ok_or("config missing policy")?.into(),
+            objective: v
+                .get("objective")
+                .and_then(Json::as_str)
+                .ok_or("config missing objective")?
+                .into(),
+            t_fwd: f("t_fwd")?,
+            pj_max: f("pj_max")? as usize,
+            machine_nodes: f("machine_nodes")? as u32,
+            hotpath: HotpathOpts { elide: b("elide"), memo: b("memo"), coalesce: b("coalesce") },
+            horizon_s: f("horizon_s")?,
+            window_s: f("window_s")?,
+            run_to_completion: b("run_to_completion"),
+        })
+    }
+}
+
+/// Encode a trainer spec (curve as `[[n, samples/s], ...]`).
+pub fn spec_to_json(spec: &TrainerSpec) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), Json::Str(spec.name.clone()));
+    o.insert("n_min".into(), Json::Num(spec.n_min as f64));
+    o.insert("n_max".into(), Json::Num(spec.n_max as f64));
+    o.insert("r_up".into(), Json::Num(spec.r_up));
+    o.insert("r_dw".into(), Json::Num(spec.r_dw));
+    o.insert("total_samples".into(), Json::Num(spec.total_samples));
+    let curve = spec
+        .curve
+        .points()
+        .iter()
+        .map(|&(n, t)| Json::Arr(vec![Json::Num(n as f64), Json::Num(t)]))
+        .collect();
+    o.insert("curve".into(), Json::Arr(curve));
+    Json::Obj(o)
+}
+
+/// Decode and *validate* a trainer spec — the admission channel must
+/// reject nonsense instead of letting `TrainerSpec::validate` panic the
+/// daemon.
+pub fn spec_from_json(v: &Json) -> Result<TrainerSpec, String> {
+    let name = v.get("name").and_then(Json::as_str).unwrap_or("job").to_string();
+    let num = |k: &str| v.get(k).and_then(Json::as_f64).ok_or(format!("spec missing {k}"));
+    let n_min = num("n_min")? as u32;
+    let n_max = num("n_max")? as u32;
+    let r_up = v.get("r_up").and_then(Json::as_f64).unwrap_or(0.0);
+    let r_dw = v.get("r_dw").and_then(Json::as_f64).unwrap_or(0.0);
+    let total_samples = num("total_samples")?;
+    if n_min < 1 || n_min > n_max {
+        return Err(format!("{name}: need 1 <= n_min <= n_max"));
+    }
+    if !(r_up >= 0.0 && r_dw >= 0.0 && r_up.is_finite() && r_dw.is_finite()) {
+        return Err(format!("{name}: rescale costs must be finite and >= 0"));
+    }
+    if !(total_samples > 0.0 && total_samples.is_finite()) {
+        return Err(format!("{name}: total_samples must be finite and > 0"));
+    }
+    let curve_arr = v.get("curve").and_then(Json::as_arr).ok_or("spec missing curve")?;
+    let mut points: Vec<(u32, f64)> = Vec::with_capacity(curve_arr.len());
+    for p in curve_arr {
+        let pair = p.as_arr().filter(|a| a.len() == 2).ok_or("curve point must be [n, thr]")?;
+        let n = pair[0].as_f64().ok_or("curve node count")?;
+        let thr = pair[1].as_f64().ok_or("curve throughput")?;
+        if n < 1.0 || n.fract() != 0.0 || !(thr >= 0.0 && thr.is_finite()) {
+            return Err(format!("{name}: bad curve point ({n}, {thr})"));
+        }
+        points.push((n as u32, thr));
+    }
+    if points.is_empty() {
+        return Err(format!("{name}: curve needs at least one point"));
+    }
+    let mut ns: Vec<u32> = points.iter().map(|&(n, _)| n).collect();
+    ns.sort_unstable();
+    if ns.windows(2).any(|w| w[0] == w[1]) {
+        return Err(format!("{name}: duplicate curve node count"));
+    }
+    Ok(TrainerSpec {
+        name,
+        n_min,
+        n_max,
+        r_up,
+        r_dw,
+        curve: ScalingCurve::new(points),
+        total_samples,
+    })
+}
+
+/// One consumed input, as journaled.
+#[derive(Clone, Debug)]
+pub enum JournalEntry {
+    /// A pool event pulled from the feed.
+    Event(PoolEvent),
+    /// An accepted `submit` (t is the effective time `max(req, now)`).
+    Submit { t: f64, tenant: String, weight: Option<f64>, spec: TrainerSpec },
+    /// An accepted `cancel`.
+    Cancel { t: f64, id: TrainerId },
+}
+
+pub fn entry_to_json(e: &JournalEntry) -> Json {
+    match e {
+        JournalEntry::Event(ev) => {
+            let mut o = match event_to_json(ev) {
+                Json::Obj(o) => o,
+                _ => unreachable!("event_to_json returns an object"),
+            };
+            o.insert("kind".into(), Json::Str("event".into()));
+            Json::Obj(o)
+        }
+        JournalEntry::Submit { t, tenant, weight, spec } => {
+            let mut o = BTreeMap::new();
+            o.insert("kind".into(), Json::Str("submit".into()));
+            o.insert("t".into(), Json::Num(*t));
+            if !tenant.is_empty() {
+                o.insert("tenant".into(), Json::Str(tenant.clone()));
+            }
+            if let Some(w) = weight {
+                o.insert("weight".into(), Json::Num(*w));
+            }
+            o.insert("spec".into(), spec_to_json(spec));
+            Json::Obj(o)
+        }
+        JournalEntry::Cancel { t, id } => {
+            let mut o = BTreeMap::new();
+            o.insert("kind".into(), Json::Str("cancel".into()));
+            o.insert("t".into(), Json::Num(*t));
+            o.insert("id".into(), Json::Num(*id as f64));
+            Json::Obj(o)
+        }
+    }
+}
+
+pub fn entry_from_json(v: &Json) -> Result<JournalEntry, String> {
+    match v.get("kind").and_then(Json::as_str) {
+        Some("event") => Ok(JournalEntry::Event(event_from_json(v)?)),
+        Some("submit") => {
+            let t = v.get("t").and_then(Json::as_f64).ok_or("submit missing t")?;
+            let tenant = v.get("tenant").and_then(Json::as_str).unwrap_or("").to_string();
+            let weight = v.get("weight").and_then(Json::as_f64);
+            let spec = spec_from_json(v.get("spec").ok_or("submit missing spec")?)?;
+            Ok(JournalEntry::Submit { t, tenant, weight, spec })
+        }
+        Some("cancel") => {
+            let t = v.get("t").and_then(Json::as_f64).ok_or("cancel missing t")?;
+            let id = v.get("id").and_then(Json::as_usize).ok_or("cancel missing id")?;
+            Ok(JournalEntry::Cancel { t, id })
+        }
+        k => Err(format!("unknown journal entry kind {k:?}")),
+    }
+}
+
+/// A parsed journal: the run config line plus every complete entry. A
+/// torn final line (the crash happened mid-write, before the fsync
+/// returned) is discarded — by the write-ahead contract its input never
+/// reached the engine.
+pub struct LoadedJournal {
+    pub config: RunConfig,
+    pub entries: Vec<JournalEntry>,
+    /// Byte length of the valid prefix (resume truncates to this before
+    /// appending).
+    pub valid_len: u64,
+}
+
+/// Parse `journal.jsonl`.
+pub fn read_journal(path: &Path) -> io::Result<LoadedJournal> {
+    let mut text = String::new();
+    File::open(path)?.read_to_string(&mut text)?;
+    let bad = |m: String| io::Error::new(io::ErrorKind::InvalidData, m);
+    let mut config: Option<RunConfig> = None;
+    let mut entries = Vec::new();
+    let mut valid_len = 0u64;
+    let mut offset = 0u64;
+    // Only lines terminated by \n are considered committed; split_inclusive
+    // leaves a trailing unterminated fragment un-iterated only if we check.
+    for line in text.split_inclusive('\n') {
+        let len = line.len() as u64;
+        let terminated = line.ends_with('\n');
+        let line = line.trim();
+        offset += len;
+        if line.is_empty() {
+            valid_len = offset;
+            continue;
+        }
+        let parsed = json::parse(line);
+        match (parsed, terminated) {
+            (Ok(v), true) => {
+                if config.is_none() {
+                    config = Some(RunConfig::from_json(&v).map_err(bad)?);
+                } else {
+                    entries.push(entry_from_json(&v).map_err(bad)?);
+                }
+                valid_len = offset;
+            }
+            // Torn tail: unterminated or unparsable final line — drop it.
+            (_, false) => break,
+            (Err(e), true) => {
+                return Err(bad(format!("corrupt journal line: {e}")));
+            }
+        }
+    }
+    let config = config.ok_or_else(|| bad("journal has no config line".into()))?;
+    Ok(LoadedJournal { config, entries, valid_len })
+}
+
+/// The open write-ahead checkpoint directory.
+pub struct Checkpoint {
+    dir: PathBuf,
+    journal: File,
+    /// Journal entries committed (excluding the config line).
+    pub entries: usize,
+    /// Pool events among them.
+    pub events: usize,
+}
+
+impl Checkpoint {
+    pub fn journal_path(dir: &Path) -> PathBuf {
+        dir.join("journal.jsonl")
+    }
+
+    pub fn snapshot_path(dir: &Path) -> PathBuf {
+        dir.join("snapshot.json")
+    }
+
+    /// Start a fresh checkpoint: truncates any previous journal and
+    /// writes (and fsyncs) the config header line.
+    pub fn create(dir: &Path, config: &RunConfig) -> io::Result<Checkpoint> {
+        std::fs::create_dir_all(dir)?;
+        let mut journal = File::create(Self::journal_path(dir))?;
+        writeln!(journal, "{}", config.to_json().compact())?;
+        journal.sync_data()?;
+        Ok(Checkpoint { dir: dir.to_path_buf(), journal, entries: 0, events: 0 })
+    }
+
+    /// Reopen an existing checkpoint for `serve --resume`: parse the
+    /// journal, truncate any torn tail, and return the committed entries
+    /// for deterministic state reconstruction.
+    pub fn resume(dir: &Path) -> io::Result<(Checkpoint, LoadedJournal)> {
+        let path = Self::journal_path(dir);
+        let loaded = read_journal(&path)?;
+        let mut journal = OpenOptions::new().write(true).open(&path)?;
+        journal.set_len(loaded.valid_len)?;
+        {
+            use std::io::Seek as _;
+            journal.seek(io::SeekFrom::End(0))?;
+        }
+        let entries = loaded.entries.len();
+        let events =
+            loaded.entries.iter().filter(|e| matches!(e, JournalEntry::Event(_))).count();
+        Ok((Checkpoint { dir: dir.to_path_buf(), journal, entries, events }, loaded))
+    }
+
+    /// Commit one entry: write + fsync *before* the caller lets the input
+    /// touch the engine (literal write-ahead logging).
+    pub fn append(&mut self, e: &JournalEntry) -> io::Result<()> {
+        writeln!(self.journal, "{}", entry_to_json(e).compact())?;
+        self.journal.sync_data()?;
+        self.entries += 1;
+        if matches!(e, JournalEntry::Event(_)) {
+            self.events += 1;
+        }
+        Ok(())
+    }
+
+    /// Write the post-step snapshot: deterministic pretty JSON to a tmp
+    /// file, fsync, atomic rename over `snapshot.json`, fsync the
+    /// directory. A crash leaves either the old or the new snapshot —
+    /// never a torn one.
+    pub fn write_snapshot(&self, snap: &Snapshot) -> io::Result<()> {
+        let tmp = self.dir.join("snapshot.json.tmp");
+        let mut f = File::create(&tmp)?;
+        f.write_all(snap.to_json().pretty().as_bytes())?;
+        f.sync_data()?;
+        drop(f);
+        std::fs::rename(&tmp, Self::snapshot_path(&self.dir))?;
+        File::open(&self.dir)?.sync_all()?;
+        Ok(())
+    }
+
+    /// Load the latest snapshot, if one was ever written.
+    pub fn load_snapshot(dir: &Path) -> Option<Snapshot> {
+        let text = std::fs::read_to_string(Self::snapshot_path(dir)).ok()?;
+        Snapshot::from_json(&json::parse(&text).ok()?)
+    }
+}
+
+/// What `write_snapshot` records after every handled step: consumption
+/// counters that name a step boundary, plus the state digest at it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Simulation clock at the step boundary.
+    pub now: f64,
+    /// Journal entries committed so far (may exceed what the engine has
+    /// consumed — events are journaled ahead of consumption).
+    pub entries: usize,
+    /// Events the engine actually pulled.
+    pub events_consumed: usize,
+    /// Actions the engine actually processed.
+    pub actions_processed: usize,
+    /// [`state_digest`] of the coordinator at this boundary.
+    pub digest: u64,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kind".into(), Json::Str("snapshot".into()));
+        o.insert("now".into(), Json::Num(self.now));
+        o.insert("entries".into(), Json::Num(self.entries as f64));
+        o.insert("events_consumed".into(), Json::Num(self.events_consumed as f64));
+        o.insert("actions_processed".into(), Json::Num(self.actions_processed as f64));
+        // u64 digests don't fit f64 exactly: hex string.
+        o.insert("digest".into(), Json::Str(format!("{:016x}", self.digest)));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Option<Snapshot> {
+        Some(Snapshot {
+            now: v.get("now").and_then(Json::as_f64)?,
+            entries: v.get("entries").and_then(Json::as_usize)?,
+            events_consumed: v.get("events_consumed").and_then(Json::as_usize)?,
+            actions_processed: v.get("actions_processed").and_then(Json::as_usize)?,
+            digest: u64::from_str_radix(v.get("digest").and_then(Json::as_str)?, 16).ok()?,
+        })
+    }
+}
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+/// FNV-1a digest of everything the resume contract promises to restore:
+/// trainer states, admission/queue order, the standing plan (pool
+/// assignment), and the warm-start observable state (memo hit/miss
+/// counters, per-event solver stats). Wall-clock solve times are
+/// excluded — they are the one sanctioned nondeterminism.
+pub fn state_digest(coord: &Coordinator) -> u64 {
+    let mut h = Fnv::new();
+    for t in &coord.trainers {
+        h.u64(t.id as u64);
+        h.bytes(t.spec.name.as_bytes());
+        h.u64(match t.phase {
+            Phase::Queued => 0,
+            Phase::Waiting => 1,
+            Phase::Running => 2,
+            Phase::Done => 3,
+        });
+        h.f64(t.progress);
+        h.f64(t.stalled_until);
+        h.f64(t.submit_t);
+        h.f64(t.admit_t.unwrap_or(f64::NEG_INFINITY));
+        h.f64(t.done_t.unwrap_or(f64::NEG_INFINITY));
+        h.f64(t.rescale_cost_node_s);
+        h.f64(t.rescale_cost_samples);
+        h.u64(t.preemptions);
+        h.u64(t.upscales);
+        h.u64(t.downscales);
+        h.u64(t.cancelled as u64);
+    }
+    h.u64(coord.admitted.len() as u64);
+    for &id in &coord.admitted {
+        h.u64(id as u64);
+    }
+    h.u64(coord.queue.len() as u64);
+    for &id in &coord.queue {
+        h.u64(id as u64);
+    }
+    // The standing plan: which nodes each trainer holds right now.
+    let alloc = coord.pool.allocation();
+    h.u64(alloc.len() as u64);
+    for (id, nodes) in &alloc {
+        h.u64(*id as u64);
+        h.u64(nodes.len() as u64);
+        for &n in nodes {
+            h.u64(n as u64);
+        }
+    }
+    h.u64(coord.pool.len() as u64);
+    h.u64(coord.pool.n_free() as u64);
+    // Warm-start observables.
+    h.u64(coord.memo.hits);
+    h.u64(coord.memo.misses);
+    // Event log (the decisions), minus wall-clock solve times.
+    h.u64(coord.event_log.len() as u64);
+    for e in &coord.event_log {
+        h.f64(e.t);
+        h.f64(e.rescale_cost_samples);
+        h.u64(e.preempted as u64);
+        h.u64(e.fell_back as u64);
+        h.u64(e.warm_started as u64);
+        h.u64(e.pool_size as u64);
+        h.u64(e.leaves_anticipated as u64);
+        h.u64(e.leaves_surprise as u64);
+        h.u64(e.lp_iterations as u64);
+        h.u64(e.lp_refactorizations as u64);
+        h.u64(e.solve_skipped as u64);
+        h.u64(e.cache_hits);
+        h.u64(e.cache_misses);
+        h.u64(e.coalesced as u64);
+    }
+    h.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{allocator_by_name, Objective};
+
+    fn cfg() -> RunConfig {
+        RunConfig {
+            policy: "dp".into(),
+            objective: "throughput".into(),
+            t_fwd: 120.0,
+            pj_max: 10,
+            machine_nodes: 64,
+            hotpath: HotpathOpts::default(),
+            horizon_s: 0.0,
+            window_s: 0.0,
+            run_to_completion: true,
+        }
+    }
+
+    fn spec() -> TrainerSpec {
+        TrainerSpec {
+            name: "j0".into(),
+            n_min: 1,
+            n_max: 8,
+            r_up: 20.0,
+            r_dw: 5.0,
+            curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0)]),
+            total_samples: 5e4,
+        }
+    }
+
+    #[test]
+    fn config_and_spec_round_trip() {
+        let c = cfg();
+        assert_eq!(RunConfig::from_json(&c.to_json()).unwrap(), c);
+        let s = spec();
+        let back = spec_from_json(&spec_to_json(&s)).unwrap();
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.curve.points(), s.curve.points());
+        assert_eq!(back.total_samples, s.total_samples);
+    }
+
+    #[test]
+    fn spec_validation_rejects_nonsense() {
+        let mut v = spec_to_json(&spec());
+        if let Json::Obj(o) = &mut v {
+            o.insert("n_min".into(), Json::Num(0.0));
+        }
+        assert!(spec_from_json(&v).is_err());
+        let dup = json::parse(
+            r#"{"name":"x","n_min":1,"n_max":2,"total_samples":10,
+                "curve":[[1,5],[1,6]]}"#,
+        )
+        .unwrap();
+        assert!(spec_from_json(&dup).is_err(), "duplicate curve points must not panic");
+    }
+
+    #[test]
+    fn journal_survives_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("bft-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut ck = Checkpoint::create(&dir, &cfg()).unwrap();
+        ck.append(&JournalEntry::Submit {
+            t: 0.0,
+            tenant: "a".into(),
+            weight: Some(2.0),
+            spec: spec(),
+        })
+        .unwrap();
+        ck.append(&JournalEntry::Event(PoolEvent {
+            t: 5.0,
+            joins: vec![0, 1],
+            leaves: vec![],
+            reclaim_at: vec![900.0, f64::INFINITY],
+        }))
+        .unwrap();
+        ck.append(&JournalEntry::Cancel { t: 9.0, id: 0 }).unwrap();
+        drop(ck);
+        // Simulate a crash mid-write: append a torn, unterminated line.
+        let path = Checkpoint::journal_path(&dir);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"kind\":\"event\",\"t\":11").unwrap();
+        drop(f);
+        let (ck2, loaded) = Checkpoint::resume(&dir).unwrap();
+        assert_eq!(loaded.entries.len(), 3);
+        assert_eq!(ck2.entries, 3);
+        assert_eq!(ck2.events, 1);
+        match &loaded.entries[0] {
+            JournalEntry::Submit { tenant, weight, .. } => {
+                assert_eq!(tenant, "a");
+                assert_eq!(*weight, Some(2.0));
+            }
+            e => panic!("wrong entry {e:?}"),
+        }
+        // The torn bytes were truncated away: resume + append is clean.
+        let mut ck2 = ck2;
+        ck2.append(&JournalEntry::Cancel { t: 12.0, id: 1 }).unwrap();
+        let reread = read_journal(&path).unwrap();
+        assert_eq!(reread.entries.len(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_round_trip_and_digest_sensitivity() {
+        let snap = Snapshot {
+            now: 123.5,
+            entries: 7,
+            events_consumed: 4,
+            actions_processed: 2,
+            digest: 0xdead_beef_cafe_f00d,
+        };
+        assert_eq!(Snapshot::from_json(&snap.to_json()), Some(snap.clone()));
+        // Digest reacts to progress changes.
+        let mut c =
+            Coordinator::new(allocator_by_name("dp").unwrap(), Objective::Throughput, 120.0, 10);
+        c.submit(spec(), 0.0);
+        let d0 = state_digest(&c);
+        c.trainers[0].progress += 1.0;
+        assert_ne!(state_digest(&c), d0);
+    }
+}

@@ -1,0 +1,383 @@
+//! Line-delimited [`PoolEvent`] feeds for the service mode.
+//!
+//! A feed is a sequence of newline-delimited JSON objects — one per pool
+//! event — terminated by an `{"end": true}` marker (optional: EOF on a
+//! non-followed file or a closed socket also ends the stream). Two
+//! transports are wrapped by [`FeedStream`]:
+//!
+//! * **file tail** — events appended to a regular file; the stream polls
+//!   from a byte offset, so a slow producer (`echo >> feed.jsonl`) works.
+//! * **local socket** — `tcp:<port>` listens on 127.0.0.1 and accepts one
+//!   producer connection.
+//!
+//! [`FeedStream`] implements the [`EventStream`] contract (blocking
+//! pulls) for one-shot replay, and exposes the non-blocking
+//! [`FeedStream::poll_event`] the service loop uses so the admission
+//! channel stays responsive while the feed is quiet.
+
+use crate::runtime::json::{self, Json};
+use crate::trace::{EventStream, NodeId, PoolEvent, Trace};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+/// Encode one event as a feed line value: `{"t", "joins", "leaves",
+/// "reclaim"}`. Infinite reclaim times (no lifetime knowledge) encode as
+/// the string `"inf"` — JSON has no literal for them and `Json::Num`
+/// would serialize `null`.
+pub fn event_to_json(ev: &PoolEvent) -> Json {
+    let nodes = |v: &[NodeId]| Json::Arr(v.iter().map(|&n| Json::Num(n as f64)).collect());
+    let mut o = BTreeMap::new();
+    o.insert("t".to_string(), Json::Num(ev.t));
+    o.insert("joins".to_string(), nodes(&ev.joins));
+    o.insert("leaves".to_string(), nodes(&ev.leaves));
+    if !ev.reclaim_at.is_empty() {
+        let r = ev
+            .reclaim_at
+            .iter()
+            .map(|&t| if t.is_finite() { Json::Num(t) } else { Json::Str("inf".to_string()) })
+            .collect();
+        o.insert("reclaim".to_string(), Json::Arr(r));
+    }
+    Json::Obj(o)
+}
+
+fn node_list(v: Option<&Json>, key: &str) -> Result<Vec<NodeId>, String> {
+    match v {
+        None => Ok(Vec::new()),
+        Some(Json::Arr(a)) => a
+            .iter()
+            .map(|x| {
+                let n = x.as_f64().ok_or_else(|| format!("non-numeric node id in {key}"))?;
+                if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+                    return Err(format!("bad node id {n} in {key}"));
+                }
+                Ok(n as NodeId)
+            })
+            .collect(),
+        Some(_) => Err(format!("{key} must be an array")),
+    }
+}
+
+/// Decode a feed line value back into a [`PoolEvent`].
+pub fn event_from_json(v: &Json) -> Result<PoolEvent, String> {
+    let t = v.get("t").and_then(Json::as_f64).ok_or("event missing numeric t")?;
+    if !t.is_finite() || t < 0.0 {
+        return Err(format!("bad event time {t}"));
+    }
+    let joins = node_list(v.get("joins"), "joins")?;
+    let leaves = node_list(v.get("leaves"), "leaves")?;
+    let reclaim_at = match v.get("reclaim") {
+        None => Vec::new(),
+        Some(Json::Arr(a)) => a
+            .iter()
+            .map(|x| match x {
+                Json::Num(n) => Ok(*n),
+                Json::Null => Ok(f64::INFINITY),
+                Json::Str(s) if s == "inf" => Ok(f64::INFINITY),
+                _ => Err("bad reclaim entry".to_string()),
+            })
+            .collect::<Result<Vec<f64>, String>>()?,
+        Some(_) => return Err("reclaim must be an array".to_string()),
+    };
+    if !reclaim_at.is_empty() && reclaim_at.len() != joins.len() {
+        return Err("reclaim length != joins length".to_string());
+    }
+    Ok(PoolEvent { t, joins, leaves, reclaim_at })
+}
+
+/// The explicit stream-end marker line.
+pub fn end_marker() -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("end".to_string(), Json::Bool(true));
+    Json::Obj(o)
+}
+
+/// Materialize a trace as a feed file (one compact JSON line per event,
+/// plus the end marker) — the producer side of the service smoke test.
+pub fn save_feed(trace: &Trace, path: &Path) -> io::Result<()> {
+    let mut f = File::create(path)?;
+    for ev in &trace.events {
+        writeln!(f, "{}", event_to_json(ev).compact())?;
+    }
+    writeln!(f, "{}", end_marker().compact())?;
+    Ok(())
+}
+
+/// Non-blocking poll result.
+pub enum FeedPoll {
+    /// Nothing available yet (producer still running).
+    Pending,
+    /// One decoded event.
+    Ready(PoolEvent),
+    /// Stream ended (end marker, EOF, or peer close).
+    End,
+}
+
+enum Source {
+    File { file: File, offset: u64 },
+    Listener(TcpListener),
+    Conn(TcpStream),
+}
+
+enum LinePoll {
+    Pending,
+    Ready(String),
+    End,
+}
+
+/// A live event feed over a tailed file or a local TCP socket.
+pub struct FeedStream {
+    machine_nodes: u32,
+    src: Source,
+    buf: Vec<u8>,
+    follow: bool,
+    done: bool,
+    last_t: f64,
+    skip: usize,
+}
+
+impl FeedStream {
+    /// Open a feed. `spec` is either `tcp:<port>` (listen on 127.0.0.1,
+    /// accept one producer) or a file path. With `follow` a file feed
+    /// tails the file (EOF means "wait for more", and a missing file is
+    /// waited for up to ~60 s); without it EOF ends the stream.
+    pub fn open(spec: &str, machine_nodes: u32, follow: bool) -> io::Result<FeedStream> {
+        let src = if let Some(port) = spec.strip_prefix("tcp:") {
+            let port: u16 = port
+                .parse()
+                .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "bad tcp port"))?;
+            let l = TcpListener::bind(("127.0.0.1", port))?;
+            l.set_nonblocking(true)?;
+            Source::Listener(l)
+        } else {
+            let path = Path::new(spec);
+            let file = if follow {
+                let mut waited = 0u64;
+                loop {
+                    match File::open(path) {
+                        Ok(f) => break f,
+                        Err(e) if e.kind() == io::ErrorKind::NotFound && waited < 60_000 => {
+                            std::thread::sleep(Duration::from_millis(25));
+                            waited += 25;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            } else {
+                File::open(path)?
+            };
+            Source::File { file, offset: 0 }
+        };
+        Ok(FeedStream {
+            machine_nodes,
+            src,
+            buf: Vec::new(),
+            follow,
+            done: false,
+            last_t: 0.0,
+            skip: 0,
+        })
+    }
+
+    /// Skip the next `n` yielded events — resume support: events already
+    /// recorded in the write-ahead journal are not consumed twice.
+    pub fn skip_events(&mut self, n: usize) {
+        self.skip = n;
+    }
+
+    fn poll_line(&mut self) -> io::Result<LinePoll> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let rest = self.buf.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // the newline
+                return Ok(LinePoll::Ready(String::from_utf8_lossy(&line).into_owned()));
+            }
+            let mut chunk = [0u8; 8192];
+            let n = match &mut self.src {
+                Source::File { file, offset } => {
+                    file.seek(SeekFrom::Start(*offset))?;
+                    let n = file.read(&mut chunk)?;
+                    *offset += n as u64;
+                    if n == 0 && self.follow {
+                        return Ok(LinePoll::Pending);
+                    }
+                    n
+                }
+                Source::Listener(l) => {
+                    match l.accept() {
+                        Ok((conn, _)) => {
+                            conn.set_nonblocking(true)?;
+                            self.src = Source::Conn(conn);
+                            continue;
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            return Ok(LinePoll::Pending)
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Source::Conn(conn) => match conn.read(&mut chunk) {
+                    Ok(n) => n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        return Ok(LinePoll::Pending)
+                    }
+                    Err(e) => return Err(e),
+                },
+            };
+            if n == 0 {
+                // True EOF (non-followed file, or peer closed): a trailing
+                // unterminated line still counts.
+                if self.buf.is_empty() {
+                    return Ok(LinePoll::End);
+                }
+                let line = std::mem::take(&mut self.buf);
+                return Ok(LinePoll::Ready(String::from_utf8_lossy(&line).into_owned()));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Non-blocking pull: decode the next feed line if one is available.
+    /// Empty events, out-of-order events and malformed lines are dropped
+    /// with a warning — the [`EventStream`] contract promises neither
+    /// reaches the engine.
+    pub fn poll_event(&mut self) -> io::Result<FeedPoll> {
+        if self.done {
+            return Ok(FeedPoll::End);
+        }
+        loop {
+            match self.poll_line()? {
+                LinePoll::Pending => return Ok(FeedPoll::Pending),
+                LinePoll::End => {
+                    self.done = true;
+                    return Ok(FeedPoll::End);
+                }
+                LinePoll::Ready(line) => {
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let v = match json::parse(line) {
+                        Ok(v) => v,
+                        Err(e) => {
+                            eprintln!("feed: dropping malformed line ({e})");
+                            continue;
+                        }
+                    };
+                    if v.get("end").and_then(Json::as_bool) == Some(true) {
+                        self.done = true;
+                        return Ok(FeedPoll::End);
+                    }
+                    let ev = match event_from_json(&v) {
+                        Ok(ev) => ev,
+                        Err(e) => {
+                            eprintln!("feed: dropping bad event ({e})");
+                            continue;
+                        }
+                    };
+                    if ev.is_empty() {
+                        continue;
+                    }
+                    if ev.t < self.last_t {
+                        eprintln!("feed: dropping out-of-order event at t={}", ev.t);
+                        continue;
+                    }
+                    self.last_t = ev.t;
+                    if self.skip > 0 {
+                        self.skip -= 1;
+                        continue;
+                    }
+                    return Ok(FeedPoll::Ready(ev));
+                }
+            }
+        }
+    }
+}
+
+impl EventStream for FeedStream {
+    fn machine_nodes(&self) -> u32 {
+        self.machine_nodes
+    }
+
+    /// Blocking pull (one-shot replay over a complete feed). The service
+    /// loop uses [`Self::poll_event`] instead.
+    fn next_event(&mut self) -> Option<PoolEvent> {
+        loop {
+            match self.poll_event() {
+                Ok(FeedPoll::Ready(ev)) => return Some(ev),
+                Ok(FeedPoll::End) => return None,
+                Ok(FeedPoll::Pending) => std::thread::sleep(Duration::from_millis(10)),
+                Err(e) => {
+                    eprintln!("feed: read error ({e}); ending stream");
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, joins: Vec<NodeId>, leaves: Vec<NodeId>, reclaim: Vec<f64>) -> PoolEvent {
+        PoolEvent { t, joins, leaves, reclaim_at: reclaim }
+    }
+
+    #[test]
+    fn event_json_round_trip() {
+        let e = ev(12.5, vec![0, 3, 7], vec![2], vec![60.0, f64::INFINITY, 99.5]);
+        let back = event_from_json(&event_to_json(&e)).unwrap();
+        assert_eq!(back, e);
+        // Blind events (no reclaim annotation) round-trip too.
+        let blind = ev(1.0, vec![4], vec![], vec![]);
+        assert_eq!(event_from_json(&event_to_json(&blind)).unwrap(), blind);
+    }
+
+    #[test]
+    fn infinite_reclaim_survives_the_wire() {
+        let e = ev(0.0, vec![1], vec![], vec![f64::INFINITY]);
+        let line = event_to_json(&e).compact();
+        assert!(line.contains("\"inf\""), "line: {line}");
+        let back = event_from_json(&json::parse(&line).unwrap()).unwrap();
+        assert!(back.reclaim_of(0).is_infinite());
+    }
+
+    #[test]
+    fn bad_events_rejected() {
+        assert!(event_from_json(&json::parse("{}").unwrap()).is_err());
+        assert!(event_from_json(&json::parse(r#"{"t":-1}"#).unwrap()).is_err());
+        let r = event_from_json(&json::parse(r#"{"t":1,"joins":[0,1],"reclaim":[5]}"#).unwrap());
+        assert!(r.is_err(), "reclaim/joins length mismatch must be rejected");
+    }
+
+    #[test]
+    fn file_feed_replays_a_saved_trace() {
+        let mut trace = Trace::new(8);
+        trace.push(ev(0.0, vec![0, 1], vec![], vec![100.0, f64::INFINITY]));
+        trace.push(ev(50.0, vec![2], vec![], vec![]));
+        trace.push(ev(100.0, vec![], vec![0], vec![]));
+        let dir = std::env::temp_dir().join(format!("bft-feed-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("feed.jsonl");
+        save_feed(&trace, &path).unwrap();
+        let mut fs = FeedStream::open(path.to_str().unwrap(), 8, false).unwrap();
+        assert_eq!(fs.machine_nodes(), 8);
+        let mut got = Vec::new();
+        while let Some(e) = fs.next_event() {
+            got.push(e);
+        }
+        assert_eq!(got, trace.events);
+        // Resume skip: skipping 2 yields only the final event.
+        let mut fs = FeedStream::open(path.to_str().unwrap(), 8, false).unwrap();
+        fs.skip_events(2);
+        let rest: Vec<PoolEvent> = std::iter::from_fn(|| fs.next_event()).collect();
+        assert_eq!(rest, trace.events[2..].to_vec());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -104,6 +104,13 @@ pub fn run(
             let t_now = ev.t + step as f64 * opts.virtual_step_s;
             let ids: Vec<usize> = coord.admitted.clone();
             for id in ids {
+                // The budget is a cap on *trainer-steps*, so it must gate
+                // each trainer's step — checking only per step-tick let
+                // every admitted trainer step once more, overshooting by
+                // up to (#trainers - 1).
+                if total_steps >= opts.max_total_steps {
+                    break;
+                }
                 let n = coord.scale_of(id);
                 if n == 0 {
                     continue;
@@ -177,5 +184,40 @@ mod tests {
         let first = res.loss_curve.first().unwrap().3;
         let last = res.loss_curve.last().unwrap().3;
         assert!(last < first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn budget_guard_is_exact_with_multiple_trainers() {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let v = man.variant("tiny").unwrap().clone();
+        let engine = Engine::cpu().unwrap();
+
+        // Odd budget + several admitted trainers: the old per-tick check
+        // overshot to a multiple of the trainer count.
+        let opts = LiveOpts { virtual_step_s: 10.0, max_total_steps: 7, lr: 0.1, log_every: 0 };
+        let mut coord = Coordinator::new(Box::new(DpAllocator), Objective::Throughput, 120.0, 4);
+        let mut vars: BTreeMap<usize, Variant> = BTreeMap::new();
+        for name in ["a", "b", "c"] {
+            let id = coord.submit(live_spec(&v, name, 4, 10_000, &opts), 0.0);
+            vars.insert(id, v.clone());
+        }
+
+        let mut trace = Trace::new(16);
+        trace.push(PoolEvent {
+            t: 0.0,
+            joins: (0..6).collect(),
+            leaves: vec![],
+            ..Default::default()
+        });
+        trace.push(PoolEvent { t: 1000.0, joins: vec![], leaves: vec![], ..Default::default() });
+
+        let res = run(coord, &trace, &engine, &vars, &opts).unwrap();
+        assert_eq!(res.total_steps, opts.max_total_steps, "budget must be exact, not per-tick");
+        assert!(res.loss_curve.len() as u64 == res.total_steps);
     }
 }

@@ -1,15 +1,30 @@
-//! PJRT runtime bridge: load `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`), compile on the CPU PJRT client, and run real
-//! elastic data-parallel training steps from the L3 hot path. Python is
-//! never on this path.
+//! Runtime layer: everything that runs *outside* the pure simulator.
+//!
+//! Two halves live here. The PJRT bridge (`artifact`/`data`/`executor`/
+//! `live`) loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compiles on the CPU PJRT client, and runs
+//! real elastic data-parallel training steps from the L3 hot path —
+//! Python is never on this path. The service half (`feed`/`checkpoint`/
+//! `service`, DESIGN.md §17) turns the deterministic replay engine into
+//! a long-running `bftrainer serve` daemon: newline-JSON event feeds,
+//! a file-based admission channel, and write-ahead crash-safe
+//! checkpointing with `--resume`.
 
 pub mod artifact;
+pub mod checkpoint;
 pub mod data;
 pub mod executor;
+pub mod feed;
 pub mod json;
 pub mod live;
+pub mod service;
 
 pub use artifact::{default_dir, Manifest, ParamSpec, Variant};
+pub use checkpoint::{state_digest, Checkpoint, JournalEntry, LoadedJournal, RunConfig, Snapshot};
 pub use data::DataGen;
 pub use executor::{Engine, TrainerExec};
+pub use feed::{save_feed, FeedPoll, FeedStream};
 pub use live::{live_spec, LiveOpts, LiveResult};
+pub use service::{
+    result_json, run_service, ControlChannel, ServeExit, ServeOpts, ServiceOutcome,
+};

@@ -7,8 +7,8 @@ pub mod sweep;
 
 pub use metrics::{eq_nodes, resource_integral_node_hours, ReplayMetrics, RoiStats};
 pub use replay::{
-    preemption_within_tfwd, replay, replay_stream, static_baseline_outcome, ReplayOpts,
-    ReplayResult, Workload,
+    preemption_within_tfwd, replay, replay_actions, replay_stream, static_baseline_outcome, Action,
+    ReplayEngine, ReplayOpts, ReplayResult, Workload,
 };
 pub use sweep::{
     comparison_table, outcomes_json, replay_shards, run_sweep, shard_windows, stitch_shards,

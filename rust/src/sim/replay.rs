@@ -10,8 +10,23 @@
 //! utilization efficiency `U = A_e / A_s`.
 
 use super::metrics::{self, ReplayMetrics, RoiStats, WindowedSeries};
-use crate::coordinator::{Coordinator, TrainerSpec};
+use crate::coordinator::{Coordinator, TrainerId, TrainerSpec};
 use crate::trace::{quant, EventStream, PoolEvent, Trace, TraceStream};
+
+/// One unit of admission-channel work on the replay timeline. The
+/// materialized/streaming replay paths only ever emit `Submit`; the
+/// service mode (`runtime::service`) also injects `Cancel` and
+/// tenant-tagged submissions through [`ReplayEngine::push_action`].
+#[derive(Clone, Debug)]
+pub enum Action {
+    /// Submit a trainer, optionally tagged with a tenant (and an updated
+    /// tenant share) for `Objective::TenantFair`. The share update is
+    /// applied when the action is *processed*, not when it is queued, so
+    /// live and journal-replayed runs see it at the same instant.
+    Submit { spec: TrainerSpec, tenant: String, weight: Option<f64> },
+    /// Cancel a trainer by id (queued or admitted).
+    Cancel(TrainerId),
+}
 
 /// A submission stream: (time, spec) sorted by time.
 #[derive(Clone, Debug, Default)]
@@ -98,69 +113,185 @@ pub fn replay(
 /// drains; for a materialized trace that is exactly the old `trace_end`,
 /// so decisions are byte-identical between the two paths.
 pub fn replay_stream(
-    mut coord: Coordinator,
+    coord: Coordinator,
     stream: &mut dyn EventStream,
     workload: &Workload,
     opts: &ReplayOpts,
 ) -> ReplayResult {
-    let mut subs = workload.submissions.clone();
-    subs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let mut next_sub = 0usize;
+    let actions = workload
+        .submissions
+        .iter()
+        .cloned()
+        .map(|(t, spec)| (t, Action::Submit { spec, tenant: String::new(), weight: None }))
+        .collect();
+    replay_actions(coord, stream, actions, opts)
+}
 
-    let mut now = 0.0f64;
-    let mut interval_samples: Vec<f64> = Vec::new();
-    let mut windowed = WindowedSeries { window_s: opts.window_s, values: Vec::new() };
-    let mut window_acc = 0.0f64;
-    let mut window_start = 0.0f64;
+/// Drive `coord` with an event `stream` and an explicit action timeline
+/// (submissions and cancels). This is the journal-replay oracle the
+/// service mode is differentially tested against.
+pub fn replay_actions(
+    coord: Coordinator,
+    stream: &mut dyn EventStream,
+    actions: Vec<(f64, Action)>,
+    opts: &ReplayOpts,
+) -> ReplayResult {
+    let mut eng = ReplayEngine::new(coord, actions, opts);
+    eng.prime(stream);
+    while !eng.step(stream) {}
+    eng.finish()
+}
 
-    // One-event lookahead. `last_event_t` trails the newest pulled event,
-    // so once the stream drains it holds the final event time — the
-    // trace-end horizon, discovered without materializing anything.
-    let mut pending: Option<PoolEvent> = stream.next_event();
-    let mut last_event_t = pending.as_ref().map(|e| e.t).unwrap_or(0.0);
+/// The replay event loop, exploded into an explicit state machine so the
+/// live service (`runtime::service`) can drive it one timeline point at a
+/// time — draining its admission channel and checkpointing between steps
+/// — while `replay_stream`/`replay_actions` run it to completion in a
+/// tight loop. Both paths execute the *same* code, which is what makes
+/// the sim the oracle for the daemon (`tests/service_differential.rs`).
+pub struct ReplayEngine {
+    coord: Coordinator,
+    opts: ReplayOpts,
+    /// Unified action timeline, sorted by time (stable for ties).
+    actions: Vec<(f64, Action)>,
+    next_action: usize,
+    now: f64,
+    interval_samples: Vec<f64>,
+    windowed: WindowedSeries,
+    window_acc: f64,
+    window_start: f64,
+    /// One-event lookahead. `last_event_t` trails the newest pulled
+    /// event, so once the stream drains it holds the final event time —
+    /// the trace-end horizon, discovered without materializing anything.
+    pending: Option<PoolEvent>,
+    last_event_t: f64,
+    pool_sizes: Vec<(f64, usize)>,
+    horizon_fixed: Option<f64>,
+    debug_inner: bool,
+    /// Reused across events: same-1ms-tick events fold into one batch
+    /// with a single solve (DESIGN.md §16.3). Capacity sticks, so the
+    /// steady state allocates nothing.
+    group: Vec<PoolEvent>,
+}
 
-    // Seed the (0, empty-pool) sample only when the stream leaves a gap
-    // before its first event — a stream whose first event is at t = 0
-    // would otherwise produce a duplicate-t sentinel that pollutes the
-    // resource-integral inputs.
-    let mut pool_sizes: Vec<(f64, usize)> =
-        if pending.as_ref().is_none_or(|e| e.t > 0.0) { vec![(0.0, 0)] } else { Vec::new() };
+impl ReplayEngine {
+    pub fn new(coord: Coordinator, mut actions: Vec<(f64, Action)>, opts: &ReplayOpts) -> Self {
+        actions.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ReplayEngine {
+            coord,
+            opts: opts.clone(),
+            actions,
+            next_action: 0,
+            now: 0.0,
+            interval_samples: Vec::new(),
+            windowed: WindowedSeries { window_s: opts.window_s, values: Vec::new() },
+            window_acc: 0.0,
+            window_start: 0.0,
+            pending: None,
+            last_event_t: 0.0,
+            pool_sizes: Vec::new(),
+            horizon_fixed: (opts.horizon_s > 0.0).then_some(opts.horizon_s),
+            // Resolved once per replay: the env lookup is too slow for a
+            // loop that runs hundreds of millions of iterations.
+            debug_inner: std::env::var("BFT_REPLAY_DEBUG").is_ok(),
+            group: Vec::new(),
+        }
+    }
 
-    let horizon_fixed = (opts.horizon_s > 0.0).then_some(opts.horizon_s);
-    // Resolved once per replay: the env lookup is too slow for a loop that
-    // runs hundreds of millions of iterations on long traces.
-    let debug_inner = std::env::var("BFT_REPLAY_DEBUG").is_ok();
-    // Reused across events: same-1ms-tick events fold into one batch with
-    // a single solve (DESIGN.md §16.3). Capacity sticks, so the steady
-    // state allocates nothing.
-    let mut group: Vec<PoolEvent> = Vec::new();
+    /// Pull the first lookahead event and seed the pool-size series. Must
+    /// run once, before the first [`Self::step`].
+    pub fn prime(&mut self, stream: &mut dyn EventStream) {
+        self.pending = stream.next_event();
+        self.last_event_t = self.pending.as_ref().map(|e| e.t).unwrap_or(0.0);
+        // Seed the (0, empty-pool) sample only when the stream leaves a
+        // gap before its first event — a stream whose first event is at
+        // t = 0 would otherwise produce a duplicate-t sentinel that
+        // pollutes the resource-integral inputs.
+        self.pool_sizes = if self.pending.as_ref().is_none_or(|e| e.t > 0.0) {
+            vec![(0.0, 0)]
+        } else {
+            Vec::new()
+        };
+    }
 
-    // Unified timeline: pool events + submissions, processed in order;
-    // completions subdivide intervals.
-    loop {
+    /// Current simulation clock.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Read access to the coordinator (service `status` reporting).
+    pub fn coord(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Time of the lookahead event, if one is held. The service uses this
+    /// plus its ready-buffer to decide when a [`Self::step`] cannot pull
+    /// past the data it has (the coalescing loop only ever pulls events on
+    /// the same 1 ms tick as the one being processed).
+    pub fn pending_event_t(&self) -> Option<f64> {
+        self.pending.as_ref().map(|e| e.t)
+    }
+
+    /// Timeline actions processed so far (checkpoint boundary counter).
+    pub fn actions_processed(&self) -> usize {
+        self.next_action
+    }
+
+    /// Unprocessed `Submit` actions still on the timeline. Trainer ids
+    /// are assigned in submission-processing order, so the service can
+    /// promise `trainers.len() + pending_submits()` as the id a freshly
+    /// accepted submit will receive.
+    pub fn pending_submits(&self) -> usize {
+        self.actions[self.next_action..]
+            .iter()
+            .filter(|(_, a)| matches!(a, Action::Submit { .. }))
+            .count()
+    }
+
+    /// Queue an action; returns the effective time `max(t, now)` — the
+    /// engine never travels back in time, so a request stamped in the
+    /// past is processed at the current clock. Insertion keeps the
+    /// timeline sorted and is stable for equal times (FIFO among
+    /// same-instant actions), which is what makes journal-order replay
+    /// reproduce a live run exactly.
+    pub fn push_action(&mut self, t: f64, action: Action) -> f64 {
+        let t = t.max(self.now);
+        let at = self.actions[self.next_action..].partition_point(|&(ts, _)| ts <= t);
+        self.actions.insert(self.next_action + at, (t, action));
+        t
+    }
+
+    /// Advance to (and process) the next timeline point: run the admitted
+    /// trainers to the next event/action, splitting at completions, then
+    /// apply that event or action. Returns `true` when the replay is
+    /// finished (horizon reached, stream drained, or deadlocked).
+    pub fn step(&mut self, stream: &mut dyn EventStream) -> bool {
         // With no fixed horizon the effective horizon is the stream end.
         // While the lookahead still holds an event that end is unknown,
-        // but it only ever gates submissions AFTER the pending event (the
+        // but it only ever gates actions AFTER the pending event (the
         // event wins the `min` below), so admitting them is harmless;
         // once the lookahead drains, `last_event_t` IS the stream end and
         // the gate becomes exact.
-        let horizon = horizon_fixed.unwrap_or(last_event_t);
+        let horizon = self.horizon_fixed.unwrap_or(self.last_event_t);
         // Next timeline point.
-        let t_event =
-            pending.as_ref().map(|e| e.t).filter(|&t| horizon_fixed.is_none_or(|h| t <= h));
-        let t_sub = subs.get(next_sub).map(|s| s.0).filter(|&t| match horizon_fixed {
-            Some(h) => t <= h,
-            None => pending.is_some() || t <= last_event_t,
-        });
+        let t_event = self
+            .pending
+            .as_ref()
+            .map(|e| e.t)
+            .filter(|&t| self.horizon_fixed.is_none_or(|h| t <= h));
+        let t_sub =
+            self.actions.get(self.next_action).map(|s| s.0).filter(|&t| match self.horizon_fixed {
+                Some(h) => t <= h,
+                None => self.pending.is_some() || t <= self.last_event_t,
+            });
         let t_next = match (t_event, t_sub) {
             (Some(a), Some(b)) => a.min(b),
             (Some(a), None) => a,
             (None, Some(b)) => b,
             (None, None) => {
-                if opts.run_to_completion && !coord.all_done() {
+                if self.opts.run_to_completion && !self.coord.all_done() {
                     f64::INFINITY
                 } else {
-                    break;
+                    return true;
                 }
             }
         };
@@ -169,17 +300,18 @@ pub fn replay_stream(
         // Advance [now, seg_end), splitting at completions.
         let mut samples_this_interval = 0.0;
         let mut inner = 0u64;
-        while now < seg_end {
+        while self.now < seg_end {
             inner += 1;
-            if inner % 100_000 == 0 && debug_inner {
+            if inner % 100_000 == 0 && self.debug_inner {
                 eprintln!(
-                    "[inner {inner}] now={now} seg_end={seg_end} admitted={} queue={}",
-                    coord.admitted.len(),
-                    coord.queue.len()
+                    "[inner {inner}] now={} seg_end={seg_end} admitted={} queue={}",
+                    self.now,
+                    self.coord.admitted.len(),
+                    self.coord.queue.len()
                 );
             }
-            let dt = seg_end - now;
-            let stop = match coord.finish_time_within(now, dt) {
+            let dt = seg_end - self.now;
+            let stop = match self.coord.finish_time_within(self.now, dt) {
                 Some(ft) => ft,
                 None => {
                     if dt.is_infinite() {
@@ -189,156 +321,190 @@ pub fn replay_stream(
                     seg_end
                 }
             };
-            let step = stop - now;
-            let got = coord.advance(now, step);
+            let step = stop - self.now;
+            let got = self.coord.advance(self.now, step);
             samples_this_interval += got;
-            window_acc += got;
-            now = stop;
+            self.window_acc += got;
+            self.now = stop;
             // flush full windows
-            while opts.window_s > 0.0 && now - window_start >= opts.window_s {
-                windowed.values.push((window_start, window_acc));
-                window_acc = 0.0;
-                window_start += opts.window_s;
+            while self.opts.window_s > 0.0 && self.now - self.window_start >= self.opts.window_s {
+                self.windowed.values.push((self.window_start, self.window_acc));
+                self.window_acc = 0.0;
+                self.window_start += self.opts.window_s;
             }
-            let done = coord.complete_finished(now);
+            let done = self.coord.complete_finished(self.now);
             if !done.is_empty() {
-                coord.reallocate(now, 0);
+                self.coord.reallocate(self.now, 0);
             }
         }
-        if t_next.is_infinite() && !coord.all_done() {
+        if t_next.is_infinite() && !self.coord.all_done() {
             // deadlock guard (e.g. pool empty forever)
-            break;
+            return true;
         }
         debug_assert!(
             samples_this_interval.is_finite(),
             "non-finite interval outcome: {samples_this_interval}"
         );
-        interval_samples.push(samples_this_interval);
-        if now >= horizon && t_event.is_none() && t_sub.is_none() {
-            break;
+        self.interval_samples.push(samples_this_interval);
+        if self.now >= horizon && t_event.is_none() && t_sub.is_none() {
+            return true;
         }
-        // Process the event/submission at t_next.
+        // Process the event/action at t_next.
         if let Some(te) = t_event {
             if te <= t_next {
-                let ev = pending.take().expect("t_event implies a pending event");
-                pending = stream.next_event();
-                group.clear();
-                group.push(ev);
+                let ev = self.pending.take().expect("t_event implies a pending event");
+                self.pending = stream.next_event();
+                self.group.clear();
+                self.group.push(ev);
                 // Coalesce: pull every queued event on the same 1 ms tick
                 // into this batch so the group runs one solve. Every trace
                 // source already emits at most one event per tick
                 // (EventAssembler), so this only fires on hand-built
                 // traces — but there it keeps the per-event accounting
                 // exact while eliding the redundant intermediate solves.
-                while coord.hotpath.coalesce
-                    && pending.as_ref().is_some_and(|e| quant(e.t) == quant(te))
+                while self.coord.hotpath.coalesce
+                    && self.pending.as_ref().is_some_and(|e| quant(e.t) == quant(te))
                 {
-                    let folded = pending.take().expect("checked is_some above");
-                    last_event_t = folded.t;
-                    group.push(folded);
-                    pending = stream.next_event();
+                    let folded = self.pending.take().expect("checked is_some above");
+                    self.last_event_t = folded.t;
+                    self.group.push(folded);
+                    self.pending = stream.next_event();
                 }
-                if let Some(e) = &pending {
-                    last_event_t = e.t;
+                if let Some(e) = &self.pending {
+                    self.last_event_t = e.t;
                 }
-                coord.handle_events(te, &group);
-                pool_sizes.push((te, coord.pool.len()));
+                self.coord.handle_events(te, &self.group);
+                self.pool_sizes.push((te, self.coord.pool.len()));
             }
         }
         if let Some(ts) = t_sub {
             if ts <= t_next && t_event.is_none_or(|te| ts <= te) {
-                let (t, spec) = subs[next_sub].clone();
-                let id = coord.submit(spec, t);
-                // reallocate only if the trainer was actually admitted
-                // (queued-beyond-Pj_max submissions change nothing)
-                if coord.admitted.contains(&id) {
-                    coord.reallocate(t, 0);
+                let (t, action) = self.actions[self.next_action].clone();
+                match action {
+                    Action::Submit { spec, tenant, weight } => {
+                        if let Some(w) = weight {
+                            self.coord.tenant_weights.insert(tenant.clone(), w);
+                        }
+                        let id = if tenant.is_empty() {
+                            self.coord.submit(spec, t)
+                        } else {
+                            self.coord.submit_for_tenant(spec, t, &tenant)
+                        };
+                        // reallocate only if the trainer was actually
+                        // admitted (queued-beyond-Pj_max submissions
+                        // change nothing)
+                        if self.coord.admitted.contains(&id) {
+                            self.coord.reallocate(t, 0);
+                        }
+                    }
+                    Action::Cancel(id) => {
+                        if self.coord.cancel(id, t) {
+                            self.coord.reallocate(t, 0);
+                        }
+                    }
                 }
-                next_sub += 1;
+                self.next_action += 1;
             }
         }
-    }
-    // Close the series at the final clock; skip when it would duplicate
-    // the last sample (empty traces, horizon landing on the last event).
-    if pool_sizes.last() != Some(&(now, coord.pool.len())) {
-        pool_sizes.push((now, coord.pool.len()));
-    }
-    debug_assert!(pool_sizes.windows(2).all(|w| w[0].0 <= w[1].0), "pool_sizes out of order");
-    // Regression guard for the duplicate t=0 sentinel: the empty-pool
-    // seed may only appear when the first real sample comes later.
-    debug_assert!(
-        !(pool_sizes.len() >= 2 && pool_sizes[0] == (0.0, 0) && pool_sizes[1].0 == 0.0),
-        "duplicate (0, 0) sentinel in pool_sizes"
-    );
-
-    // final partial window
-    if opts.window_s > 0.0 && window_acc > 0.0 {
-        windowed.values.push((window_start, window_acc));
+        false
     }
 
-    let samples_processed: f64 = coord.trainers.iter().map(|t| t.progress).sum();
-    let preemptions: u64 = coord.trainers.iter().map(|t| t.preemptions).sum();
-    let completed = coord.trainers.iter().filter(|t| t.is_done()).count();
-    // Single ordered pass over the event log — streaming mean/max
-    // accumulators instead of the old per-stat `Vec<f64>` staging plus
-    // seven separate passes. Sums fold with `+` in event order, exactly
-    // what `iter().sum()` over a collected Vec computed, so every derived
-    // stat is bit-identical (DESIGN.md §16.4).
-    let mut solve_sum_s = 0.0f64;
-    let mut max_solve_s = 0.0f64;
-    let mut rescale_cost_samples = 0.0f64;
-    let mut fallbacks = 0usize;
-    let mut lp_iterations = 0u64;
-    let mut lp_refactorizations = 0u64;
-    let mut leaves_anticipated = 0u64;
-    let mut leaves_surprise = 0u64;
-    let mut solves_skipped = 0u64;
-    let mut cache_hits = 0u64;
-    let mut cache_misses = 0u64;
-    let mut events_coalesced = 0u64;
-    for e in &coord.event_log {
-        solve_sum_s += e.solve_time_s;
-        max_solve_s = max_solve_s.max(e.solve_time_s);
-        rescale_cost_samples += e.rescale_cost_samples;
-        fallbacks += e.fell_back as usize;
-        lp_iterations += e.lp_iterations as u64;
-        lp_refactorizations += e.lp_refactorizations as u64;
-        leaves_anticipated += e.leaves_anticipated as u64;
-        leaves_surprise += e.leaves_surprise as u64;
-        solves_skipped += e.solve_skipped as u64;
-        cache_hits += e.cache_hits;
-        cache_misses += e.cache_misses;
-        events_coalesced += e.coalesced as u64;
-    }
-    let n_events = coord.event_log.len();
-    let metrics = ReplayMetrics {
-        samples_processed,
-        resource_node_hours: metrics::resource_integral_node_hours(&pool_sizes),
-        eq_nodes: metrics::eq_nodes(&pool_sizes, now.max(1e-9)),
-        duration_s: now,
-        rescale_cost_samples,
-        preemptions,
-        completed,
-        mean_solve_s: if n_events > 0 { solve_sum_s / n_events as f64 } else { 0.0 },
-        max_solve_s,
-        fallbacks,
-        n_events,
-        lp_iterations,
-        lp_refactorizations,
-        leaves_anticipated,
-        leaves_surprise,
-        solves_skipped,
-        cache_hits,
-        cache_misses,
-        events_coalesced,
-    };
-    ReplayResult {
-        metrics,
-        interval_samples,
-        windowed_samples: windowed,
-        coordinator: coord,
-        horizon: now,
-        pool_sizes,
+    /// Close the series and fold the event log into [`ReplayMetrics`].
+    pub fn finish(self) -> ReplayResult {
+        let ReplayEngine {
+            coord,
+            opts,
+            now,
+            interval_samples,
+            mut windowed,
+            window_acc,
+            window_start,
+            mut pool_sizes,
+            ..
+        } = self;
+        // Close the series at the final clock; skip when it would
+        // duplicate the last sample (empty traces, horizon landing on the
+        // last event).
+        if pool_sizes.last() != Some(&(now, coord.pool.len())) {
+            pool_sizes.push((now, coord.pool.len()));
+        }
+        debug_assert!(pool_sizes.windows(2).all(|w| w[0].0 <= w[1].0), "pool_sizes out of order");
+        // Regression guard for the duplicate t=0 sentinel: the empty-pool
+        // seed may only appear when the first real sample comes later.
+        debug_assert!(
+            !(pool_sizes.len() >= 2 && pool_sizes[0] == (0.0, 0) && pool_sizes[1].0 == 0.0),
+            "duplicate (0, 0) sentinel in pool_sizes"
+        );
+
+        // final partial window
+        if opts.window_s > 0.0 && window_acc > 0.0 {
+            windowed.values.push((window_start, window_acc));
+        }
+
+        let samples_processed: f64 = coord.trainers.iter().map(|t| t.progress).sum();
+        let preemptions: u64 = coord.trainers.iter().map(|t| t.preemptions).sum();
+        let completed = coord.trainers.iter().filter(|t| t.is_done() && !t.cancelled).count();
+        // Single ordered pass over the event log — streaming mean/max
+        // accumulators instead of the old per-stat `Vec<f64>` staging plus
+        // seven separate passes. Sums fold with `+` in event order, exactly
+        // what `iter().sum()` over a collected Vec computed, so every
+        // derived stat is bit-identical (DESIGN.md §16.4).
+        let mut solve_sum_s = 0.0f64;
+        let mut max_solve_s = 0.0f64;
+        let mut rescale_cost_samples = 0.0f64;
+        let mut fallbacks = 0usize;
+        let mut lp_iterations = 0u64;
+        let mut lp_refactorizations = 0u64;
+        let mut leaves_anticipated = 0u64;
+        let mut leaves_surprise = 0u64;
+        let mut solves_skipped = 0u64;
+        let mut cache_hits = 0u64;
+        let mut cache_misses = 0u64;
+        let mut events_coalesced = 0u64;
+        for e in &coord.event_log {
+            solve_sum_s += e.solve_time_s;
+            max_solve_s = max_solve_s.max(e.solve_time_s);
+            rescale_cost_samples += e.rescale_cost_samples;
+            fallbacks += e.fell_back as usize;
+            lp_iterations += e.lp_iterations as u64;
+            lp_refactorizations += e.lp_refactorizations as u64;
+            leaves_anticipated += e.leaves_anticipated as u64;
+            leaves_surprise += e.leaves_surprise as u64;
+            solves_skipped += e.solve_skipped as u64;
+            cache_hits += e.cache_hits;
+            cache_misses += e.cache_misses;
+            events_coalesced += e.coalesced as u64;
+        }
+        let n_events = coord.event_log.len();
+        let metrics = ReplayMetrics {
+            samples_processed,
+            resource_node_hours: metrics::resource_integral_node_hours(&pool_sizes),
+            eq_nodes: metrics::eq_nodes(&pool_sizes, now.max(1e-9)),
+            duration_s: now,
+            rescale_cost_samples,
+            preemptions,
+            completed,
+            mean_solve_s: if n_events > 0 { solve_sum_s / n_events as f64 } else { 0.0 },
+            max_solve_s,
+            fallbacks,
+            n_events,
+            lp_iterations,
+            lp_refactorizations,
+            leaves_anticipated,
+            leaves_surprise,
+            solves_skipped,
+            cache_hits,
+            cache_misses,
+            events_coalesced,
+        };
+        ReplayResult {
+            metrics,
+            interval_samples,
+            windowed_samples: windowed,
+            coordinator: coord,
+            horizon: now,
+            pool_sizes,
+        }
     }
 }
 

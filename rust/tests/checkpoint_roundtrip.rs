@@ -1,0 +1,176 @@
+//! Checkpoint round-trip property (DESIGN.md §17.3): for a random
+//! 30-event trace, killing the service after *every* journal entry index
+//! and resuming must continue bit-identically to a run that was never
+//! interrupted — same standing plans (via the state digest), same
+//! per-event solver stats, same pool samples — across the dp,
+//! milp-aggregate and knapsack-decomp allocators.
+
+use bftrainer::coordinator::{
+    allocator_by_name, Coordinator, EventRecord, HotpathOpts, Objective, TrainerSpec,
+};
+use bftrainer::runtime::checkpoint::{read_journal, spec_to_json, Checkpoint, JournalEntry};
+use bftrainer::runtime::json::Json;
+use bftrainer::runtime::{
+    run_service, save_feed, state_digest, ControlChannel, FeedStream, RunConfig, ServeExit,
+    ServeOpts, ServiceOutcome,
+};
+use bftrainer::scaling::ScalingCurve;
+use bftrainer::sim::ReplayResult;
+use bftrainer::trace::{PoolEvent, Trace};
+use bftrainer::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+const MACHINE: u32 = 12;
+
+fn synth_trace(seed: u64, n_events: usize) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut tr = Trace::new(MACHINE);
+    let mut in_pool: Vec<u32> = Vec::new();
+    let mut clock = 0.0;
+    while tr.len() < n_events {
+        clock += rng.range_u64(50, 600) as f64;
+        let mut joins = Vec::new();
+        let mut leaves = Vec::new();
+        for node in 0..MACHINE {
+            if in_pool.contains(&node) {
+                if leaves.len() < 2 && rng.range_u64(0, 10) < 3 {
+                    leaves.push(node);
+                }
+            } else if joins.len() < 3 && rng.range_u64(0, 10) < 4 {
+                joins.push(node);
+            }
+        }
+        if joins.is_empty() && leaves.is_empty() {
+            continue;
+        }
+        let reclaim_at = joins.iter().map(|_| clock + rng.range_u64(200, 2000) as f64).collect();
+        in_pool.retain(|n| !leaves.contains(n));
+        in_pool.extend(&joins);
+        tr.push(PoolEvent { t: clock, joins, leaves, reclaim_at });
+    }
+    tr
+}
+
+fn submit_cmd(name: &str, total: f64, tenant: &str) -> String {
+    let spec = TrainerSpec {
+        name: name.into(),
+        n_min: 1,
+        n_max: 8,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+        total_samples: total,
+    };
+    let Json::Obj(mut o) = spec_to_json(&spec) else { unreachable!() };
+    o.insert("cmd".to_string(), Json::Str("submit".to_string()));
+    o.insert("tenant".to_string(), Json::Str(tenant.to_string()));
+    Json::Obj(o).compact()
+}
+
+fn config(policy: &str) -> RunConfig {
+    RunConfig {
+        policy: policy.to_string(),
+        objective: "throughput".to_string(),
+        t_fwd: 120.0,
+        pj_max: 4,
+        machine_nodes: MACHINE,
+        hotpath: HotpathOpts::default(),
+        horizon_s: 0.0,
+        window_s: 0.0,
+        run_to_completion: false,
+    }
+}
+
+fn serve(
+    dir: &Path,
+    feed_path: &Path,
+    ctl_path: &Path,
+    cfg: &RunConfig,
+    crash_after: usize,
+    resume: bool,
+) -> std::io::Result<ServiceOutcome> {
+    let (config, mut ckpt, entries, verify) = if resume {
+        let (ckpt, loaded) = Checkpoint::resume(dir)?;
+        let v = Checkpoint::load_snapshot(dir);
+        (loaded.config, ckpt, loaded.entries, v)
+    } else {
+        (cfg.clone(), Checkpoint::create(dir, cfg)?, Vec::new(), None)
+    };
+    let n_events = entries.iter().filter(|e| matches!(e, JournalEntry::Event(_))).count();
+    let n_mutating = entries.len() - n_events;
+    let mut coord = Coordinator::new(
+        allocator_by_name(&config.policy).unwrap(),
+        Objective::parse(&config.objective).unwrap(),
+        config.t_fwd,
+        config.pj_max,
+    );
+    coord.set_hotpath(config.hotpath);
+    let mut feed = FeedStream::open(feed_path.to_str().unwrap(), config.machine_nodes, true)?;
+    feed.skip_events(n_events);
+    let mut ctl = ControlChannel::open(ctl_path, n_mutating)?;
+    let opts =
+        ServeOpts { replay: config.replay_opts(), poll_ms: 1, crash_after_entries: crash_after };
+    run_service(coord, &mut feed, &mut ctl, &mut ckpt, entries, verify, &opts)
+}
+
+fn solver_key(e: &EventRecord) -> (u64, u64, usize, usize, bool, u64, u64, usize, usize) {
+    (
+        e.t.to_bits(),
+        e.rescale_cost_samples.to_bits(),
+        e.lp_iterations,
+        e.lp_refactorizations,
+        e.solve_skipped,
+        e.cache_hits,
+        e.cache_misses,
+        e.preempted,
+        e.pool_size,
+    )
+}
+
+fn assert_bit_identical(label: &str, a: &ReplayResult, b: &ReplayResult) {
+    let ka: Vec<_> = a.coordinator.event_log.iter().map(solver_key).collect();
+    let kb: Vec<_> = b.coordinator.event_log.iter().map(solver_key).collect();
+    assert_eq!(ka, kb, "{label}: solver decision streams diverge");
+    assert_eq!(a.pool_sizes, b.pool_sizes, "{label}: pool samples diverge");
+    assert_eq!(
+        state_digest(&a.coordinator),
+        state_digest(&b.coordinator),
+        "{label}: final states diverge (plans / trainer runtimes)"
+    );
+}
+
+#[test]
+fn restore_at_every_journal_index_continues_bit_identically() {
+    for policy in ["dp", "milp-aggregate", "knapsack-decomp"] {
+        let ws = std::env::temp_dir()
+            .join(format!("bft_ckrt_{}_{policy}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&ws);
+        std::fs::create_dir_all(&ws).unwrap();
+        let feed_path = ws.join("feed.jsonl");
+        let ctl_path = ws.join("ctl.jsonl");
+        save_feed(&synth_trace(97, 30), &feed_path).unwrap();
+        let lines =
+            [submit_cmd("short", 9e4, "a"), submit_cmd("long", 5e6, "b")].join("\n") + "\n";
+        std::fs::write(&ctl_path, lines).unwrap();
+        let cfg = config(policy);
+
+        let ck = ws.join("base");
+        let base = serve(&ck, &feed_path, &ctl_path, &cfg, 0, false).unwrap().result.unwrap();
+        let total = read_journal(&Checkpoint::journal_path(&ck)).unwrap().entries.len();
+        assert_eq!(total, 32, "30 events + 2 submits");
+
+        for k in 1..=total {
+            let ck_k = ws.join(format!("k{k}"));
+            let crashed = serve(&ck_k, &feed_path, &ctl_path, &cfg, k, false).unwrap();
+            assert_eq!(crashed.exit, ServeExit::Crashed, "{policy} k={k}");
+            let resumed = serve(&ck_k, &feed_path, &ctl_path, &cfg, 0, true).unwrap();
+            assert_eq!(resumed.exit, ServeExit::StreamEnded, "{policy} k={k}");
+            assert_bit_identical(
+                &format!("{policy} restore@{k}"),
+                &base,
+                &resumed.result.unwrap(),
+            );
+        }
+        let _ = std::fs::remove_dir_all(&ws);
+    }
+}

@@ -1,0 +1,367 @@
+//! Differential harness pinning the live service == replay (DESIGN.md
+//! §17.4): the `serve` loop driven by a file feed plus an admission
+//! channel must make byte-identical decisions to `replay_actions` over
+//! its own journal — same `EventRecord` sequence (modulo solver wall
+//! time), same metrics, same pool samples, same final state digest —
+//! across allocator policies and both knowledge modes. And a run killed
+//! after journal entry k must, after `--resume`, finish bit-identically
+//! to one that was never interrupted.
+
+use bftrainer::coordinator::{
+    allocator_by_name, Coordinator, EventRecord, HotpathOpts, Objective, TrainerSpec,
+};
+use bftrainer::runtime::checkpoint::{read_journal, spec_to_json, Checkpoint, JournalEntry};
+use bftrainer::runtime::json::Json;
+use bftrainer::runtime::{
+    run_service, save_feed, state_digest, ControlChannel, FeedStream, RunConfig, ServeExit,
+    ServeOpts, ServiceOutcome,
+};
+use bftrainer::scaling::ScalingCurve;
+use bftrainer::sim::{self, ReplayMetrics, ReplayResult};
+use bftrainer::trace::{PoolEvent, Trace, TraceStream};
+use bftrainer::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+const MACHINE: u32 = 12;
+
+/// Random but consistent pool trace: joins only of absent nodes, leaves
+/// only of present ones, strictly increasing integer-second stamps;
+/// `oracle` annotates every join with a reclaim deadline.
+fn synth_trace(seed: u64, n_events: usize, oracle: bool) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut t = Trace::new(MACHINE);
+    let mut in_pool: Vec<u32> = Vec::new();
+    let mut clock = 0.0;
+    while t.len() < n_events {
+        clock += rng.range_u64(50, 600) as f64;
+        let mut joins = Vec::new();
+        let mut leaves = Vec::new();
+        for node in 0..MACHINE {
+            if in_pool.contains(&node) {
+                if leaves.len() < 2 && rng.range_u64(0, 10) < 3 {
+                    leaves.push(node);
+                }
+            } else if joins.len() < 3 && rng.range_u64(0, 10) < 4 {
+                joins.push(node);
+            }
+        }
+        if joins.is_empty() && leaves.is_empty() {
+            continue;
+        }
+        let reclaim_at = if oracle {
+            joins.iter().map(|_| clock + rng.range_u64(200, 2000) as f64).collect()
+        } else {
+            Vec::new()
+        };
+        in_pool.retain(|n| !leaves.contains(n));
+        in_pool.extend(&joins);
+        t.push(PoolEvent { t: clock, joins, leaves, reclaim_at });
+    }
+    t
+}
+
+fn spec(name: &str, n_max: u32, total: f64) -> TrainerSpec {
+    TrainerSpec {
+        name: name.into(),
+        n_min: 1,
+        n_max,
+        r_up: 20.0,
+        r_dw: 5.0,
+        curve: ScalingCurve::new(vec![(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]),
+        total_samples: total,
+    }
+}
+
+/// A newline-JSON `submit` command: the spec's fields at top level plus
+/// `cmd`/`tenant`/`weight` — exactly what a shell client would echo.
+fn submit_cmd(s: &TrainerSpec, tenant: &str, weight: Option<f64>) -> String {
+    let Json::Obj(mut o) = spec_to_json(s) else { unreachable!() };
+    o.insert("cmd".to_string(), Json::Str("submit".to_string()));
+    if !tenant.is_empty() {
+        o.insert("tenant".to_string(), Json::Str(tenant.to_string()));
+    }
+    if let Some(w) = weight {
+        o.insert("weight".to_string(), Json::Num(w));
+    }
+    Json::Obj(o).compact()
+}
+
+fn cancel_cmd(id: usize, t: f64) -> String {
+    format!("{{\"cmd\":\"cancel\",\"id\":{id},\"t\":{t}}}")
+}
+
+fn config(policy: &str, objective: &str) -> RunConfig {
+    RunConfig {
+        policy: policy.to_string(),
+        objective: objective.to_string(),
+        t_fwd: 120.0,
+        pj_max: 4,
+        machine_nodes: MACHINE,
+        hotpath: HotpathOpts::default(),
+        horizon_s: 0.0,
+        window_s: 0.0,
+        run_to_completion: true,
+    }
+}
+
+/// Fresh temp workspace for one case (feed + control + checkpoint dir).
+fn workspace(label: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bft_servediff_{}_{label}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Drive the service loop exactly as `bftrainer serve` does — fresh
+/// start or resume — against a file feed and a pre-written control file.
+fn serve(
+    dir: &Path,
+    feed_path: &Path,
+    ctl_path: &Path,
+    cfg: &RunConfig,
+    crash_after: usize,
+    resume: bool,
+) -> std::io::Result<ServiceOutcome> {
+    let (config, mut ckpt, entries, verify) = if resume {
+        let (ckpt, loaded) = Checkpoint::resume(dir)?;
+        let v = Checkpoint::load_snapshot(dir);
+        (loaded.config, ckpt, loaded.entries, v)
+    } else {
+        (cfg.clone(), Checkpoint::create(dir, cfg)?, Vec::new(), None)
+    };
+    let n_events = entries.iter().filter(|e| matches!(e, JournalEntry::Event(_))).count();
+    let n_mutating = entries.len() - n_events;
+    let mut coord = Coordinator::new(
+        allocator_by_name(&config.policy).unwrap(),
+        Objective::parse(&config.objective).unwrap(),
+        config.t_fwd,
+        config.pj_max,
+    );
+    coord.set_hotpath(config.hotpath);
+    let mut feed = FeedStream::open(feed_path.to_str().unwrap(), config.machine_nodes, true)?;
+    feed.skip_events(n_events);
+    let mut ctl = ControlChannel::open(ctl_path, n_mutating)?;
+    let opts =
+        ServeOpts { replay: config.replay_opts(), poll_ms: 1, crash_after_entries: crash_after };
+    run_service(coord, &mut feed, &mut ctl, &mut ckpt, entries, verify, &opts)
+}
+
+/// The replay-as-oracle side: rebuild everything from the journal alone
+/// (config line + events + admitted commands) and run the plain engine.
+fn oracle(dir: &Path) -> ReplayResult {
+    let loaded = read_journal(&Checkpoint::journal_path(dir)).unwrap();
+    let cfg = loaded.config;
+    let mut coord = Coordinator::new(
+        allocator_by_name(&cfg.policy).unwrap(),
+        Objective::parse(&cfg.objective).unwrap(),
+        cfg.t_fwd,
+        cfg.pj_max,
+    );
+    coord.set_hotpath(cfg.hotpath);
+    let mut t = Trace::new(cfg.machine_nodes);
+    let mut actions = Vec::new();
+    for e in loaded.entries {
+        match e {
+            JournalEntry::Event(ev) => t.push(ev),
+            JournalEntry::Submit { t, tenant, weight, spec } => {
+                actions.push((t, sim::Action::Submit { spec, tenant, weight }));
+            }
+            JournalEntry::Cancel { t, id } => actions.push((t, sim::Action::Cancel(id))),
+        }
+    }
+    let mut stream = TraceStream::new(&t);
+    sim::replay_actions(coord, &mut stream, actions, &cfg.replay_opts())
+}
+
+/// Everything in an [`EventRecord`] except solver wall time, floats
+/// bit-exact.
+#[allow(clippy::type_complexity)]
+fn event_key(
+    e: &EventRecord,
+) -> (u64, u64, usize, bool, bool, usize, usize, usize, usize, usize, bool, u64, u64, usize) {
+    (
+        e.t.to_bits(),
+        e.rescale_cost_samples.to_bits(),
+        e.preempted,
+        e.fell_back,
+        e.warm_started,
+        e.pool_size,
+        e.leaves_anticipated,
+        e.leaves_surprise,
+        e.lp_iterations,
+        e.lp_refactorizations,
+        e.solve_skipped,
+        e.cache_hits,
+        e.cache_misses,
+        e.coalesced,
+    )
+}
+
+/// Every [`ReplayMetrics`] field except the wall-clock solve-time stats.
+#[allow(clippy::type_complexity)]
+fn metrics_key(
+    m: &ReplayMetrics,
+) -> (u64, u64, u64, u64, u64, u64, usize, usize, usize, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        m.samples_processed.to_bits(),
+        m.resource_node_hours.to_bits(),
+        m.eq_nodes.to_bits(),
+        m.duration_s.to_bits(),
+        m.rescale_cost_samples.to_bits(),
+        m.preemptions,
+        m.completed,
+        m.fallbacks,
+        m.n_events,
+        m.lp_iterations,
+        m.lp_refactorizations,
+        m.leaves_anticipated,
+        m.leaves_surprise,
+        m.solves_skipped,
+        m.cache_hits,
+        m.cache_misses,
+        m.events_coalesced,
+    )
+}
+
+/// Bit-identical decisions: event log, metrics, pool samples, horizon,
+/// and the condensed final-state digest. (`interval_samples` is shape-
+/// sensitive to *when* actions arrived and is deliberately excluded —
+/// DESIGN.md §17.4.)
+fn assert_identical(label: &str, a: &ReplayResult, b: &ReplayResult) {
+    assert_eq!(
+        a.coordinator.event_log.len(),
+        b.coordinator.event_log.len(),
+        "{label}: event counts diverge"
+    );
+    for (i, (x, y)) in a.coordinator.event_log.iter().zip(&b.coordinator.event_log).enumerate() {
+        assert_eq!(event_key(x), event_key(y), "{label}: event {i} diverges");
+    }
+    assert_eq!(metrics_key(&a.metrics), metrics_key(&b.metrics), "{label}: metrics diverge");
+    assert_eq!(a.pool_sizes, b.pool_sizes, "{label}: pool samples diverge");
+    assert!((a.horizon - b.horizon).abs() < 1e-12, "{label}: horizon diverges");
+    assert_eq!(
+        state_digest(&a.coordinator),
+        state_digest(&b.coordinator),
+        "{label}: final state digests diverge"
+    );
+}
+
+/// Write the standard two-tenant control file: three submits (one that
+/// completes, one that never would, one that gets cancelled mid-run).
+fn write_control(path: &Path) {
+    let lines = [
+        submit_cmd(&spec("short", 8, 9e4), "alice", Some(2.0)),
+        submit_cmd(&spec("long", 8, 3e6), "bob", Some(1.0)),
+        submit_cmd(&spec("doomed", 4, 5e6), "bob", None),
+        cancel_cmd(2, 1500.0),
+    ];
+    std::fs::write(path, lines.join("\n") + "\n").unwrap();
+}
+
+#[test]
+fn serve_matches_journal_replay_across_policies_and_knowledge() {
+    for policy in ["dp", "milp-aggregate", "knapsack-decomp"] {
+        for oracle_trace in [true, false] {
+            let label = format!("{policy}_{}", if oracle_trace { "oracle" } else { "blind" });
+            let ws = workspace(&label);
+            let feed_path = ws.join("feed.jsonl");
+            let ctl_path = ws.join("ctl.jsonl");
+            save_feed(&synth_trace(11, 18, oracle_trace), &feed_path).unwrap();
+            write_control(&ctl_path);
+            let ck = ws.join("ck");
+            let cfg = config(policy, "throughput");
+            let out = serve(&ck, &feed_path, &ctl_path, &cfg, 0, false).unwrap();
+            assert_eq!(out.exit, ServeExit::StreamEnded, "{label}");
+            let live = out.result.unwrap();
+            assert_eq!(live.coordinator.trainers.len(), 3, "{label}: submits lost");
+            assert!(
+                live.coordinator.trainers.iter().any(|t| t.cancelled),
+                "{label}: cancel never landed"
+            );
+            assert_identical(&label, &oracle(&ck), &live);
+            let _ = std::fs::remove_dir_all(&ws);
+        }
+    }
+}
+
+#[test]
+fn tenant_fair_serve_matches_journal_replay() {
+    let ws = workspace("tenantfair");
+    let feed_path = ws.join("feed.jsonl");
+    let ctl_path = ws.join("ctl.jsonl");
+    save_feed(&synth_trace(23, 16, true), &feed_path).unwrap();
+    write_control(&ctl_path);
+    let ck = ws.join("ck");
+    let cfg = config("dp", "tenant-fair");
+    let out = serve(&ck, &feed_path, &ctl_path, &cfg, 0, false).unwrap();
+    assert_eq!(out.exit, ServeExit::StreamEnded);
+    let live = out.result.unwrap();
+    // Both tenants' weights must have been journaled and applied.
+    assert_eq!(live.coordinator.tenant_weights.get("alice"), Some(&2.0));
+    assert_eq!(live.coordinator.tenant_weights.get("bob"), Some(&1.0));
+    assert_identical("tenant-fair", &oracle(&ck), &live);
+    let _ = std::fs::remove_dir_all(&ws);
+}
+
+#[test]
+fn kill_at_entry_k_plus_resume_matches_uninterrupted() {
+    for policy in ["dp", "milp-aggregate", "knapsack-decomp"] {
+        let ws = workspace(&format!("crash_{policy}"));
+        let feed_path = ws.join("feed.jsonl");
+        let ctl_path = ws.join("ctl.jsonl");
+        save_feed(&synth_trace(7, 14, true), &feed_path).unwrap();
+        write_control(&ctl_path);
+        let cfg = config(policy, "throughput");
+
+        let ck_a = ws.join("ck_a");
+        let base =
+            serve(&ck_a, &feed_path, &ctl_path, &cfg, 0, false).unwrap().result.unwrap();
+        let total = read_journal(&Checkpoint::journal_path(&ck_a)).unwrap().entries.len();
+        assert!(total > 14, "journal unexpectedly small: {total}");
+
+        // Crash points spanning both regimes: mid-feed (event journaled
+        // but never applied) and mid-admission (command journaled but
+        // never acknowledged).
+        for k in [1, total / 2, total - 1] {
+            let ck_b = ws.join(format!("ck_b{k}"));
+            let crashed = serve(&ck_b, &feed_path, &ctl_path, &cfg, k, false).unwrap();
+            assert_eq!(crashed.exit, ServeExit::Crashed, "{policy} k={k}");
+            assert!(crashed.result.is_none());
+            let resumed = serve(&ck_b, &feed_path, &ctl_path, &cfg, 0, true).unwrap();
+            assert_eq!(resumed.exit, ServeExit::StreamEnded, "{policy} k={k}");
+            assert_identical(
+                &format!("{policy} crash@{k}"),
+                &base,
+                &resumed.result.unwrap(),
+            );
+        }
+        let _ = std::fs::remove_dir_all(&ws);
+    }
+}
+
+#[test]
+fn resume_after_clean_exit_verifies_the_snapshot_digest() {
+    let ws = workspace("digest");
+    let feed_path = ws.join("feed.jsonl");
+    let ctl_path = ws.join("ctl.jsonl");
+    save_feed(&synth_trace(31, 12, false), &feed_path).unwrap();
+    write_control(&ctl_path);
+    let ck = ws.join("ck");
+    let cfg = config("dp", "throughput");
+    let base = serve(&ck, &feed_path, &ctl_path, &cfg, 0, false).unwrap().result.unwrap();
+
+    // A full re-resume replays the journal to the final snapshot
+    // boundary, where the digest must verify and match the base run.
+    let resumed = serve(&ck, &feed_path, &ctl_path, &cfg, 0, true).unwrap();
+    assert_identical("clean-resume", &base, &resumed.result.unwrap());
+
+    // Tamper with the stored digest: the next resume must refuse.
+    let (ckpt, _) = Checkpoint::resume(&ck).unwrap();
+    let mut snap = Checkpoint::load_snapshot(&ck).unwrap();
+    snap.digest ^= 1;
+    ckpt.write_snapshot(&snap).unwrap();
+    drop(ckpt);
+    let err = serve(&ck, &feed_path, &ctl_path, &cfg, 0, true);
+    assert!(err.is_err(), "tampered digest must fail the resume");
+    let _ = std::fs::remove_dir_all(&ws);
+}
