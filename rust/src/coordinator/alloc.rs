@@ -334,6 +334,21 @@ pub struct SolverStats {
     /// Simplex iterations across every LP relaxation of this solve
     /// (0 for non-LP allocators).
     pub lp_iterations: usize,
+    /// Dual-simplex pivots among `lp_iterations` (DESIGN.md §18): the
+    /// share of the work done by dual reoptimization of an adopted basis
+    /// instead of phase-1 repair. Always `<= lp_iterations`.
+    pub dual_pivots: usize,
+    /// MILP models built from scratch during this solve: 0 when the
+    /// standing model from the previous event was patched in place via
+    /// the `ModelDelta` fast path (unchanged job set), 1 on a cold build
+    /// or layout change. Non-LP allocators report 0.
+    pub model_rebuilds: usize,
+    /// Times the warm-start target adaptation (`adapt_targets`) hit its
+    /// defensive failure path and cold-started instead. Documented as
+    /// unreachable for well-formed requests; nonzero values flag
+    /// malformed input (e.g. duplicate job ids) that would otherwise be
+    /// silently absorbed.
+    pub warm_adapt_failed: usize,
     /// Basis refactorizations across every LP relaxation of this solve.
     pub lp_refactorizations: usize,
     /// Certified optimality gap, when the solver produced one: an upper

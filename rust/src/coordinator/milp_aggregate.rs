@@ -27,7 +27,8 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Warm-start state carried from one event's solve to the next: the
-/// applied target map and the root-LP basis of the model it solved.
+/// applied target map, the root-LP basis of the model it solved, and the
+/// model itself with its layout fingerprint for in-place delta patching.
 ///
 /// The lifetime profile enters the model only through the objective
 /// coefficients (`V_i = s_i·H(b_i)/b_i`); rows, columns and bounds are
@@ -37,10 +38,142 @@ use std::time::Instant;
 /// signature still rejects genuinely reshaped models (job set changes).
 /// `incremental_warm_start_matches_dp_across_events` churns the profile
 /// between events to pin this down.
+///
+/// When the next request's [`layout_key`] matches `layout`, `model` is
+/// patched in place by [`apply_delta`] (a `ModelDelta` in DESIGN.md §18
+/// terms) instead of rebuilt from scratch — `SolverStats::model_rebuilds`
+/// reports which path ran.
 #[derive(Clone, Debug)]
 struct PrevSolve {
     targets: BTreeMap<TrainerId, u32>,
     root_basis: milp::LpBasis,
+    model: Model,
+    layout: LayoutKey,
+}
+
+/// Layout fingerprint of the aggregate model for one request (DESIGN.md
+/// §18): everything that decides the row/column structure and the
+/// coefficient *sparsity* of [`build_model_memo`]'s output, as opposed to
+/// coefficient values. Two requests with equal keys build models with
+/// identical variable/constraint layout — only bounds, RHS, coefficient
+/// and objective values differ — so the standing model can be patched in
+/// place by [`apply_delta`] and the standing basis adopted unchanged.
+type LayoutKey = Vec<JobLayout>;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct JobLayout {
+    id: TrainerId,
+    n_min: u32,
+    n_max: u32,
+    /// Positive breakpoint scales — the SOS2 column structure.
+    bns: Vec<u32>,
+    /// Coefficient-presence flags, in row order: `hi > 0` (max-row `y`
+    /// term), `M − C ≠ 0` (up1 `zu` term), `M − (C−1) ≠ 0` (dw1 `zd`
+    /// term), `C > 0` (dw2 `zd` term). `LinExpr::normalized` drops
+    /// `|coef| ≤ 1e-12` terms, so these value-derived zeros are layout,
+    /// not data: a flip reshapes a row and forces a rebuild.
+    coef_present: [bool; 4],
+}
+
+fn layout_key(req: &AllocRequest) -> LayoutKey {
+    let big_m = req.pool_size() as f64 + 1.0;
+    req.jobs
+        .iter()
+        .map(|job| {
+            let hi = (job.n_max.min(req.pool_size())) as f64;
+            let c = job.current as f64;
+            JobLayout {
+                id: job.id,
+                n_min: job.n_min,
+                n_max: job.n_max,
+                bns: job.points.iter().map(|&(bn, _)| bn).filter(|&bn| bn > 0).collect(),
+                coef_present: [
+                    hi.abs() > 1e-12,
+                    (big_m - c).abs() > 1e-12,
+                    (big_m - (c - 1.0)).abs() > 1e-12,
+                    c.abs() > 1e-12,
+                ],
+            }
+        })
+        .collect()
+}
+
+/// Patch the standing aggregate model in place for a new request with an
+/// unchanged layout ([`layout_key`]): refresh the `n`-variable bounds,
+/// the pool/current-scale-dependent constraint coefficients and RHS, and
+/// rebuild the objective from the new profile's SOS2 coefficients. The
+/// patched model equals `build_model_memo(req, memo)` value for value
+/// (pinned by `patched_model_is_bitwise_fresh_build`), so the presolved
+/// layout signature is unchanged and the standing basis still adopts.
+/// Returns the `n`-variable ids, same as the original build's.
+fn apply_delta(m: &mut Model, req: &AllocRequest, memo: &mut ValueMemo) -> Vec<milp::VarId> {
+    let pool = req.pool_size() as f64;
+    let big_m = pool + 1.0;
+    let mut n_vars = Vec::with_capacity(req.jobs.len());
+    let mut objective = LinExpr::new();
+    let mut vi = 0usize; // variable cursor, creation order per job
+    for (ji, job) in req.jobs.iter().enumerate() {
+        let hi = (job.n_max.min(req.pool_size())) as f64;
+        let c = job.current as f64;
+        // Row block per job, in build order: min, max, convex, ndef,
+        // up1, up2, dw1, dw2.
+        let row0 = 8 * ji;
+        debug_assert_eq!(m.constraints[row0].name, format!("min[{}]", job.id));
+        let n = milp::VarId(vi);
+        debug_assert_eq!(m.vars[n.0].name, format!("n[{}]", job.id));
+        n_vars.push(n);
+        m.set_var_bounds(n, 0.0, hi.max(0.0));
+        let y = milp::VarId(vi + 1);
+        if hi.abs() > 1e-12 {
+            m.set_coef(row0 + 1, y, -hi); // max: n ≤ hi·y
+        }
+        vi += 2;
+
+        // SOS2 weights: structure fixed, objective coefficients refreshed
+        // from the new profile (same walk as `build_model_memo`).
+        let coefs = memo.sos2_coefs(req, job);
+        let mut bps: Vec<(f64, f64, f64)> = vec![(0.0, 0.0, 0.0)];
+        for (&(bn, bv), &coef) in job.points.iter().zip(&coefs) {
+            if (bn as f64) > 0.0 {
+                bps.push((bn as f64, bv, coef));
+            }
+        }
+        for (i, &(bn, bv, coef)) in bps.iter().enumerate() {
+            if bv != 0.0 && bn > 0.0 {
+                objective.add(milp::VarId(vi + i), coef);
+            }
+        }
+        vi += bps.len();
+
+        let zu = milp::VarId(vi);
+        let zd = milp::VarId(vi + 1);
+        debug_assert_eq!(m.vars[zu.0].name, format!("zu[{}]", job.id));
+        if (big_m - c).abs() > 1e-12 {
+            m.set_coef(row0 + 4, zu, -(big_m - c)); // up1: n ≤ C + (M−C)zu
+        }
+        m.set_rhs(row0 + 4, c);
+        m.set_coef(row0 + 5, zu, -(c + 1.0)); // up2: n ≥ (C+1)zu
+        if (big_m - (c - 1.0)).abs() > 1e-12 {
+            m.set_coef(row0 + 6, zd, big_m - (c - 1.0)); // dw1
+        }
+        m.set_rhs(row0 + 6, big_m);
+        if c.abs() > 1e-12 {
+            m.set_coef(row0 + 7, zd, c); // dw2: n + C·zd ≥ C
+        }
+        m.set_rhs(row0 + 7, c);
+        let rate_now = if job.current == 0 { 0.0 } else { job.gain(job.current) };
+        if rate_now * job.r_up != 0.0 {
+            objective.add(zu, -rate_now * job.r_up);
+        }
+        if rate_now * job.r_dw != 0.0 {
+            objective.add(zd, -rate_now * job.r_dw);
+        }
+        vi += 2;
+    }
+    debug_assert_eq!(m.constraints[8 * req.jobs.len()].name, "capacity");
+    m.set_rhs(8 * req.jobs.len(), pool);
+    m.set_objective(objective, 0.0);
+    n_vars
 }
 
 /// MILP allocator over aggregate scale variables.
@@ -279,22 +412,47 @@ impl Allocator for AggregateMilpAllocator {
 
     fn allocate_memo(&mut self, req: &AllocRequest, memo: &mut ValueMemo) -> AllocPlan {
         let t0 = Instant::now();
-        let (model, n_vars) = build_model_memo(req, memo);
+        // ModelDelta fast path (DESIGN.md §18): when the standing model's
+        // layout fingerprint matches the new request, patch bounds, RHS,
+        // coefficients and objective in place instead of rebuilding. The
+        // patched model equals the fresh build value for value, so the
+        // standing basis adopts and the dual simplex reoptimizes it.
+        let key = layout_key(req);
+        let mut model_rebuilds = 0usize;
+        let (model, n_vars, prev_state) = match self.prev.take() {
+            Some(p) if self.warm_start_from_previous && p.layout == key => {
+                let PrevSolve { targets, root_basis, model: mut m, .. } = p;
+                let n_vars = apply_delta(&mut m, req, memo);
+                (m, n_vars, Some((targets, root_basis)))
+            }
+            p => {
+                model_rebuilds = 1;
+                let (m, n_vars) = build_model_memo(req, memo);
+                (m, n_vars, p.map(|p| (p.targets, p.root_basis)))
+            }
+        };
 
         // Candidate incumbents in model space: the previous event's
         // solution (repaired to the new request) and/or the DP optimum.
         // (x, target map, Eqn-16 objective)
         let mut incumbents: Vec<(Vec<f64>, BTreeMap<TrainerId, u32>, f64)> = Vec::new();
         let mut warm_started = false;
+        let mut warm_adapt_failed = 0usize;
         if self.warm_start_from_previous {
-            if let Some(prev) = &self.prev {
-                if let Some(t) = adapt_targets(req, &prev.targets) {
-                    let x = embed_solution(req, &model, &n_vars, &t);
-                    if model.is_feasible(&x, 1e-6) {
-                        let obj = req.objective_of(&t);
-                        incumbents.push((x, t, obj));
-                        warm_started = true;
+            if let Some((prev_targets, _)) = &prev_state {
+                match adapt_targets(req, prev_targets) {
+                    Some(t) => {
+                        let x = embed_solution(req, &model, &n_vars, &t);
+                        if model.is_feasible(&x, 1e-6) {
+                            let obj = req.objective_of(&t);
+                            incumbents.push((x, t, obj));
+                            warm_started = true;
+                        }
                     }
+                    // Documented unreachable for well-formed requests:
+                    // surface the defensive cold start in the stats
+                    // instead of absorbing it silently.
+                    None => warm_adapt_failed = 1,
                 }
             }
         }
@@ -311,7 +469,7 @@ impl Allocator for AggregateMilpAllocator {
         // compare against — without one the B&B solves its own root and
         // duplicating the work would be pure loss.
         let prev_basis = if self.warm_start_from_previous {
-            self.prev.as_ref().map(|p| p.root_basis.clone())
+            prev_state.map(|(_, basis)| basis)
         } else {
             None
         };
@@ -334,8 +492,12 @@ impl Allocator for AggregateMilpAllocator {
             {
                 let targets = best_targets.clone();
                 let objective = req.objective_of(&targets);
-                self.prev =
-                    Some(PrevSolve { targets: targets.clone(), root_basis: root.basis.clone() });
+                self.prev = Some(PrevSolve {
+                    targets: targets.clone(),
+                    root_basis: root.basis.clone(),
+                    model,
+                    layout: key,
+                });
                 return AllocPlan {
                     targets,
                     objective,
@@ -346,6 +508,9 @@ impl Allocator for AggregateMilpAllocator {
                         optimal: true,
                         warm_started,
                         lp_iterations: root.iterations,
+                        dual_pivots: root.dual_pivots,
+                        model_rebuilds,
+                        warm_adapt_failed,
                         lp_refactorizations: root.refactorizations,
                         certified_gap: Some(
                             ((root.objective - best_obj) / best_obj.abs().max(1.0)).max(0.0),
@@ -390,8 +555,15 @@ impl Allocator for AggregateMilpAllocator {
         };
         debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
         let objective = req.objective_of(&targets);
-        let root_effort = root.as_ref().map_or((0, 0), |r| (r.iterations, r.refactorizations));
-        self.prev = Some(PrevSolve { targets: targets.clone(), root_basis: res.root_basis });
+        let root_effort = root
+            .as_ref()
+            .map_or((0, 0, 0), |r| (r.iterations, r.dual_pivots, r.refactorizations));
+        self.prev = Some(PrevSolve {
+            targets: targets.clone(),
+            root_basis: res.root_basis,
+            model,
+            layout: key,
+        });
         AllocPlan {
             targets,
             objective,
@@ -402,7 +574,10 @@ impl Allocator for AggregateMilpAllocator {
                 optimal,
                 warm_started,
                 lp_iterations: root_effort.0 + res.lp_iterations,
-                lp_refactorizations: root_effort.1 + res.lp_refactorizations,
+                dual_pivots: root_effort.1 + res.dual_pivots,
+                model_rebuilds,
+                warm_adapt_failed,
+                lp_refactorizations: root_effort.2 + res.lp_refactorizations,
                 // B&B bound (maximize direction) certifies the returned
                 // map even on the §3.6 fallback path.
                 certified_gap: res
@@ -611,6 +786,109 @@ mod tests {
             // survive profile churn between events, not just size churn.
             req.pool = LifetimeProfile::random(&mut rng, size.max(cur), req.t_fwd);
         }
+    }
+
+    #[test]
+    fn patched_model_is_bitwise_fresh_build() {
+        // The ModelDelta contract (DESIGN.md §18): for a values-only
+        // change (same layout key) the patched standing model must equal
+        // the fresh build bit for bit — same bounds, same coefficients,
+        // same RHS, same objective — so the presolve signature matches
+        // and the standing basis adopts.
+        let mut rng = Rng::new(0x0DE1);
+        for case in 0..12 {
+            let req1 = random_request(&mut rng, 4, 12);
+            let mut req2 = req1.clone();
+            // Values-only churn: grow the pool a little, re-bucket the
+            // profile, rescale the gain curves, and move each current
+            // scale without flipping its zero-ness.
+            // An empty pool must stay empty: growing it would flip the
+            // `hi > 0` presence flags and (correctly) change the key.
+            let grow = if req1.pool_size() == 0 { 0 } else { rng.range_u64(0, 4) as u32 };
+            req2.pool =
+                LifetimeProfile::random(&mut rng, req1.pool_size() + grow, req1.t_fwd * 1.7);
+            for j in req2.jobs.iter_mut() {
+                if j.current > 0 {
+                    let hi = j.n_max.min(req1.pool_size()).max(1) as u64;
+                    j.current = rng.range_u64(1, hi + 1) as u32;
+                }
+                for p in j.points.iter_mut() {
+                    p.1 *= 1.3;
+                }
+            }
+            assert_eq!(layout_key(&req1), layout_key(&req2), "case {case}: values-only delta");
+            let memo = &mut ValueMemo::disabled();
+            let (mut patched, _) = build_model_memo(&req1, memo);
+            let nv = apply_delta(&mut patched, &req2, memo);
+            let (fresh, fresh_nv) = build_model_memo(&req2, memo);
+            assert_eq!(nv, fresh_nv, "case {case}");
+            assert_eq!(patched.vars.len(), fresh.vars.len(), "case {case}");
+            for (a, b) in patched.vars.iter().zip(&fresh.vars) {
+                assert_eq!(a.lo.to_bits(), b.lo.to_bits(), "case {case}: {} lo", a.name);
+                assert_eq!(a.hi.to_bits(), b.hi.to_bits(), "case {case}: {} hi", a.name);
+            }
+            assert_eq!(patched.constraints.len(), fresh.constraints.len(), "case {case}");
+            for (a, b) in patched.constraints.iter().zip(&fresh.constraints) {
+                assert_eq!(a.expr.terms, b.expr.terms, "case {case}: row {}", a.name);
+                assert_eq!(a.rhs.to_bits(), b.rhs.to_bits(), "case {case}: row {}", a.name);
+            }
+            assert_eq!(patched.objective.terms, fresh.objective.terms, "case {case}");
+        }
+    }
+
+    #[test]
+    fn model_delta_keeps_standing_model_across_events() {
+        // An unchanged job set across events must patch the standing
+        // model (zero rebuilds after the first event) while still
+        // tracking the exact DP optimum.
+        let mut rng = Rng::new(0xDE17A);
+        let mut warm = AggregateMilpAllocator::incremental_only();
+        let mut req = random_request(&mut rng, 4, 12);
+        for step in 0..6 {
+            let dp = DpAllocator.allocate(&req);
+            let plan = warm.allocate(&req);
+            assert!(
+                (plan.objective - dp.objective).abs() < 1e-5 * dp.objective.abs().max(1.0),
+                "step {step}: warm {} vs dp {}",
+                plan.objective,
+                dp.objective
+            );
+            assert_eq!(plan.stats.model_rebuilds, usize::from(step == 0), "step {step}");
+            assert_eq!(plan.stats.warm_adapt_failed, 0, "step {step}");
+            assert!(plan.stats.dual_pivots <= plan.stats.lp_iterations, "step {step}");
+            // Values-only churn: re-bucket the lifetime profile at the
+            // same size so the layout key is unchanged and every re-solve
+            // after the first patches in place.
+            req.pool = LifetimeProfile::random(&mut rng, req.pool_size(), req.t_fwd);
+        }
+    }
+
+    #[test]
+    fn warm_adapt_failure_is_surfaced_not_silent() {
+        // `adapt_targets` is documented to never fail for well-formed
+        // requests; a malformed request (duplicate job ids double-count
+        // in `AllocRequest::check`) can still trip its defensive `None`.
+        // The allocator must report that through `warm_adapt_failed`
+        // instead of silently cold-starting.
+        let mut alloc = AggregateMilpAllocator::incremental_only();
+        let seed = AllocRequest::flat(vec![job(0, 0, 1, 2)], 3, 60.0);
+        let first = alloc.allocate(&seed);
+        assert_eq!(first.targets[&0], 2, "seed solve fills the pool");
+        assert_eq!(first.stats.warm_adapt_failed, 0);
+        // Duplicate id 0 twice: adapt repairs each entry to the previous
+        // target 2 (the map totals 2 ≤ 3, so nothing is shed), but
+        // `check` counts the shared target once per job entry (2+2 > 3)
+        // and rejects the repair. The solve itself stays check-safe: the
+        // huge upscale cost pins both entries at their current scale 1.
+        let mut a = job(0, 1, 1, 2);
+        a.r_up = 1.0e6;
+        a.r_dw = 0.0;
+        let dup = AllocRequest::flat(vec![a.clone(), a], 3, 60.0);
+        let plan = alloc.allocate(&dup);
+        assert_eq!(plan.stats.warm_adapt_failed, 1);
+        assert!(!plan.stats.warm_started);
+        assert_eq!(plan.stats.model_rebuilds, 1, "job-set change forces a rebuild");
+        assert_eq!(plan.targets[&0], 1);
     }
 
     #[test]

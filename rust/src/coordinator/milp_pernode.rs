@@ -20,6 +20,7 @@
 
 use super::alloc::{AllocPlan, AllocRequest, Allocator, SolverStats};
 use super::elide::ValueMemo;
+use super::trainer::TrainerId;
 use crate::milp::{self, Direction, LinExpr, Model, Sense};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -29,12 +30,142 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub struct PerNodeMilpAllocator {
     pub limits: milp::Limits,
+    /// Carry the standing model + root basis into the next solve when
+    /// the layout fingerprint is unchanged (the DESIGN.md §18 delta
+    /// path). Objective-preserving: a warm start only accelerates.
+    pub warm_start_from_previous: bool,
+    prev: Option<PerNodePrev>,
 }
 
 impl Default for PerNodeMilpAllocator {
     fn default() -> Self {
-        PerNodeMilpAllocator { limits: milp::Limits::default() }
+        PerNodeMilpAllocator {
+            limits: milp::Limits::default(),
+            warm_start_from_previous: true,
+            prev: None,
+        }
     }
+}
+
+/// Standing warm-start state for the per-node model (DESIGN.md §18):
+/// when the next request's [`pernode_layout_key`] matches `layout`, the
+/// model is patched in place by [`apply_pernode_delta`] — only RHS,
+/// current-scale coefficients and the objective change — and `root_basis`
+/// is adopted and dual-reoptimized instead of rebuilt + phase-1 repaired.
+#[derive(Clone, Debug)]
+struct PerNodePrev {
+    root_basis: milp::LpBasis,
+    model: Model,
+    layout: PerNodeLayout,
+}
+
+/// Layout fingerprint of the per-node model: pool size `|N|` (the whole
+/// row/column grid scales with it), and per job the id, the SOS2
+/// breakpoint scales, and the `C_j > 0` flag — the only current-scale
+/// quantity that decides term *presence* (the Eqn 15d `zd` coefficient
+/// is `C_j`, dropped by `LinExpr::normalized` at zero). Everything else
+/// the current assignment touches is RHS, i.e. data, not layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct PerNodeLayout {
+    nn: usize,
+    jobs: Vec<(TrainerId, Vec<u32>, bool)>,
+}
+
+fn pernode_layout_key(req: &AllocRequest, c: &[Vec<bool>]) -> PerNodeLayout {
+    PerNodeLayout {
+        nn: req.pool_size() as usize,
+        jobs: req
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(j, job)| {
+                let held = c[j].iter().any(|&b| b);
+                (job.id, job.points.iter().map(|&(bn, _)| bn).collect(), held)
+            })
+            .collect(),
+    }
+}
+
+/// Patch the standing per-node model in place for a new request with an
+/// unchanged layout ([`pernode_layout_key`]): refresh the Eqn 4 size
+/// RHS, the Eqn 9/10 current-assignment RHS, the Eqn 15 rescale
+/// coefficients/RHS and the objective. The patched model equals
+/// `build_model_memo(req, c, memo)` value for value (pinned by
+/// `patched_model_is_bitwise_fresh_build`). Returns the `x_jn` ids,
+/// same as the original build's.
+fn apply_pernode_delta(
+    m: &mut Model,
+    req: &AllocRequest,
+    c: &[Vec<bool>],
+    memo: &mut ValueMemo,
+) -> Vec<Vec<milp::VarId>> {
+    let nn = req.pool_size() as usize;
+    let nj = req.jobs.len();
+    let big_m = (nn + 1) as f64;
+    let big_m2 = 2.0 * nn as f64 + 1.0;
+    let x: Vec<Vec<milp::VarId>> =
+        (0..nj).map(|j| (0..nn).map(|n| milp::VarId(j * nn + n)).collect()).collect();
+    let mut objective = LinExpr::new();
+    // Row block per job, in build order: e4a–d, then e9a–d per node,
+    // e10a/b, e11a/b, e15a–d. Node-exclusivity rows (e5) trail the
+    // blocks and are layout-constant (rhs 1).
+    let rows_per_job = 12 + 4 * nn;
+    // Aux column cursor: all x_jn come first, then per job the block
+    // yl, yu, u×nn, z, ws, zu, zd.
+    let mut aux = nj * nn;
+    for (j, job) in req.jobs.iter().enumerate() {
+        let jid = job.id;
+        let row0 = j * rows_per_job;
+        debug_assert_eq!(m.constraints[row0].name, format!("e4a[{jid}]"));
+        let c_j = c[j].iter().filter(|&&b| b).count() as f64;
+        m.set_rhs(row0, job.n_min as f64);
+        m.set_rhs(row0 + 2, job.n_max as f64);
+        for n in 0..nn {
+            let cjn = if c[j][n] { 1.0 } else { 0.0 };
+            let r = row0 + 4 + 4 * n;
+            m.set_rhs(r, cjn);
+            m.set_rhs(r + 1, -cjn);
+            m.set_rhs(r + 2, cjn);
+            m.set_rhs(r + 3, 2.0 - cjn);
+        }
+        m.set_rhs(row0 + 4 + 4 * nn, c_j);
+        m.set_rhs(row0 + 5 + 4 * nn, c_j + big_m2);
+
+        let coefs = memo.sos2_coefs(req, job);
+        let mut bps: Vec<(f64, f64, f64)> = vec![(0.0, 0.0, 0.0)];
+        for (&(bn, bv), &coef) in job.points.iter().zip(&coefs) {
+            bps.push((bn as f64, bv, coef));
+        }
+        let ws0 = aux + 2 + nn + 1; // skip yl, yu, u×nn, z
+        for (i, &(bn, bv, coef)) in bps.iter().enumerate() {
+            if bv != 0.0 && bn > 0.0 {
+                objective.add(milp::VarId(ws0 + i), coef);
+            }
+        }
+        let zu = milp::VarId(ws0 + bps.len());
+        let zd = milp::VarId(ws0 + bps.len() + 1);
+        debug_assert_eq!(m.vars[zu.0].name, format!("zu[{jid}]"));
+        // Eqn 15: `M − C_j ≥ 1` and `M − (C_j − 1) ≥ 2` for any C_j ≤
+        // |N|, so only the e15d coefficient can vanish (key flag).
+        m.set_coef(row0 + 8 + 4 * nn, zu, -(big_m - c_j));
+        m.set_rhs(row0 + 8 + 4 * nn, c_j);
+        m.set_coef(row0 + 9 + 4 * nn, zu, -(c_j + 1.0));
+        m.set_coef(row0 + 10 + 4 * nn, zd, big_m - (c_j - 1.0));
+        if c_j > 0.0 {
+            m.set_coef(row0 + 11 + 4 * nn, zd, c_j);
+        }
+        m.set_rhs(row0 + 11 + 4 * nn, c_j);
+        let rate_now = if job.current == 0 { 0.0 } else { job.gain(job.current) };
+        if rate_now * job.r_up != 0.0 {
+            objective.add(zu, -rate_now * job.r_up);
+        }
+        if rate_now * job.r_dw != 0.0 {
+            objective.add(zd, -rate_now * job.r_dw);
+        }
+        aux = zd.0 + 1;
+    }
+    m.set_objective(objective, 0.0);
+    x
 }
 
 /// Build the paper's model. `c` is the current assignment: `c[j][n]` over
@@ -261,13 +392,33 @@ impl Allocator for PerNodeMilpAllocator {
     fn allocate_memo(&mut self, req: &AllocRequest, memo: &mut ValueMemo) -> AllocPlan {
         let t0 = Instant::now();
         let c = dense_assignment(req);
-        let (model, x) = build_model_memo(req, &c, memo);
+        // ModelDelta fast path (DESIGN.md §18): patch the standing model
+        // and adopt its root basis when the layout is unchanged.
+        let key = pernode_layout_key(req, &c);
+        let mut model_rebuilds = 0usize;
+        let (model, x, prev_basis) = match self.prev.take() {
+            Some(p) if self.warm_start_from_previous && p.layout == key => {
+                let PerNodePrev { root_basis, model: mut m, .. } = p;
+                let x = apply_pernode_delta(&mut m, req, &c, memo);
+                (m, x, Some(root_basis))
+            }
+            _ => {
+                model_rebuilds = 1;
+                let (m, x) = build_model_memo(req, &c, memo);
+                (m, x, None)
+            }
+        };
         // Warm-start with the exact DP optimum embedded (feasible by the
         // aggregate-equivalence argument); falls back to the current map.
         let dp = super::dp_alloc::DpAllocator.allocate_memo(req, memo);
         let warm = embed_targets(req, &model, &x, &c, &dp.targets)
             .or_else(|| embed_targets(req, &model, &x, &c, &req.current_map()));
-        let res = milp::solve(&model, &self.limits, warm.as_deref());
+        let warm_started = prev_basis.is_some();
+        let res = milp::solve_warm(
+            &model,
+            &self.limits,
+            &milp::MilpWarmStart { incumbent: warm.as_deref(), basis: prev_basis.as_ref() },
+        );
         let (targets, fell_back, optimal) = match res.status {
             milp::MilpStatus::Optimal | milp::MilpStatus::Feasible => {
                 let mut t: BTreeMap<_, u32> = BTreeMap::new();
@@ -288,6 +439,7 @@ impl Allocator for PerNodeMilpAllocator {
         };
         debug_assert!(req.check(&targets).is_ok(), "{:?}", req.check(&targets));
         let objective = req.objective_of(&targets);
+        self.prev = Some(PerNodePrev { root_basis: res.root_basis, model, layout: key });
         AllocPlan {
             targets,
             objective,
@@ -296,8 +448,11 @@ impl Allocator for PerNodeMilpAllocator {
                 nodes_explored: res.nodes_explored,
                 fell_back,
                 optimal,
-                warm_started: false,
+                warm_started,
                 lp_iterations: res.lp_iterations,
+                dual_pivots: res.dual_pivots,
+                model_rebuilds,
+                warm_adapt_failed: 0,
                 lp_refactorizations: res.lp_refactorizations,
                 certified_gap: res
                     .bound
@@ -310,6 +465,10 @@ impl Allocator for PerNodeMilpAllocator {
 
     fn elidable(&self) -> bool {
         true
+    }
+
+    fn reset(&mut self) {
+        self.prev = None;
     }
 }
 
@@ -513,6 +672,64 @@ mod tests {
                 pn.objective,
                 pn.stats.optimal
             );
+        }
+    }
+
+    #[test]
+    fn patched_model_is_bitwise_fresh_build() {
+        // Values-only change (same pool size, same breakpoints, currents
+        // stay held): the patched standing model must equal the fresh
+        // build bit for bit.
+        let req1 = AllocRequest::flat(vec![job(0, 2, 1, 4), job(1, 1, 1, 4)], 6, 120.0);
+        let mut req2 = req1.clone();
+        req2.jobs[0].current = 3;
+        req2.jobs[0].n_min = 2;
+        req2.jobs[1].current = 2;
+        for p in req2.jobs[1].points.iter_mut() {
+            p.1 *= 1.5;
+        }
+        let c1 = dense_assignment(&req1);
+        let c2 = dense_assignment(&req2);
+        assert_eq!(pernode_layout_key(&req1, &c1), pernode_layout_key(&req2, &c2));
+        let memo = &mut ValueMemo::disabled();
+        let (mut patched, _) = build_model_memo(&req1, &c1, memo);
+        let x2 = apply_pernode_delta(&mut patched, &req2, &c2, memo);
+        let (fresh, fresh_x) = build_model_memo(&req2, &c2, memo);
+        assert_eq!(x2, fresh_x);
+        assert_eq!(patched.vars.len(), fresh.vars.len());
+        for (a, b) in patched.vars.iter().zip(&fresh.vars) {
+            assert_eq!(a.lo.to_bits(), b.lo.to_bits(), "{} lo", a.name);
+            assert_eq!(a.hi.to_bits(), b.hi.to_bits(), "{} hi", a.name);
+        }
+        assert_eq!(patched.constraints.len(), fresh.constraints.len());
+        for (a, b) in patched.constraints.iter().zip(&fresh.constraints) {
+            assert_eq!(a.expr.terms, b.expr.terms, "row {}", a.name);
+            assert_eq!(a.rhs.to_bits(), b.rhs.to_bits(), "row {}", a.name);
+        }
+        assert_eq!(patched.objective.terms, fresh.objective.terms);
+    }
+
+    #[test]
+    fn delta_patch_reuses_standing_model_across_events() {
+        // Unchanged pool size and currents across events: every solve
+        // after the first must patch the standing model in place while
+        // still tracking the exact DP optimum.
+        let mut rng = Rng::new(0x9E12);
+        let mut alloc = PerNodeMilpAllocator::default();
+        let mut req = AllocRequest::flat(vec![job(0, 2, 1, 4), job(1, 1, 1, 4)], 6, 120.0);
+        for step in 0..4 {
+            let dp = DpAllocator.allocate(&req);
+            let pn = alloc.allocate(&req);
+            assert!(
+                (dp.objective - pn.objective).abs() < 1e-5,
+                "step {step}: dp {} pernode {}",
+                dp.objective,
+                pn.objective
+            );
+            assert_eq!(pn.stats.model_rebuilds, usize::from(step == 0), "step {step}");
+            assert_eq!(pn.stats.warm_started, step > 0, "step {step}");
+            // Values-only churn: re-bucket the profile at the same size.
+            req.pool = LifetimeProfile::random(&mut rng, req.pool_size(), req.t_fwd);
         }
     }
 

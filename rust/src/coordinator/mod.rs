@@ -89,6 +89,14 @@ pub struct EventRecord {
     /// Simplex iterations spent on this event's solve (0 for non-LP
     /// allocators).
     pub lp_iterations: usize,
+    /// Dual-simplex pivots among `lp_iterations` (DESIGN.md §18).
+    pub dual_pivots: usize,
+    /// MILP models built from scratch for this event's solve: 0 when the
+    /// standing model was patched in place (ModelDelta, DESIGN.md §18).
+    pub model_rebuilds: usize,
+    /// Defensive `adapt_targets` failures on this event (should be 0 for
+    /// well-formed requests).
+    pub warm_adapt_failed: usize,
     /// Basis refactorizations spent on this event's solve (0 for non-LP
     /// allocators).
     pub lp_refactorizations: usize,
@@ -513,6 +521,9 @@ impl Coordinator {
             leaves_anticipated,
             leaves_surprise,
             lp_iterations: plan.stats.lp_iterations,
+            dual_pivots: plan.stats.dual_pivots,
+            model_rebuilds: plan.stats.model_rebuilds,
+            warm_adapt_failed: plan.stats.warm_adapt_failed,
             lp_refactorizations: plan.stats.lp_refactorizations,
             solve_skipped: plan.stats.solve_skipped,
             cache_hits: self.memo.hits - h0,

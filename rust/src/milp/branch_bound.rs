@@ -88,6 +88,10 @@ pub struct MilpResult {
     pub root_basis: LpBasis,
     /// Simplex iterations summed over every LP relaxation solved.
     pub lp_iterations: usize,
+    /// Dual-simplex pre-pass iterations summed over every LP relaxation
+    /// solved (a subset of `lp_iterations`) — the warm child re-solves
+    /// that skipped the phase-1 repair.
+    pub dual_pivots: usize,
     /// Basis refactorizations summed over every LP relaxation solved.
     pub lp_refactorizations: usize,
 }
@@ -190,6 +194,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
     let root_bounds: Vec<(f64, f64)> = model.vars.iter().map(|v| (v.lo, v.hi)).collect();
     let root_lp = solve_lp_warm(model, &root_bounds, warm.basis);
     let mut lp_iterations = root_lp.iterations;
+    let mut dual_pivots = root_lp.dual_pivots;
     let mut lp_refactorizations = root_lp.refactorizations;
     match root_lp.status {
         LpStatus::Infeasible => {
@@ -202,6 +207,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 solve_time: t0.elapsed(),
                 root_basis: LpBasis::default(),
                 lp_iterations,
+                dual_pivots,
                 lp_refactorizations,
             };
         }
@@ -215,13 +221,15 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 solve_time: t0.elapsed(),
                 root_basis: LpBasis::default(),
                 lp_iterations,
+                dual_pivots,
                 lp_refactorizations,
             };
         }
         LpStatus::Stalled => {
             // Treat as no information: fall through with +inf bound only if
             // we have an incumbent; otherwise report NoSolution.
-            return stalled_result(incumbent, max_sign, t0, 1, lp_iterations, lp_refactorizations);
+            let effort = (lp_iterations, dual_pivots, lp_refactorizations);
+            return stalled_result(incumbent, max_sign, t0, 1, effort);
         }
         LpStatus::Optimal => {}
     }
@@ -274,6 +282,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                     solve_time: t0.elapsed(),
                     root_basis,
                     lp_iterations,
+                    dual_pivots,
                     lp_refactorizations,
                 };
             }
@@ -285,9 +294,10 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
 
         // Child relaxations reuse the *parent's* basis: branching only
         // tightened a box, so when the presolve layout is unchanged
-        // (signature check inside) the simplex adopts the parent basis and
-        // phase 1 merely repairs the branched variable — basic just
-        // outside its tightened bound — in a few pivots; a branch that
+        // (signature check inside) the simplex adopts the parent basis —
+        // still dual feasible, since only bounds moved — and the dual
+        // pre-pass walks the branched variable (basic just outside its
+        // tightened bound) back in a few dual pivots; a branch that
         // fixed a variable changes the layout and falls back to a cold
         // solve. A memoized prefetch result is the identical pure-function
         // solve; effort counters accumulate here either way, so they match
@@ -297,6 +307,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
             None => solve_lp_warm(model, &node.bounds, Some(node.basis.as_ref())),
         };
         lp_iterations += lp.iterations;
+        dual_pivots += lp.dual_pivots;
         lp_refactorizations += lp.refactorizations;
         let (x, relax_obj, node_basis) = match lp.status {
             LpStatus::Optimal => (lp.x, to_max(lp.objective), Arc::new(lp.basis)),
@@ -400,6 +411,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
                 solve_time,
                 root_basis,
                 lp_iterations,
+                dual_pivots,
                 lp_refactorizations,
             }
         }
@@ -412,6 +424,7 @@ pub fn solve_warm(model: &Model, limits: &Limits, warm: &MilpWarmStart) -> MilpR
             solve_time,
             root_basis,
             lp_iterations,
+            dual_pivots,
             lp_refactorizations,
         },
     }
@@ -472,9 +485,9 @@ fn stalled_result(
     max_sign: f64,
     t0: Instant,
     nodes: usize,
-    lp_iterations: usize,
-    lp_refactorizations: usize,
+    effort: (usize, usize, usize),
 ) -> MilpResult {
+    let (lp_iterations, dual_pivots, lp_refactorizations) = effort;
     match incumbent {
         Some((x, obj)) => MilpResult {
             status: MilpStatus::Feasible,
@@ -485,6 +498,7 @@ fn stalled_result(
             solve_time: t0.elapsed(),
             root_basis: LpBasis::default(),
             lp_iterations,
+            dual_pivots,
             lp_refactorizations,
         },
         None => MilpResult {
@@ -496,6 +510,7 @@ fn stalled_result(
             solve_time: t0.elapsed(),
             root_basis: LpBasis::default(),
             lp_iterations,
+            dual_pivots,
             lp_refactorizations,
         },
     }
@@ -819,8 +834,42 @@ mod tests {
                     par.lp_iterations, serial.lp_iterations,
                     "case {case} threads {threads}: LP effort diverged"
                 );
+                assert_eq!(
+                    par.dual_pivots, serial.dual_pivots,
+                    "case {case} threads {threads}: dual effort diverged"
+                );
             }
         }
+    }
+
+    #[test]
+    fn warm_tree_reoptimizes_dually_and_parallel_matches() {
+        // A branched child adopts its parent's basis with only one bound
+        // tightened, so child re-solves go through the dual pre-pass; the
+        // parallel prefetcher must agree bit-identically, dual effort
+        // included. The fractional capacity forces at least one branch.
+        let mut m = Model::new(Direction::Maximize);
+        let mut capex = LinExpr::new();
+        let mut obj = LinExpr::new();
+        for i in 0..8 {
+            let v = m.integer(0.0, 5.0, format!("x{i}"));
+            capex.add(v, 1.0 + (i % 3) as f64);
+            obj.add(v, 2.5 + ((i * 5) % 7) as f64);
+        }
+        m.constrain(capex, Sense::Le, 10.5, "cap");
+        m.set_objective(obj, 0.0);
+        let serial = solve(&m, &Limits::default(), None);
+        assert_eq!(serial.status, MilpStatus::Optimal);
+        assert!(serial.nodes_explored > 1, "must actually branch");
+        assert!(serial.dual_pivots > 0, "warm tree must engage the dual pre-pass");
+        assert!(serial.dual_pivots <= serial.lp_iterations, "dual effort is a subset");
+        let par = solve(&m, &Limits { threads: 4, ..Default::default() }, None);
+        assert_eq!(par.status, serial.status);
+        assert_eq!(par.objective.to_bits(), serial.objective.to_bits());
+        assert_eq!(par.x, serial.x);
+        assert_eq!(par.nodes_explored, serial.nodes_explored);
+        assert_eq!(par.lp_iterations, serial.lp_iterations);
+        assert_eq!(par.dual_pivots, serial.dual_pivots);
     }
 
     #[test]

@@ -186,6 +186,34 @@ impl Model {
         self.obj_offset = offset;
     }
 
+    /// Patch a constraint's rhs in place — the `ModelDelta` move: same
+    /// row/column layout, new value (DESIGN.md §18).
+    pub fn set_rhs(&mut self, row: usize, rhs: f64) {
+        self.constraints[row].rhs = rhs;
+    }
+
+    /// Patch one existing coefficient of constraint `row` in place. The
+    /// variable must already appear in the row and `coef` must stay
+    /// nonzero — a `ModelDelta` may change *values* only, never the
+    /// sparsity layout (the presolve signature, and with it warm-basis
+    /// adoption, depends on the layout alone).
+    pub fn set_coef(&mut self, row: usize, v: VarId, coef: f64) {
+        assert!(coef.abs() > 1e-12, "delta must not zero a coefficient: layout change");
+        let c = &mut self.constraints[row];
+        match c.expr.terms.iter_mut().find(|(tv, _)| *tv == v) {
+            Some((_, tc)) => *tc = coef,
+            None => panic!("delta names var {:?} absent from row {} ({})", v, row, c.name),
+        }
+    }
+
+    /// Patch a variable's box in place (bounds are first-class and never
+    /// lower to rows, so this is always layout-preserving).
+    pub fn set_var_bounds(&mut self, v: VarId, lo: f64, hi: f64) {
+        assert!(lo <= hi, "variable bounds inverted: {lo} > {hi}");
+        self.vars[v.0].lo = lo;
+        self.vars[v.0].hi = hi;
+    }
+
     /// True if the assignment satisfies all bounds, constraints,
     /// integrality and SOS2 conditions within `tol`.
     pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
@@ -337,6 +365,39 @@ mod tests {
         assert_eq!(a.ncols, 2);
         assert_eq!(a.col(0).collect::<Vec<_>>(), vec![(0, 1.0)]);
         assert_eq!(a.col(1).collect::<Vec<_>>(), vec![(0, 2.0), (1, -1.0)]);
+    }
+
+    #[test]
+    fn in_place_patches_match_fresh_build() {
+        // The ModelDelta contract: patching values must reproduce the
+        // fresh build exactly — same terms, same rhs, same bounds.
+        let build = |cap: f64, cx: f64| {
+            let mut m = Model::new(Direction::Maximize);
+            let x = m.continuous(0.0, 10.0, "x");
+            let y = m.continuous(0.0, 10.0, "y");
+            m.constrain(LinExpr::new().term(x, cx).term(y, 1.0), Sense::Le, cap, "cap");
+            m.set_objective(LinExpr::new().term(x, 1.0).term(y, 2.0), 0.0);
+            m
+        };
+        let mut patched = build(8.0, 1.0);
+        patched.set_rhs(0, 6.0);
+        patched.set_coef(0, VarId(0), 1.5);
+        patched.set_var_bounds(VarId(1), 0.0, 4.0);
+        let mut fresh = build(6.0, 1.5);
+        fresh.set_var_bounds(VarId(1), 0.0, 4.0);
+        assert_eq!(patched.constraints[0].rhs, fresh.constraints[0].rhs);
+        assert_eq!(patched.constraints[0].expr.terms, fresh.constraints[0].expr.terms);
+        assert_eq!(patched.vars[1].lo, fresh.vars[1].lo);
+        assert_eq!(patched.vars[1].hi, fresh.vars[1].hi);
+    }
+
+    #[test]
+    #[should_panic(expected = "layout change")]
+    fn set_coef_rejects_zeroing() {
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 1.0, "x");
+        m.constrain(LinExpr::new().term(x, 1.0), Sense::Le, 1.0, "c");
+        m.set_coef(0, x, 0.0);
     }
 
     #[test]

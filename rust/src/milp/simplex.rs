@@ -26,12 +26,20 @@
 //! Warm starts: [`LpBasis`] snapshots the basic set plus every nonbasic
 //! variable's bound state, keyed by the presolve layout signature. A later
 //! [`solve_lp_warm`] adopts the snapshot when the signatures match and the
-//! basis refactorizes nonsingularly; phase 1 then terminates immediately
-//! if the implied point is primal feasible under the new bounds/rhs, and
-//! otherwise *repairs* the adopted basis with a few composite pivots —
-//! the branch-and-bound child case, where the branched variable sits
-//! basic just outside its tightened bound. Any structural mismatch
-//! silently falls back to the cold start.
+//! basis refactorizes nonsingularly. An adopted basis that is primal
+//! infeasible under the new bounds/rhs but still prices *dual* feasible —
+//! the branch-and-bound child case (the branched variable sits basic just
+//! outside its tightened bound) and the consecutive-event `ModelDelta`
+//! case — is re-optimized by a bounded-variable **dual simplex** pre-pass
+//! ([`Solver::dual_reoptimize`], DESIGN.md §18): pick the most-violated
+//! basic row, price the pivot row, and run the dual ratio test, so a
+//! handful of dual pivots replace the old phase-1 repair run plus primal
+//! pass. The dual phase is strictly best-effort: on dual-infeasible
+//! adoption (the objective changed) or any numerical doubt it hands the
+//! basis over untouched and the composite-phase-1 + primal machinery
+//! below does the work, so every status verdict still comes from the
+//! primal path and warm decisions stay bit-identical to primal-only
+//! solves. Any structural mismatch silently falls back to the cold start.
 
 use super::lu::BasisLu;
 use super::model::{Direction, Model};
@@ -104,8 +112,13 @@ pub struct LpSolution {
     pub objective: f64,
     /// Final basis; empty unless `status == Optimal`.
     pub basis: LpBasis,
-    /// Simplex iterations (pivots + bound flips) across both phases.
+    /// Simplex iterations (pivots + bound flips) across both phases,
+    /// including the dual pre-pass.
     pub iterations: usize,
+    /// Iterations spent in the dual reoptimization pre-pass (a subset of
+    /// `iterations`). Nonzero only on warm solves whose adopted basis was
+    /// primal infeasible but dual feasible.
+    pub dual_pivots: usize,
     /// Basis-inverse refactorizations performed.
     pub refactorizations: usize,
     /// Constraint rows after presolve. Bounds never lower to rows, so this
@@ -137,7 +150,7 @@ pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis
     assert_eq!(bounds.len(), model.vars.len());
     for &(lo, hi) in bounds {
         if lo > hi + EPS {
-            return lp_failure(LpStatus::Infeasible, 0, 0);
+            return lp_failure(LpStatus::Infeasible, 0, 0, 0);
         }
         assert!(lo.is_finite(), "lower bounds must be finite");
     }
@@ -154,7 +167,7 @@ pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis
 
     let p = presolve(model, bounds, &cost);
     if p.infeasible {
-        return lp_failure(LpStatus::Infeasible, 0, 0);
+        return lp_failure(LpStatus::Infeasible, 0, 0, 0);
     }
 
     let mut s = Solver::new(&p);
@@ -175,6 +188,18 @@ pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis
     // Infeasible/Unbounded verdicts are basis-independent proofs and are
     // never retried.
     let outcome = loop {
+        if adopted && !p.unbounded_ray {
+            // Dual reoptimization fast path (DESIGN.md §18): after a
+            // bound/rhs delta the adopted basis stays dual feasible, so a
+            // few dual pivots restore primal feasibility directly instead
+            // of the phase-1 repair run. Strictly best-effort — on
+            // dual-infeasible adoption or numerical doubt it returns with
+            // the state consistent and the two-phase run below does the
+            // work, so every status verdict still comes from the primal
+            // machinery (when the dual pass converged, phase 1 sees zero
+            // infeasibility and phase 2 merely verifies optimality).
+            s.dual_reoptimize(max_iter);
+        }
         match s.two_phase(max_iter, p.unbounded_ray) {
             TwoPhase::Broken if adopted => {
                 adopted = false;
@@ -185,14 +210,13 @@ pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis
     };
     match outcome {
         TwoPhase::Done => {}
-        TwoPhase::Infeasible => {
-            return lp_failure(LpStatus::Infeasible, s.iterations, s.refactorizations);
-        }
-        TwoPhase::Unbounded => {
-            return lp_failure(LpStatus::Unbounded, s.iterations, s.refactorizations);
-        }
-        TwoPhase::Broken => {
-            return lp_failure(LpStatus::Stalled, s.iterations, s.refactorizations);
+        other => {
+            let status = match other {
+                TwoPhase::Infeasible => LpStatus::Infeasible,
+                TwoPhase::Unbounded => LpStatus::Unbounded,
+                _ => LpStatus::Stalled,
+            };
+            return lp_failure(status, s.iterations, s.dual_pivots, s.refactorizations);
         }
     }
 
@@ -205,6 +229,7 @@ pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis
         objective,
         basis: LpBasis { states: s.state.clone(), sig: p.sig },
         iterations: s.iterations,
+        dual_pivots: s.dual_pivots,
         refactorizations: s.refactorizations,
         rows: s.m,
         cols: s.n,
@@ -212,13 +237,19 @@ pub fn solve_lp_warm(model: &Model, bounds: &[(f64, f64)], warm: Option<&LpBasis
 }
 
 /// A non-optimal outcome (no point, no basis).
-fn lp_failure(status: LpStatus, iterations: usize, refactorizations: usize) -> LpSolution {
+fn lp_failure(
+    status: LpStatus,
+    iterations: usize,
+    dual_pivots: usize,
+    refactorizations: usize,
+) -> LpSolution {
     LpSolution {
         status,
         x: vec![],
         objective: 0.0,
         basis: LpBasis::default(),
         iterations,
+        dual_pivots,
         refactorizations,
         rows: 0,
         cols: 0,
@@ -271,6 +302,8 @@ struct Solver<'a> {
     /// Devex reference weights (nonbasic entries meaningful).
     devex: Vec<f64>,
     iterations: usize,
+    /// Iterations spent inside [`Self::dual_reoptimize`].
+    dual_pivots: usize,
     refactorizations: usize,
     pivots_since_refactor: usize,
 }
@@ -311,6 +344,7 @@ impl<'a> Solver<'a> {
             lu: BasisLu::identity(m),
             devex: vec![1.0; ncols],
             iterations: 0,
+            dual_pivots: 0,
             refactorizations: 0,
             pivots_since_refactor: 0,
         }
@@ -473,16 +507,22 @@ impl<'a> Solver<'a> {
         self.lu.btran(cb)
     }
 
-    /// Devex weight maintenance after a pivot on row `r` with pivot
-    /// element `piv` (entering column already marked basic, leaving column
-    /// `lv` already nonbasic). Uses the pre-update pivot row
-    /// `ρ = e_rᵀ B⁻¹` — one extra BTRAN per pivot — so it must run before
-    /// [`Self::eta_update`] appends this pivot's eta.
-    fn update_devex(&mut self, q: usize, lv: usize, r: usize, piv: f64) {
-        let m = self.m;
-        let mut e_r = vec![0.0f64; m];
+    /// Pivot row `ρ = e_rᵀ B⁻¹` (BTRAN of a unit vector). Must be taken
+    /// before [`Self::eta_update`] appends the pivot's eta.
+    fn pivot_row(&self, r: usize) -> Vec<f64> {
+        let mut e_r = vec![0.0f64; self.m];
         e_r[r] = 1.0;
-        let rho = self.lu.btran(e_r);
+        self.lu.btran(e_r)
+    }
+
+    /// Devex weight maintenance after a pivot with pivot element `piv`
+    /// (entering column already marked basic, leaving column `lv` already
+    /// nonbasic). Takes the pre-update pivot row `ρ` from the caller: the
+    /// dual phase already computed it for the ratio test and reuses it
+    /// here for free, and the primal phase computes it once per pivot via
+    /// [`Self::pivot_row`] — no BTRAN of its own in either case.
+    fn update_devex(&mut self, q: usize, lv: usize, piv: f64, rho: &[f64]) {
+        let m = self.m;
         let wq = self.devex[q].max(1.0);
         for j in 0..(self.n + m) {
             if self.state[j] == VarState::Basic || j == q {
@@ -503,12 +543,218 @@ impl<'a> Solver<'a> {
         self.devex[lv] = (wq / (piv * piv)).max(1.0);
     }
 
+    /// Is the current basis dual feasible — does every nonbasic column
+    /// price consistently with the bound it rests at (`AtLower ⇒ d ≥
+    /// −DTOL`, `AtUpper ⇒ d ≤ DTOL`) under the *real* costs? Entry gate
+    /// for [`Self::dual_reoptimize`]; width-0 columns can flip freely and
+    /// are never dual infeasible.
+    fn dual_feasible(&self) -> bool {
+        let cb: Vec<f64> = self.basis.iter().map(|&b| self.cost[b]).collect();
+        let y = self.btran(cb);
+        for j in 0..(self.n + self.m) {
+            if self.state[j] == VarState::Basic || self.hi[j] - self.lo[j] <= 0.0 {
+                continue;
+            }
+            let aj_y = if j < self.n { self.a.dot_col(j, &y) } else { y[j - self.n] };
+            let d = self.cost[j] - aj_y;
+            let violated = match self.state[j] {
+                VarState::AtLower => d < -DTOL,
+                VarState::AtUpper => d > DTOL,
+                VarState::Basic => unreachable!(),
+            };
+            if violated {
+                return false;
+            }
+        }
+        true
+    }
+
     /// Forrest–Tomlin-style basis update after replacing basis row `r`
     /// with a column whose FTRAN image is `w`: append one sparse eta to
     /// the factorization instead of rewriting it ([`BasisLu::append_eta`]).
     fn eta_update(&mut self, r: usize, w: &[f64]) {
         self.lu.append_eta(r, w);
         self.pivots_since_refactor += 1;
+    }
+
+    /// Bounded-variable dual simplex over an adopted warm basis
+    /// (DESIGN.md §18). After a bound/rhs delta the old optimal basis
+    /// stays *dual* feasible, so this pass drives the basic variables'
+    /// bound violations to zero while keeping every reduced cost on the
+    /// right side of its bound — which, combined, is optimality.
+    ///
+    /// Strictly best-effort: it never produces a verdict. Every give-up
+    /// path — dual-infeasible adoption (the objective changed), no
+    /// eligible entering column (primal phase 1 then proves
+    /// infeasibility), a tiny or wrong-signed pivot on a fresh
+    /// factorization, the iteration cap — returns with `x`, basis, and
+    /// factorization consistent, so the primal two-phase run picks up
+    /// from wherever the dual pass stopped.
+    fn dual_reoptimize(&mut self, max_iter: usize) {
+        let ncols = self.n + self.m;
+        let bland_after = max_iter / 2;
+        let mut gate_checked = false;
+        for local in 0..max_iter {
+            let bland = local >= bland_after;
+
+            // Leaving row: the most-violated basic variable (Bland mode:
+            // smallest basic index among the violated). No violation
+            // means primal feasible, and with dual feasibility maintained
+            // throughout that is optimality — done.
+            let mut leave: Option<(usize, f64)> = None; // (row, signed violation)
+            for i in 0..self.m {
+                let bj = self.basis[i];
+                let xb = self.x[bj];
+                let delta = if xb < self.lo[bj] - VTOL {
+                    xb - self.lo[bj]
+                } else if xb > self.hi[bj] + VTOL {
+                    xb - self.hi[bj]
+                } else {
+                    continue;
+                };
+                let better = match leave {
+                    None => true,
+                    Some((lr, ld)) => {
+                        if bland {
+                            self.basis[i] < self.basis[lr]
+                        } else {
+                            delta.abs() > ld.abs()
+                        }
+                    }
+                };
+                if better {
+                    leave = Some((i, delta));
+                }
+            }
+            let Some((r, delta)) = leave else { return };
+
+            // The dual-feasibility gate is checked lazily, once a violated
+            // row proves there is work to do — a primal-feasible adoption
+            // returns above without paying the pricing pass.
+            if !gate_checked {
+                if !self.dual_feasible() {
+                    return;
+                }
+                gate_checked = true;
+            }
+
+            // Dual ratio test on pivot row ρ = e_rᵀ B⁻¹: the leaving
+            // variable heads to its violated bound; among the sign-
+            // eligible nonbasics, the minimum ratio |d_j / α_j| is the
+            // first reduced cost to hit zero and blocks the dual step.
+            let rho = self.pivot_row(r);
+            let cb: Vec<f64> = self.basis.iter().map(|&b| self.cost[b]).collect();
+            let y = self.btran(cb);
+            let dir = if delta > 0.0 { 1.0 } else { -1.0 };
+            let mut enter: Option<(usize, f64, f64, f64)> = None; // (col, ratio, alpha, d)
+            for j in 0..ncols {
+                if self.state[j] == VarState::Basic || self.hi[j] - self.lo[j] <= 0.0 {
+                    continue;
+                }
+                let alpha = if j < self.n { self.a.dot_col(j, &rho) } else { rho[j - self.n] };
+                let a_dir = dir * alpha;
+                let eligible = match self.state[j] {
+                    VarState::AtLower => a_dir > RTOL,
+                    VarState::AtUpper => a_dir < -RTOL,
+                    VarState::Basic => unreachable!(),
+                };
+                if !eligible {
+                    continue;
+                }
+                let aj_y = if j < self.n { self.a.dot_col(j, &y) } else { y[j - self.n] };
+                let d = self.cost[j] - aj_y;
+                let ratio = (d / a_dir).max(0.0);
+                let better = match enter {
+                    None => true,
+                    Some((ej, er, ea, _)) => {
+                        if ratio < er - TIE {
+                            true
+                        } else if ratio < er + TIE {
+                            // Near-tie: Bland by smaller column index
+                            // (anti-cycling), otherwise the larger pivot
+                            // wins (numerical stability).
+                            if bland { j < ej } else { alpha.abs() > ea.abs() }
+                        } else {
+                            false
+                        }
+                    }
+                };
+                if better {
+                    enter = Some((j, ratio, alpha, d));
+                }
+            }
+            // No column can absorb the move: the violated row certifies
+            // primal infeasibility — but verdicts belong to the primal
+            // machinery, so hand the basis over untouched.
+            let Some((q, _, _, dq)) = enter else { return };
+
+            let w = self.ftran_col(q);
+            let piv = w[r];
+            let sigma = if self.state[q] == VarState::AtLower { 1.0 } else { -1.0 };
+            // Primal step carrying the leaving variable exactly to its
+            // violated bound; eligibility fixed the signs so t > 0 unless
+            // the eta file has drifted (FTRAN and BTRAN images of the
+            // pivot element disagreeing in sign).
+            let t = delta / (sigma * piv);
+            if piv.abs() < PIVOT_MIN || t <= 0.0 {
+                // Refresh the factorization and retry; on a fresh one,
+                // hand over to the primal path.
+                if self.pivots_since_refactor == 0 || !self.refactor() {
+                    return;
+                }
+                self.compute_basic_values();
+                self.iterations += 1;
+                self.dual_pivots += 1;
+                continue;
+            }
+
+            let t_flip = self.hi[q] - self.lo[q];
+            if t >= t_flip && dq.abs() <= DTOL {
+                // Dual-degenerate bound flip: q's reduced cost is ~zero,
+                // so it may rest at either bound without breaking dual
+                // feasibility, and the flip eats t_flip·|α| of the row
+                // violation with no basis change. (A non-degenerate q
+                // must pivot instead — it enters the basis beyond its
+                // opposite bound, primal infeasible, and a later dual
+                // iteration cleans it up.)
+                self.iterations += 1;
+                self.dual_pivots += 1;
+                for i in 0..self.m {
+                    self.x[self.basis[i]] -= sigma * t_flip * w[i];
+                }
+                self.state[q] = if self.state[q] == VarState::AtLower {
+                    self.x[q] = self.hi[q];
+                    VarState::AtUpper
+                } else {
+                    self.x[q] = self.lo[q];
+                    VarState::AtLower
+                };
+                continue;
+            }
+
+            self.iterations += 1;
+            self.dual_pivots += 1;
+            for i in 0..self.m {
+                self.x[self.basis[i]] -= sigma * t * w[i];
+            }
+            let lv = self.basis[r];
+            self.x[q] += sigma * t;
+            self.x[lv] = if delta > 0.0 { self.hi[lv] } else { self.lo[lv] };
+            self.state[lv] = if delta > 0.0 { VarState::AtUpper } else { VarState::AtLower };
+            self.state[q] = VarState::Basic;
+            self.basis[r] = q;
+            if !bland {
+                self.update_devex(q, lv, piv, &rho);
+            }
+            self.eta_update(r, &w);
+            if self.pivots_since_refactor >= REFACTOR_EVERY {
+                if !self.refactor() {
+                    return;
+                }
+                self.compute_basic_values();
+                self.devex.fill(1.0);
+            }
+        }
     }
 
     /// One full two-phase solve from the current starting basis.
@@ -733,8 +979,9 @@ impl<'a> Solver<'a> {
             self.basis[r] = q;
             if !bland {
                 // Bland-mode pricing never reads the scores: skip the
-                // O(nnz) weight maintenance pass.
-                self.update_devex(q, lv, r, piv);
+                // pivot row and the O(nnz) weight maintenance pass.
+                let rho = self.pivot_row(r);
+                self.update_devex(q, lv, piv, &rho);
             }
             self.eta_update(r, &w);
             if self.pivots_since_refactor >= REFACTOR_EVERY {
@@ -1032,6 +1279,84 @@ mod tests {
             cold.objective
         );
         assert!(warm.x[0] <= 4.0 + 1e-9, "tightened bound respected after repair");
+        // The adopted basis is dual feasible (same objective), so the
+        // repair must go through the dual pre-pass, not phase 1.
+        assert!(warm.dual_pivots > 0, "dual pre-pass engaged on the warm solve");
+        assert_eq!(cold.dual_pivots, 0, "cold solves never touch the dual phase");
+    }
+
+    #[test]
+    fn dual_declines_when_objective_changed() {
+        // Bound tightening *plus* an objective change: the adopted basis
+        // is primal infeasible but also dual infeasible, so the dual
+        // pre-pass must hand over to phase 1 untouched — and the warm
+        // solve must still agree with the cold one.
+        let mut m = Model::new(Direction::Maximize);
+        let x = m.continuous(0.0, 10.0, "x");
+        let y = m.continuous(0.0, 10.0, "y");
+        m.constrain(LinExpr::new().term(x, 1.0).term(y, 1.0), Sense::Le, 6.0, "cap");
+        m.set_objective(LinExpr::new().term(x, 2.0).term(y, 1.0), 0.0);
+        let s1 = solve_lp(&m, &model_bounds(&m));
+        assert_eq!(s1.status, LpStatus::Optimal);
+        assert!((s1.x[0] - 6.0).abs() < 1e-6, "x basic at 6");
+        // Same rows, new objective prefers y; child tightens x <= 4.
+        m.set_objective(LinExpr::new().term(x, 1.0).term(y, 2.0), 0.0);
+        let child = [(0.0, 4.0), (0.0, 10.0)];
+        let cold = solve_lp(&m, &child);
+        let warm = solve_lp_warm(&m, &child, Some(&s1.basis));
+        assert_eq!(cold.status, LpStatus::Optimal);
+        assert_eq!(warm.status, LpStatus::Optimal);
+        assert!((cold.objective - 12.0).abs() < 1e-6, "{}", cold.objective); // y=6
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-9,
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+        assert_eq!(warm.dual_pivots, 0, "dual-infeasible adoption falls back to primal");
+    }
+
+    #[test]
+    fn random_bound_tightenings_reoptimize_dually() {
+        // Property: re-solving with the previous basis after random bound
+        // tightenings never changes the optimal objective, and the dual
+        // pre-pass does the repair somewhere in the suite.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD0A1);
+        let mut dual_total = 0usize;
+        for _case in 0..40 {
+            let nv = rng.range_usize(2, 6);
+            let mut m = Model::new(Direction::Maximize);
+            let vars: Vec<_> = (0..nv)
+                .map(|i| m.continuous(0.0, rng.range_f64(2.0, 8.0), format!("v{i}")))
+                .collect();
+            let mut cap = LinExpr::new();
+            let mut obj = LinExpr::new();
+            for &v in &vars {
+                cap.add(v, rng.range_f64(0.2, 2.0));
+                obj.add(v, rng.range_f64(0.5, 3.0));
+            }
+            m.constrain(cap, Sense::Le, rng.range_f64(2.0, 10.0), "cap");
+            m.set_objective(obj, 0.0);
+            let cold = solve_lp(&m, &model_bounds(&m));
+            assert_eq!(cold.status, LpStatus::Optimal, "case {_case}");
+            let shrunk: Vec<(f64, f64)> = model_bounds(&m)
+                .iter()
+                .map(|&(lo, hi)| (lo, lo + rng.range_f64(0.3, 0.9) * (hi - lo)))
+                .collect();
+            let scold = solve_lp(&m, &shrunk);
+            let swarm = solve_lp_warm(&m, &shrunk, Some(&cold.basis));
+            assert_eq!(scold.status, LpStatus::Optimal, "case {_case}");
+            assert_eq!(swarm.status, LpStatus::Optimal, "case {_case}");
+            assert!(
+                (swarm.objective - scold.objective).abs() < 1e-7,
+                "case {_case}: {} vs {}",
+                swarm.objective,
+                scold.objective
+            );
+            dual_total += swarm.dual_pivots;
+        }
+        assert!(dual_total > 0, "dual pre-pass engaged somewhere in the suite");
     }
 
     #[test]

@@ -59,6 +59,16 @@ pub struct ReplayMetrics {
     /// figure pipeline gates on (wall-clock solve times are recorded but
     /// never compared).
     pub lp_refactorizations: u64,
+    /// Dual-simplex pivots among `lp_iterations` (DESIGN.md §18) — the
+    /// share of solver effort spent reoptimizing an adopted basis
+    /// dually instead of phase-1 repairing it.
+    pub dual_pivots: u64,
+    /// MILP models built from scratch across every event's solve; events
+    /// served by the ModelDelta patch path contribute 0 (DESIGN.md §18).
+    pub model_rebuilds: u64,
+    /// Defensive `adapt_targets` failures across the replay (expected 0
+    /// for well-formed traces).
+    pub warm_adapt_failed: u64,
     /// Node leaves whose scheduled reclaim time had arrived when they
     /// fired — the predicted side of predicted-vs-realized preemption
     /// accounting (0 on lifetime-blind traces).
@@ -102,6 +112,9 @@ impl ReplayMetrics {
         self.n_events += other.n_events;
         self.lp_iterations += other.lp_iterations;
         self.lp_refactorizations += other.lp_refactorizations;
+        self.dual_pivots += other.dual_pivots;
+        self.model_rebuilds += other.model_rebuilds;
+        self.warm_adapt_failed += other.warm_adapt_failed;
         self.leaves_anticipated += other.leaves_anticipated;
         self.leaves_surprise += other.leaves_surprise;
         self.solves_skipped += other.solves_skipped;

@@ -455,6 +455,9 @@ impl ReplayEngine {
         let mut fallbacks = 0usize;
         let mut lp_iterations = 0u64;
         let mut lp_refactorizations = 0u64;
+        let mut dual_pivots = 0u64;
+        let mut model_rebuilds = 0u64;
+        let mut warm_adapt_failed = 0u64;
         let mut leaves_anticipated = 0u64;
         let mut leaves_surprise = 0u64;
         let mut solves_skipped = 0u64;
@@ -468,6 +471,9 @@ impl ReplayEngine {
             fallbacks += e.fell_back as usize;
             lp_iterations += e.lp_iterations as u64;
             lp_refactorizations += e.lp_refactorizations as u64;
+            dual_pivots += e.dual_pivots as u64;
+            model_rebuilds += e.model_rebuilds as u64;
+            warm_adapt_failed += e.warm_adapt_failed as u64;
             leaves_anticipated += e.leaves_anticipated as u64;
             leaves_surprise += e.leaves_surprise as u64;
             solves_skipped += e.solve_skipped as u64;
@@ -490,6 +496,9 @@ impl ReplayEngine {
             n_events,
             lp_iterations,
             lp_refactorizations,
+            dual_pivots,
+            model_rebuilds,
+            warm_adapt_failed,
             leaves_anticipated,
             leaves_surprise,
             solves_skipped,

@@ -77,6 +77,12 @@ pub struct SweepOutcome {
     pub lp_iterations: u64,
     /// Total basis refactorizations across the replay's solves.
     pub lp_refactorizations: u64,
+    /// Dual-simplex pivots among `lp_iterations` (DESIGN.md §18).
+    pub dual_pivots: u64,
+    /// MILP models built from scratch; delta-patched events contribute 0.
+    pub model_rebuilds: u64,
+    /// Defensive `adapt_targets` failures (expected 0).
+    pub warm_adapt_failed: u64,
     /// §3.6 fallbacks taken.
     pub fallbacks: usize,
     /// Solves that warm-started from the previous event.
@@ -141,6 +147,9 @@ fn run_case(case: &SweepCase) -> SweepOutcome {
         max_solve_ms: 1e3 * m.max_solve_s,
         lp_iterations: m.lp_iterations,
         lp_refactorizations: m.lp_refactorizations,
+        dual_pivots: m.dual_pivots,
+        model_rebuilds: m.model_rebuilds,
+        warm_adapt_failed: m.warm_adapt_failed,
         fallbacks: m.fallbacks,
         warm_started: res.coordinator.event_log.iter().filter(|e| e.warm_started).count(),
         preemptions: m.preemptions,
@@ -371,6 +380,7 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
                 "\"events\": {}, \"samples\": {}, \"baseline\": {}, \"utilization\": {}, ",
                 "\"mean_solve_ms\": {}, \"max_solve_ms\": {}, \"lp_iterations\": {}, ",
                 "\"lp_refactorizations\": {}, ",
+                "\"dual_pivots\": {}, \"model_rebuilds\": {}, \"warm_adapt_failed\": {}, ",
                 "\"warm_started\": {}, \"fallbacks\": {}, \"preemptions\": {}, ",
                 "\"leaves_anticipated\": {}, \"leaves_surprise\": {}, ",
                 "\"solves_skipped\": {}, \"cache_hits\": {}, \"cache_misses\": {}, ",
@@ -389,6 +399,9 @@ pub fn outcomes_json(outcomes: &[SweepOutcome]) -> String {
             num(o.max_solve_ms),
             o.lp_iterations,
             o.lp_refactorizations,
+            o.dual_pivots,
+            o.model_rebuilds,
+            o.warm_adapt_failed,
             o.warm_started,
             o.fallbacks,
             o.preemptions,
@@ -621,6 +634,18 @@ mod tests {
             assert_eq!(
                 v.get("solves_skipped").and_then(|j| j.as_usize()),
                 Some(o.solves_skipped as usize)
+            );
+            assert_eq!(
+                v.get("dual_pivots").and_then(|j| j.as_usize()),
+                Some(o.dual_pivots as usize)
+            );
+            assert_eq!(
+                v.get("model_rebuilds").and_then(|j| j.as_usize()),
+                Some(o.model_rebuilds as usize)
+            );
+            assert_eq!(
+                v.get("warm_adapt_failed").and_then(|j| j.as_usize()),
+                Some(o.warm_adapt_failed as usize)
             );
             assert_eq!(v.get("cache_hits").and_then(|j| j.as_usize()), Some(o.cache_hits as usize));
             assert_eq!(

@@ -169,6 +169,100 @@ fn statuses_agree_on_infeasible_models() {
 }
 
 #[test]
+fn dual_reoptimization_matches_primal_cold_after_perturbation() {
+    // DESIGN.md §18 differential: solve a random instance cold, then
+    // tighten variable boxes and jitter the objective and re-solve the
+    // SAME perturbed instance twice — cold (primal from scratch) and
+    // warm from the stale optimal basis, which routes the repair through
+    // the dual pre-pass whenever the adopted basis went primal
+    // infeasible. Status and objective must agree either way, and across
+    // the suite the dual path must actually fire.
+    let mut rng = Rng::new(0xD0A1);
+    let mut dual_pivots = 0usize;
+    let mut resolved = 0usize;
+    let mut optimal = 0usize;
+    let mut stalled = 0usize;
+    const CASES: usize = 220;
+    for case in 0..CASES {
+        let mut m = random_feasible_model(&mut rng);
+        let bounds = model_bounds(&m);
+        let first = solve_lp(&m, &bounds);
+        if first.status != LpStatus::Optimal || first.basis.is_empty() {
+            continue;
+        }
+
+        // Random bound tightenings: shrink each finite box from both
+        // ends (lo + up to 30%, hi − up to 40%, never crossing). The
+        // stale basis can land outside the new box, which is exactly the
+        // primal-infeasible / dual-feasible shape the dual phase exists
+        // for. The tightened instance may even be infeasible against the
+        // rows — then both solves must prove it.
+        let mut tb = bounds.clone();
+        for b in tb.iter_mut() {
+            if !rng.chance(0.6) || !b.1.is_finite() || b.1 <= b.0 {
+                continue;
+            }
+            let w = b.1 - b.0;
+            let lo = b.0 + rng.range_f64(0.0, 0.3) * w;
+            let hi = b.1 - rng.range_f64(0.0, 0.4) * w;
+            if lo <= hi {
+                *b = (lo, hi);
+            }
+        }
+        // Objective perturbation in half the cases: rescale every cost
+        // (signs kept). The other half keep the stale basis exactly dual
+        // feasible, so a tightened box MUST be repaired by dual pivots,
+        // not phase 1 — that is what the suite-wide firing floor pins.
+        if rng.chance(0.5) {
+            for t in m.objective.terms.iter_mut() {
+                t.1 *= rng.range_f64(0.5, 1.5);
+            }
+        }
+
+        let cold = solve_lp(&m, &tb);
+        let warm = solve_lp_warm(&m, &tb, Some(&first.basis));
+        if cold.status == LpStatus::Stalled || warm.status == LpStatus::Stalled {
+            stalled += 1;
+            continue;
+        }
+        assert_eq!(
+            warm.status, cold.status,
+            "case {case}: warm {:?} vs cold {:?}\nmodel: {m:?}",
+            warm.status, cold.status
+        );
+        resolved += 1;
+        dual_pivots += warm.dual_pivots;
+        if cold.status == LpStatus::Optimal {
+            optimal += 1;
+            let tol = REL_TOL * cold.objective.abs().max(1.0);
+            assert!(
+                (warm.objective - cold.objective).abs() <= tol,
+                "case {case}: warm {} vs cold {}\nmodel: {m:?}",
+                warm.objective,
+                cold.objective
+            );
+            assert!(
+                m.feasibility_violation(&warm.x, 1e-6).is_none(),
+                "case {case}: {:?}",
+                m.feasibility_violation(&warm.x, 1e-6)
+            );
+            for (i, &(lo, hi)) in tb.iter().enumerate() {
+                assert!(
+                    warm.x[i] >= lo - 1e-6 && warm.x[i] <= hi + 1e-6,
+                    "case {case}: x[{i}] = {} outside tightened [{lo}, {hi}]",
+                    warm.x[i]
+                );
+            }
+        }
+    }
+    assert!(resolved >= CASES / 2, "suite too vacuous: only {resolved} re-solves");
+    assert!(optimal >= CASES / 4, "suite too vacuous: only {optimal} optimal re-solves");
+    assert!(stalled <= CASES / 20, "{stalled} stalled re-solves out of {CASES}");
+    assert!(dual_pivots > 0, "dual pre-pass never fired across {resolved} warm re-solves");
+    eprintln!("dual diff: {resolved} resolved, {optimal} optimal, {dual_pivots} dual pivots");
+}
+
+#[test]
 fn warm_restart_equals_cold_on_new_basis_type() {
     // Bounded, guaranteed-feasible instances (nonnegative rows anchored at
     // x = lo), re-solved after rhs growth + box shrink: the warm solve
